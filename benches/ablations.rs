@@ -1,0 +1,89 @@
+//! Ablation bench (DESIGN.md design-choice ablations, beyond the paper's
+//! §5.2.6 step analysis): isolate each SSR mechanism on DeiT-T, batch 6.
+//!
+//! * inter-acc-aware co-design ON vs OFF (repack penalties post-paid),
+//! * fine-grained pipeline ON vs OFF,
+//! * stage-equalizing rebalance implicitly (spatial with/without is shown
+//!   via the aware/naive gap),
+//! * weight pinning: sequential acc forced to HMM-type1 by co-locating
+//!   attention (the pinning flag is assignment-derived).
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch::vck190;
+use ssr::bench::Table;
+use ssr::dse::eval::build_design;
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T};
+
+fn main() {
+    let p = vck190();
+    let cal = Calib::default();
+    let g = vit_graph(&DEIT_T);
+    let batch = 6;
+    let mut t = Table::new(&["ablation", "variant", "latency (ms)", "TOPS"]);
+
+    let eval = |a: &Assignment, f: Features, aware: bool| {
+        let ev = build_design(&p, &cal, &g, a, f, aware).expect("feasible");
+        ev.evaluate(&p, &g, batch)
+    };
+
+    // 1) inter-acc-aware co-design (force partition + alignment pruning)
+    for (variant, aware) in [("co-design ON", true), ("co-design OFF (repack)", false)] {
+        let e = eval(&Assignment::spatial(), Features::all(), aware);
+        t.row(&[
+            "inter-acc co-design".to_string(),
+            variant.to_string(),
+            format!("{:.3}", e.latency_s * 1e3),
+            format!("{:.2}", e.tops),
+        ]);
+    }
+
+    // 2) fine-grained pipeline
+    for (variant, fp) in [("pipeline ON", true), ("pipeline OFF", false)] {
+        let e = eval(
+            &Assignment::spatial(),
+            Features { fine_grained_pipeline: fp, ..Features::all() },
+            true,
+        );
+        t.row(&[
+            "fine-grained pipeline".to_string(),
+            variant.to_string(),
+            format!("{:.3}", e.latency_s * 1e3),
+            format!("{:.2}", e.tops),
+        ]);
+    }
+
+    // 3) weight pinning: isolate the attention classes (pinning available
+    //    on the non-attention acc) vs co-locating them everywhere (pinning
+    //    impossible anywhere it matters).
+    let pin_friendly = Assignment::new(vec![0, 0, 1, 1, 0, 0, 0, 0]);
+    let pin_hostile = Assignment::new(vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    for (variant, a) in
+        [("attention isolated (pinning ON)", &pin_friendly), ("attention mixed in (pinning OFF)", &pin_hostile)]
+    {
+        let e = eval(a, Features::all(), true);
+        t.row(&[
+            "weight pinning".to_string(),
+            variant.to_string(),
+            format!("{:.3}", e.latency_s * 1e3),
+            format!("{:.2}", e.tops),
+        ]);
+    }
+
+    println!("== Ablations (DeiT-T, batch 6, VCK190) ==\n");
+    println!("{}", t.render());
+
+    // Structural expectations.
+    let aware = eval(&Assignment::spatial(), Features::all(), true);
+    let naive = eval(&Assignment::spatial(), Features::all(), false);
+    assert!(aware.latency_s <= naive.latency_s * 1.001, "co-design should not hurt");
+    let pin_on = eval(&pin_friendly, Features::all(), true);
+    let pin_off = eval(&pin_hostile, Features::all(), true);
+    assert!(
+        pin_on.tops >= pin_off.tops * 0.95,
+        "isolating attention should not lose throughput: {} vs {}",
+        pin_on.tops,
+        pin_off.tops
+    );
+    println!("structural checks passed");
+}

@@ -1,0 +1,66 @@
+//! Bench: end-to-end PJRT serving latency/throughput for the three
+//! execution models on real compiled DeiT-T executables (the runtime
+//! analog of Fig. 1 / Fig. 2, measured in wall-clock on this host).
+//!
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use ssr::bench::{fmt_s, Table};
+use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::StageAssign;
+use ssr::runtime::exec::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let requests = if quick { 4 } else { 12 };
+
+    let dir = ssr::runtime::artifacts_dir(None);
+    let engine = Engine::load(&dir)?;
+    println!("PJRT engine: {} | warming up executables...\n", engine.platform());
+
+    let mut t = Table::new(&["mode", "requests", "lat p50", "lat p99", "img/s", "eff TOPS"]);
+
+    // sequential batch 1 and 6
+    let seq = SequentialServer::new(Arc::clone(&engine), "deit_t", &[1, 6])?;
+    for &b in &[1usize, 6] {
+        let reqs: Vec<_> = (0..(requests / b).max(2))
+            .map(|i| synth_images(b, seq.img_size(), i as u64))
+            .collect();
+        let _ = seq.serve(b, &reqs[..1])?; // warmup
+        let (rep, _) = seq.serve(b, &reqs)?;
+        t.row(&[
+            format!("sequential b{b}"),
+            rep.requests.to_string(),
+            fmt_s(rep.latency.p50()),
+            fmt_s(rep.latency.p99()),
+            format!("{:.2}", rep.throughput_rps()),
+            format!("{:.4}", rep.effective_tops()),
+        ]);
+    }
+
+    for (name, assign) in [
+        ("spatial 4-acc", StageAssign::spatial()),
+        ("hybrid 2-acc", StageAssign { acc_of: [0, 1, 0, 0] }),
+        ("hybrid 3-acc", StageAssign { acc_of: [0, 1, 2, 0] }),
+    ] {
+        let pipe = PipelineServer::new(Arc::clone(&engine), "deit_t", &assign, 1)?;
+        let warm: Vec<_> = (0..2).map(|i| synth_images(1, 224, i)).collect();
+        let _ = pipe.serve(warm)?;
+        let imgs: Vec<_> = (0..requests).map(|i| synth_images(1, 224, i as u64)).collect();
+        let (rep, _) = pipe.serve(imgs)?;
+        t.row(&[
+            name.to_string(),
+            rep.requests.to_string(),
+            fmt_s(rep.latency.p50()),
+            fmt_s(rep.latency.p99()),
+            format!("{:.2}", rep.throughput_rps()),
+            format!("{:.4}", rep.effective_tops()),
+        ]);
+    }
+
+    println!("{}", t.render());
+    println!("(CPU-PJRT wall-clock: absolute numbers are host-dependent; the\n\
+              sequential-vs-pipelined *shape* is the reproduced quantity)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate paper Fig. 2 (latency-throughput Pareto, DeiT-T on
+//! VCK190) and time the sweep. Prints model-vs-paper anchor comparison.
+
+use ssr::bench::{bench, Table};
+use ssr::dse::pareto::front_dominates;
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+
+    let mut fig = None;
+    let r = bench("fig2: full pareto sweep", 0, 1, 30.0, || {
+        fig = Some(tables::fig2(&ctx));
+    });
+    println!("{}\n", r.report());
+    let f = fig.unwrap();
+
+    println!("{}", tables::fig2_table(&f).render());
+    let front = f.hybrid_front();
+    println!("combined Pareto front:");
+    for p in &front {
+        println!("  {:>7.3} ms  {:>6.2} TOPS  (batch {}, {} accs)", p.latency_ms, p.tops, p.batch, p.nacc);
+    }
+
+    // paper-vs-measured anchors
+    let mut t = Table::new(&["anchor", "paper (ms, TOPS)", "measured (ms, TOPS)"]);
+    let find = |pts: &[ssr::dse::pareto::Point], b: usize| {
+        pts.iter().find(|p| p.batch == b).copied()
+    };
+    for (name, (pl, pt), got) in [
+        ("seq b1 (A)", paper::FIG2_SEQ_A, find(&f.seq, 1)),
+        ("seq b6 (B)", paper::FIG2_SEQ_B, find(&f.seq, 6)),
+        ("spatial b6 (D)", paper::FIG2_SPATIAL_D, find(&f.spatial, 6)),
+    ] {
+        let m = got
+            .map(|p| format!("({:.2}, {:.2})", p.latency_ms, p.tops))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[name.to_string(), format!("({pl:.2}, {pt:.2})"), m]);
+    }
+    println!("\n{}", t.render());
+
+    println!(
+        "hybrid front dominates sequential: {} | dominates spatial: {}",
+        front_dominates(&front, &f.seq),
+        front_dominates(&front, &f.spatial)
+    );
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Fig. 3 (DeiT-T kernel breakdown on A10G,
+//! batch 6) from the GPU baseline model.
+
+use ssr::bench::bench;
+use ssr::report::paper;
+use ssr::report::tables;
+
+fn main() {
+    let mut out = None;
+    let r = bench("fig3: gpu kernel breakdown", 1, 50, 5.0, || {
+        out = Some(tables::fig3_table(6));
+    });
+    println!("{}\n", r.report());
+    let (bd, table) = out.unwrap();
+    println!("{}", table.render());
+
+    println!("paper-vs-measured:");
+    println!(
+        "  total latency : paper {:.2} ms  measured {:.2} ms",
+        paper::FIG3_TOTAL_MS,
+        bd.total_s() * 1e3
+    );
+    println!(
+        "  nonlinear share: paper ~{:.0}%  measured {:.1}%",
+        paper::FIG3_NONLINEAR_SHARE * 100.0,
+        bd.nonlinear_share() * 100.0
+    );
+    println!(
+        "  transpose share: paper ~{:.0}%  measured {:.1}%",
+        paper::FIG3_TRANSPOSE_SHARE * 100.0,
+        bd.transpose_s / bd.total_s() * 100.0
+    );
+    println!(
+        "  reformat share : paper ~{:.0}%  measured {:.1}%",
+        paper::FIG3_REFORMAT_SHARE * 100.0,
+        bd.reformat_s / bd.total_s() * 100.0
+    );
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate paper §5.2.6 (step-by-step optimization analysis):
+//! baseline (CHARM-like) -> +on-chip forwarding -> +spatial accs ->
+//! +fine-grained pipeline, DeiT-T batch 6.
+
+use ssr::bench::{bench, Table};
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::vck190();
+
+    let mut rows = None;
+    let r = bench("step-by-step optimization", 0, 3, 20.0, || {
+        rows = Some(tables::step_opt(&ctx, 6));
+    });
+    println!("{}\n", r.report());
+    let rows = rows.unwrap();
+    println!("{}", tables::step_table(&rows).render());
+
+    let total = rows.first().unwrap().latency_ms / rows.last().unwrap().latency_ms;
+    let paper_total = paper::STEP_BASELINE_MS / paper::STEP_FINAL_MS;
+    let mut t = Table::new(&["metric", "paper", "measured"]);
+    t.row(&[
+        "baseline latency (ms)".to_string(),
+        format!("{:.1}", paper::STEP_BASELINE_MS),
+        format!("{:.2}", rows[0].latency_ms),
+    ]);
+    t.row(&[
+        "final latency (ms)".to_string(),
+        format!("{:.2}", paper::STEP_FINAL_MS),
+        format!("{:.2}", rows[3].latency_ms),
+    ]);
+    t.row(&[
+        "total speedup".to_string(),
+        format!("{paper_total:.1}x"),
+        format!("{total:.1}x"),
+    ]);
+    for (i, pf) in paper::STEP_FACTORS.iter().enumerate() {
+        t.row(&[
+            format!("step {} factor", i + 1),
+            format!("{pf:.1}x"),
+            format!("{:.2}x", rows[i + 1].factor),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Shape checks: every step helps, total speedup is large.
+    for row in &rows[1..] {
+        assert!(row.factor > 1.0, "step '{}' did not improve", row.name);
+    }
+    assert!(total > 5.0, "total step-opt speedup only {total:.1}x");
+    println!("shape checks passed: every optimization step reduces latency");
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate paper Table 5 (4 models x 3 batches x 4 platforms)
+//! and report throughput/energy gains vs the paper's aggregate claims.
+
+use ssr::bench::bench;
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+use ssr::util::stats::geomean;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+    let models: Vec<&str> = if quick {
+        vec!["deit_t"]
+    } else {
+        vec!["deit_t", "deit_t_160", "deit_t_256", "lv_vit_t"]
+    };
+
+    let mut rows = None;
+    let r = bench("table5: cross-platform sweep", 0, 1, 600.0, || {
+        rows = Some(tables::table5(&ctx, &models));
+    });
+    println!("{}\n", r.report());
+    let rows = rows.unwrap();
+    println!("{}", tables::table5_table(&rows).render());
+
+    // Aggregate gains (geomean across models x batches), as the paper does.
+    let gains = |f: fn(&tables::Table5Row) -> f64| {
+        geomean(&rows.iter().map(f).collect::<Vec<_>>())
+    };
+    let tg_gpu = gains(|r| r.ssr.tops / r.a10g.tops);
+    let tg_z = gains(|r| r.ssr.tops / r.zcu102.tops);
+    let tg_u = gains(|r| r.ssr.tops / r.u250.tops);
+    let eg_gpu = gains(|r| r.ssr.gops_w / r.a10g.gops_w);
+    let eg_z = gains(|r| r.ssr.gops_w / r.zcu102.gops_w);
+    let eg_u = gains(|r| r.ssr.gops_w / r.u250.gops_w);
+    println!("aggregate SSR gains (geomean)      measured   paper");
+    println!("  throughput vs A10G            {tg_gpu:>9.2}x  {:>6.2}x", paper::AVG_THROUGHPUT_GAIN_VS_A10G);
+    println!("  throughput vs ZCU102          {tg_z:>9.2}x  {:>6.2}x", paper::AVG_THROUGHPUT_GAIN_VS_ZCU102);
+    println!("  throughput vs U250            {tg_u:>9.2}x  {:>6.2}x", paper::AVG_THROUGHPUT_GAIN_VS_U250);
+    println!("  energy eff vs A10G            {eg_gpu:>9.2}x  {:>6.2}x", paper::AVG_ENERGY_GAIN_VS_A10G);
+    println!("  energy eff vs ZCU102          {eg_z:>9.2}x  {:>6.2}x", paper::AVG_ENERGY_GAIN_VS_ZCU102);
+    println!("  energy eff vs U250            {eg_u:>9.2}x  {:>6.2}x", paper::AVG_ENERGY_GAIN_VS_U250);
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate paper Table 6 (optimal TOPS under latency constraints
+//! for GPU / SSR-sequential / SSR-spatial / SSR-hybrid, DeiT-T).
+
+use ssr::bench::{bench, Table};
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+    let constraints = [2.0, 1.0, 0.5, 0.4];
+
+    let mut rows = None;
+    let r = bench("table6: constraint sweep", 0, 1, 300.0, || {
+        rows = Some(tables::table6(&ctx, &constraints));
+    });
+    println!("{}\n", r.report());
+    let rows = rows.unwrap();
+    println!("{}", tables::table6_table(&rows).render());
+
+    // paper-vs-measured, cell by cell
+    let fmt = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "x".into());
+    let mut t = Table::new(&[
+        "constraint", "GPU paper/ours", "seq paper/ours", "spatial paper/ours", "hybrid paper/ours",
+    ]);
+    for (row, (c, pg, ps, psp, ph)) in rows.iter().zip(paper::TABLE6) {
+        assert_eq!(row.lat_cons_ms, c);
+        t.row(&[
+            format!("{c} ms"),
+            format!("{}/{}", fmt(pg), fmt(row.gpu)),
+            format!("{}/{}", fmt(ps), fmt(row.seq)),
+            format!("{}/{}", fmt(psp), fmt(row.spatial)),
+            format!("{}/{}", fmt(ph), fmt(row.hybrid)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Structural claims: hybrid >= max(seq, spatial) everywhere; hybrid
+    // feasible at the tightest constraint where spatial is not.
+    for row in &rows {
+        if let (Some(h), Some(s)) = (row.hybrid, row.seq) {
+            assert!(h >= s - 1e-9, "hybrid below sequential at {}", row.lat_cons_ms);
+        }
+        if let (Some(h), Some(s)) = (row.hybrid, row.spatial) {
+            assert!(h >= s - 1e-9, "hybrid below spatial at {}", row.lat_cons_ms);
+        }
+    }
+    println!("structural checks passed: hybrid >= max(sequential, spatial) under every constraint");
+}

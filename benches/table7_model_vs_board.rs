@@ -1,0 +1,42 @@
+//! Bench: regenerate paper Table 7 (analytical model vs "on-board"
+//! latency per accelerator count). Our board substitute is the
+//! event-driven simulator; the paper reports <5% error against silicon,
+//! we report the analytical-vs-simulator residual.
+
+use ssr::bench::{bench, Table};
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+
+    let mut rows = None;
+    let r = bench("table7: per-acc-count sweep", 0, 1, 300.0, || {
+        rows = Some(tables::table7(&ctx, 6));
+    });
+    println!("{}\n", r.report());
+    let rows = rows.unwrap();
+    println!("{}", tables::table7_table(&rows).render());
+
+    let mut t = Table::new(&["# accs", "paper est (ms)", "paper board (ms)", "our est (ms)", "our 'board' (ms)", "our err"]);
+    for row in &rows {
+        let paper_row = paper::TABLE7.iter().find(|(n, _, _)| *n == row.naccs);
+        let (pe, pb) = paper_row.map(|(_, e, b)| (*e, *b)).unwrap_or((f64::NAN, f64::NAN));
+        t.row(&[
+            row.naccs.to_string(),
+            format!("{pe:.2}"),
+            format!("{pb:.2}"),
+            format!("{:.3}", row.analytical_ms),
+            format!("{:.3}", row.sim_ms),
+            format!("{:+.1}%", row.err * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let max_err = rows.iter().map(|r| r.err.abs()).fold(0.0f64, f64::max);
+    println!("max |analytical - sim| error: {:.1}% (paper reports <= 6% vs silicon)", max_err * 100.0);
+    // Shape check: latency decreases as accelerators are added (1 -> max).
+    assert!(rows.last().unwrap().sim_ms < rows.first().unwrap().sim_ms);
+    println!("shape check passed: latency decreases with accelerator count");
+}

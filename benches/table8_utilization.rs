@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Table 8 (SSR-spatial resource utilization for
+//! DeiT-T): per-accelerator Eq. 1 resources and platform totals.
+
+use ssr::bench::bench;
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let ctx = Ctx::vck190();
+
+    let mut out = None;
+    let r = bench("table8: spatial design resources", 0, 5, 20.0, || {
+        out = Some(tables::table8(&ctx));
+    });
+    println!("{}\n", r.report());
+    let t8 = out.unwrap();
+    println!("{}", tables::table8_table(&t8, &ctx.platform).render());
+
+    let p = &paper::TABLE8_TOTAL;
+    println!("paper totals: AIE {} PLIO {} BRAM {} DSP {}", p.aie, p.plio, p.bram, p.dsp);
+    println!(
+        "our totals  : AIE {} PLIO {} BRAM banks {} DSP {}",
+        t8.aie, t8.plio, t8.bram_banks, t8.dsp
+    );
+    println!(
+        "AIE utilization: paper {:.1}%  ours {:.1}%",
+        p.aie as f64 / 400.0 * 100.0,
+        t8.aie as f64 / ctx.platform.aie_total as f64 * 100.0
+    );
+    assert!(t8.aie <= ctx.platform.aie_total);
+    assert!(t8.plio <= ctx.platform.plio_total);
+    println!("resource-fit checks passed");
+}

@@ -1,0 +1,93 @@
+//! DSE deep-dive (paper Sec. 4.4 + Fig. 10): run the inter-acc-aware
+//! evolutionary search against the exhaustive baseline under a latency
+//! constraint, print the search-quality trace and the winning design's
+//! full configuration (Eq. 1 resources per accelerator).
+//!
+//! Run with: `cargo run --release --example dse_search [-- --quick]`
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch::vck190;
+use ssr::dse::ea::{run_ea, EaParams};
+use ssr::dse::enumerate;
+use ssr::dse::eval::build_design;
+use ssr::graph::{vit_graph, DEIT_T};
+use ssr::util::threadpool::{default_threads, scope_map};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let platform = vck190();
+    let calib = Calib::default();
+    let graph = vit_graph(&DEIT_T);
+    let lat_cons = 2.0e-3;
+    let batch = 6;
+
+    println!("== inter-acc-aware EA (Algorithm 1 + Algorithm 2 pruning) ==");
+    let params = EaParams {
+        batch,
+        lat_cons,
+        n_pop: if quick { 8 } else { 24 },
+        n_child: if quick { 8 } else { 24 },
+        n_iter: if quick { 4 } else { 12 },
+        seed: 0xEA,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let ea = run_ea(&platform, &calib, &graph, Features::all(), true, &params);
+    let ea_secs = t0.elapsed().as_secs_f64();
+    println!("search-quality trace (generation, best TOPS):");
+    for (gen, tops) in &ea.trace {
+        println!("  gen {gen:>2}  {tops:>6.2}");
+    }
+    let (ev, e) = ea.best.expect("feasible design");
+    println!(
+        "\nbest: {:?} -> {:.3} ms, {:.2} TOPS  ({} designs, {} configs, {:.2} s)",
+        ev.design.assignment.acc_of,
+        e.latency_s * 1e3,
+        e.tops,
+        ea.designs_evaluated,
+        ea.configs_evaluated,
+        ea_secs
+    );
+    println!("per-accelerator customization (config_vector, Eq. 1 resources):");
+    for (i, c) in ev.design.configs.iter().enumerate() {
+        println!(
+            "  acc{i}: {:?}  h=({},{},{}) array=({},{},{})  AIE={} PLIO={} part={:?}",
+            ev.design.assignment.classes_on(i),
+            c.h1, c.w1, c.w2, c.a, c.b, c.c,
+            c.aie(),
+            c.plio(),
+            c.part
+        );
+    }
+
+    println!("\n== exhaustive baseline (post-verify, no alignment pruning) ==");
+    let assignments = enumerate::all_up_to(8);
+    let assignments = if quick {
+        assignments.into_iter().step_by(32).collect::<Vec<_>>()
+    } else {
+        assignments
+    };
+    let t1 = std::time::Instant::now();
+    let evals = scope_map(&assignments, default_threads(), |a| {
+        build_design(&platform, &calib, &graph, a, Features::all(), false)
+            .map(|ev| (ev.stats.configs_evaluated, ev.evaluate(&platform, &graph, batch)))
+    });
+    let ex_secs = t1.elapsed().as_secs_f64();
+    let mut best = 0.0f64;
+    let mut configs = 0usize;
+    for r in evals.into_iter().flatten() {
+        configs += r.0;
+        if r.1.latency_s <= lat_cons {
+            best = best.max(r.1.tops);
+        }
+    }
+    println!(
+        "exhaustive: best {best:.2} TOPS over {} assignments, {configs} configs, {ex_secs:.2} s",
+        assignments.len()
+    );
+    println!(
+        "\nsearch-cost ratio (exhaustive/EA): {:.1}x configs, {:.1}x wall",
+        configs as f64 / ea.configs_evaluated as f64,
+        ex_secs / ea_secs
+    );
+}

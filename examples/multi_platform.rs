@@ -1,0 +1,39 @@
+//! Cross-platform mapping (paper §6 Q1/Q2): apply the SSR analytical model
+//! to VCK190, a hypothetical HBM VCK190, and Intel Stratix 10 NX; then the
+//! multi-board scale-out estimate for a 16x model (DeiT-Base class).
+//!
+//! Run with: `cargo run --release --example multi_platform [-- --quick]`
+
+use ssr::report::paper;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    println!("== §6 Q1: SSR mapping DeiT-T (batch 6) on three platforms ==");
+    println!("{:<14} {:>12} {:>10}", "platform", "latency(ms)", "TOPS");
+    for r in tables::multi_platform(quick) {
+        println!("{:<14} {:>12.3} {:>10.2}", r.platform, r.latency_ms, r.tops);
+    }
+    println!(
+        "\npaper anchors: VCK190 0.54 ms, Stratix 10 NX {} ms, VCK190@102GB/s {} ms",
+        paper::STRATIX_DEIT_T_MS,
+        paper::VCK190_HBM_DEIT_T_MS
+    );
+
+    println!("\n== §6 Q2: DeiT-Base-class (16x params) over multiple boards ==");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+    println!(
+        "{:>7} {:>16} {:>18}",
+        "boards", "b1 latency (ms)", "steady imgs/s"
+    );
+    for boards in [1usize, 2, 4, 8, 12, 16] {
+        let (lat, thr) = tables::scaleout(&ctx, 16, boards, paper::SCALEOUT_HOP_MS);
+        println!("{boards:>7} {lat:>16.2} {thr:>18.0}");
+    }
+    println!(
+        "\n(paper assumes {} boards over 100Gb/s QSFP28 with {} ms hops)",
+        paper::SCALEOUT_BOARDS,
+        paper::SCALEOUT_HOP_MS
+    );
+}

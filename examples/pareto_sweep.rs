@@ -1,0 +1,36 @@
+//! Pareto sweep (paper Fig. 2): regenerate the latency-throughput scatter
+//! for DeiT-T on VCK190 — sequential trendline, spatial trendline, and the
+//! SSR-hybrid points — and print the combined Pareto front.
+//!
+//! Run with: `cargo run --release --example pareto_sweep [-- --quick]`
+
+use ssr::dse::pareto::front_dominates;
+use ssr::report::tables::{self, Ctx};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = if quick { Ctx::quick() } else { Ctx::vck190() };
+    let f = tables::fig2(&ctx);
+
+    println!("{}", tables::fig2_table(&f).render());
+
+    let front = f.hybrid_front();
+    println!("combined SSR Pareto front (latency ms, TOPS):");
+    for p in &front {
+        println!(
+            "  {:>7.3} ms  {:>6.2} TOPS   batch={} accs={}",
+            p.latency_ms, p.tops, p.batch, p.nacc
+        );
+    }
+
+    println!(
+        "\nhybrid front dominates sequential-only: {}",
+        front_dominates(&front, &f.seq)
+    );
+    println!(
+        "hybrid front dominates spatial-only:    {}",
+        front_dominates(&front, &f.spatial)
+    );
+    // Paper anchor points for eyeballing:
+    println!("\npaper anchors: A(0.22, 10.90) B(1.30, 11.17) C(0.44, 5.66) D(0.58, 26.70) E(0.43, 18.56)");
+}

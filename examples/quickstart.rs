@@ -1,0 +1,65 @@
+//! Quickstart: the SSR pipeline end to end, in one page.
+//!
+//! 1. Build the DeiT-T layer graph (paper Fig. 4).
+//! 2. Evaluate the two pure strategies (sequential / spatial) on VCK190.
+//! 3. Run the evolutionary Layer→Acc search (Algorithm 1) for the hybrid.
+//! 4. Cross-check the winner on the event-driven simulator.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch::vck190;
+use ssr::dse::ea::{run_ea, EaParams};
+use ssr::dse::eval::build_design;
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T};
+use ssr::sim;
+
+fn main() {
+    let platform = vck190();
+    let calib = Calib::default();
+    let graph = vit_graph(&DEIT_T);
+    println!(
+        "DeiT-T: {} MM/BMM nodes, {:.2} GMACs/image, platform {} ({:.1} INT8 TOPS peak)\n",
+        graph.node_count(),
+        graph.macs_per_image as f64 / 1e9,
+        platform.name,
+        platform.peak_int8_tops()
+    );
+
+    let batch = 6;
+    for (name, assignment) in [
+        ("sequential (1 acc)", Assignment::sequential()),
+        ("spatial   (8 accs)", Assignment::spatial()),
+    ] {
+        let ev = build_design(&platform, &calib, &graph, &assignment, Features::all(), true)
+            .expect("feasible design");
+        let e = ev.evaluate(&platform, &graph, batch);
+        println!(
+            "{name}: {:.3} ms latency, {:.2} TOPS, {:.0} GOPS/W (batch {batch})",
+            e.latency_s * 1e3,
+            e.tops,
+            e.gops_per_w
+        );
+    }
+
+    println!("\nrunning the evolutionary hybrid search (Algorithm 1)...");
+    let params =
+        EaParams { batch, n_pop: 16, n_child: 16, n_iter: 8, seed: 42, ..Default::default() };
+    let result = run_ea(&platform, &calib, &graph, Features::all(), true, &params);
+    let (ev, e) = result.best.expect("EA found a design");
+    println!(
+        "hybrid    ({} accs): {:.3} ms latency, {:.2} TOPS  — assignment {:?}",
+        ev.design.assignment.nacc(),
+        e.latency_s * 1e3,
+        e.tops,
+        ev.design.assignment.acc_of
+    );
+
+    let simres = sim::simulate(&platform, &ev, &graph, batch);
+    println!(
+        "simulator cross-check: {:.3} ms ({:+.1}% vs analytical)",
+        simres.makespan_s * 1e3,
+        (e.latency_s - simres.makespan_s) / simres.makespan_s * 100.0
+    );
+}

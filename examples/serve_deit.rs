@@ -1,0 +1,98 @@
+//! END-TO-END DRIVER: serve DeiT-T on the real PJRT runtime and measure
+//! the latency-throughput tradeoff of the three execution models with
+//! actual compiled executables — the full three-layer system composing:
+//!
+//!   Pallas/JAX (build time) -> HLO artifacts -> rust PJRT coordinator.
+//!
+//! * sequential: one worker, monolithic `full_bN` executable per request
+//!   (Fig. 1a — latency-oriented at batch 1, throughput via batching),
+//! * spatial: four stage workers (embed/attn/mlp/head) with requests
+//!   pipelined across them (Fig. 1b),
+//! * hybrid: two workers ({embed,mlp,head}, {attn}) (Fig. 1c).
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run with: `cargo run --release --example serve_deit [-- --requests N]`
+
+use std::sync::Arc;
+
+use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::StageAssign;
+use ssr::runtime::exec::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args
+        .iter()
+        .position(|a| a == "--requests")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+
+    let dir = ssr::runtime::artifacts_dir(None);
+    let engine = Engine::load(&dir)?;
+    println!(
+        "PJRT engine: {} | {} executables, {} weight blobs ({:.1} MB)\n",
+        engine.platform(),
+        engine.manifest.executables.len(),
+        engine.weights.len(),
+        engine.weights.bytes() as f64 / 1e6
+    );
+
+    // --- sequential: batch sweep on the monolithic executable -------------
+    println!("== sequential (monolithic acc, Fig. 1a) ==");
+    let seq = SequentialServer::new(Arc::clone(&engine), "deit_t", &[1, 3, 6])?;
+    let mut seq_points = Vec::new();
+    for &b in &[1usize, 3, 6] {
+        let nreq = (requests / b).max(2);
+        let reqs: Vec<_> =
+            (0..nreq).map(|i| synth_images(b, seq.img_size(), i as u64)).collect();
+        let (report, outs) = seq.serve(b, &reqs)?;
+        assert!(outs.iter().all(|o| o.data.iter().all(|x| x.is_finite())));
+        println!(
+            "  batch {b}: lat/req p50 {:>8.2} ms | {:>6.2} img/s | {:.4} eff TOPS",
+            report.latency.p50() * 1e3,
+            report.throughput_rps(),
+            report.effective_tops()
+        );
+        seq_points.push((b, report));
+    }
+
+    // --- spatial + hybrid pipelines ---------------------------------------
+    for (name, assign) in [
+        ("spatial (4 stage accs, Fig. 1b)", StageAssign::spatial()),
+        ("hybrid  (2 accs: {embed,mlp,head} | {attn}, Fig. 1c)",
+         StageAssign { acc_of: [0, 1, 0, 0] }),
+    ] {
+        println!("\n== {name} ==");
+        let pipe = PipelineServer::new(Arc::clone(&engine), "deit_t", &assign, 1)?;
+        let imgs: Vec<_> = (0..requests).map(|i| synth_images(1, 224, i as u64)).collect();
+        let (report, outs) = pipe.serve(imgs)?;
+        assert!(outs.iter().all(|o| o.shape == vec![1, 1000]));
+        println!(
+            "  {} requests: lat p50 {:>8.2} ms p99 {:>8.2} ms | {:>6.2} img/s | {:.4} eff TOPS",
+            report.requests,
+            report.latency.p50() * 1e3,
+            report.latency.p99() * 1e3,
+            report.throughput_rps(),
+            report.effective_tops()
+        );
+    }
+
+    // --- numerics cross-check: sequential vs pipeline ----------------------
+    println!("\n== numerics cross-check (monolithic vs staged) ==");
+    let pipe = PipelineServer::new(Arc::clone(&engine), "deit_t", &StageAssign::spatial(), 1)?;
+    let img = synth_images(1, 224, 12345);
+    let a = seq.run_batch(1, &img)?;
+    let (_, outs) = pipe.serve(vec![img])?;
+    let max_diff = a
+        .data
+        .iter()
+        .zip(&outs[0].data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("  max |logit diff| = {max_diff:.2e} (must be < 2e-3)");
+    assert!(max_diff < 2e-3);
+    println!("  OK — stage composition is numerically faithful");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time-only python package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing in this package is imported at serve time; ``compile.aot`` emits HLO
+text + weight binaries into ``artifacts/`` once, and the rust coordinator is
+self-contained afterwards.
+"""

@@ -1,0 +1,346 @@
+"""AOT compile path: lower L2/L1 to HLO *text* artifacts + weight binaries.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs (all consumed by the rust runtime, never by python at serve time):
+
+    artifacts/
+      manifest.json               executable + weight index (see below)
+      <model>_<stage>_b<N>.hlo.txt   HLO text per stage executable
+      smoke.hlo.txt / smoke_pallas.hlo.txt   tiny fixtures for rust tests
+      weights/<model>/wNNNN.bin   f32 little-endian flat weight blobs
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; rust unwraps with
+``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    return jax.ShapeDtypeStruct(np.shape(x), jnp.asarray(x).dtype)
+
+
+def _flatten_named(tree) -> List[tuple]:
+    """Deterministic (name, leaf) list; names like 'blocks/3/wqkv'."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+class ArtifactWriter:
+    """Accumulates weights + executables and writes the manifest."""
+
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.weights: List[Dict[str, Any]] = []
+        self.executables: List[Dict[str, Any]] = []
+        self.models: Dict[str, Any] = {}
+        self._weight_ids: Dict[int, int] = {}  # id(array) -> weight id
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_weight(self, model: str, name: str, arr: jax.Array) -> int:
+        key = id(arr)
+        if key in self._weight_ids:
+            return self._weight_ids[key]
+        wid = len(self.weights)
+        rel = f"weights/{model}/w{wid:04d}.bin"
+        path = os.path.join(self.out, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        host = np.asarray(arr, dtype=np.float32)
+        host.tofile(path)
+        self.weights.append(
+            {"id": wid, "name": f"{model}/{name}", "shape": list(host.shape), "file": rel}
+        )
+        self._weight_ids[key] = wid
+        return wid
+
+    def add_executable(
+        self,
+        *,
+        name: str,
+        fn,
+        args: Sequence[Dict[str, Any]],
+        arrays: Sequence[Any],
+        outputs_of,
+        extra: Dict[str, Any] | None = None,
+    ) -> None:
+        """Lower ``fn(*arrays-shaped-args)`` and record the arg schema.
+
+        ``args`` is the manifest-facing schema (kind=weight/input/block_weight),
+        ``arrays`` the concrete example values/specs used for lowering.
+        """
+        specs = [_spec(a) for a in arrays]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_rel = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, hlo_rel), "w") as f:
+            f.write(text)
+        out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(
+            jax.eval_shape(fn, *specs))]
+        entry = {
+            "name": name,
+            "hlo": hlo_rel,
+            "args": list(args),
+            "outputs": out_shapes,
+        }
+        if extra:
+            entry.update(extra)
+        self.executables.append(entry)
+        print(f"  wrote {hlo_rel}  ({len(text)} chars, {len(specs)} args)")
+
+    def finish(self) -> None:
+        manifest = {
+            "format_version": 1,
+            "models": self.models,
+            "weights": self.weights,
+            "executables": self.executables,
+        }
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"  wrote manifest.json ({len(self.executables)} executables, "
+              f"{len(self.weights)} weight blobs)")
+
+
+# ---------------------------------------------------------------------------
+# Smoke fixtures (fast-compiling; used by `cargo test`).
+# ---------------------------------------------------------------------------
+
+
+def emit_smoke(w: ArtifactWriter) -> None:
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    def fn_pallas(x, y):
+        from .kernels.matmul import matmul_general
+
+        return (matmul_general(x, y, bm=2, bk=2, bn=2) + 2.0,)
+
+    spec = jnp.zeros((2, 2), jnp.float32)
+    inp = [
+        {"kind": "input", "name": "x", "shape": [2, 2]},
+        {"kind": "input", "name": "y", "shape": [2, 2]},
+    ]
+    w.add_executable(name="smoke", fn=fn, args=inp, arrays=[spec, spec], outputs_of=fn)
+    w.add_executable(
+        name="smoke_pallas", fn=fn_pallas, args=inp, arrays=[spec, spec], outputs_of=fn_pallas
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model executables.
+# ---------------------------------------------------------------------------
+
+_BLOCK_FIELDS = [
+    "ln1_g", "ln1_b", "wqkv", "bqkv", "wproj", "bproj",
+    "ln2_g", "ln2_b", "wfc1", "bfc1", "wfc2", "bfc2",
+]
+_ATTN_FIELDS = _BLOCK_FIELDS[:6]
+_MLP_FIELDS = _BLOCK_FIELDS[6:]
+
+
+def emit_model(w: ArtifactWriter, cfg: M.ModelConfig, batches: Sequence[int],
+               stage_batches: Sequence[int], seed: int) -> None:
+    params = M.init_params(cfg, seed=seed)
+    t, d = cfg.tokens, cfg.embed_dim
+    w.models[cfg.name] = {
+        "embed_dim": d,
+        "num_heads": cfg.num_heads,
+        "depth": cfg.depth,
+        "tokens": t,
+        "img_size": cfg.img_size,
+        "patch_size": cfg.patch_size,
+        "num_classes": cfg.num_classes,
+        "macs_per_image": M.count_macs(cfg),
+    }
+
+    named = _flatten_named(params)
+    flat = [leaf for _, leaf in named]
+    _, treedef = jax.tree_util.tree_flatten(params)
+    full_arg_schema = [
+        {"kind": "weight", "weight": w.add_weight(cfg.name, name, leaf)}
+        for name, leaf in named
+    ]
+
+    # --- full model (sequential-acc executable), one per batch size --------
+    for b in batches:
+        img = jax.ShapeDtypeStruct((b, cfg.img_size, cfg.img_size, 3), jnp.float32)
+
+        def full_fn(*args):
+            ws, x = args[:-1], args[-1]
+            p = jax.tree_util.tree_unflatten(treedef, list(ws))
+            return (M.model_fwd(p, x, cfg, use_pallas=False),)
+
+        w.add_executable(
+            name=f"{cfg.name}_full_b{b}",
+            fn=full_fn,
+            args=full_arg_schema
+            + [{"kind": "input", "name": "img", "shape": list(img.shape)}],
+            arrays=flat + [img],
+            outputs_of=full_fn,
+            extra={"model": cfg.name, "stage": "full", "batch": b},
+        )
+
+    # --- stage executables (spatial/hybrid accs) ---------------------------
+    embed_named = _flatten_named(params["embed"])
+    _, embed_treedef = jax.tree_util.tree_flatten(params["embed"])
+    head_named = _flatten_named(params["head"])
+    _, head_treedef = jax.tree_util.tree_flatten(params["head"])
+
+    # Per-block weights are runtime arguments: ONE attn/mlp executable is
+    # compiled per batch size and re-invoked with each block's weights (the
+    # paper's "map several layers onto one physical accelerator").
+    block0 = params["blocks"][0]
+    blk_weight_ids = {
+        f: [w.add_weight(cfg.name, f"blocks/{i}/{f}", params["blocks"][i][f])
+            for i in range(cfg.depth)]
+        for f in _BLOCK_FIELDS
+    }
+
+    for b in stage_batches:
+        img = jax.ShapeDtypeStruct((b, cfg.img_size, cfg.img_size, 3), jnp.float32)
+        xact = jax.ShapeDtypeStruct((b, t, d), jnp.float32)
+
+        def embed_fn(*args):
+            ws, x = args[:-1], args[-1]
+            p = jax.tree_util.tree_unflatten(embed_treedef, list(ws))
+            return (M.embed_fwd(p, x, cfg, use_pallas=False),)
+
+        w.add_executable(
+            name=f"{cfg.name}_embed_b{b}",
+            fn=embed_fn,
+            args=[{"kind": "weight", "weight": w.add_weight(cfg.name, n, l)}
+                  for n, l in embed_named]
+            + [{"kind": "input", "name": "img", "shape": list(img.shape)}],
+            arrays=[l for _, l in embed_named] + [img],
+            outputs_of=embed_fn,
+            extra={"model": cfg.name, "stage": "embed", "batch": b},
+        )
+
+        def make_sub(fields, fwd):
+            def fn(*args):
+                ws, x = args[:-1], args[-1]
+                bp = dict(zip(fields, ws))
+                return (fwd(bp, x, cfg, use_pallas=False),)
+            return fn
+
+        for stage, fields, fwd in (
+            ("attn", _ATTN_FIELDS, M.attn_fwd),
+            ("mlp", _MLP_FIELDS, M.mlp_fwd),
+        ):
+            w.add_executable(
+                name=f"{cfg.name}_{stage}_b{b}",
+                fn=make_sub(fields, fwd),
+                args=[{"kind": "block_weight", "field": f} for f in fields]
+                + [{"kind": "input", "name": "x", "shape": list(xact.shape)}],
+                arrays=[block0[f] for f in fields] + [xact],
+                outputs_of=make_sub(fields, fwd),
+                extra={
+                    "model": cfg.name,
+                    "stage": stage,
+                    "batch": b,
+                    "block_weights": {f: blk_weight_ids[f] for f in fields},
+                },
+            )
+
+        def head_fn(*args):
+            ws, x = args[:-1], args[-1]
+            p = jax.tree_util.tree_unflatten(head_treedef, list(ws))
+            return (M.head_fwd(p, x, cfg, use_pallas=False),)
+
+        w.add_executable(
+            name=f"{cfg.name}_head_b{b}",
+            fn=head_fn,
+            args=[{"kind": "weight", "weight": w.add_weight(cfg.name, n, l)}
+                  for n, l in head_named]
+            + [{"kind": "input", "name": "x", "shape": list(xact.shape)}],
+            arrays=[l for _, l in head_named] + [xact],
+            outputs_of=head_fn,
+            extra={"model": cfg.name, "stage": "head", "batch": b},
+        )
+
+    # --- pallas-kernel block (L1 lowered into the artifact) ----------------
+    xact1 = jax.ShapeDtypeStruct((1, t, d), jnp.float32)
+
+    def block_pallas_fn(*args):
+        ws, x = args[:-1], args[-1]
+        bp = dict(zip(_BLOCK_FIELDS, ws))
+        return (M.block_fwd(bp, x, cfg, use_pallas=True),)
+
+    w.add_executable(
+        name=f"{cfg.name}_block_pallas_b1",
+        fn=block_pallas_fn,
+        args=[{"kind": "block_weight", "field": f} for f in _BLOCK_FIELDS]
+        + [{"kind": "input", "name": "x", "shape": list(xact1.shape)}],
+        arrays=[block0[f] for f in _BLOCK_FIELDS] + [xact1],
+        outputs_of=block_pallas_fn,
+        extra={
+            "model": cfg.name,
+            "stage": "block_pallas",
+            "batch": 1,
+            "block_weights": blk_weight_ids,
+        },
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="deit_t",
+                    help="comma list from %s or 'all'" % ",".join(M.CONFIGS))
+    ap.add_argument("--batches", default="1,3,6", help="full-model batch sizes")
+    ap.add_argument("--stage-batches", default="1,6", help="stage batch sizes")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = list(M.CONFIGS) if args.models == "all" else args.models.split(",")
+    batches = [int(b) for b in args.batches.split(",")]
+    stage_batches = [int(b) for b in args.stage_batches.split(",")]
+
+    writer = ArtifactWriter(args.out)
+    print("emitting smoke fixtures")
+    emit_smoke(writer)
+    for name in names:
+        cfg = M.CONFIGS[name]
+        print(f"emitting {name} (d={cfg.embed_dim} h={cfg.num_heads} "
+              f"depth={cfg.depth}, {M.count_macs(cfg)/1e9:.2f} GMACs)")
+        emit_model(writer, cfg, batches, stage_batches, args.seed)
+    writer.finish()
+
+
+if __name__ == "__main__":
+    main()

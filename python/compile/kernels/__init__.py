@@ -1,0 +1,25 @@
+"""L1 Pallas kernels for the SSR reproduction.
+
+Each kernel module mirrors a hardware unit from the paper:
+
+* ``matmul``      — HMM (heterogeneous matrix-multiply) units on the AIE array.
+  ``matmul.matmul_pinned`` is HMM-type0 (weights pinned in AIE local memory /
+  VMEM), ``matmul.matmul_general`` is HMM-type1 (two streamed activation
+  operands, used by attention score/context products).
+* ``softmax``     — HCE nonlinear engine (PL side in the paper).
+* ``layernorm``   — HCE nonlinear engine with the line-buffer fine-grained
+  pipeline realized as a single fused mu/sigma pass.
+* ``gelu``        — HCE elementwise engine.
+* ``ref``         — pure-jnp oracles for all of the above.
+
+Import the *modules* (``from compile.kernels import softmax``) — the
+function names inside intentionally match the module names, so re-exporting
+them here would shadow the submodules.
+
+All kernels run under ``interpret=True`` (CPU); real-TPU performance is
+estimated analytically (see DESIGN.md §Hardware-Adaptation and §Perf).
+"""
+
+from . import gelu, layernorm, matmul, ref, softmax
+
+__all__ = ["matmul", "softmax", "layernorm", "gelu", "ref"]

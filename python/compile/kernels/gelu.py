@@ -1,0 +1,49 @@
+"""Pallas HCE GELU kernel (elementwise, reuse distance == 1).
+
+Elementwise ops fuse trivially with the HMM stream in the paper (Sec 4.3);
+here the kernel is a plain blocked elementwise map, the degenerate case of
+the fine-grained pipeline.
+
+Uses the tanh approximation (as deployed INT8 transformer accelerators do):
+    gelu(x) = 0.5 x (1 + tanh(sqrt(2/pi) (x + 0.044715 x^3)))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    inner = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def gelu(x: jax.Array, *, block_rows: int = 128) -> jax.Array:
+    """Blocked elementwise tanh-GELU on a 2-D array."""
+    assert x.ndim == 2
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    pad_r = (-rows) % br
+    xp = jnp.pad(x, ((0, pad_r), (0, 0)))
+    nrb = xp.shape[0] // br
+
+    out = pl.pallas_call(
+        _gelu_kernel,
+        grid=(nrb,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:rows, :]
+
+
+def gelu_nd(x: jax.Array) -> jax.Array:
+    """GELU for arbitrary leading dims."""
+    shape = x.shape
+    return gelu(x.reshape(-1, shape[-1])).reshape(shape)

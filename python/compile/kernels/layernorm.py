@@ -1,0 +1,81 @@
+"""Pallas HCE LayerNorm kernel — the fine-grained-pipeline analog.
+
+Paper Fig. 7: the PL LayerNorm engine must produce mu, then sigma, then the
+normalized output, and without pipelining these stages serialize and can
+dominate the MM latency. SSR's fix is a bypass line buffer that starts the
+sigma stage as soon as the first row's mu is ready, roughly halving latency.
+
+The VMEM analog: a row block is resident, so mu and sigma are computed in a
+*single fused traversal* using the one-pass identity
+
+    var = E[x^2] - (E[x])^2
+
+— i.e. the sum and sum-of-squares accumulate together, which is exactly the
+dependency the line buffer breaks. ``ref.py`` holds the naive two-pass
+oracle; the property tests check the fused kernel against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, valid_cols: int, eps: float):
+    x = x_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, dimension=x.ndim - 1)
+    mask = col < valid_cols
+    xz = jnp.where(mask, x, 0.0)
+    n = jnp.asarray(valid_cols, x.dtype)
+    # Single fused pass: sum and sum-of-squares together (line-buffer analog).
+    s1 = jnp.sum(xz, axis=-1, keepdims=True)
+    s2 = jnp.sum(xz * xz, axis=-1, keepdims=True)
+    mu = s1 / n
+    var = s2 / n - mu * mu
+    inv = jax.lax.rsqrt(var + eps)
+    y = (xz - mu) * inv * g_ref[...] + b_ref[...]
+    o_ref[...] = jnp.where(mask, y, 0.0)
+
+
+def layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 128,
+) -> jax.Array:
+    """LayerNorm over the last axis of a 2-D array with affine params."""
+    assert x.ndim == 2
+    rows, cols = x.shape
+    assert gamma.shape == (cols,) and beta.shape == (cols,)
+    br = min(block_rows, rows)
+    pad_r = (-rows) % br
+    xp = jnp.pad(x, ((0, pad_r), (0, 0)))
+    nrb = xp.shape[0] // br
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, valid_cols=cols, eps=eps),
+        grid=(nrb,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:rows, :]
+
+
+def layernorm_nd(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-6
+) -> jax.Array:
+    """LayerNorm over the last axis for arbitrary leading dims."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    return layernorm(flat, gamma, beta, eps=eps).reshape(shape)

@@ -1,0 +1,158 @@
+"""Pallas HMM (heterogeneous matrix-multiply) kernels.
+
+The paper's HMM unit is an (A, B, C) array of AIE tiles, each computing an
+(h1, w1, w2) sub-matmul out of its 32 KiB local memory, fed by PLIO streams
+from PL-side RAM banks. On TPU the analogous schedule is expressed with a
+Pallas grid + ``BlockSpec``s:
+
+* the grid dimension order plays the role of the PLIO stream schedule
+  (which operand is revisited / resident across iterations),
+* the block shape ``(TM, TK, TN)`` plays the role of the per-array-pass tile
+  ``(A*h1, B*w1, C*w2)``,
+* VMEM residency of the weight block across the M-grid plays the role of
+  HMM-type0 *weight pinning* into AIE local memory.
+
+Both kernels accumulate in f32 (``preferred_element_type``), the analog of
+the AIE's 32-bit accumulators over INT8 MACs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``mult``.
+
+    The paper's DSE only admits integer tilings (Sec 4.4: "we find all integer
+    solutions"); padding is how a fixed (TM,TK,TN) tile covers ragged shapes
+    like the 197-token dimension, exactly as the AIE array pads its last pass.
+    """
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Blocked matmul body: accumulate over the K grid dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _blocked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int,
+    bk: int,
+    bn: int,
+    pin_weights: bool,
+) -> jax.Array:
+    """Shared driver for both HMM types.
+
+    ``pin_weights`` selects the grid order: type0 iterates the M dimension
+    innermost so the weight block (k, j) stays VMEM-resident across the whole
+    activation stream — the schedule the paper gets by pinning weights in AIE
+    local memory and streaming only activations over PLIO.
+    """
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"matmul shape mismatch: {x.shape} @ {w.shape}"
+
+    bm = min(bm, m) if m > 0 else bm
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    nm, nn, nk = mp // bm, np_ // bn, kp // bk
+
+    if pin_weights:
+        # grid = (j, k, i): for a fixed weight block (k, j) the whole M range
+        # streams through before the next weight block is loaded.
+        grid = (nn, nk, nm)
+        x_spec = pl.BlockSpec((bm, bk), lambda j, k, i: (i, k))
+        w_spec = pl.BlockSpec((bk, bn), lambda j, k, i: (k, j))
+        o_spec = pl.BlockSpec((bm, bn), lambda j, k, i: (i, j))
+
+        def kernel(x_ref, w_ref, o_ref):
+            k = pl.program_id(1)
+
+            @pl.when(k == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += jnp.dot(
+                x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+            )
+
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp)
+    else:
+        grid = (nm, nn, nk)
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel, nk=nk),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp)
+
+    return out[:m, :n]
+
+
+def matmul_pinned(
+    x: jax.Array, w: jax.Array, *, bm: int = 64, bk: int = 64, bn: int = 64
+) -> jax.Array:
+    """HMM-type0: weight-stationary matmul (QKV / proj / MLP layers).
+
+    One streamed operand (activations); weights are grid-resident. Matches
+    the paper's PLIO-reduction strategy for non-attention layers.
+    """
+    return _blocked_matmul(x, w, bm=bm, bk=bk, bn=bn, pin_weights=True)
+
+
+def matmul_general(
+    x: jax.Array, y: jax.Array, *, bm: int = 64, bk: int = 64, bn: int = 64
+) -> jax.Array:
+    """HMM-type1: general matmul with two streamed activation operands.
+
+    Used for attention score (Q @ K^T) and context (P @ V) products where
+    both operands are activations and cannot be pinned.
+    """
+    return _blocked_matmul(x, y, bm=bm, bk=bk, bn=bn, pin_weights=False)
+
+
+def bmm(
+    x: jax.Array, y: jax.Array, *, bm: int = 64, bk: int = 64, bn: int = 64
+) -> jax.Array:
+    """Batched HMM-type1 over arbitrary leading dims (heads, batch)."""
+    assert x.ndim == y.ndim and x.ndim >= 2
+    if x.ndim == 2:
+        return matmul_general(x, y, bm=bm, bk=bk, bn=bn)
+    fn = functools.partial(bmm, bm=bm, bk=bk, bn=bn)
+    return jax.vmap(fn)(x, y)

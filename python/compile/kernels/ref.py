@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+These are deliberately *naive* (e.g. the two-pass LayerNorm the paper's
+Fig. 7 shows as the unpipelined baseline) so the fused Pallas kernels are
+checked against an independent formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def bmm(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-6
+) -> jax.Array:
+    # Two-pass formulation: mu first, then centered variance (the paper's
+    # unpipelined dependency chain) — numerically independent of the kernel's
+    # fused E[x^2]-E[x]^2 form.
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    inner = _SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)
+    return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-head scaled dot-product attention oracle. q,k,v: (T, dh)."""
+    dh = q.shape[-1]
+    scores = bmm(q, jnp.swapaxes(k, -1, -2)) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    return bmm(softmax(scores), v)

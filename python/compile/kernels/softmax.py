@@ -1,0 +1,59 @@
+"""Pallas HCE softmax kernel.
+
+In the paper, Softmax is a PL-side nonlinear engine whose reduction (row max
+and row sum) has reuse distance > 1, so it is pipelined with a bypass line
+buffer (Fig. 7). In the Pallas mapping a row block lives entirely in VMEM, so
+the max/exp/sum stages fuse into one traversal of the resident block — the
+same dependency-resolution trick, expressed as block residency instead of a
+line buffer.
+
+The kernel blocks over rows and keeps the full (padded) reduction axis in the
+block, which for transformer shapes (<=1024 columns) fits VMEM comfortably.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref, *, valid_cols: int):
+    x = x_ref[...]
+    # Mask padded columns so they contribute exp(-inf) = 0 to the sum.
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, dimension=x.ndim - 1)
+    neg_inf = jnp.asarray(-jnp.inf, x.dtype)
+    x = jnp.where(col < valid_cols, x, neg_inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = e / s
+
+
+def softmax(x: jax.Array, *, block_rows: int = 128) -> jax.Array:
+    """Row softmax over the last axis of a 2-D array (rows are independent)."""
+    assert x.ndim == 2, "softmax kernel operates on (rows, cols)"
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    pad_r = (-rows) % br
+    xp = jnp.pad(x, ((0, pad_r), (0, 0)))
+    nrb = xp.shape[0] // br
+
+    import functools
+
+    out = pl.pallas_call(
+        functools.partial(_softmax_kernel, valid_cols=cols),
+        grid=(nrb,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:rows, :]
+
+
+def softmax_nd(x: jax.Array, *, block_rows: int = 128) -> jax.Array:
+    """Softmax over the last axis for arbitrary leading dims (heads, batch)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    return softmax(flat, block_rows=block_rows).reshape(shape)

@@ -1,0 +1,251 @@
+"""L2: DeiT-style vision-transformer forward graph in JAX.
+
+This is the application layer of the paper (Table 3): four ViT variants
+(DeiT-T, DeiT-T-160, DeiT-T-256, LV-ViT-T), INT8-quantized in the paper and
+fake-quantized here (weights snapped to an int8 grid, f32 compute).
+
+The model is written against the L1 Pallas kernels (``use_pallas=True``) or
+the pure-jnp reference ops (``use_pallas=False``); both paths produce the
+same numbers (pytest enforces this), and either lowers to a single HLO
+module per *stage* for the rust coordinator:
+
+    embed  -> [attn -> mlp] x depth -> head
+
+The stage split is exactly the layer granularity the SSR scheduler assigns to
+accelerators (Fig. 4's transformer-block layer graph), so a Layer→Acc
+assignment maps 1:1 onto a set of compiled stage executables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as _km
+from .kernels import softmax as _ks
+from .kernels import layernorm as _kl
+from .kernels import gelu as _kg
+from .kernels import ref as _ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Table 3 row: a ViT variant."""
+
+    name: str
+    embed_dim: int
+    num_heads: int
+    depth: int
+    mlp_ratio: int = 4
+    img_size: int = 224
+    patch_size: int = 16
+    num_classes: int = 1000
+
+    @property
+    def tokens(self) -> int:
+        return (self.img_size // self.patch_size) ** 2 + 1  # +1 cls token
+
+    @property
+    def head_dim(self) -> int:
+        assert self.embed_dim % self.num_heads == 0
+        return self.embed_dim // self.num_heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * 3
+
+
+# The four evaluated applications (paper Table 3).
+DEIT_T = ModelConfig("deit_t", embed_dim=192, num_heads=3, depth=12)
+DEIT_T_160 = ModelConfig("deit_t_160", embed_dim=160, num_heads=4, depth=12)
+DEIT_T_256 = ModelConfig("deit_t_256", embed_dim=256, num_heads=4, depth=12)
+LV_VIT_T = ModelConfig("lv_vit_t", embed_dim=240, num_heads=4, depth=12)
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c for c in (DEIT_T, DEIT_T_160, DEIT_T_256, LV_VIT_T)
+}
+
+
+def fake_quant_int8(w: jax.Array) -> jax.Array:
+    """Symmetric per-tensor fake INT8 quantization (paper runs INT8 models)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+    return jnp.round(w / scale) * scale
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, quantize: bool = True) -> Dict[str, Any]:
+    """Seeded synthetic weights (no pretrained checkpoints offline).
+
+    Scaled-normal init; values then snapped to the int8 grid so the artifact
+    numerics exercise the same dynamic range as the paper's INT8 deployment.
+    """
+    key = jax.random.PRNGKey(seed)
+    d, h, t = cfg.embed_dim, cfg.mlp_ratio * cfg.embed_dim, cfg.tokens
+
+    def dense(key, fan_in, shape):
+        w = jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)
+        return fake_quant_int8(w) if quantize else w
+
+    keys = iter(jax.random.split(key, 6 + 12 * cfg.depth))
+    params: Dict[str, Any] = {
+        "embed": {
+            "w": dense(next(keys), cfg.patch_dim, (cfg.patch_dim, d)),
+            "b": jnp.zeros((d,), jnp.float32),
+            "cls": dense(next(keys), d, (1, 1, d)),
+            "pos": dense(next(keys), d, (1, t, d)) * 0.02,
+        },
+        "blocks": [],
+        "head": {
+            "ln_g": jnp.ones((d,), jnp.float32),
+            "ln_b": jnp.zeros((d,), jnp.float32),
+            "w": dense(next(keys), d, (d, cfg.num_classes)),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+        },
+    }
+    for _ in range(cfg.depth):
+        params["blocks"].append(
+            {
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "wqkv": dense(next(keys), d, (d, 3 * d)),
+                "bqkv": jnp.zeros((3 * d,), jnp.float32),
+                "wproj": dense(next(keys), d, (d, d)),
+                "bproj": jnp.zeros((d,), jnp.float32),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "wfc1": dense(next(keys), d, (d, h)),
+                "bfc1": jnp.zeros((h,), jnp.float32),
+                "wfc2": dense(next(keys), h, (h, d)),
+                "bfc2": jnp.zeros((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Op dispatch: pallas kernels vs jnp reference.
+# ---------------------------------------------------------------------------
+
+
+def _mm_pinned(x2d, w, use_pallas):
+    return _km.matmul_pinned(x2d, w) if use_pallas else _ref.matmul(x2d, w)
+
+
+def _bmm(a, b, use_pallas):
+    return _km.bmm(a, b) if use_pallas else _ref.bmm(a, b)
+
+
+def _softmax(x, use_pallas):
+    return _ks.softmax_nd(x) if use_pallas else _ref.softmax(x)
+
+
+def _layernorm(x, g, b, use_pallas):
+    if use_pallas:
+        return _kl.layernorm_nd(x, g, b)
+    return _ref.layernorm(x, g, b)
+
+
+def _gelu(x, use_pallas):
+    return _kg.gelu_nd(x) if use_pallas else _ref.gelu(x)
+
+
+def _dense(x, w, b, use_pallas):
+    """(B, T, Din) @ (Din, Dout) + b — flattened through the 2-D HMM kernel."""
+    bs, t, din = x.shape
+    y = _mm_pinned(x.reshape(bs * t, din), w, use_pallas)
+    return y.reshape(bs, t, -1) + b
+
+
+# ---------------------------------------------------------------------------
+# Stages (the units the SSR scheduler maps onto accelerators).
+# ---------------------------------------------------------------------------
+
+
+def patchify(img: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, 3) -> (B, n_patches, patch*patch*3). Conv-as-MM (Fig. 3's
+    patch-embedding kernel is profiled as a matmul-type kernel)."""
+    b, hh, ww, c = img.shape
+    nh, nw = hh // patch, ww // patch
+    x = img.reshape(b, nh, patch, nw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, nh * nw, patch * patch * c)
+
+
+def embed_fwd(p: Dict[str, Any], img: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Patch embedding + cls token + positional embedding."""
+    x = patchify(img, cfg.patch_size)
+    x = _dense(x, p["w"], p["b"], use_pallas)
+    cls = jnp.broadcast_to(p["cls"], (x.shape[0], 1, cfg.embed_dim))
+    x = jnp.concatenate([cls, x], axis=1)
+    return x + p["pos"]
+
+
+def attn_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Pre-LN multi-head attention sublayer with residual."""
+    b, t, d = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    y = _layernorm(x.reshape(b * t, d), bp["ln1_g"], bp["ln1_b"], use_pallas)
+    qkv = _mm_pinned(y, bp["wqkv"], use_pallas).reshape(b, t, 3 * d) + bp["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):  # (B, T, D) -> (B, h, T, dh)
+        return z.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    scores = _bmm(q, jnp.swapaxes(k, -1, -2), use_pallas) * scale  # BMM0 (type1)
+    probs = _softmax(scores, use_pallas)
+    ctx = _bmm(probs, v, use_pallas)  # BMM1 (type1)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)  # Transpose kernel
+    out = _dense(ctx, bp["wproj"], bp["bproj"], use_pallas)
+    return x + out
+
+
+def mlp_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Pre-LN MLP sublayer (fc1 -> GELU -> fc2) with residual."""
+    b, t, d = x.shape
+    y = _layernorm(x.reshape(b * t, d), bp["ln2_g"], bp["ln2_b"], use_pallas)
+    y = _mm_pinned(y, bp["wfc1"], use_pallas) + bp["bfc1"]
+    y = _gelu(y, use_pallas)
+    y = _mm_pinned(y, bp["wfc2"], use_pallas) + bp["bfc2"]
+    return x + y.reshape(b, t, d)
+
+
+def block_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """One full transformer block: attention sublayer then MLP sublayer."""
+    return mlp_fwd(bp, attn_fwd(bp, x, cfg, use_pallas), cfg, use_pallas)
+
+
+def head_fwd(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Final LayerNorm + classifier on the cls token."""
+    b, t, d = x.shape
+    y = _layernorm(x.reshape(b * t, d), p["ln_g"], p["ln_b"], use_pallas)
+    cls = y.reshape(b, t, d)[:, 0, :]
+    return _mm_pinned(cls, p["w"], use_pallas) + p["b"]
+
+
+def model_fwd(params: Dict[str, Any], img: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """End-to-end forward: logits (B, num_classes) from images (B, H, W, 3)."""
+    x = embed_fwd(params["embed"], img, cfg, use_pallas)
+    for bp in params["blocks"]:
+        x = block_fwd(bp, x, cfg, use_pallas)
+    return head_fwd(params["head"], x, cfg, use_pallas)
+
+
+def count_macs(cfg: ModelConfig, batch: int = 1) -> int:
+    """Analytical MAC count (matches Table 3's MACs column within ~10%)."""
+    t, d, h = cfg.tokens, cfg.embed_dim, cfg.mlp_ratio * cfg.embed_dim
+    np_ = t - 1
+    macs = np_ * cfg.patch_dim * d  # patch embed
+    per_block = (
+        t * d * 3 * d  # qkv
+        + 2 * cfg.num_heads * t * t * cfg.head_dim  # bmm0 + bmm1
+        + t * d * d  # proj
+        + t * d * h  # fc1
+        + t * h * d  # fc2
+    )
+    macs += cfg.depth * per_block
+    macs += d * cfg.num_classes  # head
+    return macs * batch

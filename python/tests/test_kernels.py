@@ -1,0 +1,172 @@
+"""L1 kernels vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (including the ragged 197-token dimension and
+non-divisible head dims) and block configurations, asserting allclose
+against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels.matmul as km
+import compile.kernels.softmax as ks
+import compile.kernels.layernorm as kl
+import compile.kernels.gelu as kg
+from compile.kernels import ref
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+dims = st.integers(min_value=1, max_value=80)
+blocks = st.sampled_from([4, 16, 32, 64, 128])
+
+
+class TestMatmul:
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims, k=dims, n=dims, bm=blocks, bk=blocks, bn=blocks)
+    def test_general_matches_ref(self, m, k, n, bm, bk, bn):
+        x, w = rand(1, m, k), rand(2, k, n)
+        got = km.matmul_general(x, w, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, ref.matmul(x, w), **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims, k=dims, n=dims, bm=blocks, bk=blocks, bn=blocks)
+    def test_pinned_matches_ref(self, m, k, n, bm, bk, bn):
+        x, w = rand(3, m, k), rand(4, k, n)
+        got = km.matmul_pinned(x, w, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, ref.matmul(x, w), **TOL)
+
+    def test_pinned_equals_general(self):
+        # HMM-type0 and type1 differ only in schedule, never in numerics.
+        x, w = rand(5, 197, 192), rand(6, 192, 576)
+        a = km.matmul_pinned(x, w)
+        b = km.matmul_general(x, w)
+        np.testing.assert_allclose(a, b, **TOL)
+
+    def test_deit_shapes(self):
+        # The exact QKV shape from DeiT-T: ragged M=197 exercises padding.
+        x, w = rand(7, 197, 192), rand(8, 192, 576)
+        np.testing.assert_allclose(
+            km.matmul_pinned(x, w), ref.matmul(x, w), **TOL
+        )
+
+    def test_bmm_heads(self):
+        q = rand(9, 2, 3, 197, 64)
+        k = rand(10, 2, 3, 64, 197)
+        np.testing.assert_allclose(km.bmm(q, k), ref.bmm(q, k), **TOL)
+
+    def test_bmm_2d_passthrough(self):
+        x, y = rand(11, 8, 8), rand(12, 8, 8)
+        np.testing.assert_allclose(km.bmm(x, y), ref.bmm(x, y), **TOL)
+
+    def test_under_jit(self):
+        x, w = rand(13, 33, 17), rand(14, 17, 29)
+        got = jax.jit(lambda a, b: km.matmul_general(a, b))(x, w)
+        np.testing.assert_allclose(got, ref.matmul(x, w), **TOL)
+
+    @pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 64, 1), (64, 1, 64)])
+    def test_degenerate_dims(self, m, k, n):
+        x, w = rand(15, m, k), rand(16, k, n)
+        np.testing.assert_allclose(
+            km.matmul_general(x, w), ref.matmul(x, w), **TOL
+        )
+
+
+class TestSoftmax:
+    @settings(max_examples=8, deadline=None)
+    @given(r=dims, c=st.integers(min_value=1, max_value=256),
+           br=st.sampled_from([1, 8, 64, 128]))
+    def test_matches_ref(self, r, c, br):
+        x = rand(21, r, c, scale=3.0)
+        got = ks.softmax(x, block_rows=br)
+        np.testing.assert_allclose(got, ref.softmax(x), **TOL)
+
+    def test_rows_sum_to_one(self):
+        x = rand(22, 197, 197, scale=10.0)
+        got = ks.softmax(x)
+        np.testing.assert_allclose(np.sum(got, -1), np.ones(197), **TOL)
+
+    def test_extreme_values_stable(self):
+        x = jnp.array([[1e4, -1e4, 0.0], [-1e4, -1e4, -1e4]], jnp.float32)
+        got = ks.softmax(x)
+        assert np.all(np.isfinite(got))
+        np.testing.assert_allclose(got, ref.softmax(x), **TOL)
+
+    def test_nd_wrapper(self):
+        x = rand(23, 2, 3, 197, 197)
+        np.testing.assert_allclose(ks.softmax_nd(x), ref.softmax(x), **TOL)
+
+
+class TestLayerNorm:
+    @settings(max_examples=8, deadline=None)
+    @given(r=dims, c=st.integers(min_value=2, max_value=256),
+           br=st.sampled_from([1, 8, 64, 128]))
+    def test_matches_two_pass_ref(self, r, c, br):
+        x = rand(31, r, c, scale=2.0)
+        g = 1.0 + 0.1 * rand(32, c)
+        b = 0.1 * rand(33, c)
+        got = kl.layernorm(x, g, b, block_rows=br)
+        np.testing.assert_allclose(got, ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4)
+
+    def test_output_statistics(self):
+        # unit affine => rows should be ~zero-mean, ~unit-variance
+        x = rand(34, 64, 192, scale=5.0)
+        got = kl.layernorm(x, jnp.ones(192), jnp.zeros(192))
+        np.testing.assert_allclose(np.mean(got, -1), np.zeros(64), atol=1e-4)
+        np.testing.assert_allclose(np.var(got, -1), np.ones(64), atol=1e-2)
+
+    def test_shift_invariance(self):
+        # LayerNorm(x + c) == LayerNorm(x): the fused one-pass form must not
+        # lose this (it is where E[x^2]-E[x]^2 catastrophically cancels).
+        x = rand(35, 16, 64)
+        g, b = jnp.ones(64), jnp.zeros(64)
+        np.testing.assert_allclose(
+            kl.layernorm(x + 100.0, g, b), kl.layernorm(x, g, b),
+            rtol=2e-2, atol=2e-2,
+        )
+
+    def test_nd_wrapper(self):
+        x = rand(36, 2, 197, 192)
+        g, b = jnp.ones(192), jnp.zeros(192)
+        np.testing.assert_allclose(
+            kl.layernorm_nd(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestGelu:
+    @settings(max_examples=8, deadline=None)
+    @given(r=dims, c=dims, br=st.sampled_from([1, 16, 128]))
+    def test_matches_ref(self, r, c, br):
+        x = rand(41, r, c, scale=3.0)
+        np.testing.assert_allclose(kg.gelu(x, block_rows=br), ref.gelu(x), **TOL)
+
+    def test_known_values(self):
+        x = jnp.array([[0.0, 1.0, -1.0, 10.0, -10.0]], jnp.float32)
+        got = np.asarray(kg.gelu(x))[0]
+        assert got[0] == 0.0
+        assert abs(got[1] - 0.8412) < 1e-3  # gelu(1)
+        assert abs(got[3] - 10.0) < 1e-4    # saturates to identity
+        assert abs(got[4]) < 1e-4           # saturates to zero
+
+    def test_nd_wrapper(self):
+        x = rand(42, 2, 7, 33)
+        np.testing.assert_allclose(kg.gelu_nd(x), ref.gelu(x), **TOL)
+
+
+class TestAttentionComposition:
+    def test_kernel_attention_matches_oracle(self):
+        # Compose score/softmax/context from L1 kernels and check against the
+        # single-call oracle — the HMM-type1 + HCE pipeline end to end.
+        t, dh = 50, 32
+        q, k, v = rand(51, t, dh), rand(52, t, dh), rand(53, t, dh)
+        scale = 1.0 / np.sqrt(dh)
+        scores = km.matmul_general(q, jnp.swapaxes(k, -1, -2)) * scale
+        got = km.matmul_general(ks.softmax(scores), v)
+        np.testing.assert_allclose(got, ref.attention(q, k, v), rtol=1e-4, atol=1e-4)

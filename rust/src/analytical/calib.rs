@@ -1,0 +1,74 @@
+//! Calibration constants for the analytical model, with provenance.
+//!
+//! Absolute cycle counts cannot be re-measured without the board; these
+//! constants are tuned (see EXPERIMENTS.md §Calibration) so that the
+//! paper's *shape* reproduces: sequential ~11 TOPS flat vs batch, spatial
+//! 5.7 -> 26.7 TOPS with batch, hybrid dominating at mid-latency. Each
+//! constant is physically motivated and the tuning test
+//! (`report::calibration`) prints the residuals against the paper's
+//! anchor points.
+
+/// Tunable model constants (defaults = calibrated values).
+#[derive(Clone, Copy, Debug)]
+pub struct Calib {
+    /// Single-AIE kernel MAC efficiency (DAC'23 MM kernels reach ~85-95%).
+    pub eff_kernel: f64,
+    /// Array-pass fill/drain overhead, AIE cycles (DMA descriptor + lock
+    /// handshake per (TM,TK,TN) pass through the array).
+    pub pass_overhead_cycles: f64,
+    /// Per-node launch overhead (us) on an acc that runs MULTIPLE layer
+    /// classes: buffer re-pointering + control sync when the monolithic
+    /// acc switches shapes (the paper's sequential design pays this).
+    pub reconfig_us: f64,
+    /// Per-node overhead (us) on a single-class dataflow acc (stream
+    /// handshake only).
+    pub persist_us: f64,
+    /// HMM-type1 (two streamed activation operands) halves effective PLIO
+    /// input bandwidth vs type0 (weights pinned).
+    pub type1_bw_factor: f64,
+    /// PL-side HCE lanes: elements per DSP-lane per PL cycle.
+    pub hce_elems_per_lane_cycle: f64,
+    /// DSPs consumed per HCE lane (nonlinear processors are DSP-heavy:
+    /// Table 8 shows 1024 DSP for LayerNorm alone).
+    pub dsp_per_lane: f64,
+    /// Reduction ops (Softmax/LayerNorm) take 2 passes without the
+    /// line-buffer pipeline, `reduction_pipelined_passes` with it
+    /// (paper: "reduces its latency to nearly half").
+    pub reduction_naive_passes: f64,
+    pub reduction_pipelined_passes: f64,
+    /// Fraction of a node's DDR traffic that overlaps compute when
+    /// on-chip forwarding is DISABLED (CHARM overlaps poorly: Sec. 2).
+    pub ddr_overlap: f64,
+    /// Achieved fraction of peak DDR bandwidth (strided tile accesses).
+    pub ddr_efficiency: f64,
+    /// Bytes per element for DDR round-trips without the co-designed
+    /// requant path: intermediates travel in accumulator precision (INT32).
+    pub ddr_elem_bytes: f64,
+    /// Bank-conflict repack throughput penalty when producer/consumer
+    /// parallelism is misaligned and force-partition is off (Fig. 8c):
+    /// data moves RAM->RAM at one element per bank per cycle.
+    pub repack_bytes_per_cycle: f64,
+    /// BRAM bank capacity (bytes) for Eq. 1 RAM counting (18Kb BRAM).
+    pub bram_bytes: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Self {
+        Calib {
+            eff_kernel: 0.85,
+            pass_overhead_cycles: 96.0,
+            reconfig_us: 1.95,
+            persist_us: 0.25,
+            type1_bw_factor: 0.5,
+            hce_elems_per_lane_cycle: 4.0,
+            dsp_per_lane: 4.0,
+            reduction_naive_passes: 2.0,
+            reduction_pipelined_passes: 1.05,
+            ddr_overlap: 0.15,
+            ddr_efficiency: 0.6,
+            ddr_elem_bytes: 3.0,
+            repack_bytes_per_cycle: 256.0,
+            bram_bytes: 2304.0, // 18 Kb
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! HCE (PL-side nonlinear/elementwise engine) timing — paper Fig. 7.
+//!
+//! Elementwise ops (Transpose/Reformat/Add, reuse distance 1) fuse into the
+//! HMM stream for free when the fine-grained pipeline is on. Reduction ops
+//! (Softmax/LayerNorm, reuse distance > 1) serialize into multiple passes
+//! unless the bypass line buffer overlaps the mu/sigma stages, which
+//! "reduces its latency to nearly half" (Sec. 4.3).
+
+use super::calib::Calib;
+use crate::arch::Platform;
+use crate::graph::HceOp;
+#[cfg(test)]
+use crate::graph::HceKind;
+
+/// Time (seconds) for one HCE op on `lanes` parallel PL lanes.
+pub fn hce_op_time(
+    platform: &Platform,
+    calib: &Calib,
+    op: &HceOp,
+    lanes: u64,
+    pipelined: bool,
+) -> f64 {
+    let lanes = lanes.max(1) as f64;
+    let passes = if op.kind.is_reduction() {
+        if pipelined {
+            calib.reduction_pipelined_passes
+        } else {
+            calib.reduction_naive_passes
+        }
+    } else {
+        1.0
+    };
+    let cycles = op.elems as f64 * passes / (lanes * calib.hce_elems_per_lane_cycle);
+    cycles / (platform.pl_mhz * 1e6)
+}
+
+/// Total HCE time for a node's attached ops.
+pub fn hce_total(
+    platform: &Platform,
+    calib: &Calib,
+    ops: &[HceOp],
+    lanes: u64,
+    pipelined: bool,
+) -> f64 {
+    ops.iter()
+        .map(|op| hce_op_time(platform, calib, op, lanes, pipelined))
+        .sum()
+}
+
+/// Exposed (non-overlapped) HCE seconds given the co-resident MM time.
+///
+/// With the fine-grained pipeline the HCE engine consumes the HMM output
+/// stream as it is produced, so only the excess beyond the MM time is
+/// exposed; without it the HCE time fully serializes after the MM
+/// (Fig. 7c vs 7d). Elementwise ops additionally vanish entirely when
+/// pipelined (they fuse into the stream).
+pub fn exposed_hce(
+    platform: &Platform,
+    calib: &Calib,
+    ops: &[HceOp],
+    lanes: u64,
+    mm_seconds: f64,
+    fine_grained_pipeline: bool,
+) -> f64 {
+    if !fine_grained_pipeline {
+        return hce_total(platform, calib, ops, lanes, false);
+    }
+    // Pipelined: elementwise ops fuse (zero exposed); reductions overlap
+    // with the MM, exposing only their tail.
+    let reduction_time: f64 = ops
+        .iter()
+        .filter(|op| op.kind.is_reduction())
+        .map(|op| hce_op_time(platform, calib, op, lanes, true))
+        .sum();
+    (reduction_time - mm_seconds).max(0.0)
+}
+
+/// DSP cost of provisioning `lanes` HCE lanes (feeds Eq. 1's DSP_util).
+pub fn hce_dsp(calib: &Calib, lanes: u64) -> u64 {
+    (lanes as f64 * calib.dsp_per_lane).ceil() as u64
+}
+
+/// Lanes affordable with a DSP budget.
+pub fn lanes_for_dsp(calib: &Calib, dsp_budget: u64) -> u64 {
+    ((dsp_budget as f64) / calib.dsp_per_lane).floor().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+
+    fn op(kind: HceKind, elems: u64) -> HceOp {
+        HceOp { kind, elems }
+    }
+
+    #[test]
+    fn pipeline_halves_reduction_latency() {
+        let p = vck190();
+        let c = Calib::default();
+        let sm = op(HceKind::Softmax, 197 * 197);
+        let naive = hce_op_time(&p, &c, &sm, 64, false);
+        let piped = hce_op_time(&p, &c, &sm, 64, true);
+        let ratio = naive / piped;
+        // "reduces its latency to nearly half"
+        assert!(ratio > 1.7 && ratio < 2.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn elementwise_unaffected_by_pipeline_flag() {
+        let p = vck190();
+        let c = Calib::default();
+        let tp = op(HceKind::Transpose, 10_000);
+        assert_eq!(
+            hce_op_time(&p, &c, &tp, 32, false),
+            hce_op_time(&p, &c, &tp, 32, true)
+        );
+    }
+
+    #[test]
+    fn exposed_zero_when_mm_dominates() {
+        let p = vck190();
+        let c = Calib::default();
+        let ops = [op(HceKind::LayerNorm, 1000), op(HceKind::Add, 1000)];
+        let exposed = exposed_hce(&p, &c, &ops, 64, 1.0 /* 1s of MM */, true);
+        assert_eq!(exposed, 0.0);
+    }
+
+    #[test]
+    fn unpipelined_serializes_everything() {
+        let p = vck190();
+        let c = Calib::default();
+        let ops = [op(HceKind::LayerNorm, 4096), op(HceKind::Add, 4096)];
+        let exposed = exposed_hce(&p, &c, &ops, 8, 1.0, false);
+        let total = hce_total(&p, &c, &ops, 8, false);
+        assert_eq!(exposed, total);
+        assert!(exposed > 0.0);
+    }
+
+    #[test]
+    fn more_lanes_faster() {
+        let p = vck190();
+        let c = Calib::default();
+        let sm = op(HceKind::Softmax, 100_000);
+        assert!(
+            hce_op_time(&p, &c, &sm, 128, true) < hce_op_time(&p, &c, &sm, 16, true)
+        );
+    }
+
+    #[test]
+    fn dsp_lane_roundtrip() {
+        let c = Calib::default();
+        let lanes = lanes_for_dsp(&c, 1024);
+        assert!(hce_dsp(&c, lanes) <= 1024);
+        assert!(hce_dsp(&c, lanes + 1) > 1024);
+    }
+}

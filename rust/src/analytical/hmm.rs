@@ -1,0 +1,274 @@
+//! HMM (AIE matrix-multiply) resource + timing model — paper Eq. 1 & Eq. 2.
+//!
+//! Eq. 1:  AIE  = A * B * C
+//!         PLIO = (A + C) * B
+//!         RAM  = Part_A * Part_B * Part_C * RAM_util
+//!         DSP  = A * C * DSP_util
+//!
+//! Eq. 2:  Cycle = M*N*K / (A*B*C*MAC/Eff);  Throughput = #OPs/(Cycle/Freq)
+//!
+//! Our cycle model refines Eq. 2 with the three effects that produce the
+//! paper's observed ~11% monolithic-acc utilization: tile-granularity
+//! padding (ceil of each dim over the array pass), per-pass fill/drain
+//! overhead, and the PLIO bandwidth bound (HMM-type1 halves it because two
+//! activation operands share the input streams).
+
+use super::calib::Calib;
+use crate::arch::Platform;
+use crate::graph::MmDims;
+
+/// Accelerator configuration vector — the paper's
+/// `config_vector (h1, w1, w2, A, B, C, Part_A, Part_B, Part_C)`.
+///
+/// `(h1, w1, w2)` is the per-AIE workload (an h1 x w1 x w2 sub-matmul out of
+/// local memory); `(a, b, c)` the AIE array parallelism along M/K/N; `part`
+/// the RAM bank partitioning for inter-acc forwarding (Fig. 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AccConfig {
+    pub h1: u64,
+    pub w1: u64,
+    pub w2: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub part: (u64, u64, u64),
+}
+
+impl AccConfig {
+    /// AIEs consumed (Eq. 1).
+    pub fn aie(&self) -> u64 {
+        self.a * self.b * self.c
+    }
+
+    /// PLIO streams consumed (Eq. 1): A*B inputs + C*B weights/2nd operand
+    /// in, A*C out — the paper folds this to (A+C)*B.
+    pub fn plio(&self) -> u64 {
+        (self.a + self.c) * self.b
+    }
+
+    /// Tile of the operand space covered by one array pass.
+    pub fn tile(&self) -> (u64, u64, u64) {
+        (self.a * self.h1, self.b * self.w1, self.c * self.w2)
+    }
+
+    /// AIE local memory needed (bytes): INT8 input panels + INT32
+    /// accumulator, double-buffered (ping-pong) — the paper's 32 KB fit
+    /// constraint.
+    pub fn local_mem_bytes(&self) -> u64 {
+        let ins = self.h1 * self.w1 + self.w1 * self.w2; // int8
+        let acc = 4 * self.h1 * self.w2; // int32 accumulator
+        2 * ins + acc
+    }
+
+    /// RAM banks (Eq. 1): partitions x banks-per-partition, where a
+    /// partition must buffer one output tile slice.
+    pub fn ram_banks(&self, calib: &Calib) -> u64 {
+        let (tm, _, tn) = self.tile();
+        let tile_bytes = (tm * tn * 4) as f64; // int32 before requant
+        let parts = self.part.0 * self.part.1 * self.part.2;
+        let ram_util = (tile_bytes / parts.max(1) as f64 / calib.bram_bytes).ceil();
+        parts * ram_util as u64
+    }
+
+    /// DSPs for the attached nonlinear processors (Eq. 1: A*C*DSP_util).
+    pub fn dsp(&self, dsp_util: u64) -> u64 {
+        self.a * self.c * dsp_util
+    }
+
+    /// Does this config fit the platform's per-tile local memory?
+    pub fn fits_local_mem(&self, platform: &Platform) -> bool {
+        self.local_mem_bytes() <= platform.aie_local_mem
+    }
+
+    /// Divisibility alignment for force-partition (Fig. 8): producer (A, C)
+    /// output parallelism must divide or be divided by consumer (A, B)
+    /// input parallelism.
+    pub fn aligned_with(&self, consumer: &AccConfig) -> bool {
+        fn div_ok(x: u64, y: u64) -> bool {
+            x % y == 0 || y % x == 0
+        }
+        div_ok(self.a, consumer.a) && div_ok(self.c, consumer.b)
+    }
+}
+
+/// Timing result for one MM node on one accelerator config.
+#[derive(Clone, Copy, Debug)]
+pub struct MmTime {
+    /// AIE compute cycles (granularity-padded, eff-derated).
+    pub compute_cycles: f64,
+    /// PLIO-stream-bound cycles (AIE clock domain).
+    pub io_cycles: f64,
+    /// Exposed total seconds (max of the two + pass overhead).
+    pub seconds: f64,
+}
+
+/// Eq. 2 refined: cycles for `dims` on config `cfg`.
+///
+/// `pinned == true` -> HMM-type0 (weights in AIE local memory; only the
+/// activation operand streams). `pinned == false` -> HMM-type1 (both
+/// operands stream; input bandwidth halves).
+pub fn mm_time(
+    platform: &Platform,
+    calib: &Calib,
+    cfg: &AccConfig,
+    dims: &MmDims,
+    pinned: bool,
+) -> MmTime {
+    let (tm, tk, tn) = cfg.tile();
+    let (nm, nk, nn) = (
+        div_ceil(dims.m, tm) as f64,
+        div_ceil(dims.k, tk) as f64,
+        div_ceil(dims.n, tn) as f64,
+    );
+    let mult = dims.bmm_mult as f64;
+    let passes = nm * nk * nn * mult;
+
+    // compute: each pass runs the per-AIE (h1,w1,w2) kernel.
+    let kernel_cycles =
+        (cfg.h1 * cfg.w1 * cfg.w2) as f64 / platform.macs_per_aie_cycle as f64;
+    let compute_cycles =
+        passes * (kernel_cycles / calib.eff_kernel + calib.pass_overhead_cycles);
+
+    // io: bytes streamed over this acc's PLIOs (packet-switched: the PLIO
+    // set is shared between operand and result streams, as in CHARM's
+    // broadcast-select network). Reuse structure:
+    //   * the X tile streams once per (i, k) and is rebroadcast from the
+    //     PL banks across the nn output-column blocks,
+    //   * the second operand (weights if pinned -> free; activations for
+    //     HMM-type1) streams once per (k, j),
+    //   * each INT32->INT8-requantized output tile leaves once per (i, j).
+    // HMM-type1's stream interleaving derates bandwidth by
+    // `type1_bw_factor`.
+    let x_bytes = nm * nk * (tm * tk) as f64;
+    let y_bytes = if pinned { 0.0 } else { nk * nn * (tk * tn) as f64 };
+    let out_bytes = nm * nn * (tm * tn) as f64;
+    let bytes_per_plio_aie_cycle = cfg_plio_rate(platform) * calib.bw_derate(pinned);
+    let io_cycles =
+        mult * (x_bytes + y_bytes + out_bytes) / (cfg.plio() as f64 * bytes_per_plio_aie_cycle);
+
+    let cycles = compute_cycles.max(io_cycles);
+    MmTime {
+        compute_cycles,
+        io_cycles,
+        seconds: cycles / (platform.aie_ghz * 1e9),
+    }
+}
+
+impl Calib {
+    /// Bandwidth derate: type1 shares input streams between two operands.
+    fn bw_derate(&self, pinned: bool) -> f64 {
+        if pinned {
+            1.0
+        } else {
+            self.type1_bw_factor
+        }
+    }
+}
+
+/// Bytes per PLIO per AIE cycle (PLIO runs in the PL clock domain).
+fn cfg_plio_rate(platform: &Platform) -> f64 {
+    platform.plio_bytes_per_cycle as f64 * (platform.pl_mhz * 1e6)
+        / (platform.aie_ghz * 1e9)
+}
+
+pub fn div_ceil(x: u64, y: u64) -> u64 {
+    x.div_ceil(y.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+
+    fn cfg(h1: u64, w1: u64, w2: u64, a: u64, b: u64, c: u64) -> AccConfig {
+        AccConfig { h1, w1, w2, a, b, c, part: (a, 1, c) }
+    }
+
+    #[test]
+    fn eq1_resource_counts() {
+        let c = cfg(32, 32, 32, 4, 2, 4);
+        assert_eq!(c.aie(), 32);
+        assert_eq!(c.plio(), (4 + 4) * 2);
+        assert_eq!(c.tile(), (128, 64, 128));
+    }
+
+    #[test]
+    fn local_mem_within_32k() {
+        let c = cfg(32, 32, 32, 4, 2, 4);
+        // 2*(1024+1024) + 4*1024 = 8192
+        assert_eq!(c.local_mem_bytes(), 8192);
+        assert!(c.fits_local_mem(&vck190()));
+        let big = cfg(128, 128, 128, 1, 1, 1);
+        assert!(!big.fits_local_mem(&vck190()));
+    }
+
+    #[test]
+    fn perfect_fit_efficiency_near_kernel_eff() {
+        // A workload that exactly tiles: granularity waste = 0, io light
+        // enough to stay compute bound at large h1*w1*w2.
+        let p = vck190();
+        let cal = Calib::default();
+        let c = cfg(64, 64, 64, 2, 2, 2);
+        let dims = MmDims { m: 128, k: 128, n: 128, bmm_mult: 1 };
+        let t = mm_time(&p, &cal, &c, &dims, true);
+        let ideal_cycles = dims.macs() as f64 / (c.aie() * p.macs_per_aie_cycle) as f64;
+        let eff = ideal_cycles / t.compute_cycles;
+        assert!(eff > 0.5 && eff <= cal.eff_kernel + 1e-9, "eff={eff}");
+    }
+
+    #[test]
+    fn granularity_padding_hurts_ragged_m() {
+        // M=197 on TM=256 wastes ~23%: time equals M=256's time.
+        let p = vck190();
+        let cal = Calib::default();
+        let c = cfg(64, 32, 32, 4, 6, 2);
+        let ragged = MmDims { m: 197, k: 192, n: 192, bmm_mult: 1 };
+        let padded = MmDims { m: 256, k: 192, n: 192, bmm_mult: 1 };
+        let t1 = mm_time(&p, &cal, &c, &ragged, true);
+        let t2 = mm_time(&p, &cal, &c, &padded, true);
+        assert!((t1.seconds - t2.seconds).abs() < 1e-12);
+    }
+
+    #[test]
+    fn type1_more_io_bound_than_type0() {
+        let p = vck190();
+        let cal = Calib::default();
+        let c = cfg(32, 32, 32, 4, 2, 4);
+        let dims = MmDims { m: 197, k: 64, n: 197, bmm_mult: 3 };
+        let t0 = mm_time(&p, &cal, &c, &dims, true);
+        let t1 = mm_time(&p, &cal, &c, &dims, false);
+        assert!(t1.io_cycles > t0.io_cycles);
+        assert!(t1.seconds >= t0.seconds);
+    }
+
+    #[test]
+    fn more_aies_reduce_time_until_io_bound() {
+        let p = vck190();
+        let cal = Calib::default();
+        let dims = MmDims { m: 197, k: 192, n: 576, bmm_mult: 1 };
+        let small = mm_time(&p, &cal, &cfg(32, 32, 32, 2, 2, 2), &dims, true);
+        let big = mm_time(&p, &cal, &cfg(32, 32, 32, 4, 2, 4), &dims, true);
+        assert!(big.seconds < small.seconds);
+    }
+
+    #[test]
+    fn alignment_divisibility() {
+        let producer = cfg(32, 32, 32, 2, 2, 2);
+        let consumer_ok = cfg(32, 32, 32, 4, 2, 1);
+        let consumer_bad = cfg(32, 32, 32, 3, 5, 1);
+        assert!(producer.aligned_with(&consumer_ok));
+        assert!(!producer.aligned_with(&consumer_bad));
+    }
+
+    #[test]
+    fn bmm_mult_scales_passes() {
+        let p = vck190();
+        let cal = Calib::default();
+        let c = cfg(32, 32, 32, 2, 2, 2);
+        let one = MmDims { m: 197, k: 64, n: 197, bmm_mult: 1 };
+        let three = MmDims { m: 197, k: 64, n: 197, bmm_mult: 3 };
+        let t1 = mm_time(&p, &cal, &c, &one, false);
+        let t3 = mm_time(&p, &cal, &c, &three, false);
+        assert!((t3.seconds / t1.seconds - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,51 @@
+//! Analytical performance/resource models (paper Eq. 1, Eq. 2, Figs. 7-8).
+//!
+//! The paper validates this class of model against the physical VCK190 at
+//! <5% error (Table 7); here it is both the DSE cost function and the
+//! reference the event-driven simulator (`sim`) is checked against.
+//!
+//! Submodules:
+//! * [`hmm`]   — Eq. 1 resource usage + Eq. 2 MM/BMM cycle model with PLIO
+//!   bandwidth bounds (the AIE side),
+//! * [`hce`]   — PL-side nonlinear/elementwise engine timing with and
+//!   without the fine-grained line-buffer pipeline (Fig. 7),
+//! * [`comm`]  — inter-accelerator communication: DDR round-trips vs
+//!   on-chip forwarding, bank-conflict repack penalty (Fig. 8),
+//! * [`energy`]— power/energy-efficiency model (Table 5's GOPS/W columns),
+//! * [`calib`] — the calibration constants, in one place, with provenance.
+
+pub mod calib;
+pub mod comm;
+pub mod energy;
+pub mod hce;
+pub mod hmm;
+
+pub use calib::Calib;
+pub use hmm::AccConfig;
+
+/// The three step-by-step optimizations of §5.2.6, as feature flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Features {
+    /// (1) on-chip data forwarding between accelerators (vs DDR round-trip).
+    pub on_chip_forwarding: bool,
+    /// (2) spatial accelerators allowed (vs one monolithic acc) — consumed
+    /// by the DSE, carried here for reporting.
+    pub spatial: bool,
+    /// (3) fine-grained pipeline hiding HCE time behind HMM time.
+    pub fine_grained_pipeline: bool,
+}
+
+impl Features {
+    pub fn all() -> Self {
+        Features { on_chip_forwarding: true, spatial: true, fine_grained_pipeline: true }
+    }
+
+    /// The CHARM-like baseline of §5.2.6 (none of the three enabled).
+    pub fn baseline() -> Self {
+        Features {
+            on_chip_forwarding: false,
+            spatial: false,
+            fine_grained_pipeline: false,
+        }
+    }
+}

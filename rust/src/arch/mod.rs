@@ -1,0 +1,213 @@
+//! Hardware platform descriptions (paper Tables 1 & 4, §6 Q1).
+//!
+//! Each platform is a bag of resource/rate constants consumed by the
+//! analytical model and the DSE. The VCK190 numbers come straight from the
+//! paper (102.4 INT8 TOPS = 400 AIE x 128 MAC x 2 op @ 1 GHz; 25.6 GB/s
+//! DDR; PL @ 230 MHz); FPGA fabric totals are the VC1902 device counts.
+
+/// A Versal-ACAP-like platform: AIE compute array + PL fabric + NoC + DDR.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Number of AIE vector cores usable (paper deploys up to 394/400).
+    pub aie_total: u64,
+    /// INT8 MACs per AIE per cycle (128 on AIE1 => 102.4 TOPS total).
+    pub macs_per_aie_cycle: u64,
+    /// AIE clock (GHz).
+    pub aie_ghz: f64,
+    /// AIE local data memory per tile (bytes) — paper's 32 KB constraint.
+    pub aie_local_mem: u64,
+    /// PL fabric clock (MHz).
+    pub pl_mhz: f64,
+    /// Total PLIO stream channels between PL and AIE array.
+    pub plio_total: u64,
+    /// Bytes per PLIO per PL cycle (128-bit streams).
+    pub plio_bytes_per_cycle: u64,
+    /// PL fabric resources (VC1902 device totals).
+    pub bram_total: u64,
+    pub uram_total: u64,
+    pub dsp_total: u64,
+    pub lut_total: u64,
+    pub reg_total: u64,
+    /// Off-chip bandwidth (GB/s) — Table 1.
+    pub ddr_gbs: f64,
+    /// Power model: static watts + max dynamic watts at full utilization.
+    pub static_w: f64,
+    pub dyn_w: f64,
+    /// Board TDP (Table 4) — reporting only.
+    pub tdp_w: f64,
+}
+
+impl Platform {
+    /// Peak INT8 TOPS (Table 1: VCK190 = 102.4).
+    pub fn peak_int8_tops(&self) -> f64 {
+        self.aie_total as f64 * self.macs_per_aie_cycle as f64 * 2.0 * self.aie_ghz
+            / 1e3
+    }
+
+    /// Aggregate PL<->AIE stream bandwidth (GB/s) across all PLIOs.
+    pub fn plio_total_gbs(&self) -> f64 {
+        self.plio_total as f64 * self.plio_bytes_per_cycle as f64 * self.pl_mhz / 1e3
+    }
+}
+
+/// AMD Versal ACAP VCK190 (the paper's implementation target).
+pub fn vck190() -> Platform {
+    Platform {
+        name: "vck190",
+        aie_total: 400,
+        macs_per_aie_cycle: 128,
+        aie_ghz: 1.0,
+        aie_local_mem: 32 * 1024,
+        pl_mhz: 230.0,
+        plio_total: 234,
+        plio_bytes_per_cycle: 16,
+        bram_total: 967,
+        uram_total: 463,
+        dsp_total: 1968,
+        lut_total: 899_840,
+        reg_total: 1_799_680,
+        ddr_gbs: 25.6,
+        // Board power at inference measured ~45-60 W in the paper's
+        // energy-efficiency numbers (26.7 TOPS / 453 GOPS/W ~ 59 W).
+        static_w: 40.0,
+        dyn_w: 72.0,
+        tdp_w: 180.0,
+    }
+}
+
+/// Hypothetical VCK190 with 102 GB/s off-chip BW (paper §6: 0.41 ms DeiT-T).
+pub fn vck190_hbm() -> Platform {
+    Platform { name: "vck190_hbm", ddr_gbs: 102.4, ..vck190() }
+}
+
+/// Intel Stratix 10 NX modeled as an SSR target (paper §6 Q1): 143 INT8
+/// TOPS of AI tensor blocks, 16 MB on-chip, 512 GB/s HBM. We express the
+/// tensor-block fabric in "AIE-equivalent" units so the same Eq. 1/2 model
+/// applies: 3960 tensor blocks -> 560 equivalent cores x 128 MACs @ 1 GHz
+/// = 143.4 TOPS.
+pub fn stratix10nx() -> Platform {
+    Platform {
+        name: "stratix10nx",
+        aie_total: 560,
+        macs_per_aie_cycle: 128,
+        aie_ghz: 1.0,
+        aie_local_mem: 20 * 1024,
+        pl_mhz: 300.0,
+        plio_total: 320,
+        plio_bytes_per_cycle: 16,
+        bram_total: 6847, // M20K blocks
+        uram_total: 0,
+        dsp_total: 3960,
+        lut_total: 1_624_000,
+        reg_total: 3_248_000,
+        ddr_gbs: 512.0,
+        static_w: 30.0,
+        dyn_w: 70.0,
+        tdp_w: 225.0,
+    }
+}
+
+/// GPU / FPGA comparison boards (Table 4) — used by `baselines`, not by the
+/// SSR DSE (they are not spatially composable in our model).
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub peak_int8_tops: f64,
+    pub peak_fp32_tflops: f64,
+    pub mem_gbs: f64,
+    pub tdp_w: f64,
+    pub static_w: f64,
+    pub dyn_w: f64,
+}
+
+/// Nvidia A10G (Table 1: 140 INT8 TOPS, 600 GB/s; TDP 300 W — but the
+/// paper's measured GOPS/W implies ~120-210 W draw at inference).
+pub fn a10g() -> GpuSpec {
+    GpuSpec {
+        name: "a10g",
+        peak_int8_tops: 140.0,
+        peak_fp32_tflops: 35.0,
+        mem_gbs: 600.0,
+        tdp_w: 300.0,
+        static_w: 60.0,
+        dyn_w: 150.0,
+    }
+}
+
+/// HeatViT-style monolithic FPGA accelerators (Table 4/5 baselines).
+#[derive(Clone, Debug)]
+pub struct FpgaSpec {
+    pub name: &'static str,
+    pub dsp_total: u64,
+    pub freq_mhz: f64,
+    /// INT8 MACs per DSP per cycle for the HeatViT engine.
+    pub macs_per_dsp_cycle: f64,
+    pub tdp_w: f64,
+    pub static_w: f64,
+    pub dyn_w: f64,
+}
+
+pub fn zcu102() -> FpgaSpec {
+    FpgaSpec {
+        name: "zcu102",
+        dsp_total: 2520,
+        freq_mhz: 250.0,
+        macs_per_dsp_cycle: 1.0,
+        tdp_w: 90.0,
+        static_w: 6.5,
+        dyn_w: 9.0,
+    }
+}
+
+pub fn u250() -> FpgaSpec {
+    FpgaSpec {
+        name: "u250",
+        dsp_total: 12_288,
+        freq_mhz: 250.0,
+        macs_per_dsp_cycle: 1.0,
+        tdp_w: 225.0,
+        static_w: 60.0,
+        dyn_w: 100.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck190_peak_matches_table1() {
+        let p = vck190();
+        assert!((p.peak_int8_tops() - 102.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stratix_peak_close_to_143_tops() {
+        let p = stratix10nx();
+        assert!((p.peak_int8_tops() - 143.0).abs() / 143.0 < 0.01);
+    }
+
+    #[test]
+    fn a10g_matches_table1() {
+        let g = a10g();
+        assert_eq!(g.peak_int8_tops, 140.0);
+        assert_eq!(g.peak_fp32_tflops, 35.0);
+        assert_eq!(g.mem_gbs, 600.0);
+    }
+
+    #[test]
+    fn plio_bandwidth_positive() {
+        let p = vck190();
+        let gbs = p.plio_total_gbs();
+        assert!(gbs > 100.0 && gbs < 2000.0, "plio {gbs} GB/s");
+    }
+
+    #[test]
+    fn hbm_variant_only_changes_bw() {
+        let a = vck190();
+        let b = vck190_hbm();
+        assert_eq!(a.aie_total, b.aie_total);
+        assert!(b.ddr_gbs > a.ddr_gbs);
+    }
+}

@@ -1,0 +1,89 @@
+//! CHARM-like no-forwarding baseline (paper Sec. 2 + §5.2.6).
+//!
+//! CHARM composes heterogeneous accelerators on the same ACAP but moves
+//! every inter-accelerator tensor through off-chip DDR and has no
+//! fine-grained MM/non-MM pipeline. In SSR terms that is exactly
+//! `Features::baseline()` — the 12 ms DeiT-T starting point of the paper's
+//! step-by-step analysis (§5.2.6).
+
+use crate::analytical::{Calib, Features};
+use crate::arch::Platform;
+use crate::dse::eval::{build_design, Evaluated};
+use crate::dse::Assignment;
+use crate::graph::Graph;
+
+/// Build the CHARM-like baseline design (monolithic acc, DDR round-trips,
+/// no fine-grained pipeline).
+pub fn baseline_design(
+    platform: &Platform,
+    calib: &Calib,
+    graph: &Graph,
+) -> Option<Evaluated> {
+    build_design(
+        platform,
+        calib,
+        graph,
+        &Assignment::sequential(),
+        Features::baseline(),
+        false,
+    )
+}
+
+/// §5.2.6 step configurations, in order: baseline, +forwarding, +spatial,
+/// +pipeline (each step keeps the previous ones).
+pub fn step_features() -> [(&'static str, Features, Assignment); 4] {
+    [
+        ("baseline (CHARM-like)", Features::baseline(), Assignment::sequential()),
+        (
+            "+ on-chip forwarding",
+            Features { on_chip_forwarding: true, ..Features::baseline() },
+            Assignment::sequential(),
+        ),
+        (
+            "+ spatial accelerators",
+            Features {
+                on_chip_forwarding: true,
+                spatial: true,
+                fine_grained_pipeline: false,
+            },
+            Assignment::spatial(),
+        ),
+        ("+ fine-grained pipeline", Features::all(), Assignment::spatial()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+    use crate::graph::{vit_graph, DEIT_T};
+
+    #[test]
+    fn baseline_much_slower_than_full_ssr() {
+        // §5.2.6: 12 ms baseline vs 0.54 ms SSR at batch 6 (22x). We accept
+        // a broad band; the bench reports the exact measured factors.
+        let p = vck190();
+        let cal = Calib::default();
+        let g = vit_graph(&DEIT_T);
+        let base = baseline_design(&p, &cal, &g).unwrap().evaluate(&p, &g, 6);
+        let ssr = build_design(&p, &cal, &g, &Assignment::spatial(), Features::all(), true)
+            .unwrap()
+            .evaluate(&p, &g, 6);
+        let factor = base.latency_s / ssr.latency_s;
+        assert!(factor > 5.0, "total step-opt factor only {factor:.1}x");
+    }
+
+    #[test]
+    fn each_step_improves_latency() {
+        let p = vck190();
+        let cal = Calib::default();
+        let g = vit_graph(&DEIT_T);
+        let mut prev = f64::INFINITY;
+        for (name, feats, assign) in step_features() {
+            let ev = build_design(&p, &cal, &g, &assign, feats, true).unwrap();
+            let lat = ev.evaluate(&p, &g, 6).latency_s;
+            assert!(lat < prev, "step '{name}' regressed: {lat} vs {prev}");
+            prev = lat;
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! HeatViT monolithic-FPGA baseline (paper Table 5's ZCU102/U250 columns).
+//!
+//! HeatViT runs a single generic engine sequentially over all layers; its
+//! achievable throughput is a fixed fraction of the DSP-array peak
+//! (shape mismatch + memory stalls), and there is a small per-inference
+//! setup intercept. Calibrated to the paper's measured DeiT-T latencies
+//! (ZCU102: 5.50/15.14/29.79 ms; U250: 2.23/5.60/10.66 ms at b=1/3/6) and
+//! scaled to other models by MACs.
+
+use crate::arch::FpgaSpec;
+use crate::graph::Graph;
+
+/// Calibration per board.
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaCalib {
+    /// Fraction of DSP peak the engine sustains on ViT layers.
+    pub util: f64,
+    /// Per-inference setup intercept (ms).
+    pub intercept_ms: f64,
+}
+
+/// Calibrated constants for the two boards in the paper.
+pub fn calib_for(board: &FpgaSpec) -> FpgaCalib {
+    match board.name {
+        "zcu102" => FpgaCalib { util: 0.41, intercept_ms: 0.65 },
+        "u250" => FpgaCalib { util: 0.24, intercept_ms: 0.55 },
+        _ => FpgaCalib { util: 0.3, intercept_ms: 0.6 },
+    }
+}
+
+/// Peak INT8 TOPS of the DSP array.
+pub fn peak_tops(board: &FpgaSpec) -> f64 {
+    board.dsp_total as f64 * board.macs_per_dsp_cycle * 2.0 * board.freq_mhz * 1e6
+        / 1e12
+}
+
+/// Sustained effective TOPS.
+pub fn eff_tops(board: &FpgaSpec, cal: &FpgaCalib) -> f64 {
+    peak_tops(board) * cal.util
+}
+
+/// End-to-end latency (seconds) at `batch`. Sequential engine: linear in
+/// batch plus the setup intercept.
+pub fn latency_s(board: &FpgaSpec, cal: &FpgaCalib, graph: &Graph, batch: usize) -> f64 {
+    let ops = (batch as u64 * graph.ops_per_image()) as f64;
+    cal.intercept_ms * 1e-3 + ops / (eff_tops(board, cal) * 1e12)
+}
+
+pub fn tops(board: &FpgaSpec, cal: &FpgaCalib, graph: &Graph, batch: usize) -> f64 {
+    let ops = (batch as u64 * graph.ops_per_image()) as f64;
+    ops / latency_s(board, cal, graph, batch) / 1e12
+}
+
+pub fn gops_per_w(board: &FpgaSpec, cal: &FpgaCalib, graph: &Graph, batch: usize) -> f64 {
+    crate::analytical::energy::gops_per_w_generic(
+        board.static_w,
+        board.dyn_w,
+        peak_tops(board),
+        tops(board, cal, graph, batch),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{u250, zcu102};
+    use crate::graph::{vit_graph, DEIT_T, DEIT_T_256};
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn zcu102_deit_t_near_table5() {
+        let g = vit_graph(&DEIT_T);
+        let b = zcu102();
+        let cal = calib_for(&b);
+        for (batch, paper_ms) in [(1, 5.50), (3, 15.14), (6, 29.79)] {
+            let got = latency_s(&b, &cal, &g, batch) * 1e3;
+            assert!(
+                rel_err(got, paper_ms) < 0.25,
+                "b={batch}: {got:.2} vs {paper_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn u250_deit_t_near_table5() {
+        let g = vit_graph(&DEIT_T);
+        let b = u250();
+        let cal = calib_for(&b);
+        for (batch, paper_ms) in [(1, 2.23), (3, 5.60), (6, 10.66)] {
+            let got = latency_s(&b, &cal, &g, batch) * 1e3;
+            assert!(
+                rel_err(got, paper_ms) < 0.25,
+                "b={batch}: {got:.2} vs {paper_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn scales_with_model_size() {
+        // DeiT-T-256 (2.1 GMACs) should be ~1.7x DeiT-T (1.25) per image.
+        let b = zcu102();
+        let cal = calib_for(&b);
+        let small = latency_s(&b, &cal, &vit_graph(&DEIT_T), 6);
+        let big = latency_s(&b, &cal, &vit_graph(&DEIT_T_256), 6);
+        let ratio = big / small;
+        assert!((1.4..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch() {
+        let b = zcu102();
+        let cal = calib_for(&b);
+        let g = vit_graph(&DEIT_T);
+        let t1 = tops(&b, &cal, &g, 1);
+        let t6 = tops(&b, &cal, &g, 6);
+        // Table 5: 0.44 -> 0.49 TOPS (mild growth as intercept amortizes).
+        assert!(t6 > t1 && t6 < 1.3 * t1, "{t1} -> {t6}");
+    }
+
+    #[test]
+    fn u250_faster_but_less_efficient_than_zcu102() {
+        // Table 5: U250 has ~3x the throughput but ~1/3 the GOPS/W.
+        let g = vit_graph(&DEIT_T);
+        let z = zcu102();
+        let u = u250();
+        let tz = tops(&z, &calib_for(&z), &g, 6);
+        let tu = tops(&u, &calib_for(&u), &g, 6);
+        assert!(tu > 2.0 * tz);
+        let ez = gops_per_w(&z, &calib_for(&z), &g, 6);
+        let eu = gops_per_w(&u, &calib_for(&u), &g, 6);
+        assert!(ez > 2.0 * eu, "zcu {ez} vs u250 {eu}");
+    }
+}

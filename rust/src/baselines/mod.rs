@@ -1,0 +1,13 @@
+//! Comparison baselines (paper Tables 4-5, Fig. 3, §5.2.6).
+//!
+//! * [`gpu`]     — TensorRT-on-A10G kernel-level model, calibrated to the
+//!   paper's own Fig. 3 profile (the paper measured these; we rebuild the
+//!   batch-sweep behaviour from the published breakdown).
+//! * [`heatvit`] — HeatViT monolithic FPGA accelerator model on ZCU102 and
+//!   U250 (Table 5's FPGA columns).
+//! * [`charm`]   — the CHARM-like no-forwarding ACAP baseline (§5.2.6's
+//!   12 ms starting point): SSR with all three optimizations disabled.
+
+pub mod charm;
+pub mod gpu;
+pub mod heatvit;

@@ -1,0 +1,169 @@
+//! Criterion-style bench harness (offline substitute).
+//!
+//! All `benches/*.rs` use `harness = false` and drive this: warmup, timed
+//! iterations, summary stats, and aligned table printing so each bench
+//! reproduces its paper table/figure as rows on stdout.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `max_iters` or `max_seconds` elapses (at least 3).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize, max_seconds: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    let t0 = Instant::now();
+    let mut iters = 0;
+    let min_iters = max_iters.clamp(1, 3);
+    while iters < max_iters.max(1)
+        && (iters < min_iters || t0.elapsed().as_secs_f64() < max_seconds)
+    {
+        let it = Instant::now();
+        f();
+        s.push(it.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        p50_s: s.p50(),
+        p99_s: s.p99(),
+        min_s: s.min(),
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>10}  p50 {:>10}  p99 {:>10}",
+            self.name,
+            self.iters,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p99_s)
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for paper-style tables.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String> + Clone>(headers: &[S]) -> Self {
+        Table {
+            headers: headers.iter().cloned().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String> + Clone>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.iter().cloned().map(Into::into).collect());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push_str(&format!(
+            "{}\n",
+            w.iter().map(|n| "-".repeat(*n + 2)).collect::<String>()
+        ));
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iters() {
+        let mut count = 0;
+        let r = bench("noop", 1, 5, 0.0, || count += 1);
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(count, r.iters + 1); // +1 warmup
+    }
+
+    #[test]
+    fn bench_single_iteration_mode() {
+        let mut count = 0;
+        let r = bench("once", 0, 1, 100.0, || count += 1);
+        assert_eq!(r.iters, 1);
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_s(2.5).ends_with(" s"));
+        assert!(fmt_s(2.5e-3).ends_with(" ms"));
+        assert!(fmt_s(2.5e-6).ends_with(" us"));
+        assert!(fmt_s(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(&["x", "1"]);
+        t.row(&["yyyy", "2"]);
+        let s = t.render();
+        assert!(s.contains("long_header"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one"]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Dynamic batcher for the sequential (monolithic-acc) server.
+//!
+//! The paper's GPU baseline explores latency-throughput purely by batch
+//! size; the serving analog is a batcher that packs a request queue into
+//! the pre-compiled `full_bN` executables: deepest batch that the queue
+//! fills, padding the final partial batch (padded rows are discarded).
+//! This is the "dynamic batching" half of the L3 coordinator; the
+//! pipeline server covers the spatial/hybrid half.
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::ServeReport;
+use super::pipeline::SequentialServer;
+use crate::runtime::exec::Tensor;
+use crate::util::stats::Summary;
+
+/// Greedy batch-size policy over the compiled batch variants.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Available `full_bN` sizes, ascending (e.g. [1, 3, 6]).
+    sizes: Vec<usize>,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        BatchPolicy { sizes }
+    }
+
+    /// Largest compiled batch the queue can fill; if the queue is smaller
+    /// than every size, the smallest executable that covers it (padding).
+    pub fn choose(&self, queued: usize) -> usize {
+        assert!(queued > 0);
+        self.sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= queued)
+            .copied()
+            .unwrap_or_else(|| {
+                *self
+                    .sizes
+                    .iter()
+                    .find(|&&s| s >= queued)
+                    .unwrap_or(self.sizes.last().unwrap())
+            })
+    }
+
+    /// Split a queue length into concrete batch launches.
+    pub fn plan(&self, mut queued: usize) -> Vec<usize> {
+        let mut plan = Vec::new();
+        while queued > 0 {
+            let b = self.choose(queued);
+            plan.push(b);
+            queued = queued.saturating_sub(b);
+        }
+        plan
+    }
+}
+
+/// Batching front-end over a [`SequentialServer`].
+pub struct BatchingServer {
+    seq: SequentialServer,
+    policy: BatchPolicy,
+}
+
+impl BatchingServer {
+    pub fn new(seq: SequentialServer) -> Self {
+        let policy = BatchPolicy::new(seq.batch_sizes());
+        BatchingServer { seq, policy }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Serve single-image requests (`[1, H, W, 3]` each): pack into the
+    /// deepest available batches, pad the tail, unpack logits per request.
+    pub fn serve(&self, requests: &[Tensor]) -> Result<(ServeReport, Vec<Tensor>)> {
+        let n = requests.len();
+        if n == 0 {
+            return Err(anyhow!("empty request set"));
+        }
+        let img = self.seq.img_size();
+        let img_elems = img * img * 3;
+        for (i, r) in requests.iter().enumerate() {
+            if r.shape != vec![1, img, img, 3] {
+                return Err(anyhow!("request {i} has shape {:?}", r.shape));
+            }
+        }
+
+        let t0 = std::time::Instant::now();
+        let mut latency = Summary::new();
+        let mut outs: Vec<Tensor> = Vec::with_capacity(n);
+        let mut next = 0usize;
+        for b in self.policy.plan(n) {
+            // pack b images (padding by repeating the last one)
+            let mut data = Vec::with_capacity(b * img_elems);
+            let real = b.min(n - next);
+            for i in 0..b {
+                let src = &requests[next + i.min(real - 1)];
+                data.extend_from_slice(&src.data);
+            }
+            let batch_tensor = Tensor::new(vec![b, img, img, 3], data);
+            let t = std::time::Instant::now();
+            let logits = self.seq.run_batch(b, &batch_tensor)?;
+            let dt = t.elapsed().as_secs_f64();
+            let classes = logits.shape[1];
+            for i in 0..real {
+                latency.push(dt); // whole-batch latency attributed per request
+                outs.push(Tensor::new(
+                    vec![1, classes],
+                    logits.data[i * classes..(i + 1) * classes].to_vec(),
+                ));
+            }
+            next += real;
+        }
+        let report = ServeReport {
+            requests: n,
+            wall_s: t0.elapsed().as_secs_f64(),
+            latency,
+            macs_per_image: self.seq_macs(),
+        };
+        Ok((report, outs))
+    }
+
+    fn seq_macs(&self) -> u64 {
+        self.seq.macs_per_image()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![6, 1, 3])
+    }
+
+    #[test]
+    fn choose_prefers_deepest_fillable() {
+        let p = policy();
+        assert_eq!(p.choose(10), 6);
+        assert_eq!(p.choose(6), 6);
+        assert_eq!(p.choose(5), 3);
+        assert_eq!(p.choose(2), 1);
+        assert_eq!(p.choose(1), 1);
+    }
+
+    #[test]
+    fn plan_covers_queue_exactly_or_with_padding() {
+        let p = policy();
+        assert_eq!(p.plan(14), vec![6, 6, 1, 1]);
+        assert_eq!(p.plan(7), vec![6, 1]);
+        assert_eq!(p.plan(3), vec![3]);
+        assert_eq!(p.plan(2), vec![1, 1]);
+    }
+
+    #[test]
+    fn plan_total_geq_queue() {
+        let p = BatchPolicy::new(vec![3, 6]);
+        for q in 1..=20 {
+            let total: usize = p.plan(q).iter().sum();
+            assert!(total >= q, "q={q} plan under-covers");
+            assert!(total - q < 6, "q={q} over-pads");
+        }
+    }
+
+    #[test]
+    fn dedup_and_sort() {
+        let p = BatchPolicy::new(vec![6, 6, 1, 3, 1]);
+        assert_eq!(p.choose(4), 3);
+    }
+}

@@ -1,0 +1,64 @@
+//! Serve-time metrics: per-request latency distribution + throughput.
+
+use crate::util::stats::Summary;
+
+/// Outcome of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub latency: Summary,
+    /// MACs per image (for effective-TOPS accounting).
+    pub macs_per_image: u64,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.wall_s
+    }
+
+    /// Effective TOPS over the run (2 ops per MAC).
+    pub fn effective_tops(&self) -> f64 {
+        (self.requests as f64 * self.macs_per_image as f64 * 2.0) / self.wall_s / 1e12
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} reqs in {:.3} s | {:.2} req/s | lat p50 {:.2} ms p99 {:.2} ms | {:.4} effective TOPS",
+            self.requests,
+            self.wall_s,
+            self.throughput_rps(),
+            self.latency.p50() * 1e3,
+            self.latency.p99() * 1e3,
+            self.effective_tops()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServeReport {
+        let mut latency = Summary::new();
+        for i in 1..=10 {
+            latency.push(i as f64 * 1e-3);
+        }
+        ServeReport { requests: 10, wall_s: 2.0, latency, macs_per_image: 1_250_000_000 }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = report();
+        assert_eq!(r.throughput_rps(), 5.0);
+        // 10 * 1.25G * 2 / 2s = 12.5 GOPS
+        assert!((r.effective_tops() - 0.0125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_line_contains_fields() {
+        let s = report().summary_line();
+        assert!(s.contains("req/s"));
+        assert!(s.contains("p99"));
+    }
+}

@@ -1,0 +1,158 @@
+//! L3 serving coordinator: execute a Layer→Acc schedule on real compiled
+//! PJRT stage executables.
+//!
+//! This is the runtime half of the reproduction: where the paper programs
+//! AIE+PL accelerators, we map each *accelerator* to a worker thread owning
+//! the compiled stage executables assigned to it, with channels as the
+//! on-chip forwarding paths. The three paper execution models all run on
+//! the same machinery:
+//!
+//! * **sequential** — one worker owning the monolithic `full_bN`
+//!   executable (one acc runs every layer);
+//! * **spatial**    — one worker per stage (embed / attn / mlp / head),
+//!   images pipelined across them (Fig. 1b);
+//! * **hybrid**     — any grouping of stages onto workers (Fig. 1c),
+//!   derived from a DSE assignment via [`StageAssign::from_assignment`].
+//!
+//! Python never runs here; requests are f32 image tensors in, logits out.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::ServeReport;
+pub use batcher::{BatchPolicy, BatchingServer};
+pub use pipeline::{PipelineServer, SequentialServer};
+
+use crate::dse::Assignment;
+use crate::graph::LayerClass;
+
+/// The four runtime stages the AOT path emits executables for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StageKind {
+    Embed,
+    Attn,
+    Mlp,
+    Head,
+}
+
+pub const STAGE_KINDS: [StageKind; 4] =
+    [StageKind::Embed, StageKind::Attn, StageKind::Mlp, StageKind::Head];
+
+impl StageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Embed => "embed",
+            StageKind::Attn => "attn",
+            StageKind::Mlp => "mlp",
+            StageKind::Head => "head",
+        }
+    }
+}
+
+/// Grouping of the four runtime stages onto worker "accelerators".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageAssign {
+    pub acc_of: [usize; 4], // indexed by STAGE_KINDS order
+}
+
+impl StageAssign {
+    pub fn sequential() -> Self {
+        StageAssign { acc_of: [0; 4] }
+    }
+
+    pub fn spatial() -> Self {
+        StageAssign { acc_of: [0, 1, 2, 3] }
+    }
+
+    /// Project an 8-class DSE assignment onto the 4 runtime stages: each
+    /// stage goes to the acc hosting the majority of its classes (ties to
+    /// the lowest acc id), then acc ids are re-densified.
+    pub fn from_assignment(a: &Assignment) -> Self {
+        let classes_of = |k: StageKind| -> Vec<LayerClass> {
+            match k {
+                StageKind::Embed => vec![LayerClass::Embed],
+                StageKind::Attn => vec![
+                    LayerClass::Qkv,
+                    LayerClass::Bmm0,
+                    LayerClass::Bmm1,
+                    LayerClass::Proj,
+                ],
+                StageKind::Mlp => vec![LayerClass::Fc1, LayerClass::Fc2],
+                StageKind::Head => vec![LayerClass::Head],
+            }
+        };
+        let mut acc_of = [0usize; 4];
+        for (i, k) in STAGE_KINDS.iter().enumerate() {
+            let mut counts = std::collections::BTreeMap::new();
+            for c in classes_of(*k) {
+                *counts.entry(a.acc_of(c)).or_insert(0usize) += 1;
+            }
+            acc_of[i] = counts
+                .iter()
+                .max_by_key(|(acc, n)| (**n, usize::MAX - **acc))
+                .map(|(acc, _)| *acc)
+                .unwrap();
+        }
+        // densify
+        let mut seen = Vec::new();
+        for a in acc_of.iter_mut() {
+            if let Some(pos) = seen.iter().position(|s| s == a) {
+                *a = pos;
+            } else {
+                seen.push(*a);
+                *a = seen.len() - 1;
+            }
+        }
+        StageAssign { acc_of }
+    }
+
+    pub fn nacc(&self) -> usize {
+        self.acc_of.iter().copied().max().unwrap() + 1
+    }
+
+    pub fn acc_of(&self, k: StageKind) -> usize {
+        self.acc_of[STAGE_KINDS.iter().position(|s| *s == k).unwrap()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_one_acc() {
+        assert_eq!(StageAssign::sequential().nacc(), 1);
+    }
+
+    #[test]
+    fn spatial_four_accs() {
+        let s = StageAssign::spatial();
+        assert_eq!(s.nacc(), 4);
+        assert_eq!(s.acc_of(StageKind::Head), 3);
+    }
+
+    #[test]
+    fn projection_from_dse_assignment() {
+        // attention classes on acc 1, everything else acc 0
+        let a = Assignment::new(vec![0, 1, 1, 1, 1, 0, 0, 0]);
+        let s = StageAssign::from_assignment(&a);
+        assert_eq!(s.acc_of(StageKind::Embed), s.acc_of(StageKind::Mlp));
+        assert_ne!(s.acc_of(StageKind::Embed), s.acc_of(StageKind::Attn));
+        assert_eq!(s.nacc(), 2);
+    }
+
+    #[test]
+    fn projection_of_sequential_is_sequential() {
+        let s = StageAssign::from_assignment(&Assignment::sequential());
+        assert_eq!(s, StageAssign::sequential());
+    }
+
+    #[test]
+    fn projection_densifies_ids() {
+        let a = Assignment::new(vec![3, 3, 3, 3, 3, 7, 7, 1]);
+        let s = StageAssign::from_assignment(&a);
+        assert!(s.nacc() <= 3);
+        assert_eq!(s.acc_of(StageKind::Embed), 0);
+    }
+}

@@ -1,0 +1,357 @@
+//! Worker-thread execution of the three paper execution models.
+//!
+//! Each worker thread is one "accelerator": it owns the compiled stage
+//! executables assigned to it and processes jobs FIFO from its channel —
+//! the software analog of an acc consuming its PLIO stream. Channels
+//! between workers are the on-chip forwarding paths; images in flight
+//! pipeline across workers exactly as batches do across spatial accs in
+//! Fig. 1(b-c).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::metrics::ServeReport;
+use super::{StageAssign, StageKind, STAGE_KINDS};
+use crate::runtime::exec::{Engine, Stage, Tensor};
+use crate::util::stats::Summary;
+
+/// One step of the per-image schedule.
+#[derive(Clone, Copy, Debug)]
+struct Step {
+    kind: StageKind,
+    block: Option<usize>,
+    acc: usize,
+}
+
+/// Build the per-image step schedule for a model of `depth` blocks.
+fn build_schedule(assign: &StageAssign, depth: usize) -> Vec<Step> {
+    let mut steps = vec![Step {
+        kind: StageKind::Embed,
+        block: None,
+        acc: assign.acc_of(StageKind::Embed),
+    }];
+    for b in 0..depth {
+        steps.push(Step { kind: StageKind::Attn, block: Some(b), acc: assign.acc_of(StageKind::Attn) });
+        steps.push(Step { kind: StageKind::Mlp, block: Some(b), acc: assign.acc_of(StageKind::Mlp) });
+    }
+    steps.push(Step { kind: StageKind::Head, block: None, acc: assign.acc_of(StageKind::Head) });
+    steps
+}
+
+struct WorkItem {
+    req_id: usize,
+    step: usize,
+    tensor: Tensor,
+    submitted: Instant,
+}
+
+enum Job {
+    Work(WorkItem),
+    Stop,
+}
+
+/// Pipelined (spatial / hybrid) server: one worker per accelerator.
+pub struct PipelineServer {
+    engine: Arc<Engine>,
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<(usize, Tensor, Instant)>,
+    handles: Vec<thread::JoinHandle<()>>,
+    schedule: Vec<Step>,
+    macs_per_image: u64,
+    micro_batch: usize,
+}
+
+impl PipelineServer {
+    /// Compile the four stage executables at `micro_batch` and spawn one
+    /// worker per accelerator in `assign`.
+    pub fn new(
+        engine: Arc<Engine>,
+        model: &str,
+        assign: &StageAssign,
+        micro_batch: usize,
+    ) -> Result<PipelineServer> {
+        let info = engine
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .clone();
+        let schedule = build_schedule(assign, info.depth);
+        let nacc = assign.nacc();
+
+        // Compile each stage once, share with every worker that needs it.
+        let mut stages: BTreeMap<StageKind, Arc<Stage>> = BTreeMap::new();
+        for kind in STAGE_KINDS {
+            let name = format!("{model}_{}_b{micro_batch}", kind.name());
+            let stage = engine
+                .compile(&name)
+                .with_context(|| format!("compiling stage {name}"))?;
+            stages.insert(kind, Arc::new(stage));
+        }
+
+        let (done_tx, done_rx) = channel::<(usize, Tensor, Instant)>();
+        let mut txs = Vec::with_capacity(nacc);
+        let mut rxs = Vec::with_capacity(nacc);
+        for _ in 0..nacc {
+            let (tx, rx) = channel::<Job>();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+
+        let mut handles = Vec::with_capacity(nacc);
+        for acc in 0..nacc {
+            let rx = rxs[acc].take().unwrap();
+            let my_stages: BTreeMap<StageKind, Arc<Stage>> = schedule
+                .iter()
+                .filter(|s| s.acc == acc)
+                .map(|s| (s.kind, Arc::clone(&stages[&s.kind])))
+                .collect();
+            let fwd: Vec<Sender<Job>> = txs.clone();
+            let done = done_tx.clone();
+            let eng = Arc::clone(&engine);
+            let sched = schedule.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("ssr-acc-{acc}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            let item = match job {
+                                Job::Stop => break,
+                                Job::Work(w) => w,
+                            };
+                            let step = sched[item.step];
+                            let stage = &my_stages[&step.kind];
+                            let out = stage
+                                .run(&eng, &[item.tensor], step.block)
+                                .expect("stage execution failed");
+                            let next = item.step + 1;
+                            if next == sched.len() {
+                                let _ = done.send((item.req_id, out, item.submitted));
+                            } else {
+                                let _ = fwd[sched[next].acc].send(Job::Work(WorkItem {
+                                    req_id: item.req_id,
+                                    step: next,
+                                    tensor: out,
+                                    submitted: item.submitted,
+                                }));
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Ok(PipelineServer {
+            engine,
+            txs,
+            done_rx,
+            handles,
+            schedule,
+            macs_per_image: info.macs_per_image,
+            micro_batch,
+        })
+    }
+
+    /// Serve `images` (each shaped `[micro_batch, H, W, 3]`); returns the
+    /// report and the logits per request, in request order.
+    pub fn serve(&self, images: Vec<Tensor>) -> Result<(ServeReport, Vec<Tensor>)> {
+        let n = images.len();
+        let t0 = Instant::now();
+        for (i, img) in images.into_iter().enumerate() {
+            self.txs[self.schedule[0].acc]
+                .send(Job::Work(WorkItem {
+                    req_id: i,
+                    step: 0,
+                    tensor: img,
+                    submitted: Instant::now(),
+                }))
+                .map_err(|_| anyhow!("pipeline worker died"))?;
+        }
+        let mut outs: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut latency = Summary::new();
+        for _ in 0..n {
+            let (req, tensor, submitted) =
+                self.done_rx.recv().map_err(|_| anyhow!("pipeline closed early"))?;
+            latency.push(submitted.elapsed().as_secs_f64());
+            outs[req] = Some(tensor);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let report = ServeReport {
+            requests: n * self.micro_batch,
+            wall_s: wall,
+            latency,
+            macs_per_image: self.macs_per_image,
+        };
+        Ok((report, outs.into_iter().map(Option::unwrap).collect()))
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Job::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sequential (monolithic) server: one full-model executable per batch size.
+pub struct SequentialServer {
+    engine: Arc<Engine>,
+    full: BTreeMap<usize, Stage>,
+    macs_per_image: u64,
+    img_size: usize,
+}
+
+impl SequentialServer {
+    /// Compile the `full_bN` executables for `batches`.
+    pub fn new(engine: Arc<Engine>, model: &str, batches: &[usize]) -> Result<SequentialServer> {
+        let info = engine
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .clone();
+        let mut full = BTreeMap::new();
+        for &b in batches {
+            let name = format!("{model}_full_b{b}");
+            full.insert(b, engine.compile(&name)?);
+        }
+        Ok(SequentialServer {
+            engine,
+            full,
+            macs_per_image: info.macs_per_image,
+            img_size: info.img_size,
+        })
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.full.keys().copied().collect()
+    }
+
+    /// Run one batch tensor `[B, H, W, 3]` -> logits `[B, classes]`.
+    pub fn run_batch(&self, batch: usize, images: &Tensor) -> Result<Tensor> {
+        let stage = self
+            .full
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no full_b{batch} compiled"))?;
+        stage.run(&self.engine, std::slice::from_ref(images), None)
+    }
+
+    /// Serve `reqs` batch tensors serially (the monolithic acc timeline of
+    /// Fig. 1a) and report latency/throughput.
+    pub fn serve(&self, batch: usize, reqs: &[Tensor]) -> Result<(ServeReport, Vec<Tensor>)> {
+        let t0 = Instant::now();
+        let mut latency = Summary::new();
+        let mut outs = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let t = Instant::now();
+            outs.push(self.run_batch(batch, r)?);
+            latency.push(t.elapsed().as_secs_f64());
+        }
+        let report = ServeReport {
+            requests: reqs.len() * batch,
+            wall_s: t0.elapsed().as_secs_f64(),
+            latency,
+            macs_per_image: self.macs_per_image,
+        };
+        Ok((report, outs))
+    }
+
+    pub fn img_size(&self) -> usize {
+        self.img_size
+    }
+
+    pub fn macs_per_image(&self) -> u64 {
+        self.macs_per_image
+    }
+}
+
+/// Deterministic synthetic image batch (seeded, int8-range values).
+pub fn synth_images(batch: usize, img_size: usize, seed: u64) -> Tensor {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n = batch * img_size * img_size * 3;
+    let data: Vec<f32> = (0..n)
+        .map(|_| (rng.f64() as f32 * 2.0 - 1.0) * 1.5)
+        .collect();
+    Tensor::new(vec![batch, img_size, img_size, 3], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::OnceLock;
+
+    fn engine() -> Arc<Engine> {
+        static E: OnceLock<Arc<Engine>> = OnceLock::new();
+        Arc::clone(E.get_or_init(|| Engine::load(&PathBuf::from("artifacts")).unwrap()))
+    }
+
+    #[test]
+    fn sequential_matches_pipeline_numerics() {
+        // The monolithic executable and the stage pipeline must produce the
+        // same logits — the runtime analog of the stage-composition test.
+        let eng = engine();
+        let seq = SequentialServer::new(Arc::clone(&eng), "deit_t", &[1]).unwrap();
+        let pipe =
+            PipelineServer::new(Arc::clone(&eng), "deit_t", &StageAssign::spatial(), 1)
+                .unwrap();
+        let img = synth_images(1, 224, 42);
+        let a = seq.run_batch(1, &img).unwrap();
+        let (_, outs) = pipe.serve(vec![img]).unwrap();
+        assert_eq!(a.shape, outs[0].shape);
+        for (x, y) in a.data.iter().zip(&outs[0].data) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn hybrid_grouping_same_numerics() {
+        let eng = engine();
+        let seq = SequentialServer::new(Arc::clone(&eng), "deit_t", &[1]).unwrap();
+        let hybrid = StageAssign { acc_of: [0, 1, 1, 0] };
+        let pipe = PipelineServer::new(Arc::clone(&eng), "deit_t", &hybrid, 1).unwrap();
+        let img = synth_images(1, 224, 7);
+        let a = seq.run_batch(1, &img).unwrap();
+        let (_, outs) = pipe.serve(vec![img]).unwrap();
+        for (x, y) in a.data.iter().zip(&outs[0].data) {
+            assert!((x - y).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn pipeline_reports_all_requests() {
+        let eng = engine();
+        let pipe =
+            PipelineServer::new(Arc::clone(&eng), "deit_t", &StageAssign::spatial(), 1)
+                .unwrap();
+        let imgs: Vec<Tensor> = (0..4).map(|i| synth_images(1, 224, i)).collect();
+        let (report, outs) = pipe.serve(imgs).unwrap();
+        assert_eq!(report.requests, 4);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(report.latency.len(), 4);
+        assert!(report.effective_tops() > 0.0);
+    }
+
+    #[test]
+    fn sequential_batch3_runs() {
+        let eng = engine();
+        let seq = SequentialServer::new(Arc::clone(&eng), "deit_t", &[3]).unwrap();
+        let img = synth_images(3, 224, 1);
+        let out = seq.run_batch(3, &img).unwrap();
+        assert_eq!(out.shape, vec![3, 1000]);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

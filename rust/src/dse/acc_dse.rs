@@ -1,0 +1,369 @@
+//! Acc-Customization DSE — paper Algorithm 2.
+//!
+//! For each accelerator (in Layer→Acc schedule order) exhaustively search
+//! the `config_vector (h1,w1,w2,A,B,C,Part_*)` space subject to Eq. 1
+//! resource constraints, minimizing the accelerator's total per-image MM
+//! time for its assigned workload. With `inter_acc_aware` the search prunes
+//! configurations whose array parallelism cannot be divisibility-aligned
+//! with already-fixed communicating accelerators, then *force-partitions*
+//! the RAM banks (Fig. 8) so forwarding is conflict-free; without it the
+//! paper's baseline searches everything and post-pays the repack penalty.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::partition::AccBudget;
+use super::Assignment;
+use crate::analytical::hmm::{self, AccConfig};
+use crate::analytical::Calib;
+use crate::arch::Platform;
+use crate::graph::Graph;
+
+/// Candidate values: integer solutions on the axes the paper sweeps.
+pub const H_VALS: [u64; 5] = [8, 16, 32, 64, 128];
+pub const ARR_VALS: [u64; 8] = [1, 2, 3, 4, 6, 8, 12, 16];
+
+/// Precomputed per-class MM times over the whole config space.
+///
+/// `mm_time` is a pure function of (platform, calib, config, class dims,
+/// pinned); across an enumeration of thousands of assignments the same
+/// few-hundred-thousand evaluations repeat, so they are tabulated once per
+/// (platform, calib, graph) and shared globally. On the single-core target
+/// this is the dominant DSE speedup (see EXPERIMENTS.md §Perf).
+pub struct CostTable {
+    /// All (a, b, c) array shapes.
+    pub abc: Vec<(u64, u64, u64)>,
+    /// Local-memory-feasible (h1, w1, w2) workload triples.
+    pub h: Vec<(u64, u64, u64)>,
+    /// Class workload: (dims, node count) per LayerClass index.
+    classes: Vec<(crate::graph::MmDims, f64)>,
+    /// secs[((abc_i * h.len() + h_i) * nclass + class) * 2 + pinned]
+    secs: Vec<f64>,
+}
+
+impl CostTable {
+    pub fn build(platform: &Platform, calib: &Calib, graph: &Graph) -> CostTable {
+        let mut abc = Vec::new();
+        for &a in &ARR_VALS {
+            for &b in &ARR_VALS {
+                for &c in &ARR_VALS {
+                    abc.push((a, b, c));
+                }
+            }
+        }
+        let mut h = Vec::new();
+        for &h1 in &H_VALS {
+            for &w1 in &H_VALS {
+                for &w2 in &H_VALS {
+                    let probe = AccConfig { h1, w1, w2, a: 1, b: 1, c: 1, part: (1, 1, 1) };
+                    if probe.fits_local_mem(platform) {
+                        h.push((h1, w1, w2));
+                    }
+                }
+            }
+        }
+        let classes: Vec<(crate::graph::MmDims, f64)> = crate::graph::ALL_CLASSES
+            .iter()
+            .map(|&cl| {
+                let nodes: Vec<_> = graph.nodes_of(cl).collect();
+                (nodes[0].dims, nodes.len() as f64)
+            })
+            .collect();
+        let nclass = classes.len();
+        let mut secs = vec![0.0f64; abc.len() * h.len() * nclass * 2];
+        let mut idx = 0;
+        for &(a, b, c) in &abc {
+            for &(h1, w1, w2) in &h {
+                let cfg = AccConfig { h1, w1, w2, a, b, c, part: (a, 1, c) };
+                for (dims, count) in &classes {
+                    for pinned in [false, true] {
+                        secs[idx] =
+                            hmm::mm_time(platform, calib, &cfg, dims, pinned).seconds * count;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+        CostTable { abc, h, classes, secs }
+    }
+
+    #[inline]
+    pub fn secs(&self, abc_i: usize, h_i: usize, class: usize, pinned: bool) -> f64 {
+        let nclass = self.classes.len();
+        self.secs[((abc_i * self.h.len() + h_i) * nclass + class) * 2 + pinned as usize]
+    }
+
+    /// Global cache: one table per (platform, calib, graph model).
+    pub fn cached(platform: &Platform, calib: &Calib, graph: &Graph) -> Arc<CostTable> {
+        static CACHE: OnceLock<Mutex<HashMap<String, Arc<CostTable>>>> = OnceLock::new();
+        let key = format!(
+            "{}:{}:{}:{:?}",
+            platform.name, graph.model, graph.macs_per_image, calib
+        );
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(t) = cache.lock().unwrap().get(&key) {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(CostTable::build(platform, calib, graph));
+        cache.lock().unwrap().insert(key, Arc::clone(&t));
+        t
+    }
+}
+
+/// Outcome of customizing one accelerator.
+#[derive(Clone, Debug)]
+pub struct AccChoice {
+    pub config: AccConfig,
+    /// Per-image MM seconds for each class assigned to this acc
+    /// (class index aligned with `Assignment::classes_on` order).
+    pub mm_seconds: Vec<f64>,
+    /// Number of configurations evaluated (Fig. 10's search-cost metric).
+    pub evaluated: usize,
+    /// Number pruned by the inter-acc alignment check.
+    pub pruned: usize,
+}
+
+/// Search one accelerator's configuration (Algorithm 2 inner loop).
+///
+/// `neighbors` are configs of already-customized accelerators this acc
+/// exchanges data with (upstream or downstream in the layer graph).
+pub fn customize_acc(
+    platform: &Platform,
+    calib: &Calib,
+    graph: &Graph,
+    assignment: &Assignment,
+    acc: usize,
+    budget: &AccBudget,
+    neighbors: &[(AccConfig, bool)], // (config, neighbor_is_upstream)
+    inter_acc_aware: bool,
+) -> Option<AccChoice> {
+    let classes = assignment.classes_on(acc);
+    if classes.is_empty() {
+        return None;
+    }
+    let table = CostTable::cached(platform, calib, graph);
+    // Per-class pinning: a node is weight-pinned only if it has weights
+    // AND no attention class shares this acc (paper Sec. 4.3 (1)).
+    let has_attention = assignment.has_attention(acc);
+    let class_idx: Vec<(usize, bool)> = classes
+        .iter()
+        .map(|&c| {
+            let pinned = !c.is_attention()
+                && !has_attention
+                && graph.nodes_of(c).next().unwrap().weight_bytes > 0;
+            (c.index(), pinned)
+        })
+        .collect();
+
+    let mut best: Option<(f64, AccConfig, Vec<f64>)> = None;
+    let mut evaluated = 0usize;
+    let mut pruned = 0usize;
+
+    // Hot loop: (A,B,C) outer (drives every Eq. 1 constraint and the
+    // alignment/force-partition outcome), precomputed cost-table sums for
+    // the local-memory-feasible (h1,w1,w2) triples inner.
+    for (abc_i, &(a, b, c)) in table.abc.iter().enumerate() {
+        let base = AccConfig { h1: 8, w1: 8, w2: 8, a, b, c, part: (a, 1, c) };
+        if base.aie() > budget.aie || base.plio() > budget.plio {
+            continue;
+        }
+        let mut part = (a, 1, c);
+        if inter_acc_aware {
+            // Alignment pruning (Fig. 8), direction-aware: an upstream
+            // neighbor's output (A, C) parallelism must divide into OUR
+            // input (A, B); for a downstream neighbor it is OUR (A, C)
+            // into THEIR (A, B).
+            let ok = neighbors.iter().all(|(n, upstream)| {
+                if *upstream {
+                    n.aligned_with(&base)
+                } else {
+                    base.aligned_with(n)
+                }
+            });
+            if !ok {
+                pruned += table.h.len();
+                continue;
+            }
+            // Force-partition the banks to the finest communicating
+            // parallelism (Fig. 8b).
+            let pa = neighbors.iter().map(|(n, _)| n.a).chain([a]).max().unwrap();
+            let pc = neighbors.iter().map(|(n, _)| n.b).chain([c]).max().unwrap();
+            part = (pa, 1, pc);
+        }
+        for (h_i, &(h1, w1, w2)) in table.h.iter().enumerate() {
+            let cfg = AccConfig { h1, w1, w2, a, b, c, part };
+            // RAM bank feasibility (depends on the tile size).
+            if cfg.ram_banks(calib) > budget.bram + budget.uram * 2 {
+                continue;
+            }
+            evaluated += 1;
+            let mut total = 0.0;
+            for &(ci, pinned) in &class_idx {
+                total += table.secs(abc_i, h_i, ci, pinned);
+            }
+            if best.as_ref().map(|(bt, _, _)| total < *bt).unwrap_or(true) {
+                let per_class = class_idx
+                    .iter()
+                    .map(|&(ci, pinned)| table.secs(abc_i, h_i, ci, pinned))
+                    .collect();
+                best = Some((total, cfg, per_class));
+            }
+        }
+    }
+
+    best.map(|(_, config, mm_seconds)| AccChoice {
+        config,
+        mm_seconds,
+        evaluated,
+        pruned,
+    })
+}
+
+/// Customize all accelerators in schedule order (Algorithm 2 outer loop:
+/// `trace_assignment` — accs are searched in first-use order so downstream
+/// accs see their upstream neighbors' fixed configs).
+pub fn customize_all(
+    platform: &Platform,
+    calib: &Calib,
+    graph: &Graph,
+    assignment: &Assignment,
+    budgets: &[AccBudget],
+    inter_acc_aware: bool,
+) -> Option<Vec<AccChoice>> {
+    let nacc = assignment.nacc();
+    // first-use order over the topological node order
+    let mut order = Vec::new();
+    for n in &graph.nodes {
+        let a = assignment.acc_of(n.class);
+        if !order.contains(&a) {
+            order.push(a);
+        }
+    }
+    debug_assert_eq!(order.len(), nacc);
+
+    let mut choices: Vec<Option<AccChoice>> = vec![None; nacc];
+    for &acc in &order {
+        // Neighbors: accs already customized that exchange tensors with
+        // acc, tagged with the edge direction (upstream = they produce
+        // what we consume).
+        let mut neighbors: Vec<(AccConfig, bool)> = Vec::new();
+        for n in &graph.nodes {
+            let na = assignment.acc_of(n.class);
+            for &d in &n.deps {
+                let da = assignment.acc_of(graph.nodes[d].class);
+                let other = if na == acc && da != acc {
+                    Some((da, true)) // da produces into us
+                } else if da == acc && na != acc {
+                    Some((na, false)) // we produce into na
+                } else {
+                    None
+                };
+                if let Some((o, upstream)) = other {
+                    if let Some(ch) = &choices[o] {
+                        if !neighbors.contains(&(ch.config, upstream)) {
+                            neighbors.push((ch.config, upstream));
+                        }
+                    }
+                }
+            }
+        }
+        let choice = customize_acc(
+            platform,
+            calib,
+            graph,
+            assignment,
+            acc,
+            &budgets[acc],
+            &neighbors,
+            inter_acc_aware,
+        )?;
+        choices[acc] = Some(choice);
+    }
+    Some(choices.into_iter().map(|c| c.unwrap()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+    use crate::dse::partition::hw_partition;
+    use crate::graph::{vit_graph, DEIT_T};
+
+    fn setup() -> (crate::arch::Platform, Calib, Graph) {
+        (vck190(), Calib::default(), vit_graph(&DEIT_T))
+    }
+
+    #[test]
+    fn sequential_acc_uses_most_aies() {
+        let (p, cal, g) = setup();
+        let a = Assignment::sequential();
+        let budgets = hw_partition(&p, &cal, &g, &a);
+        let choices = customize_all(&p, &cal, &g, &a, &budgets, true).unwrap();
+        assert_eq!(choices.len(), 1);
+        let cfg = choices[0].config;
+        assert!(cfg.aie() >= 128, "monolithic acc too small: {}", cfg.aie());
+        assert!(cfg.aie() <= budgets[0].aie);
+        assert!(cfg.plio() <= budgets[0].plio);
+    }
+
+    #[test]
+    fn spatial_accs_all_realizable() {
+        let (p, cal, g) = setup();
+        let a = Assignment::spatial();
+        let budgets = hw_partition(&p, &cal, &g, &a);
+        let choices = customize_all(&p, &cal, &g, &a, &budgets, true).unwrap();
+        assert_eq!(choices.len(), 8);
+        let total_aie: u64 = choices.iter().map(|c| c.config.aie()).sum();
+        assert!(total_aie <= p.aie_total);
+        let total_plio: u64 = choices.iter().map(|c| c.config.plio()).sum();
+        assert!(total_plio <= p.plio_total, "plio {total_plio}");
+    }
+
+    #[test]
+    fn inter_acc_aware_prunes() {
+        let (p, cal, g) = setup();
+        let a = Assignment::new(vec![0, 0, 1, 1, 0, 0, 0, 0]);
+        let budgets = hw_partition(&p, &cal, &g, &a);
+        let aware = customize_all(&p, &cal, &g, &a, &budgets, true).unwrap();
+        let naive = customize_all(&p, &cal, &g, &a, &budgets, false).unwrap();
+        let pruned: usize = aware.iter().map(|c| c.pruned).sum();
+        assert!(pruned > 0, "expected alignment pruning to fire");
+        let ev_aware: usize = aware.iter().map(|c| c.evaluated).sum();
+        let ev_naive: usize = naive.iter().map(|c| c.evaluated).sum();
+        assert!(ev_aware < ev_naive, "{ev_aware} vs {ev_naive}");
+    }
+
+    #[test]
+    fn aware_configs_are_aligned() {
+        let (p, cal, g) = setup();
+        let a = Assignment::spatial();
+        let budgets = hw_partition(&p, &cal, &g, &a);
+        let choices = customize_all(&p, &cal, &g, &a, &budgets, true).unwrap();
+        // every graph edge crossing accs must be divisibility-aligned
+        for n in &g.nodes {
+            for &d in &n.deps {
+                let pa = a.acc_of(g.nodes[d].class);
+                let ca = a.acc_of(n.class);
+                if pa != ca {
+                    assert!(
+                        choices[pa].config.aligned_with(&choices[ca].config),
+                        "{} -> {} misaligned",
+                        g.nodes[d].name,
+                        n.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_mem_always_respected() {
+        let (p, cal, g) = setup();
+        for a in [Assignment::sequential(), Assignment::spatial()] {
+            let budgets = hw_partition(&p, &cal, &g, &a);
+            for ch in customize_all(&p, &cal, &g, &a, &budgets, true).unwrap() {
+                assert!(ch.config.fits_local_mem(&p));
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Layer→Acc evolutionary search — paper Algorithm 1.
+//!
+//! Population of assignment genomes; fitness = throughput at the target
+//! batch subject to the latency constraint; selection + single-point
+//! crossover + mutation ("randomly exchange two layer-acc assignments");
+//! elitist population update. Evaluations are memoized (genomes are tiny
+//! and collide often) and fanned out over a thread pool.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::eval::{build_design, Evaluated};
+use super::{Assignment, Eval};
+use crate::analytical::{Calib, Features};
+use crate::arch::Platform;
+use crate::graph::{Graph, ALL_CLASSES};
+use crate::util::rng::Rng;
+use crate::util::threadpool::scope_map;
+
+/// EA hyperparameters (paper: nAcc, nBat, nPop, nChild, nIter).
+#[derive(Clone, Copy, Debug)]
+pub struct EaParams {
+    /// Max accelerators a genome may use (None = up to #classes).
+    pub max_acc: Option<usize>,
+    /// Batch size the fitness evaluates at (nBat).
+    pub batch: usize,
+    pub n_pop: usize,
+    pub n_child: usize,
+    pub n_iter: usize,
+    /// Latency constraint (seconds); designs above it are infeasible.
+    pub lat_cons: f64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for EaParams {
+    fn default() -> Self {
+        EaParams {
+            max_acc: None,
+            batch: 6,
+            n_pop: 24,
+            n_child: 24,
+            n_iter: 12,
+            lat_cons: f64::INFINITY,
+            seed: 0xDEED,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+/// Best design found + search accounting.
+pub struct EaResult {
+    pub best: Option<(Evaluated, Eval)>,
+    /// (generation, best-feasible-throughput-so-far) trace for Fig. 10-style
+    /// search-quality curves.
+    pub trace: Vec<(usize, f64)>,
+    pub designs_evaluated: usize,
+    pub configs_evaluated: usize,
+}
+
+/// Run Algorithm 1: optimize throughput under `lat_cons`.
+pub fn run_ea(
+    platform: &Platform,
+    calib: &Calib,
+    graph: &Graph,
+    features: Features,
+    inter_acc_aware: bool,
+    params: &EaParams,
+) -> EaResult {
+    let mut rng = Rng::new(params.seed);
+    let max_acc = params.max_acc.unwrap_or(ALL_CLASSES.len()).max(1);
+
+    // Memoized fitness: genome -> (tops or NEG if infeasible, eval).
+    type CacheVal = Option<(Evaluated, Eval)>;
+    let cache: Mutex<HashMap<Vec<usize>, ()>> = Mutex::new(HashMap::new());
+    let mut evaluated: HashMap<Vec<usize>, CacheVal> = HashMap::new();
+    let mut designs_evaluated = 0usize;
+    let mut configs_evaluated = 0usize;
+
+    let mut population: Vec<Assignment> = Vec::new();
+    // Seed with the two pure strategies plus random genomes (the paper
+    // initializes randomly; seeding the corners speeds convergence and is
+    // what `layer_acc_assign(nAcc)` effectively covers).
+    population.push(Assignment::sequential());
+    if max_acc >= ALL_CLASSES.len() {
+        population.push(Assignment::spatial());
+    }
+    while population.len() < params.n_pop {
+        population.push(random_assignment(&mut rng, max_acc));
+    }
+
+    let mut best: Option<(Evaluated, Eval)> = None;
+    let mut trace = Vec::new();
+
+    let eval_batch = |genomes: &[Assignment],
+                          evaluated: &mut HashMap<Vec<usize>, CacheVal>,
+                          designs_evaluated: &mut usize,
+                          configs_evaluated: &mut usize|
+     -> Vec<f64> {
+        // Collect the genomes not yet memoized, evaluate in parallel.
+        let todo: Vec<Assignment> = genomes
+            .iter()
+            .filter(|g| !evaluated.contains_key(&g.acc_of))
+            .filter(|g| {
+                cache
+                    .lock()
+                    .unwrap()
+                    .insert(g.acc_of.clone(), ())
+                    .is_none()
+            })
+            .cloned()
+            .collect();
+        let results = scope_map(&todo, params.threads, |g| {
+            build_design(platform, calib, graph, g, features, inter_acc_aware).map(|ev| {
+                let e = ev.evaluate(platform, graph, params.batch);
+                (ev, e)
+            })
+        });
+        for (g, r) in todo.into_iter().zip(results) {
+            *designs_evaluated += 1;
+            if let Some((ev, _)) = &r {
+                *configs_evaluated += ev.stats.configs_evaluated;
+            }
+            evaluated.insert(g.acc_of, r);
+        }
+        genomes
+            .iter()
+            .map(|g| fitness(evaluated.get(&g.acc_of).unwrap(), params.lat_cons))
+            .collect()
+    };
+
+    let mut fit = eval_batch(
+        &population,
+        &mut evaluated,
+        &mut designs_evaluated,
+        &mut configs_evaluated,
+    );
+    update_best(&population, &evaluated, params.lat_cons, &mut best);
+    trace.push((0, best_tops(&best)));
+
+    for gen in 1..=params.n_iter {
+        // Selection + single-point crossover (Algorithm 1 lines 8-12).
+        let mut children = Vec::with_capacity(params.n_child);
+        for _ in 0..params.n_child / 2 {
+            let p1 = tournament(&mut rng, &population, &fit);
+            let p2 = tournament(&mut rng, &population, &fit);
+            let (c1, c2) = sp_crossover(&mut rng, p1, p2);
+            children.push(c1);
+            children.push(c2);
+        }
+        // Mutation (lines 13-18): exchange two classes' accs or reassign one.
+        for ch in children.iter_mut() {
+            if rng.bool(0.6) {
+                mutate(&mut rng, ch, max_acc);
+            }
+        }
+        let child_fit = eval_batch(
+            &children,
+            &mut evaluated,
+            &mut designs_evaluated,
+            &mut configs_evaluated,
+        );
+        update_best(&children, &evaluated, params.lat_cons, &mut best);
+
+        // Elitist population update (lines 19-24): keep top n_pop.
+        let mut all: Vec<(Assignment, f64)> = population
+            .drain(..)
+            .zip(fit.drain(..))
+            .chain(children.into_iter().zip(child_fit))
+            .collect();
+        all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        all.truncate(params.n_pop);
+        for (g, f) in all {
+            population.push(g);
+            fit.push(f);
+        }
+        trace.push((gen, best_tops(&best)));
+    }
+
+    EaResult { best, trace, designs_evaluated, configs_evaluated }
+}
+
+fn best_tops(best: &Option<(Evaluated, Eval)>) -> f64 {
+    best.as_ref().map(|(_, e)| e.tops).unwrap_or(0.0)
+}
+
+fn fitness(r: &Option<(Evaluated, Eval)>, lat_cons: f64) -> f64 {
+    match r {
+        None => f64::NEG_INFINITY,
+        Some((_, e)) if e.latency_s <= lat_cons => e.tops,
+        // Infeasible designs get a strongly penalized but still ordered
+        // fitness so the EA can climb back into the feasible region.
+        Some((_, e)) => -e.latency_s,
+    }
+}
+
+fn update_best(
+    genomes: &[Assignment],
+    evaluated: &HashMap<Vec<usize>, Option<(Evaluated, Eval)>>,
+    lat_cons: f64,
+    best: &mut Option<(Evaluated, Eval)>,
+) {
+    for g in genomes {
+        if let Some(Some((ev, e))) = evaluated.get(&g.acc_of) {
+            if e.latency_s <= lat_cons
+                && best.as_ref().map(|(_, be)| e.tops > be.tops).unwrap_or(true)
+            {
+                *best = Some((ev.clone(), *e));
+            }
+        }
+    }
+}
+
+fn random_assignment(rng: &mut Rng, max_acc: usize) -> Assignment {
+    let nacc = 1 + rng.usize_below(max_acc);
+    Assignment::new(
+        (0..ALL_CLASSES.len()).map(|_| rng.usize_below(nacc)).collect(),
+    )
+}
+
+fn tournament<'a>(rng: &mut Rng, pop: &'a [Assignment], fit: &[f64]) -> &'a Assignment {
+    let i = rng.usize_below(pop.len());
+    let j = rng.usize_below(pop.len());
+    if fit[i] >= fit[j] {
+        &pop[i]
+    } else {
+        &pop[j]
+    }
+}
+
+fn sp_crossover(rng: &mut Rng, p1: &Assignment, p2: &Assignment) -> (Assignment, Assignment) {
+    let cut = 1 + rng.usize_below(ALL_CLASSES.len() - 1);
+    let mut c1 = p1.acc_of.clone();
+    let mut c2 = p2.acc_of.clone();
+    for i in cut..ALL_CLASSES.len() {
+        std::mem::swap(&mut c1[i], &mut c2[i]);
+    }
+    (Assignment::new(c1), Assignment::new(c2))
+}
+
+fn mutate(rng: &mut Rng, a: &mut Assignment, max_acc: usize) {
+    if rng.bool(0.5) {
+        // exchange two layer-acc assignments (the paper's mutation)
+        let i = rng.usize_below(ALL_CLASSES.len());
+        let j = rng.usize_below(ALL_CLASSES.len());
+        a.acc_of.swap(i, j);
+    } else {
+        // reassign one class to a random acc (possibly opening a new one)
+        let i = rng.usize_below(ALL_CLASSES.len());
+        a.acc_of[i] = rng.usize_below(max_acc);
+    }
+    a.normalize();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+    use crate::graph::{vit_graph, DEIT_T};
+
+    fn quick_params() -> EaParams {
+        EaParams { n_pop: 8, n_child: 8, n_iter: 4, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn ea_finds_feasible_design() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let r = run_ea(&p, &Calib::default(), &g, Features::all(), true, &quick_params());
+        let (_, e) = r.best.expect("EA should find something");
+        assert!(e.tops > 1.0, "tops={}", e.tops);
+        assert!(r.designs_evaluated > 8);
+    }
+
+    #[test]
+    fn ea_beats_or_matches_pure_strategies() {
+        let p = vck190();
+        let cal = Calib::default();
+        let g = vit_graph(&DEIT_T);
+        let params = EaParams { n_pop: 12, n_child: 12, n_iter: 6, seed: 3, ..Default::default() };
+        let hybrid = run_ea(&p, &cal, &g, Features::all(), true, &params);
+        let ht = best_tops(&hybrid.best);
+        for a in [Assignment::sequential(), Assignment::spatial()] {
+            let ev = build_design(&p, &cal, &g, &a, Features::all(), true).unwrap();
+            let e = ev.evaluate(&p, &g, params.batch);
+            assert!(
+                ht >= e.tops * 0.999,
+                "hybrid {ht} worse than {:?} {}",
+                a.acc_of,
+                e.tops
+            );
+        }
+    }
+
+    #[test]
+    fn latency_constraint_respected() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let params = EaParams { lat_cons: 0.5e-3, batch: 1, ..quick_params() };
+        let r = run_ea(&p, &Calib::default(), &g, Features::all(), true, &params);
+        if let Some((_, e)) = r.best {
+            assert!(e.latency_s <= 0.5e-3);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let r1 = run_ea(&p, &Calib::default(), &g, Features::all(), true, &quick_params());
+        let r2 = run_ea(&p, &Calib::default(), &g, Features::all(), true, &quick_params());
+        assert_eq!(best_tops(&r1.best), best_tops(&r2.best));
+        assert_eq!(r1.trace, r2.trace);
+    }
+
+    #[test]
+    fn trace_monotone_nondecreasing() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let r = run_ea(&p, &Calib::default(), &g, Features::all(), true, &quick_params());
+        for w in r.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn max_acc_one_recovers_sequential() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let params = EaParams { max_acc: Some(1), ..quick_params() };
+        let r = run_ea(&p, &Calib::default(), &g, Features::all(), true, &params);
+        let (ev, _) = r.best.unwrap();
+        assert_eq!(ev.design.assignment.nacc(), 1);
+    }
+}

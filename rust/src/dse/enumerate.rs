@@ -1,0 +1,70 @@
+//! Exhaustive assignment enumeration (the Fig. 10 "exhaustive search"
+//! baseline, and the Table 7 per-acc-count design sweep).
+//!
+//! Assignments are set partitions of the 8 layer classes; Bell(8) = 4140
+//! total, S(8,k) per exact accelerator count — small enough to enumerate
+//! outright, which is what makes the EA-vs-exhaustive comparison honest.
+
+use super::Assignment;
+use crate::graph::ALL_CLASSES;
+
+/// All canonical assignments using exactly `k` accelerators.
+pub fn with_exactly(k: usize) -> Vec<Assignment> {
+    all_up_to(k).into_iter().filter(|a| a.nacc() == k).collect()
+}
+
+/// All canonical assignments with at most `max_acc` accelerators
+/// (restricted-growth strings: the canonical set-partition encoding, which
+/// matches `Assignment::normalize`'s first-appearance labeling).
+pub fn all_up_to(max_acc: usize) -> Vec<Assignment> {
+    let n = ALL_CLASSES.len();
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; n];
+    fn rec(cur: &mut Vec<usize>, i: usize, max_used: usize, max_acc: usize, out: &mut Vec<Assignment>) {
+        let n = cur.len();
+        if i == n {
+            out.push(Assignment { acc_of: cur.clone() });
+            return;
+        }
+        for v in 0..=(max_used + 1).min(max_acc - 1) {
+            cur[i] = v;
+            rec(cur, i + 1, max_used.max(v), max_acc, out);
+        }
+    }
+    // first element is always acc 0 in canonical form
+    rec(&mut cur, 1, 0, max_acc.max(1), &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bell_number_of_8() {
+        assert_eq!(all_up_to(8).len(), 4140);
+    }
+
+    #[test]
+    fn stirling_counts() {
+        // S(8,k): 1, 127, 966, 1701, 1050, 266, 28, 1
+        for (k, s) in [(1, 1), (2, 127), (3, 966), (4, 1701), (5, 1050), (6, 266), (7, 28), (8, 1)] {
+            assert_eq!(with_exactly(k).len(), s, "S(8,{k})");
+        }
+    }
+
+    #[test]
+    fn all_canonical() {
+        for a in all_up_to(3) {
+            let mut b = a.clone();
+            b.normalize();
+            assert_eq!(a.acc_of, b.acc_of);
+        }
+    }
+
+    #[test]
+    fn max_acc_respected() {
+        assert!(all_up_to(2).iter().all(|a| a.nacc() <= 2));
+        assert_eq!(all_up_to(1).len(), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! SSR design-space exploration (paper Sec. 4.4, Algorithms 1 & 2).
+//!
+//! Two coupled levels:
+//!
+//! * **Layer→Acc** ([`ea`]): which layer classes share which accelerator —
+//!   searched with an evolutionary algorithm (Algorithm 1). The genome is an
+//!   8-vector mapping each [`crate::graph::LayerClass`] to an accelerator id;
+//!   `nacc = 1` is the sequential design, `nacc = 8` the fully spatial one,
+//!   everything between is hybrid.
+//! * **Acc-Customization** ([`acc_dse`]): per-accelerator
+//!   `config_vector (h1,w1,w2,A,B,C,Part_A,Part_B,Part_C)` — exhaustive
+//!   search (Algorithm 2) with the inter-acc-aware force-partition pruning
+//!   of Fig. 8.
+//!
+//! [`eval`] ties them together (`SSR_DSE` in the paper's pseudocode):
+//! partition resources ([`partition`]), customize each acc, list-schedule
+//! the graph, and produce latency/throughput/energy.
+
+pub mod acc_dse;
+pub mod enumerate;
+pub mod ea;
+pub mod eval;
+pub mod pareto;
+pub mod partition;
+
+use crate::analytical::{AccConfig, Features};
+use crate::graph::{LayerClass, ALL_CLASSES};
+
+/// Layer→Acc assignment genome: `acc_of[class.index()]` is the accelerator
+/// id running that class (ids dense in `0..nacc()`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Assignment {
+    pub acc_of: Vec<usize>,
+}
+
+impl Assignment {
+    pub fn new(acc_of: Vec<usize>) -> Self {
+        assert_eq!(acc_of.len(), ALL_CLASSES.len());
+        let mut a = Assignment { acc_of };
+        a.normalize();
+        a
+    }
+
+    /// The paper's sequential design: one monolithic accelerator.
+    pub fn sequential() -> Self {
+        Assignment::new(vec![0; ALL_CLASSES.len()])
+    }
+
+    /// The paper's fully spatial design: one accelerator per layer class.
+    pub fn spatial() -> Self {
+        Assignment::new((0..ALL_CLASSES.len()).collect())
+    }
+
+    /// Relabel acc ids in order of first appearance (canonical form, so
+    /// {0,0,1,1,...} and {1,1,0,0,...} dedup to the same genome).
+    pub fn normalize(&mut self) {
+        let mut map: Vec<Option<usize>> = vec![None; ALL_CLASSES.len()];
+        let mut next = 0;
+        for a in self.acc_of.iter_mut() {
+            let m = &mut map[*a];
+            if m.is_none() {
+                *m = Some(next);
+                next += 1;
+            }
+            *a = m.unwrap();
+        }
+    }
+
+    pub fn nacc(&self) -> usize {
+        self.acc_of.iter().copied().max().unwrap_or(0) + 1
+    }
+
+    pub fn acc_of(&self, class: LayerClass) -> usize {
+        self.acc_of[class.index()]
+    }
+
+    /// Classes on accelerator `acc`.
+    pub fn classes_on(&self, acc: usize) -> Vec<LayerClass> {
+        ALL_CLASSES
+            .iter()
+            .copied()
+            .filter(|c| self.acc_of(*c) == acc)
+            .collect()
+    }
+
+    /// Does `acc` host more than one layer class? (Multi-class accs pay the
+    /// reconfiguration overhead; single-class accs run as persistent
+    /// dataflow engines.)
+    pub fn is_multi_class(&self, acc: usize) -> bool {
+        self.acc_of.iter().filter(|&&a| a == acc).count() > 1
+    }
+
+    /// Whether any attention class (BMM0/BMM1) lands on `acc` — then the
+    /// acc needs HMM-type1 and weight pinning is off (paper Sec. 4.3 (1)).
+    pub fn has_attention(&self, acc: usize) -> bool {
+        self.classes_on(acc).iter().any(|c| c.is_attention())
+    }
+}
+
+/// A fully customized design: assignment + per-acc configuration.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub assignment: Assignment,
+    pub configs: Vec<AccConfig>,
+    /// HCE lanes per accelerator (PL side).
+    pub hce_lanes: Vec<u64>,
+    pub features: Features,
+}
+
+/// Evaluation of a design at a given batch size.
+#[derive(Clone, Copy, Debug)]
+pub struct Eval {
+    pub batch: usize,
+    /// End-to-end latency for the whole batch (seconds).
+    pub latency_s: f64,
+    /// Effective throughput (TOPS) = batch * ops_per_image / latency.
+    pub tops: f64,
+    /// Energy efficiency (GOPS/W).
+    pub gops_per_w: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_is_one_acc() {
+        let a = Assignment::sequential();
+        assert_eq!(a.nacc(), 1);
+        assert!(a.is_multi_class(0));
+    }
+
+    #[test]
+    fn spatial_is_eight_accs() {
+        let a = Assignment::spatial();
+        assert_eq!(a.nacc(), 8);
+        for acc in 0..8 {
+            assert!(!a.is_multi_class(acc));
+            assert_eq!(a.classes_on(acc).len(), 1);
+        }
+    }
+
+    #[test]
+    fn normalize_canonicalizes() {
+        let a = Assignment::new(vec![5, 5, 2, 2, 7, 7, 5, 2]);
+        assert_eq!(a.acc_of, vec![0, 0, 1, 1, 2, 2, 0, 1]);
+        assert_eq!(a.nacc(), 3);
+    }
+
+    #[test]
+    fn attention_detection() {
+        let a = Assignment::new(vec![0, 0, 1, 1, 0, 0, 0, 0]);
+        assert!(a.has_attention(1));
+        assert!(!a.has_attention(0));
+    }
+
+    #[test]
+    fn classes_on_partitions_all() {
+        let a = Assignment::new(vec![0, 1, 1, 2, 0, 1, 2, 0]);
+        let total: usize = (0..a.nacc()).map(|i| a.classes_on(i).len()).sum();
+        assert_eq!(total, 8);
+    }
+}

@@ -1,0 +1,110 @@
+//! Latency-throughput Pareto front utilities (Fig. 2).
+//!
+//! A point dominates another if it has <= latency AND >= throughput (with
+//! at least one strict). The front is what the paper plots for the
+//! sequential trendline, the spatial trendline, and the SSR-hybrid points.
+
+/// One design point on the latency/throughput plane.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub latency_ms: f64,
+    pub tops: f64,
+    /// Provenance tag (batch, nacc) for reporting.
+    pub batch: usize,
+    pub nacc: usize,
+}
+
+impl Point {
+    pub fn dominates(&self, other: &Point) -> bool {
+        self.latency_ms <= other.latency_ms
+            && self.tops >= other.tops
+            && (self.latency_ms < other.latency_ms || self.tops > other.tops)
+    }
+}
+
+/// Extract the non-dominated subset, sorted by latency ascending.
+pub fn pareto_front(points: &[Point]) -> Vec<Point> {
+    let mut front: Vec<Point> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .copied()
+        .collect();
+    front.sort_by(|a, b| {
+        a.latency_ms
+            .partial_cmp(&b.latency_ms)
+            .unwrap()
+            .then(b.tops.partial_cmp(&a.tops).unwrap())
+    });
+    front.dedup_by(|a, b| a.latency_ms == b.latency_ms && a.tops == b.tops);
+    front
+}
+
+/// Best throughput meeting a latency constraint (Table 6 cells); None = "x".
+pub fn best_under(points: &[Point], lat_cons_ms: f64) -> Option<Point> {
+    points
+        .iter()
+        .filter(|p| p.latency_ms <= lat_cons_ms)
+        .max_by(|a, b| a.tops.partial_cmp(&b.tops).unwrap())
+        .copied()
+}
+
+/// Does front `a` weakly dominate front `b` everywhere (the paper's "better
+/// Pareto front" claim)? For every point in `b` there is a point in `a`
+/// with <= latency and >= tops.
+pub fn front_dominates(a: &[Point], b: &[Point]) -> bool {
+    b.iter().all(|q| {
+        a.iter()
+            .any(|p| p.latency_ms <= q.latency_ms && p.tops >= q.tops)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(l: f64, t: f64) -> Point {
+        Point { latency_ms: l, tops: t, batch: 1, nacc: 1 }
+    }
+
+    #[test]
+    fn domination_strictness() {
+        assert!(pt(1.0, 10.0).dominates(&pt(2.0, 5.0)));
+        assert!(!pt(1.0, 10.0).dominates(&pt(1.0, 10.0))); // equal: no
+        assert!(!pt(1.0, 5.0).dominates(&pt(2.0, 10.0))); // tradeoff: no
+    }
+
+    #[test]
+    fn front_filters_dominated() {
+        let pts = [pt(1.0, 10.0), pt(2.0, 5.0), pt(0.5, 3.0), pt(3.0, 12.0)];
+        let f = pareto_front(&pts);
+        // (2.0, 5) dominated by (1.0, 10); others survive
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|p| p.latency_ms != 2.0));
+        // sorted by latency
+        assert!(f.windows(2).all(|w| w[0].latency_ms <= w[1].latency_ms));
+    }
+
+    #[test]
+    fn best_under_matches_table6_semantics() {
+        let pts = [pt(0.22, 10.9), pt(1.3, 11.17), pt(0.58, 26.7), pt(0.43, 18.56)];
+        assert_eq!(best_under(&pts, 2.0).unwrap().tops, 26.7);
+        assert_eq!(best_under(&pts, 0.5).unwrap().tops, 18.56);
+        assert_eq!(best_under(&pts, 0.4).unwrap().tops, 10.9);
+        assert!(best_under(&pts, 0.1).is_none()); // the "x" cells
+    }
+
+    #[test]
+    fn front_domination() {
+        let hybrid = [pt(0.22, 10.9), pt(0.43, 18.56), pt(0.58, 26.7)];
+        let seq = [pt(0.22, 10.9), pt(1.3, 11.17)];
+        assert!(front_dominates(&hybrid, &seq));
+        assert!(!front_dominates(&seq, &hybrid));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(pareto_front(&[]).is_empty());
+        assert!(best_under(&[], 1.0).is_none());
+        assert!(front_dominates(&[], &[])); // vacuous
+    }
+}

@@ -1,0 +1,220 @@
+//! Resource pre-allocation across accelerators (Algorithm 1 lines 30-33).
+//!
+//! "While the number of AIE together with PLIO is proportional to the total
+//! number of operations assigned to the accelerator, the memory budget is
+//! assigned according to the memory allocation strategy."
+
+use super::Assignment;
+use crate::analytical::Calib;
+use crate::arch::Platform;
+use crate::graph::Graph;
+
+/// Per-accelerator resource budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccBudget {
+    pub aie: u64,
+    pub plio: u64,
+    pub dsp: u64,
+    pub bram: u64,
+    pub uram: u64,
+}
+
+/// Minimum on-chip memory (bytes) to hold an acc's weights + ping-pong
+/// activation buffers (the paper's first-round memory allocation, lines
+/// 30-31: "buffer both the activations and weights on-chip ... without
+/// memory stall").
+pub fn min_mem_bytes(graph: &Graph, assignment: &Assignment, acc: usize) -> u64 {
+    let mut weights = 0u64;
+    let mut act_peak = 0u64;
+    for n in &graph.nodes {
+        if assignment.acc_of(n.class) == acc {
+            weights += n.weight_bytes;
+            // double-buffered input + output tiles
+            act_peak = act_peak.max(2 * (n.in_bytes + n.out_bytes));
+        }
+    }
+    weights + act_peak
+}
+
+/// Split the platform's resources over the accelerators of `assignment`,
+/// proportional to assigned MACs (AIE/PLIO) and HCE elements (DSP), with
+/// floors so tiny accs stay realizable.
+pub fn hw_partition(
+    platform: &Platform,
+    calib: &Calib,
+    graph: &Graph,
+    assignment: &Assignment,
+) -> Vec<AccBudget> {
+    let nacc = assignment.nacc();
+    let mut macs = vec![0u64; nacc];
+    let mut hce = vec![0u64; nacc];
+    let mut mem = vec![0u64; nacc];
+    for n in &graph.nodes {
+        let a = assignment.acc_of(n.class);
+        macs[a] += n.dims.macs();
+        hce[a] += n.hce.iter().map(|h| h.elems).sum::<u64>();
+    }
+    for a in 0..nacc {
+        mem[a] = min_mem_bytes(graph, assignment, a);
+    }
+    let tot_macs: u64 = macs.iter().sum::<u64>().max(1);
+    let tot_hce: u64 = hce.iter().sum::<u64>().max(1);
+    let tot_mem: u64 = mem.iter().sum::<u64>().max(1);
+
+    // Leave a small AIE/PLIO margin for routing (paper reaches 394/400).
+    let aie_pool = platform.aie_total - platform.aie_total / 50;
+    let plio_pool = platform.plio_total;
+    // PL fabric is shared with the HCE engines and the AXI DMA (Table 8):
+    // keep ~10% DSP headroom.
+    let dsp_pool = platform.dsp_total * 9 / 10;
+    let bram_pool = platform.bram_total;
+    let uram_pool = platform.uram_total;
+    let _ = calib;
+
+    let mut budgets: Vec<AccBudget> = (0..nacc)
+        .map(|a| AccBudget {
+            aie: (aie_pool * macs[a] / tot_macs).max(4),
+            plio: (plio_pool * macs[a] / tot_macs).max(4),
+            dsp: (dsp_pool * hce[a] / tot_hce).max(32),
+            bram: (bram_pool * mem[a] / tot_mem).max(64),
+            uram: uram_pool * mem[a] / tot_mem,
+        })
+        .collect();
+
+    // Clamp rounding overshoot: scale down if floors pushed totals over.
+    for (field, pool, floor) in [
+        (0usize, aie_pool, 2),
+        (1, plio_pool, 2),
+        (2, dsp_pool, 2),
+        (3, bram_pool, 24),
+    ] {
+        let total: u64 = budgets
+            .iter()
+            .map(|b| match field {
+                0 => b.aie,
+                1 => b.plio,
+                2 => b.dsp,
+                _ => b.bram,
+            })
+            .sum();
+        if total > pool {
+            for b in budgets.iter_mut() {
+                let v = match field {
+                    0 => &mut b.aie,
+                    1 => &mut b.plio,
+                    2 => &mut b.dsp,
+                    _ => &mut b.bram,
+                };
+                *v = (*v * pool / total).max(floor);
+            }
+        }
+    }
+    budgets
+}
+
+/// Rebalance AIE/PLIO across accelerators proportional to measured busy
+/// time (stage equalization): accs that dominate the pipeline get more
+/// array and stream resources. DSP/RAM budgets are kept. This is the
+/// feedback loop the paper's coupled Layer→Acc / Acc-Customization DSE
+/// realizes across EA generations, folded into one deterministic pass.
+pub fn rebalance(
+    platform: &Platform,
+    prev: &[AccBudget],
+    busy_s: &[f64],
+) -> Vec<AccBudget> {
+    assert_eq!(prev.len(), busy_s.len());
+    let aie_pool = platform.aie_total - platform.aie_total / 50;
+    let plio_pool = platform.plio_total;
+    // Work-proportional damped update: an acc's "work" is its busy time
+    // times its current allocation (aie-seconds). Allocating proportional
+    // to work equalizes busy under an inverse-linear speedup model and
+    // converges instead of oscillating.
+    let work: Vec<f64> = prev
+        .iter()
+        .zip(busy_s)
+        .map(|(b, &t)| (b.aie as f64 * t).max(1e-12))
+        .collect();
+    let plio_work: Vec<f64> = prev
+        .iter()
+        .zip(busy_s)
+        .map(|(b, &t)| (b.plio as f64 * t).max(1e-12))
+        .collect();
+    let tot_work: f64 = work.iter().sum();
+    let tot_pwork: f64 = plio_work.iter().sum();
+    let mut out: Vec<AccBudget> = prev
+        .iter()
+        .enumerate()
+        .map(|(i, b)| AccBudget {
+            aie: ((aie_pool as f64 * work[i] / tot_work) as u64).max(4),
+            plio: ((plio_pool as f64 * plio_work[i] / tot_pwork) as u64).max(4),
+            ..b.clone()
+        })
+        .collect();
+    for (aie_mode, pool) in [(true, aie_pool), (false, plio_pool)] {
+        let total: u64 = out.iter().map(|b| if aie_mode { b.aie } else { b.plio }).sum();
+        if total > pool {
+            for b in out.iter_mut() {
+                let v = if aie_mode { &mut b.aie } else { &mut b.plio };
+                *v = (*v * pool / total).max(2);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vck190;
+    use crate::graph::{vit_graph, DEIT_T};
+
+    #[test]
+    fn sequential_gets_everything() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let b = hw_partition(&p, &Calib::default(), &g, &Assignment::sequential());
+        assert_eq!(b.len(), 1);
+        assert!(b[0].aie >= 380, "aie={}", b[0].aie);
+        assert!(b[0].aie <= p.aie_total);
+    }
+
+    #[test]
+    fn spatial_splits_proportionally() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let b = hw_partition(&p, &Calib::default(), &g, &Assignment::spatial());
+        assert_eq!(b.len(), 8);
+        let total: u64 = b.iter().map(|x| x.aie).sum();
+        assert!(total <= p.aie_total, "total AIE {total}");
+        // FC1/FC2 (big MMs) should out-budget Head (1 x d x 1000 once).
+        let fc1 = &b[crate::graph::LayerClass::Fc1.index()];
+        let head = &b[crate::graph::LayerClass::Head.index()];
+        assert!(fc1.aie > head.aie);
+    }
+
+    #[test]
+    fn budgets_respect_pools() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        for assignment in [
+            Assignment::sequential(),
+            Assignment::spatial(),
+            Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
+        ] {
+            let b = hw_partition(&p, &Calib::default(), &g, &assignment);
+            assert!(b.iter().map(|x| x.aie).sum::<u64>() <= p.aie_total);
+            assert!(b.iter().map(|x| x.plio).sum::<u64>() <= p.plio_total);
+            assert!(b.iter().map(|x| x.dsp).sum::<u64>() <= p.dsp_total);
+        }
+    }
+
+    #[test]
+    fn min_mem_counts_weights_once() {
+        let g = vit_graph(&DEIT_T);
+        let a = Assignment::sequential();
+        let m = min_mem_bytes(&g, &a, 0);
+        let weights: u64 = g.nodes.iter().map(|n| n.weight_bytes).sum();
+        assert!(m >= weights);
+        assert!(m < weights + 10 * 1024 * 1024);
+    }
+}

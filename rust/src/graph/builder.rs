@@ -1,0 +1,239 @@
+//! Builders for the four evaluated ViT variants (paper Table 3).
+
+use super::{Graph, HceKind, HceOp, LayerClass, MmDims, Node};
+
+/// Model hyperparameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub embed_dim: u64,
+    pub num_heads: u64,
+    pub depth: usize,
+    pub mlp_ratio: u64,
+    pub img_size: u64,
+    pub patch_size: u64,
+    pub num_classes: u64,
+}
+
+impl ModelCfg {
+    pub const fn tokens(&self) -> u64 {
+        let p = self.img_size / self.patch_size;
+        p * p + 1
+    }
+
+    pub const fn head_dim(&self) -> u64 {
+        self.embed_dim / self.num_heads
+    }
+
+    pub const fn patch_dim(&self) -> u64 {
+        self.patch_size * self.patch_size * 3
+    }
+}
+
+pub const DEIT_T: ModelCfg = ModelCfg {
+    name: "deit_t",
+    embed_dim: 192,
+    num_heads: 3,
+    depth: 12,
+    mlp_ratio: 4,
+    img_size: 224,
+    patch_size: 16,
+    num_classes: 1000,
+};
+
+pub const DEIT_T_160: ModelCfg = ModelCfg {
+    name: "deit_t_160",
+    embed_dim: 160,
+    num_heads: 4,
+    ..DEIT_T
+};
+
+pub const DEIT_T_256: ModelCfg = ModelCfg {
+    name: "deit_t_256",
+    embed_dim: 256,
+    num_heads: 4,
+    ..DEIT_T
+};
+
+pub const LV_VIT_T: ModelCfg = ModelCfg {
+    name: "lv_vit_t",
+    embed_dim: 240,
+    num_heads: 4,
+    ..DEIT_T
+};
+
+pub fn by_name(name: &str) -> Option<&'static ModelCfg> {
+    match name {
+        "deit_t" => Some(&DEIT_T),
+        "deit_t_160" => Some(&DEIT_T_160),
+        "deit_t_256" => Some(&DEIT_T_256),
+        "lv_vit_t" => Some(&LV_VIT_T),
+        _ => None,
+    }
+}
+
+struct GraphBuilder {
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    fn push(
+        &mut self,
+        name: String,
+        class: LayerClass,
+        block: usize,
+        dims: MmDims,
+        hce: Vec<HceOp>,
+        deps: Vec<usize>,
+        has_weights: bool,
+    ) -> usize {
+        let id = self.nodes.len();
+        // INT8 activations; BMMs stream two activations (both counted in).
+        let in_bytes = if class.is_attention() {
+            dims.bmm_mult * (dims.m * dims.k + dims.k * dims.n)
+        } else {
+            dims.m * dims.k
+        };
+        let out_bytes = dims.bmm_mult * dims.m * dims.n;
+        let weight_bytes = if has_weights { dims.k * dims.n } else { 0 };
+        self.nodes.push(Node {
+            id,
+            name,
+            class,
+            block,
+            dims,
+            hce,
+            deps,
+            weight_bytes,
+            in_bytes,
+            out_bytes,
+        });
+        id
+    }
+}
+
+/// Unroll the ViT layer graph (Fig. 4) for `cfg`.
+pub fn vit_graph(cfg: &ModelCfg) -> Graph {
+    let t = cfg.tokens();
+    let np = t - 1; // patches (cls token added after embed MM)
+    let d = cfg.embed_dim;
+    let h = cfg.num_heads;
+    let dh = cfg.head_dim();
+    let hid = cfg.mlp_ratio * d;
+    let mut b = GraphBuilder { nodes: Vec::new() };
+
+    // Patch embedding: conv-as-MM (np x patch_dim x d), plus the reformat of
+    // raw image data into the patch layout (Fig. 3 profiles this as a
+    // matmul-type kernel + layout change).
+    let embed = b.push(
+        "embed".into(),
+        LayerClass::Embed,
+        0,
+        MmDims { m: np, k: cfg.patch_dim(), n: d, bmm_mult: 1 },
+        vec![
+            HceOp { kind: HceKind::Transpose, elems: np * cfg.patch_dim() },
+            HceOp { kind: HceKind::Add, elems: t * d }, // +pos embed
+        ],
+        vec![],
+        true,
+    );
+
+    let mut prev = embed;
+    for blk in 0..cfg.depth {
+        // LN1 rides on QKV's accelerator (pre-op); reformat covers the
+        // INT32->INT8 requantization after the MM accumulators.
+        let qkv = b.push(
+            format!("b{blk}/qkv"),
+            LayerClass::Qkv,
+            blk,
+            MmDims { m: t, k: d, n: 3 * d, bmm_mult: 1 },
+            vec![
+                HceOp { kind: HceKind::LayerNorm, elems: t * d },
+                HceOp { kind: HceKind::Reformat, elems: t * 3 * d },
+                HceOp { kind: HceKind::Transpose, elems: t * 3 * d }, // head split
+            ],
+            vec![prev],
+            true,
+        );
+        // BMM0: scores = Q @ K^T per head, softmax attached.
+        let bmm0 = b.push(
+            format!("b{blk}/bmm0"),
+            LayerClass::Bmm0,
+            blk,
+            MmDims { m: t, k: dh, n: t, bmm_mult: h },
+            vec![
+                HceOp { kind: HceKind::Softmax, elems: h * t * t },
+                HceOp { kind: HceKind::Reformat, elems: h * t * t },
+            ],
+            vec![qkv],
+            false,
+        );
+        // BMM1: ctx = P @ V per head; transpose merges heads back.
+        let bmm1 = b.push(
+            format!("b{blk}/bmm1"),
+            LayerClass::Bmm1,
+            blk,
+            MmDims { m: t, k: t, n: dh, bmm_mult: h },
+            vec![HceOp { kind: HceKind::Transpose, elems: t * d }],
+            vec![bmm0],
+            false,
+        );
+        let proj = b.push(
+            format!("b{blk}/proj"),
+            LayerClass::Proj,
+            blk,
+            MmDims { m: t, k: d, n: d, bmm_mult: 1 },
+            vec![
+                HceOp { kind: HceKind::Add, elems: t * d }, // residual
+                HceOp { kind: HceKind::Reformat, elems: t * d },
+            ],
+            vec![bmm1],
+            true,
+        );
+        let fc1 = b.push(
+            format!("b{blk}/fc1"),
+            LayerClass::Fc1,
+            blk,
+            MmDims { m: t, k: d, n: hid, bmm_mult: 1 },
+            vec![
+                HceOp { kind: HceKind::LayerNorm, elems: t * d },
+                HceOp { kind: HceKind::Gelu, elems: t * hid },
+                HceOp { kind: HceKind::Reformat, elems: t * hid },
+            ],
+            vec![proj],
+            true,
+        );
+        let fc2 = b.push(
+            format!("b{blk}/fc2"),
+            LayerClass::Fc2,
+            blk,
+            MmDims { m: t, k: hid, n: d, bmm_mult: 1 },
+            vec![
+                HceOp { kind: HceKind::Add, elems: t * d }, // residual
+                HceOp { kind: HceKind::Reformat, elems: t * d },
+            ],
+            vec![fc1],
+            true,
+        );
+        prev = fc2;
+    }
+
+    // Classifier head: final LN + (1 x d x classes) MM on the cls token.
+    b.push(
+        "head".into(),
+        LayerClass::Head,
+        cfg.depth - 1,
+        MmDims { m: 1, k: d, n: cfg.num_classes, bmm_mult: 1 },
+        vec![HceOp { kind: HceKind::LayerNorm, elems: t * d }],
+        vec![prev],
+        true,
+    );
+
+    let macs: u64 = b.nodes.iter().map(|n| n.dims.macs()).sum();
+    Graph {
+        model: cfg.name.to_string(),
+        nodes: b.nodes,
+        depth: cfg.depth,
+        macs_per_image: macs,
+    }
+}

@@ -1,0 +1,266 @@
+//! Application-layer IR: the transformer layer graph the SSR framework maps
+//! onto accelerators (paper Fig. 4).
+//!
+//! The schedulable unit is an **MM-type node** (MM or BMM) carrying its
+//! fused pre/post HCE ops (LayerNorm, Softmax, GELU, Transpose, Reformat,
+//! Add) — exactly the granularity SSR schedules: MM/BMM layers go to the AIE
+//! HMM units, the attached non-MM layers ride along on the owning
+//! accelerator's PL-side HCE engine (paper Sec. 2, "SSR explores hybrid
+//! strategies when mapping MM and BMM layers").
+
+pub mod builder;
+
+pub use builder::{vit_graph, ModelCfg, DEIT_T, DEIT_T_160, DEIT_T_256, LV_VIT_T};
+
+/// Non-MM (HCE) op kinds from the paper's kernel profile (Fig. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HceKind {
+    Softmax,
+    LayerNorm,
+    Gelu,
+    Transpose,
+    Reformat,
+    Add,
+}
+
+impl HceKind {
+    /// Reduce ops have data-reuse distance > 1 (need the line-buffer
+    /// pipeline, Fig. 7); elementwise ops fuse for free (reuse distance 1).
+    pub fn is_reduction(self) -> bool {
+        matches!(self, HceKind::Softmax | HceKind::LayerNorm)
+    }
+}
+
+/// One fused non-MM op attached to an MM node.
+#[derive(Clone, Copy, Debug)]
+pub struct HceOp {
+    pub kind: HceKind,
+    /// Elements processed per image.
+    pub elems: u64,
+}
+
+/// Layer classes: the paper's per-block node identities (Fig. 4 / Fig. 9
+/// "specialized MM accelerators for every node within one block").
+/// Assignment genomes map classes -> accelerators; all 12 blocks of a class
+/// share the accelerator, which is what makes hybrid schedules expressible
+/// with 1..=8 accelerators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerClass {
+    Embed,
+    Qkv,
+    Bmm0,
+    Bmm1,
+    Proj,
+    Fc1,
+    Fc2,
+    Head,
+}
+
+pub const ALL_CLASSES: [LayerClass; 8] = [
+    LayerClass::Embed,
+    LayerClass::Qkv,
+    LayerClass::Bmm0,
+    LayerClass::Bmm1,
+    LayerClass::Proj,
+    LayerClass::Fc1,
+    LayerClass::Fc2,
+    LayerClass::Head,
+];
+
+impl LayerClass {
+    pub fn index(self) -> usize {
+        ALL_CLASSES.iter().position(|&c| c == self).unwrap()
+    }
+
+    /// Attention BMMs have two activation operands => need HMM-type1
+    /// (no weight pinning possible).
+    pub fn is_attention(self) -> bool {
+        matches!(self, LayerClass::Bmm0 | LayerClass::Bmm1)
+    }
+}
+
+/// MM dimensions per image: `bmm_mult` independent (M,K,N) products
+/// (= #heads for attention BMMs, 1 otherwise).
+#[derive(Clone, Copy, Debug)]
+pub struct MmDims {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub bmm_mult: u64,
+}
+
+impl MmDims {
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n * self.bmm_mult
+    }
+
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+}
+
+/// A schedulable MM-type node with fused HCE ops and graph dependencies.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub class: LayerClass,
+    pub block: usize,
+    pub dims: MmDims,
+    /// HCE ops executed on the owning acc around this MM (per image).
+    pub hce: Vec<HceOp>,
+    /// Node ids that must complete first (same image).
+    pub deps: Vec<usize>,
+    /// Weight bytes (INT8) — 0 for HMM-type1 (activation x activation).
+    pub weight_bytes: u64,
+    /// Activation bytes in / out per image (INT8 activations).
+    pub in_bytes: u64,
+    pub out_bytes: u64,
+}
+
+impl Node {
+    pub fn is_attention(&self) -> bool {
+        self.class.is_attention()
+    }
+}
+
+/// The application graph for one model (all blocks unrolled).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub model: String,
+    pub nodes: Vec<Node>,
+    pub depth: usize,
+    pub macs_per_image: u64,
+}
+
+impl Graph {
+    pub fn ops_per_image(&self) -> u64 {
+        2 * self.macs_per_image
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Nodes of one class, in block order.
+    pub fn nodes_of(&self, class: LayerClass) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(move |n| n.class == class)
+    }
+
+    /// Validate the DAG: deps point backwards, ids are dense, MAC totals add up.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {} has id {}", i, n.id));
+            }
+            for &d in &n.deps {
+                if d >= i {
+                    return Err(format!("node {} dep {} not topological", i, d));
+                }
+            }
+        }
+        let sum: u64 = self.nodes.iter().map(|n| n.dims.macs()).sum();
+        if sum != self.macs_per_image {
+            return Err(format!(
+                "mac sum {} != macs_per_image {}",
+                sum, self.macs_per_image
+            ));
+        }
+        Ok(())
+    }
+
+    /// Total HCE elements per image (for PL-side sizing).
+    pub fn hce_elems(&self) -> u64 {
+        self.nodes.iter().flat_map(|n| &n.hce).map(|h| h.elems).sum()
+    }
+
+    /// A topological order honoring deps (nodes are already topological).
+    pub fn topo_order(&self) -> Vec<usize> {
+        (0..self.nodes.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deit_t_structure() {
+        let g = vit_graph(&DEIT_T);
+        // embed + 12 blocks x 6 MM nodes + head = 74
+        assert_eq!(g.node_count(), 74);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn all_models_validate() {
+        for cfg in [&DEIT_T, &DEIT_T_160, &DEIT_T_256, &LV_VIT_T] {
+            let g = vit_graph(cfg);
+            g.validate().unwrap();
+            assert_eq!(g.depth, 12);
+        }
+    }
+
+    #[test]
+    fn macs_match_table3() {
+        // Table 3 MACs column (G): DeiT-T 1.3, DeiT-T-160 0.9, DeiT-T-256
+        // 2.1, LV-ViT-T 1.6. Analytical count within 20% (paper rounds).
+        for (cfg, paper) in [
+            (&DEIT_T, 1.3e9),
+            (&DEIT_T_160, 0.9e9),
+            (&DEIT_T_256, 2.1e9),
+            (&LV_VIT_T, 1.6e9),
+        ] {
+            let g = vit_graph(cfg);
+            let rel = (g.macs_per_image as f64 - paper).abs() / paper;
+            assert!(rel < 0.20, "{}: {} vs {}", cfg.name, g.macs_per_image, paper);
+        }
+    }
+
+    #[test]
+    fn attention_nodes_are_type1() {
+        let g = vit_graph(&DEIT_T);
+        for n in &g.nodes {
+            assert_eq!(n.is_attention(), n.weight_bytes == 0, "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn chain_dependencies_within_block() {
+        let g = vit_graph(&DEIT_T);
+        // qkv of block 0 depends on embed; bmm0 on qkv; etc.
+        let qkv0 = g.nodes.iter().find(|n| n.name == "b0/qkv").unwrap();
+        let embed = g.nodes.iter().find(|n| n.class == LayerClass::Embed).unwrap();
+        assert_eq!(qkv0.deps, vec![embed.id]);
+        let bmm0 = g.nodes.iter().find(|n| n.name == "b0/bmm0").unwrap();
+        assert_eq!(bmm0.deps, vec![qkv0.id]);
+    }
+
+    #[test]
+    fn class_counts() {
+        let g = vit_graph(&DEIT_T);
+        assert_eq!(g.nodes_of(LayerClass::Embed).count(), 1);
+        assert_eq!(g.nodes_of(LayerClass::Head).count(), 1);
+        for c in [LayerClass::Qkv, LayerClass::Bmm0, LayerClass::Bmm1,
+                  LayerClass::Proj, LayerClass::Fc1, LayerClass::Fc2] {
+            assert_eq!(g.nodes_of(c).count(), 12, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn softmax_attached_to_bmm0() {
+        let g = vit_graph(&DEIT_T);
+        let bmm0 = g.nodes.iter().find(|n| n.name == "b3/bmm0").unwrap();
+        assert!(bmm0.hce.iter().any(|h| h.kind == HceKind::Softmax));
+        let fc1 = g.nodes.iter().find(|n| n.name == "b3/fc1").unwrap();
+        assert!(fc1.hce.iter().any(|h| h.kind == HceKind::Gelu));
+    }
+
+    #[test]
+    fn weight_bytes_total_close_to_param_count() {
+        // DeiT-T = 5.6M params (Table 3); INT8 weights ~ 5.6 MB.
+        let g = vit_graph(&DEIT_T);
+        let wb: u64 = g.nodes.iter().map(|n| n.weight_bytes).sum();
+        assert!((4.8e6..6.5e6).contains(&(wb as f64)), "weight bytes {wb}");
+    }
+}

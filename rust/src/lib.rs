@@ -1,0 +1,31 @@
+//! # SSR — Spatial Sequential Hybrid Architecture (FPGA '24) reproduction
+//!
+//! A full-system reproduction of Zhuang et al., *SSR: Spatial Sequential
+//! Hybrid Architecture for Latency Throughput Tradeoff in Transformer
+//! Acceleration* (FPGA '24), as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the SSR framework: application graph IR
+//!   ([`graph`]), platform models ([`arch`]), the paper's analytical cost
+//!   model ([`analytical`]), an event-driven pipeline simulator ([`sim`]),
+//!   the evolutionary design-space exploration ([`dse`]), comparison
+//!   baselines ([`baselines`]), a PJRT serving runtime ([`runtime`] +
+//!   [`coordinator`]), and report generators for every paper table/figure
+//!   ([`report`]).
+//! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
+//!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
+//!   runtime serves.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod analytical;
+pub mod arch;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod dse;
+pub mod graph;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

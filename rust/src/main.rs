@@ -1,0 +1,307 @@
+//! `ssr` — CLI for the SSR reproduction.
+//!
+//! Subcommands:
+//!   report            regenerate every paper table/figure (analytical + sim)
+//!   dse               run the evolutionary Layer→Acc search
+//!   simulate          run the event-driven simulator on a named strategy
+//!   serve             serve DeiT-T on the PJRT runtime (sequential/spatial/hybrid)
+//!   calibrate         print model-vs-paper residuals for the anchor points
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch;
+use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::StageAssign;
+use ssr::dse::ea::{run_ea, EaParams};
+use ssr::dse::eval::build_design;
+use ssr::dse::Assignment;
+use ssr::graph::{builder, vit_graph};
+use ssr::report::tables::{self, Ctx};
+use ssr::runtime::exec::Engine;
+use ssr::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let code = match sub {
+        "report" => cmd_report(&rest),
+        "dse" => cmd_dse(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "serve" => cmd_serve(&rest),
+        "calibrate" => cmd_calibrate(&rest),
+        _ => {
+            eprintln!(
+                "usage: ssr <report|dse|simulate|serve|calibrate> [flags]\n\
+                 run `ssr <subcommand> --help` for flags"
+            );
+            if sub == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_or_exit(cmd: Command, args: &[String]) -> ssr::util::cli::Matches {
+    match cmd.parse(args) {
+        Ok(m) => m,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_report(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr report", "regenerate paper tables/figures")
+        .flag("only", Some("all"), "fig2|fig3|table5|table6|table7|table8|fig10|steps|platforms")
+        .switch("quick", "trimmed sweeps (CI mode)");
+    let m = parse_or_exit(cmd, args);
+    let ctx = if m.bool("quick") { Ctx::quick() } else { Ctx::vck190() };
+    let only = m.str("only");
+    let want = |k: &str| only == "all" || only == k;
+
+    if want("fig2") {
+        let f = tables::fig2(&ctx);
+        println!("== Fig. 2: latency-throughput tradeoff (DeiT-T, VCK190) ==");
+        println!("{}", tables::fig2_table(&f).render());
+        println!("hybrid Pareto front:");
+        for p in f.hybrid_front() {
+            println!(
+                "  {:.3} ms  {:.2} TOPS  (batch {}, {} accs)",
+                p.latency_ms, p.tops, p.batch, p.nacc
+            );
+        }
+    }
+    if want("fig3") {
+        let (_, t) = tables::fig3_table(6);
+        println!("\n== Fig. 3: DeiT-T kernel breakdown on A10G (batch 6) ==");
+        println!("{}", t.render());
+    }
+    if want("table5") {
+        let models = if ctx.quick {
+            vec!["deit_t"]
+        } else {
+            vec!["deit_t", "deit_t_160", "deit_t_256", "lv_vit_t"]
+        };
+        let rows = tables::table5(&ctx, &models);
+        println!("\n== Table 5: cross-platform comparison ==");
+        println!("{}", tables::table5_table(&rows).render());
+    }
+    if want("table6") {
+        let rows = tables::table6(&ctx, &[2.0, 1.0, 0.5, 0.4]);
+        println!("\n== Table 6: optimal TOPS under latency constraints (DeiT-T) ==");
+        println!("{}", tables::table6_table(&rows).render());
+    }
+    if want("table7") {
+        let rows = tables::table7(&ctx, 6);
+        println!("\n== Table 7: analytical vs simulated 'board' latency ==");
+        println!("{}", tables::table7_table(&rows).render());
+    }
+    if want("table8") {
+        let t8 = tables::table8(&ctx);
+        println!("\n== Table 8: SSR-spatial resource utilization ==");
+        println!("{}", tables::table8_table(&t8, &ctx.platform).render());
+    }
+    if want("fig10") {
+        let f = tables::fig10(&ctx, 6, 2.0e-3);
+        println!("\n== Fig. 10: search efficiency ==");
+        println!(
+            "inter-acc-aware EA : {:.2} s, {} configs, best {:.2} TOPS",
+            f.aware_secs, f.aware_configs, f.aware_best_tops
+        );
+        println!(
+            "exhaustive         : {:.2} s, {} configs, best {:.2} TOPS",
+            f.exhaustive_secs, f.exhaustive_configs, f.exhaustive_best_tops
+        );
+    }
+    if want("steps") {
+        let rows = tables::step_opt(&ctx, 6);
+        println!("\n== §5.2.6: step-by-step optimization ==");
+        println!("{}", tables::step_table(&rows).render());
+    }
+    if want("platforms") {
+        println!("\n== §6 Q1: SSR on other platforms (DeiT-T, batch 6) ==");
+        for r in tables::multi_platform(ctx.quick) {
+            println!("  {:<14} {:.3} ms  {:.2} TOPS", r.platform, r.latency_ms, r.tops);
+        }
+        let (lat, thr) = tables::scaleout(&ctx, 16, 12, 0.1);
+        println!("\n== §6 Q2: DeiT-Base (16x) over 12 boards, 0.1 ms hops ==");
+        println!("  batch-1 latency {lat:.2} ms, steady-state {thr:.0} imgs/s");
+    }
+    0
+}
+
+fn cmd_dse(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr dse", "evolutionary Layer→Acc search")
+        .flag("model", Some("deit_t"), "model name")
+        .flag("batch", Some("6"), "batch size")
+        .flag("lat-cons-ms", Some("inf"), "latency constraint (ms)")
+        .flag("pop", Some("24"), "population size")
+        .flag("iters", Some("12"), "EA generations")
+        .flag("seed", Some("57005"), "EA seed");
+    let m = parse_or_exit(cmd, args);
+    let cfg = builder::by_name(&m.str("model")).expect("unknown model");
+    let g = vit_graph(cfg);
+    let platform = arch::vck190();
+    let lat = m.str("lat-cons-ms");
+    let lat_cons = if lat == "inf" {
+        f64::INFINITY
+    } else {
+        lat.parse::<f64>().unwrap() * 1e-3
+    };
+    let params = EaParams {
+        batch: m.usize("batch"),
+        lat_cons,
+        n_pop: m.usize("pop"),
+        n_child: m.usize("pop"),
+        n_iter: m.usize("iters"),
+        seed: m.usize("seed") as u64,
+        ..Default::default()
+    };
+    let r = run_ea(&platform, &Calib::default(), &g, Features::all(), true, &params);
+    match r.best {
+        Some((ev, e)) => {
+            println!(
+                "best assignment: {:?} ({} accs)",
+                ev.design.assignment.acc_of,
+                ev.design.assignment.nacc()
+            );
+            for (i, c) in ev.design.configs.iter().enumerate() {
+                println!(
+                    "  acc{i}: classes {:?} config (h1={},w1={},w2={},A={},B={},C={}) AIE={} PLIO={}",
+                    ev.design.assignment.classes_on(i),
+                    c.h1, c.w1, c.w2, c.a, c.b, c.c,
+                    c.aie(),
+                    c.plio()
+                );
+            }
+            println!(
+                "latency {:.3} ms, throughput {:.2} TOPS, {:.0} GOPS/W ({} designs, {} configs searched)",
+                e.latency_s * 1e3,
+                e.tops,
+                e.gops_per_w,
+                r.designs_evaluated,
+                r.configs_evaluated
+            );
+            0
+        }
+        None => {
+            eprintln!("no feasible design under the constraint");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr simulate", "event-driven simulation of a strategy")
+        .flag("model", Some("deit_t"), "model name")
+        .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
+        .flag("batch", Some("6"), "batch size");
+    let m = parse_or_exit(cmd, args);
+    let cfg = builder::by_name(&m.str("model")).expect("unknown model");
+    let g = vit_graph(cfg);
+    let platform = arch::vck190();
+    let assignment = match m.str("strategy").as_str() {
+        "sequential" => Assignment::sequential(),
+        "spatial" => Assignment::spatial(),
+        "hybrid" => Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
+        other => {
+            eprintln!("unknown strategy {other}");
+            return 2;
+        }
+    };
+    let ev = build_design(&platform, &Calib::default(), &g, &assignment, Features::all(), true)
+        .expect("design");
+    let batch = m.usize("batch");
+    let ana = ev.evaluate(&platform, &g, batch);
+    let sim = ssr::sim::simulate(&platform, &ev, &g, batch);
+    println!("analytical: {:.3} ms, {:.2} TOPS", ana.latency_s * 1e3, ana.tops);
+    println!("simulated : {:.3} ms, {:.2} TOPS", sim.makespan_s * 1e3, sim.tops);
+    for (i, u) in sim.acc_util.iter().enumerate() {
+        println!(
+            "  acc{i} utilization {:.1}%  (classes {:?})",
+            u * 100.0,
+            assignment.classes_on(i)
+        );
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr serve", "serve DeiT-T on the PJRT runtime")
+        .flag("artifacts", None, "artifacts dir (default ./artifacts)")
+        .flag("model", Some("deit_t"), "model name")
+        .flag("mode", Some("spatial"), "sequential|spatial|hybrid")
+        .flag("requests", Some("16"), "number of requests")
+        .flag("batch", Some("1"), "images per request (sequential: 1|3|6)");
+    let m = parse_or_exit(cmd, args);
+    let dir = ssr::runtime::artifacts_dir(m.get("artifacts"));
+    let engine = Engine::load(&dir).expect("load artifacts (run `make artifacts`)");
+    println!(
+        "engine on {} ({} executables)",
+        engine.platform(),
+        engine.manifest.executables.len()
+    );
+    let model = m.str("model");
+    let n = m.usize("requests");
+    let batch = m.usize("batch");
+    let mode = m.str("mode");
+    let report = match mode.as_str() {
+        "sequential" => {
+            let s = SequentialServer::new(engine, &model, &[batch]).expect("compile full model");
+            let reqs: Vec<_> =
+                (0..n).map(|i| synth_images(batch, s.img_size(), i as u64)).collect();
+            let (r, _) = s.serve(batch, &reqs).expect("serve");
+            r
+        }
+        "spatial" | "hybrid" => {
+            let assign = if mode == "spatial" {
+                StageAssign::spatial()
+            } else {
+                StageAssign { acc_of: [0, 1, 0, 0] }
+            };
+            let s = PipelineServer::new(engine, &model, &assign, batch).expect("compile stages");
+            let reqs: Vec<_> = (0..n).map(|i| synth_images(batch, 224, i as u64)).collect();
+            let (r, _) = s.serve(reqs).expect("serve");
+            r
+        }
+        other => {
+            eprintln!("unknown mode {other}");
+            return 2;
+        }
+    };
+    println!("{}", report.summary_line());
+    0
+}
+
+fn cmd_calibrate(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr calibrate", "model-vs-paper residuals at the anchor points");
+    let _ = parse_or_exit(cmd, args);
+    let ctx = Ctx::vck190();
+    let g = vit_graph(&builder::DEIT_T);
+    println!("{:<30} {:>10} {:>10} {:>9}", "anchor", "paper", "model", "rel.err");
+    let check = |name: &str, paper: f64, got: f64| {
+        println!(
+            "{name:<30} {paper:>10.3} {got:>10.3} {:>8.1}%",
+            (got - paper) / paper * 100.0
+        );
+    };
+    let anchors: [(Assignment, usize, f64, f64); 4] = [
+        (Assignment::sequential(), 1, 0.22, 10.90),
+        (Assignment::sequential(), 6, 1.30, 11.17),
+        (Assignment::spatial(), 1, 2.0 * 1.25e9 / 5.66e12 * 1e3, 5.66),
+        (Assignment::spatial(), 6, 0.58, 26.70),
+    ];
+    for (a, b, paper_ms, paper_tops) in anchors {
+        let ev =
+            build_design(&ctx.platform, &ctx.calib, &g, &a, Features::all(), true).unwrap();
+        let e = ev.evaluate(&ctx.platform, &g, b);
+        let tag = if a.nacc() == 1 { "seq" } else { "spatial" };
+        check(&format!("{tag} b{b} latency (ms)"), paper_ms, e.latency_s * 1e3);
+        check(&format!("{tag} b{b} TOPS"), paper_tops, e.tops);
+    }
+    0
+}

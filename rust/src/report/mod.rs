@@ -1,0 +1,12 @@
+//! Report generation: one function per paper table/figure, shared by the
+//! `benches/` regenerators, the `ssr report` CLI subcommand, and tests.
+//!
+//! * [`paper`]  — the published numbers (comparison anchors),
+//! * [`tables`] — generators that run the models/DSE and build rows,
+//! * [`tpu`]    — the §Perf real-TPU estimate (VMEM footprint + MXU
+//!   utilization per kernel config), since interpret-mode Pallas gives no
+//!   hardware timings.
+
+pub mod paper;
+pub mod tables;
+pub mod tpu;

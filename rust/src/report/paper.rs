@@ -1,0 +1,149 @@
+//! Published numbers from the paper, used as comparison anchors in the
+//! benches and EXPERIMENTS.md. Source: Tables 3-8, Figs. 2-3, §5.2.6, §6.
+
+/// Fig. 2 anchor points for DeiT-T on VCK190 (latency ms, TOPS).
+pub const FIG2_SEQ_A: (f64, f64) = (0.22, 10.90); // sequential, batch 1
+pub const FIG2_SEQ_B: (f64, f64) = (1.30, 11.17); // sequential, batch 6
+pub const FIG2_SPATIAL_C_TOPS: f64 = 5.66; // spatial, batch 1
+pub const FIG2_SPATIAL_D: (f64, f64) = (0.58, 26.70); // spatial, batch 6 (lat ~= 0.54-0.58)
+pub const FIG2_HYBRID_E: (f64, f64) = (0.43, 18.56); // hybrid under 0.43 ms
+
+/// Fig. 3 observations (DeiT-T on A10G, batch 6).
+pub const FIG3_TOTAL_MS: f64 = 1.43;
+pub const FIG3_MM_EFF_TOPS: f64 = 18.0;
+pub const FIG3_MM_UTIL: f64 = 0.13;
+pub const FIG3_NONLINEAR_SHARE: f64 = 0.28;
+pub const FIG3_TRANSPOSE_SHARE: f64 = 0.08;
+pub const FIG3_REFORMAT_SHARE: f64 = 0.05;
+
+/// One Table 5 cell: (latency ms, TOPS, GOPS/W).
+pub type T5Cell = (f64, f64, f64);
+
+/// Table 5 rows: model -> [platform][batch {1,3,6}].
+pub struct Table5Row {
+    pub model: &'static str,
+    pub a10g: [T5Cell; 3],
+    pub zcu102: [T5Cell; 3],
+    pub u250: [T5Cell; 3],
+    pub ssr: [T5Cell; 3],
+}
+
+pub const TABLE5: [Table5Row; 4] = [
+    Table5Row {
+        model: "deit_t",
+        a10g: [(0.76, 3.19, 26.54), (1.03, 7.05, 40.76), (1.43, 10.16, 48.37)],
+        zcu102: [(5.50, 0.44, 46.82), (15.14, 0.48, 48.96), (29.79, 0.49, 49.25)],
+        u250: [(2.23, 1.09, 14.02), (5.60, 1.30, 16.66), (10.66, 1.36, 17.04)],
+        ssr: [(0.22, 10.90, 246.15), (0.39, 18.62, 368.75), (0.54, 26.70, 453.32)],
+    },
+    Table5Row {
+        model: "deit_t_160",
+        a10g: [(0.73, 2.39, 20.05), (1.05, 4.98, 28.59), (1.45, 7.21, 34.98)],
+        zcu102: [(4.22, 0.41, 44.86), (11.81, 0.44, 46.58), (23.18, 0.45, 46.94)],
+        u250: [(2.21, 0.79, 10.44), (5.67, 0.92, 12.13), (10.88, 0.96, 12.57)],
+        ssr: [(0.21, 8.19, 196.03), (0.37, 14.92, 296.11), (0.50, 20.90, 360.90)],
+    },
+    Table5Row {
+        model: "deit_t_256",
+        a10g: [(0.81, 5.09, 38.53), (1.17, 10.56, 51.78), (1.69, 14.63, 66.78)],
+        zcu102: [(9.10, 0.45, 46.48), (25.56, 0.48, 46.48), (50.51, 0.49, 46.16)],
+        u250: [(3.52, 1.17, 15.05), (9.07, 1.36, 17.43), (17.24, 1.43, 18.27)],
+        ssr: [(0.40, 10.30, 229.37), (0.66, 18.73, 363.59), (0.98, 25.22, 423.89)],
+    },
+    Table5Row {
+        model: "lv_vit_t",
+        a10g: [(0.92, 3.39, 21.34), (1.37, 6.84, 35.79), (1.91, 9.81, 45.19)],
+        zcu102: [(7.24, 0.43, 43.97), (20.27, 0.46, 46.20), (39.95, 0.47, 45.52)],
+        u250: [(3.11, 1.01, 12.53), (7.91, 1.18, 14.69), (15.11, 1.24, 15.32)],
+        ssr: [(0.38, 8.21, 181.74), (0.62, 15.10, 296.74), (0.85, 22.03, 360.04)],
+    },
+];
+
+/// Table 6: optimal TOPS under latency constraints for DeiT-T.
+/// (constraint ms, GPU, SSR-sequential, SSR-spatial, SSR-hybrid); None = "x".
+pub const TABLE6: [(f64, Option<f64>, Option<f64>, Option<f64>, Option<f64>); 4] = [
+    (2.0, Some(11.32), Some(11.17), Some(26.70), Some(26.70)),
+    (1.0, Some(5.28), Some(11.12), Some(26.70), Some(26.70)),
+    (0.5, None, Some(11.05), Some(19.37), Some(19.37)),
+    (0.4, None, Some(10.90), None, Some(18.56)),
+];
+
+/// Table 7: (n accs, estimated ms, on-board ms) for DeiT-T, batch 6.
+pub const TABLE7: [(usize, f64, f64); 6] = [
+    (1, 1.29, 1.30),
+    (2, 1.14, 1.08),
+    (3, 0.88, 0.85),
+    (4, 0.81, 0.83),
+    (5, 0.77, 0.79),
+    (6, 0.54, 0.54),
+];
+
+/// Table 8: SSR-spatial resource totals for DeiT-T (INT8).
+pub struct Table8 {
+    pub reg: u64,
+    pub lut: u64,
+    pub bram: u64,
+    pub uram: u64,
+    pub dsp: u64,
+    pub plio: u64,
+    pub aie: u64,
+}
+
+pub const TABLE8_TOTAL: Table8 = Table8 {
+    reg: 849_527,
+    lut: 619_956,
+    bram: 624,
+    uram: 104,
+    dsp: 1797,
+    plio: 199,
+    aie: 394,
+};
+
+/// §5.2.6 step-by-step latency-reduction factors (batch 6, DeiT-T):
+/// baseline 12 ms; +forwarding 3.4x; +spatial 2.4x; +pipeline 2.7x; 0.54 ms.
+pub const STEP_BASELINE_MS: f64 = 12.0;
+pub const STEP_FACTORS: [f64; 3] = [3.4, 2.4, 2.7];
+pub const STEP_FINAL_MS: f64 = 0.54;
+
+/// §6 Q1: modeled DeiT-T latency on Stratix 10 NX and VCK190+HBM.
+pub const STRATIX_DEIT_T_MS: f64 = 0.49;
+pub const VCK190_HBM_DEIT_T_MS: f64 = 0.41;
+
+/// §6 Q2: scale-out assumptions.
+pub const SCALEOUT_BOARDS: usize = 12;
+pub const SCALEOUT_HOP_MS: f64 = 0.1;
+
+/// Table 5 aggregate claims (average gains vs SSR across models/batches).
+pub const AVG_THROUGHPUT_GAIN_VS_A10G: f64 = 2.53;
+pub const AVG_THROUGHPUT_GAIN_VS_ZCU102: f64 = 35.71;
+pub const AVG_THROUGHPUT_GAIN_VS_U250: f64 = 14.20;
+pub const AVG_ENERGY_GAIN_VS_A10G: f64 = 8.51;
+pub const AVG_ENERGY_GAIN_VS_ZCU102: f64 = 6.75;
+pub const AVG_ENERGY_GAIN_VS_U250: f64 = 21.22;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_error_rates_under_6_percent() {
+        for (_, est, board) in TABLE7 {
+            let err = (est - board).abs() / board;
+            assert!(err < 0.065, "paper's own table err {err}");
+        }
+    }
+
+    #[test]
+    fn step_factors_compose_to_final() {
+        let product: f64 = STEP_FACTORS.iter().product();
+        let derived = STEP_BASELINE_MS / product;
+        // 12 / (3.4*2.4*2.7) = 0.545 ~ 0.54
+        assert!((derived - STEP_FINAL_MS).abs() < 0.02);
+    }
+
+    #[test]
+    fn table5_has_all_models() {
+        let names: Vec<_> = TABLE5.iter().map(|r| r.model).collect();
+        assert_eq!(names, vec!["deit_t", "deit_t_160", "deit_t_256", "lv_vit_t"]);
+    }
+}

@@ -1,0 +1,679 @@
+//! Generators for every table and figure in the paper's evaluation.
+//!
+//! Each function runs the actual system (graph -> DSE -> analytical model /
+//! simulator / baselines) and returns both structured data (asserted on by
+//! tests, recorded in EXPERIMENTS.md) and a printable table.
+
+use crate::analytical::{Calib, Features};
+use crate::arch::{self, Platform};
+use crate::baselines::{charm, gpu, heatvit};
+use crate::bench::Table;
+use crate::dse::ea::{run_ea, EaParams};
+use crate::dse::enumerate;
+use crate::dse::eval::{build_design, Evaluated};
+use crate::dse::pareto::{best_under, pareto_front, Point};
+use crate::dse::Assignment;
+use crate::graph::{builder, vit_graph, Graph};
+use crate::sim;
+use crate::util::threadpool::{default_threads, scope_map};
+
+/// Shared context for the generators.
+pub struct Ctx {
+    pub platform: Platform,
+    pub calib: Calib,
+    /// Trim sweeps for unit tests.
+    pub quick: bool,
+}
+
+impl Ctx {
+    pub fn vck190() -> Self {
+        Ctx { platform: arch::vck190(), calib: Calib::default(), quick: false }
+    }
+
+    pub fn quick() -> Self {
+        Ctx { quick: true, ..Ctx::vck190() }
+    }
+
+    fn graph(&self, model: &str) -> Graph {
+        vit_graph(builder::by_name(model).expect("unknown model"))
+    }
+}
+
+fn eval_assignment(
+    ctx: &Ctx,
+    graph: &Graph,
+    a: &Assignment,
+    features: Features,
+    batch: usize,
+) -> Option<(Evaluated, crate::dse::Eval)> {
+    let ev = build_design(&ctx.platform, &ctx.calib, graph, a, features, true)?;
+    let e = ev.evaluate(&ctx.platform, graph, batch);
+    Some((ev, e))
+}
+
+/// Best hybrid design at `batch` under `lat_cons` via exhaustive assignment
+/// enumeration (the ground-truth optimum the EA is compared against).
+pub fn best_hybrid_exhaustive(
+    ctx: &Ctx,
+    graph: &Graph,
+    batch: usize,
+    lat_cons: f64,
+    max_acc: usize,
+) -> Option<(Evaluated, crate::dse::Eval)> {
+    let assignments = enumerate::all_up_to(max_acc);
+    let assignments = if ctx.quick {
+        assignments.into_iter().step_by(16).collect::<Vec<_>>()
+    } else {
+        assignments
+    };
+    let evals = scope_map(&assignments, default_threads(), |a| {
+        eval_assignment(ctx, graph, a, Features::all(), batch)
+    });
+    evals
+        .into_iter()
+        .flatten()
+        .filter(|(_, e)| e.latency_s <= lat_cons)
+        .max_by(|(_, a), (_, b)| a.tops.partial_cmp(&b.tops).unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — latency/throughput scatter + Pareto fronts for DeiT-T.
+// ---------------------------------------------------------------------------
+
+pub struct Fig2 {
+    pub seq: Vec<Point>,
+    pub spatial: Vec<Point>,
+    pub hybrid: Vec<Point>,
+}
+
+impl Fig2 {
+    pub fn hybrid_front(&self) -> Vec<Point> {
+        let all: Vec<Point> = self
+            .seq
+            .iter()
+            .chain(&self.spatial)
+            .chain(&self.hybrid)
+            .copied()
+            .collect();
+        pareto_front(&all)
+    }
+}
+
+pub fn fig2(ctx: &Ctx) -> Fig2 {
+    let g = ctx.graph("deit_t");
+    let batches: Vec<usize> = if ctx.quick { vec![1, 6] } else { vec![1, 2, 3, 4, 5, 6] };
+    let mut seq = Vec::new();
+    let mut spatial = Vec::new();
+    for &b in &batches {
+        if let Some((ev, e)) = eval_assignment(ctx, &g, &Assignment::sequential(), Features::all(), b) {
+            seq.push(Point {
+                latency_ms: e.latency_s * 1e3,
+                tops: e.tops,
+                batch: b,
+                nacc: ev.design.assignment.nacc(),
+            });
+        }
+        if let Some((ev, e)) = eval_assignment(ctx, &g, &Assignment::spatial(), Features::all(), b) {
+            spatial.push(Point {
+                latency_ms: e.latency_s * 1e3,
+                tops: e.tops,
+                batch: b,
+                nacc: ev.design.assignment.nacc(),
+            });
+        }
+    }
+    // Hybrid points: best exhaustive design per (nacc, batch) slice. Each
+    // design is built ONCE and then evaluated at every batch size (the
+    // evaluation is closed-form and cheap; the customization is not).
+    let mut hybrid = Vec::new();
+    let naccs: Vec<usize> = if ctx.quick { vec![2, 4] } else { vec![2, 3, 4, 5, 6, 7] };
+    for &n in &naccs {
+        let assignments = enumerate::with_exactly(n);
+        let assignments = if ctx.quick {
+            assignments.into_iter().step_by(8).collect::<Vec<_>>()
+        } else {
+            assignments
+        };
+        let designs = scope_map(&assignments, default_threads(), |a| {
+            build_design(&ctx.platform, &ctx.calib, &g, a, Features::all(), true)
+        });
+        for &b in &batches {
+            if let Some((ev, e)) = designs
+                .iter()
+                .flatten()
+                .map(|ev| (ev, ev.evaluate(&ctx.platform, &g, b)))
+                .max_by(|(_, x), (_, y)| x.tops.partial_cmp(&y.tops).unwrap())
+            {
+                hybrid.push(Point {
+                    latency_ms: e.latency_s * 1e3,
+                    tops: e.tops,
+                    batch: b,
+                    nacc: ev.design.assignment.nacc(),
+                });
+            }
+        }
+    }
+    Fig2 { seq, spatial, hybrid }
+}
+
+pub fn fig2_table(f: &Fig2) -> Table {
+    let mut t = Table::new(&["strategy", "batch", "nacc", "latency (ms)", "TOPS"]);
+    for (name, pts) in [("sequential", &f.seq), ("spatial", &f.spatial), ("hybrid", &f.hybrid)] {
+        for p in pts.iter() {
+            t.row(&[
+                name.to_string(),
+                p.batch.to_string(),
+                p.nacc.to_string(),
+                format!("{:.3}", p.latency_ms),
+                format!("{:.2}", p.tops),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — GPU kernel breakdown.
+// ---------------------------------------------------------------------------
+
+pub fn fig3_table(batch: usize) -> (gpu::GpuBreakdown, Table) {
+    let g = vit_graph(&builder::DEIT_T);
+    let bd = gpu::breakdown(&arch::a10g(), &gpu::GpuCalib::default(), &g, batch);
+    let total = bd.total_s();
+    let mut t = Table::new(&["kernel", "time (ms)", "share"]);
+    for (name, s) in [
+        ("MM/BMM/patch-embed", bd.mm_s),
+        ("Softmax", bd.softmax_s),
+        ("LayerNorm", bd.layernorm_s),
+        ("GELU", bd.gelu_s),
+        ("Transpose", bd.transpose_s),
+        ("Reformat", bd.reformat_s),
+        ("launch/occupancy floor", bd.launch_floor_s),
+    ] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", s * 1e3),
+            format!("{:.1}%", 100.0 * s / total),
+        ]);
+    }
+    t.row(&["TOTAL".into(), format!("{:.3}", total * 1e3), "100%".into()]);
+    (bd, t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — cross-platform comparison.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table5Cell {
+    pub latency_ms: f64,
+    pub tops: f64,
+    pub gops_w: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    pub model: String,
+    pub batch: usize,
+    pub a10g: Table5Cell,
+    pub zcu102: Table5Cell,
+    pub u250: Table5Cell,
+    pub ssr: Table5Cell,
+}
+
+pub fn table5(ctx: &Ctx, models: &[&str]) -> Vec<Table5Row> {
+    let gpu_spec = arch::a10g();
+    let gpu_cal = gpu::GpuCalib::default();
+    let z = arch::zcu102();
+    let u = arch::u250();
+    let mut rows = Vec::new();
+    for model in models {
+        let g = ctx.graph(model);
+        // SSR: build every candidate design ONCE per model, then pick the
+        // best per batch (the paper sets #accs = batch count; we let the
+        // exhaustive search pick).
+        let max_acc = if ctx.quick { 4 } else { 8 };
+        let assignments = enumerate::all_up_to(max_acc);
+        let assignments = if ctx.quick {
+            assignments.into_iter().step_by(16).collect::<Vec<_>>()
+        } else {
+            assignments
+        };
+        let designs = scope_map(&assignments, default_threads(), |a| {
+            build_design(&ctx.platform, &ctx.calib, &g, a, Features::all(), true)
+        });
+        for &batch in &[1usize, 3, 6] {
+            let (_, ssr_eval) = designs
+                .iter()
+                .flatten()
+                .map(|ev| (ev, ev.evaluate(&ctx.platform, &g, batch)))
+                .max_by(|(_, a), (_, b)| a.tops.partial_cmp(&b.tops).unwrap())
+                .expect("feasible SSR design");
+            let cell = |l: f64, t: f64, e: f64| Table5Cell { latency_ms: l, tops: t, gops_w: e };
+            rows.push(Table5Row {
+                model: model.to_string(),
+                batch,
+                a10g: cell(
+                    gpu::latency_s(&gpu_spec, &gpu_cal, &g, batch) * 1e3,
+                    gpu::tops(&gpu_spec, &gpu_cal, &g, batch),
+                    gpu::gops_per_w(&gpu_spec, &gpu_cal, &g, batch),
+                ),
+                zcu102: cell(
+                    heatvit::latency_s(&z, &heatvit::calib_for(&z), &g, batch) * 1e3,
+                    heatvit::tops(&z, &heatvit::calib_for(&z), &g, batch),
+                    heatvit::gops_per_w(&z, &heatvit::calib_for(&z), &g, batch),
+                ),
+                u250: cell(
+                    heatvit::latency_s(&u, &heatvit::calib_for(&u), &g, batch) * 1e3,
+                    heatvit::tops(&u, &heatvit::calib_for(&u), &g, batch),
+                    heatvit::gops_per_w(&u, &heatvit::calib_for(&u), &g, batch),
+                ),
+                ssr: cell(ssr_eval.latency_s * 1e3, ssr_eval.tops, ssr_eval.gops_per_w),
+            });
+        }
+    }
+    rows
+}
+
+pub fn table5_table(rows: &[Table5Row]) -> Table {
+    let mut t = Table::new(&[
+        "model", "batch", "A10G ms", "A10G TOPS", "ZCU102 ms", "ZCU102 TOPS",
+        "U250 ms", "U250 TOPS", "SSR ms", "SSR TOPS", "SSR GOPS/W",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.model.clone(),
+            r.batch.to_string(),
+            format!("{:.2}", r.a10g.latency_ms),
+            format!("{:.2}", r.a10g.tops),
+            format!("{:.2}", r.zcu102.latency_ms),
+            format!("{:.2}", r.zcu102.tops),
+            format!("{:.2}", r.u250.latency_ms),
+            format!("{:.2}", r.u250.tops),
+            format!("{:.2}", r.ssr.latency_ms),
+            format!("{:.2}", r.ssr.tops),
+            format!("{:.0}", r.ssr.gops_w),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — optimal throughput under latency constraints.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table6Row {
+    pub lat_cons_ms: f64,
+    pub gpu: Option<f64>,
+    pub seq: Option<f64>,
+    pub spatial: Option<f64>,
+    pub hybrid: Option<f64>,
+}
+
+pub fn table6(ctx: &Ctx, constraints_ms: &[f64]) -> Vec<Table6Row> {
+    let g = ctx.graph("deit_t");
+    let f2 = fig2(ctx);
+    // GPU: sweep batch sizes, latency = model latency.
+    let gpu_spec = arch::a10g();
+    let gpu_cal = gpu::GpuCalib::default();
+    let gpu_points: Vec<Point> = (1..=64)
+        .map(|b| Point {
+            latency_ms: gpu::latency_s(&gpu_spec, &gpu_cal, &g, b) * 1e3,
+            tops: gpu::tops(&gpu_spec, &gpu_cal, &g, b),
+            batch: b,
+            nacc: 1,
+        })
+        .collect();
+    let hybrid_all: Vec<Point> = f2
+        .seq
+        .iter()
+        .chain(&f2.spatial)
+        .chain(&f2.hybrid)
+        .copied()
+        .collect();
+    constraints_ms
+        .iter()
+        .map(|&c| Table6Row {
+            lat_cons_ms: c,
+            gpu: best_under(&gpu_points, c).map(|p| p.tops),
+            seq: best_under(&f2.seq, c).map(|p| p.tops),
+            spatial: best_under(&f2.spatial, c).map(|p| p.tops),
+            hybrid: best_under(&hybrid_all, c).map(|p| p.tops),
+        })
+        .collect()
+}
+
+pub fn table6_table(rows: &[Table6Row]) -> Table {
+    let fmt = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "x".into());
+    let mut t = Table::new(&["constraint", "GPU", "SSR-seq", "SSR-spatial", "SSR-hybrid"]);
+    for r in rows {
+        t.row(&[
+            format!("{} ms", r.lat_cons_ms),
+            fmt(r.gpu),
+            fmt(r.seq),
+            fmt(r.spatial),
+            fmt(r.hybrid),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — analytical model vs event-driven simulator per #accs.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Table7Row {
+    pub naccs: usize,
+    pub analytical_ms: f64,
+    pub sim_ms: f64,
+    pub err: f64,
+}
+
+pub fn table7(ctx: &Ctx, batch: usize) -> Vec<Table7Row> {
+    let g = ctx.graph("deit_t");
+    let counts: Vec<usize> = if ctx.quick { vec![1, 4, 6] } else { vec![1, 2, 3, 4, 5, 6] };
+    counts
+        .into_iter()
+        .map(|n| {
+            // Best design with exactly n accs (latency-optimal at `batch`).
+            let assignments = enumerate::with_exactly(n);
+            let assignments = if ctx.quick && assignments.len() > 64 {
+                assignments.into_iter().step_by(8).collect::<Vec<_>>()
+            } else {
+                assignments
+            };
+            let evals = scope_map(&assignments, default_threads(), |a| {
+                eval_assignment(ctx, &g, a, Features::all(), batch)
+            });
+            let (ev, e) = evals
+                .into_iter()
+                .flatten()
+                .min_by(|(_, a), (_, b)| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+                .expect("feasible design");
+            let sim = sim::simulate(&ctx.platform, &ev, &g, batch);
+            Table7Row {
+                naccs: n,
+                analytical_ms: e.latency_s * 1e3,
+                sim_ms: sim.makespan_s * 1e3,
+                err: (e.latency_s - sim.makespan_s) / sim.makespan_s,
+            }
+        })
+        .collect()
+}
+
+pub fn table7_table(rows: &[Table7Row]) -> Table {
+    let mut t = Table::new(&["# accs", "analytical (ms)", "sim 'board' (ms)", "error"]);
+    for r in rows {
+        t.row(&[
+            r.naccs.to_string(),
+            format!("{:.3}", r.analytical_ms),
+            format!("{:.3}", r.sim_ms),
+            format!("{:+.1}%", r.err * 100.0),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — resource utilization of the SSR-spatial design.
+// ---------------------------------------------------------------------------
+
+pub struct Table8 {
+    pub aie: u64,
+    pub plio: u64,
+    pub bram_banks: u64,
+    pub dsp: u64,
+    pub per_acc: Vec<(String, u64, u64)>, // (classes, aie, plio)
+}
+
+pub fn table8(ctx: &Ctx) -> Table8 {
+    let g = ctx.graph("deit_t");
+    let ev = build_design(
+        &ctx.platform,
+        &ctx.calib,
+        &g,
+        &Assignment::spatial(),
+        Features::all(),
+        true,
+    )
+    .expect("spatial design");
+    let mut per_acc = Vec::new();
+    let mut aie = 0;
+    let mut plio = 0;
+    let mut bram = 0;
+    let mut dsp = 0;
+    for (i, cfg) in ev.design.configs.iter().enumerate() {
+        let classes: Vec<String> = ev
+            .design
+            .assignment
+            .classes_on(i)
+            .iter()
+            .map(|c| format!("{c:?}"))
+            .collect();
+        per_acc.push((classes.join("+"), cfg.aie(), cfg.plio()));
+        aie += cfg.aie();
+        plio += cfg.plio();
+        bram += cfg.ram_banks(&ctx.calib);
+        dsp += crate::analytical::hce::hce_dsp(&ctx.calib, ev.design.hce_lanes[i]);
+    }
+    Table8 { aie, plio, bram_banks: bram, dsp, per_acc }
+}
+
+pub fn table8_table(t8: &Table8, platform: &Platform) -> Table {
+    let mut t = Table::new(&["acc (classes)", "AIE", "PLIO"]);
+    for (name, aie, plio) in &t8.per_acc {
+        t.row(&[name.clone(), aie.to_string(), plio.to_string()]);
+    }
+    t.row(&[
+        format!(
+            "TOTAL (of {} AIE / {} PLIO)",
+            platform.aie_total, platform.plio_total
+        ),
+        t8.aie.to_string(),
+        t8.plio.to_string(),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// §5.2.6 — step-by-step optimization.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct StepRow {
+    pub name: String,
+    pub latency_ms: f64,
+    pub factor: f64,
+}
+
+pub fn step_opt(ctx: &Ctx, batch: usize) -> Vec<StepRow> {
+    let g = ctx.graph("deit_t");
+    let mut rows: Vec<StepRow> = Vec::new();
+    for (name, feats, assign) in charm::step_features() {
+        let ev = build_design(&ctx.platform, &ctx.calib, &g, &assign, feats, true)
+            .expect("step design");
+        let lat = ev.evaluate(&ctx.platform, &g, batch).latency_s * 1e3;
+        let factor = rows.last().map(|p: &StepRow| p.latency_ms / lat).unwrap_or(1.0);
+        rows.push(StepRow { name: name.to_string(), latency_ms: lat, factor });
+    }
+    rows
+}
+
+pub fn step_table(rows: &[StepRow]) -> Table {
+    let mut t = Table::new(&["configuration", "latency (ms)", "step gain"]);
+    for r in rows {
+        t.row(&[r.name.clone(), format!("{:.2}", r.latency_ms), format!("{:.2}x", r.factor)]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — search efficiency: EA+inter-acc-aware vs exhaustive.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct Fig10 {
+    pub aware_secs: f64,
+    pub aware_best_tops: f64,
+    pub aware_configs: usize,
+    pub exhaustive_secs: f64,
+    pub exhaustive_best_tops: f64,
+    pub exhaustive_configs: usize,
+}
+
+pub fn fig10(ctx: &Ctx, batch: usize, lat_cons: f64) -> Fig10 {
+    let g = ctx.graph("deit_t");
+    let quick = ctx.quick;
+    let params = EaParams {
+        batch,
+        lat_cons,
+        n_pop: if quick { 8 } else { 24 },
+        n_child: if quick { 8 } else { 24 },
+        n_iter: if quick { 3 } else { 12 },
+        seed: 0xF16,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let aware = run_ea(&ctx.platform, &ctx.calib, &g, Features::all(), true, &params);
+    let aware_secs = t0.elapsed().as_secs_f64();
+
+    // Exhaustive baseline: enumerate assignments with the non-aware
+    // (post-verify) customization.
+    let assignments = enumerate::all_up_to(8);
+    let assignments = if quick {
+        assignments.into_iter().step_by(64).collect::<Vec<_>>()
+    } else {
+        assignments
+    };
+    let t1 = std::time::Instant::now();
+    let evals = scope_map(&assignments, default_threads(), |a| {
+        build_design(&ctx.platform, &ctx.calib, &g, a, Features::all(), false).map(|ev| {
+            let e = ev.evaluate(&ctx.platform, &g, batch);
+            (ev.stats.configs_evaluated, e)
+        })
+    });
+    let exhaustive_secs = t1.elapsed().as_secs_f64();
+    let mut exhaustive_best = 0.0f64;
+    let mut exhaustive_configs = 0usize;
+    for r in evals.into_iter().flatten() {
+        exhaustive_configs += r.0;
+        if r.1.latency_s <= lat_cons {
+            exhaustive_best = exhaustive_best.max(r.1.tops);
+        }
+    }
+    Fig10 {
+        aware_secs,
+        aware_best_tops: aware.best.as_ref().map(|(_, e)| e.tops).unwrap_or(0.0),
+        aware_configs: aware.configs_evaluated,
+        exhaustive_secs,
+        exhaustive_best_tops: exhaustive_best,
+        exhaustive_configs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §6 Q1/Q2 — other platforms + scale-out.
+// ---------------------------------------------------------------------------
+
+pub struct PlatformRow {
+    pub platform: String,
+    pub latency_ms: f64,
+    pub tops: f64,
+}
+
+/// DeiT-T (batch 6) mapped by SSR onto each platform (§6 Q1 + Table 1).
+pub fn multi_platform(quick: bool) -> Vec<PlatformRow> {
+    let mut rows = Vec::new();
+    for p in [arch::vck190(), arch::vck190_hbm(), arch::stratix10nx()] {
+        let ctx = Ctx { platform: p, calib: Calib::default(), quick };
+        let g = ctx.graph("deit_t");
+        let (_, e) = best_hybrid_exhaustive(&ctx, &g, 6, f64::INFINITY, 8)
+            .expect("feasible design");
+        rows.push(PlatformRow {
+            platform: ctx.platform.name.to_string(),
+            latency_ms: e.latency_s * 1e3,
+            tops: e.tops,
+        });
+    }
+    rows
+}
+
+/// §6 Q2: scale a `size_factor`x-DeiT-T model (e.g. DeiT-Base = 16x in
+/// parameters) across `boards` pipeline-parallel boards with `hop_ms`
+/// inter-board latency (the paper assumes 12 VCK190s over 100Gb QSFP28
+/// with 0.1 ms hops). Returns (batch-1 latency ms, steady-state imgs/s).
+pub fn scaleout(ctx: &Ctx, size_factor: usize, boards: usize, hop_ms: f64) -> (f64, f64) {
+    let g = ctx.graph("deit_t");
+    let (_, e) = best_hybrid_exhaustive(ctx, &g, 1, f64::INFINITY, if ctx.quick { 4 } else { 8 })
+        .expect("feasible design");
+    let total_work_ms = e.latency_s * 1e3 * size_factor as f64;
+    let stage_ms = total_work_ms / boards as f64;
+    let latency_ms = total_work_ms + (boards - 1) as f64 * hop_ms;
+    let throughput = 1e3 / stage_ms.max(hop_ms); // images/s at steady state
+    (latency_ms, throughput)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn fig2_hybrid_front_dominates_pure_strategies() {
+        let ctx = Ctx::quick();
+        let f = fig2(&ctx);
+        let front = f.hybrid_front();
+        assert!(!front.is_empty());
+        assert!(crate::dse::pareto::front_dominates(&front, &f.seq));
+        assert!(crate::dse::pareto::front_dominates(&front, &f.spatial));
+    }
+
+    #[test]
+    fn fig3_total_near_paper() {
+        let (bd, _) = fig3_table(6);
+        assert!(rel_err(bd.total_s() * 1e3, super::super::paper::FIG3_TOTAL_MS) < 0.25);
+    }
+
+    #[test]
+    fn table6_hybrid_geq_both() {
+        let ctx = Ctx::quick();
+        let rows = table6(&ctx, &[2.0, 0.5]);
+        for r in &rows {
+            if let (Some(h), Some(s)) = (r.hybrid, r.seq) {
+                assert!(h >= s - 1e-9);
+            }
+            if let (Some(h), Some(s)) = (r.hybrid, r.spatial) {
+                assert!(h >= s - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn table7_error_small() {
+        let ctx = Ctx::quick();
+        for r in table7(&ctx, 6) {
+            assert!(r.err.abs() < 0.18, "nacc {}: err {}", r.naccs, r.err);
+        }
+    }
+
+    #[test]
+    fn table8_fits_platform() {
+        let ctx = Ctx::quick();
+        let t8 = table8(&ctx);
+        assert!(t8.aie <= ctx.platform.aie_total);
+        assert!(t8.plio <= ctx.platform.plio_total);
+        assert_eq!(t8.per_acc.len(), 8);
+    }
+
+    #[test]
+    fn step_opt_strictly_improves() {
+        let ctx = Ctx::quick();
+        let rows = step_opt(&ctx, 6);
+        assert_eq!(rows.len(), 4);
+        for r in &rows[1..] {
+            assert!(r.factor > 1.0, "{}: {}", r.name, r.factor);
+        }
+    }
+}

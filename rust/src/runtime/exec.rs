@@ -1,0 +1,301 @@
+//! PJRT execution engine: compile HLO text once, serve many requests.
+//!
+//! Follows the `/opt/xla-example/load_hlo` pattern: `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile`.
+//! Weight arguments are uploaded to device buffers at stage-load time;
+//! per-request work is input upload + `execute_b` + output download, which
+//! keeps the serve hot path allocation-light.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArgSpec, ExeSpec, Manifest};
+use super::weights::WeightStore;
+
+/// The PJRT client + artifact index. One per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+}
+
+/// SAFETY: the PJRT CPU client is internally synchronized (XLA's PJRT API
+/// is documented thread-safe for compilation and execution); the raw
+/// pointers inside `xla::PjRtClient`/`PjRtLoadedExecutable`/`PjRtBuffer`
+/// are reference-counted handles owned by the client. We only share
+/// `Engine`/`Stage` behind `Arc` and never mutate through them.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// A compiled stage: executable + pre-uploaded weight buffers.
+pub struct Stage {
+    // (fields below; Debug is manual because PJRT handles aren't Debug)
+    pub spec: ExeSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// For plain-weight args: arg position -> uploaded buffer.
+    fixed: BTreeMap<usize, xla::PjRtBuffer>,
+    /// For block-weight args: per block, arg position -> buffer.
+    per_block: Vec<BTreeMap<usize, xla::PjRtBuffer>>,
+    /// Positions of runtime inputs, in order.
+    input_pos: Vec<usize>,
+}
+
+unsafe impl Send for Stage {}
+unsafe impl Sync for Stage {}
+
+impl std::fmt::Debug for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Stage")
+            .field("name", &self.spec.name)
+            .field("inputs", &self.input_pos.len())
+            .field("blocks", &self.per_block.len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Load the artifact directory and create the PJRT CPU client.
+    pub fn load(dir: &std::path::Path) -> Result<Arc<Engine>> {
+        let manifest = Manifest::load(dir)?;
+        let weights = WeightStore::load(&manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Arc::new(Engine { client, manifest, weights }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn upload(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Compile an executable by manifest name and pre-upload its weights.
+    pub fn compile(&self, name: &str) -> Result<Stage> {
+        let spec = self.manifest.find(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo.to_str().context("hlo path utf8")?,
+        )
+        .map_err(|e| anyhow!("hlo parse {}: {e:?}", spec.hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+
+        let mut fixed = BTreeMap::new();
+        let mut input_pos = Vec::new();
+        let mut block_fields: Vec<(usize, String)> = Vec::new();
+        for (pos, arg) in spec.args.iter().enumerate() {
+            match arg {
+                ArgSpec::Weight(id) => {
+                    let w = self.weights.get(*id)?;
+                    fixed.insert(pos, self.upload(&w.data, &w.shape)?);
+                }
+                ArgSpec::BlockWeight(field) => block_fields.push((pos, field.clone())),
+                ArgSpec::Input { .. } => input_pos.push(pos),
+            }
+        }
+
+        let depth = spec
+            .block_weights
+            .values()
+            .map(|v| v.len())
+            .next()
+            .unwrap_or(0);
+        let mut per_block = Vec::with_capacity(depth);
+        for blk in 0..depth {
+            let mut m = BTreeMap::new();
+            for (pos, field) in &block_fields {
+                let ids = spec
+                    .block_weights
+                    .get(field)
+                    .ok_or_else(|| anyhow!("missing block weights for {field}"))?;
+                let w = self.weights.get(ids[blk])?;
+                m.insert(*pos, self.upload(&w.data, &w.shape)?);
+            }
+            per_block.push(m);
+        }
+        if !block_fields.is_empty() && per_block.is_empty() {
+            bail!("{name}: block-weight args but no block_weights map");
+        }
+
+        Ok(Stage { spec, exe, fixed, per_block, input_pos })
+    }
+}
+
+/// A host tensor (input or output of a stage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl Stage {
+    /// Number of runtime inputs.
+    pub fn num_inputs(&self) -> usize {
+        self.input_pos.len()
+    }
+
+    /// Expected shape of runtime input `i`.
+    pub fn input_shape(&self, i: usize) -> &[usize] {
+        match &self.spec.args[self.input_pos[i]] {
+            ArgSpec::Input { shape, .. } => shape,
+            _ => unreachable!("input_pos indexes inputs"),
+        }
+    }
+
+    /// Execute with `inputs`; `block` selects the per-block weights for the
+    /// shared attn/mlp stage executables (None for fixed-weight stages).
+    pub fn run(
+        &self,
+        engine: &Engine,
+        inputs: &[Tensor],
+        block: Option<usize>,
+    ) -> Result<Tensor> {
+        if inputs.len() != self.input_pos.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                self.input_pos.len()
+            );
+        }
+        let blk_map = match (block, self.per_block.is_empty()) {
+            (Some(b), false) => Some(
+                self.per_block
+                    .get(b)
+                    .ok_or_else(|| anyhow!("block {b} out of range"))?,
+            ),
+            (None, false) => bail!("{}: stage needs a block index", self.spec.name),
+            (Some(_), true) => bail!("{}: stage takes no block index", self.spec.name),
+            (None, true) => None,
+        };
+
+        // Upload inputs, then assemble the positional arg list.
+        let mut input_bufs = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let expect = self.input_shape(i);
+            if expect != t.shape.as_slice() {
+                bail!(
+                    "{}: input {i} shape {:?} != expected {:?}",
+                    self.spec.name,
+                    t.shape,
+                    expect
+                );
+            }
+            input_bufs.push(engine.upload(&t.data, &t.shape)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.args.len());
+        let mut next_input = 0;
+        for pos in 0..self.spec.args.len() {
+            if let Some(b) = self.fixed.get(&pos) {
+                args.push(b);
+            } else if let Some(b) = blk_map.and_then(|m| m.get(&pos)) {
+                args.push(b);
+            } else {
+                args.push(&input_bufs[next_input]);
+                next_input += 1;
+            }
+        }
+
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let shape = self
+            .spec
+            .outputs
+            .first()
+            .cloned()
+            .unwrap_or_else(|| vec![data.len()]);
+        Ok(Tensor::new(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::OnceLock;
+
+    fn engine() -> &'static Arc<Engine> {
+        static E: OnceLock<Arc<Engine>> = OnceLock::new();
+        E.get_or_init(|| Engine::load(&PathBuf::from("artifacts")).expect("make artifacts"))
+    }
+
+    #[test]
+    fn smoke_executes_correctly() {
+        let e = engine();
+        let stage = e.compile("smoke").unwrap();
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let out = stage.run(e, &[x, y], None).unwrap();
+        // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+        assert_eq!(out.data, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn smoke_pallas_matches_smoke() {
+        // The Pallas kernel lowered into HLO must agree with plain jnp.
+        let e = engine();
+        let a = e.compile("smoke").unwrap();
+        let b = e.compile("smoke_pallas").unwrap();
+        let x = Tensor::new(vec![2, 2], vec![0.5, -1.0, 2.0, 3.5]);
+        let y = Tensor::new(vec![2, 2], vec![1.5, 0.0, -2.0, 1.0]);
+        let ra = a.run(e, &[x.clone(), y.clone()], None).unwrap();
+        let rb = b.run(e, &[x, y], None).unwrap();
+        for (u, v) in ra.data.iter().zip(&rb.data) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let e = engine();
+        let stage = e.compile("smoke").unwrap();
+        let bad = Tensor::new(vec![4], vec![1.0; 4]);
+        let y = Tensor::new(vec![2, 2], vec![1.0; 4]);
+        assert!(stage.run(e, &[bad, y], None).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let e = engine();
+        let stage = e.compile("smoke").unwrap();
+        let x = Tensor::new(vec![2, 2], vec![1.0; 4]);
+        assert!(stage.run(e, &[x], None).is_err());
+    }
+
+    #[test]
+    fn block_index_validation() {
+        let e = engine();
+        let attn = e.compile("deit_t_attn_b1").unwrap();
+        let x = Tensor::zeros(vec![1, 197, 192]);
+        assert!(attn.run(e, &[x.clone()], None).is_err()); // needs block
+        assert!(attn.run(e, &[x], Some(99)).is_err()); // out of range
+    }
+}

@@ -1,0 +1,276 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+//!
+//! The manifest is the contract between the python AOT path and the rust
+//! runtime: every executable's argument schema (weights vs runtime inputs,
+//! per-block weight indirection for the shared attn/mlp stage executables)
+//! and every weight blob's shape + file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One argument of an executable, in positional order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgSpec {
+    /// Fixed weight blob (global weight id).
+    Weight(usize),
+    /// Per-block weight: resolved via `ExeSpec::block_weights[field][block]`.
+    BlockWeight(String),
+    /// Runtime input tensor.
+    Input { name: String, shape: Vec<usize> },
+}
+
+/// One compiled executable (a "stage" the coordinator maps to an acc).
+#[derive(Clone, Debug)]
+pub struct ExeSpec {
+    pub name: String,
+    pub hlo: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<Vec<usize>>,
+    pub model: Option<String>,
+    pub stage: Option<String>,
+    pub batch: Option<usize>,
+    /// field -> weight id per block (length = depth) for BlockWeight args.
+    pub block_weights: BTreeMap<String, Vec<usize>>,
+}
+
+/// One weight blob on disk.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub id: usize,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: PathBuf,
+}
+
+/// Model metadata recorded by the AOT step.
+#[derive(Clone, Debug, Default)]
+pub struct ModelInfo {
+    pub embed_dim: usize,
+    pub num_heads: usize,
+    pub depth: usize,
+    pub tokens: usize,
+    pub img_size: usize,
+    pub num_classes: usize,
+    pub macs_per_image: u64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: Vec<ExeSpec>,
+    pub weights: Vec<WeightSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut weights = Vec::new();
+        for w in j.get("weights").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+            weights.push(WeightSpec {
+                id: w.get("id").and_then(Json::as_usize).context("weight id")?,
+                name: w
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: shape_of(w.get("shape").context("weight shape")?)?,
+                file: dir.join(w.get("file").and_then(Json::as_str).context("file")?),
+            });
+        }
+        // ids must be dense and ordered (the store indexes by id)
+        for (i, w) in weights.iter().enumerate() {
+            if w.id != i {
+                bail!("weight ids not dense at {i}");
+            }
+        }
+
+        let mut executables = Vec::new();
+        for e in j.get("executables").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+            let mut args = Vec::new();
+            for a in e.get("args").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+                let kind = a.get("kind").and_then(Json::as_str).context("arg kind")?;
+                args.push(match kind {
+                    "weight" => {
+                        ArgSpec::Weight(a.get("weight").and_then(Json::as_usize).context("weight ref")?)
+                    }
+                    "block_weight" => ArgSpec::BlockWeight(
+                        a.get("field").and_then(Json::as_str).context("field")?.to_string(),
+                    ),
+                    "input" => ArgSpec::Input {
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or("input")
+                            .to_string(),
+                        shape: shape_of(a.get("shape").context("input shape")?)?,
+                    },
+                    other => bail!("unknown arg kind {other}"),
+                });
+            }
+            let mut block_weights = BTreeMap::new();
+            if let Some(bw) = e.get("block_weights").and_then(Json::as_obj) {
+                for (field, ids) in bw {
+                    let ids: Result<Vec<usize>> = ids
+                        .as_arr()
+                        .context("block weight ids")?
+                        .iter()
+                        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad id")))
+                        .collect();
+                    block_weights.insert(field.clone(), ids?);
+                }
+            }
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(shape_of)
+                .collect::<Result<Vec<_>>>()?;
+            executables.push(ExeSpec {
+                name: e.get("name").and_then(Json::as_str).context("exe name")?.to_string(),
+                hlo: dir.join(e.get("hlo").and_then(Json::as_str).context("hlo path")?),
+                args,
+                outputs,
+                model: e.get("model").and_then(Json::as_str).map(String::from),
+                stage: e.get("stage").and_then(Json::as_str).map(String::from),
+                batch: e.get("batch").and_then(Json::as_usize),
+                block_weights,
+            });
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (name, m) in ms {
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        embed_dim: m.get("embed_dim").and_then(Json::as_usize).unwrap_or(0),
+                        num_heads: m.get("num_heads").and_then(Json::as_usize).unwrap_or(0),
+                        depth: m.get("depth").and_then(Json::as_usize).unwrap_or(0),
+                        tokens: m.get("tokens").and_then(Json::as_usize).unwrap_or(0),
+                        img_size: m.get("img_size").and_then(Json::as_usize).unwrap_or(0),
+                        num_classes: m.get("num_classes").and_then(Json::as_usize).unwrap_or(0),
+                        macs_per_image: m
+                            .get("macs_per_image")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0) as u64,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), executables, weights, models })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))
+    }
+
+    /// Stage executable for (model, stage, batch).
+    pub fn find_stage(&self, model: &str, stage: &str, batch: usize) -> Result<&ExeSpec> {
+        self.executables
+            .iter()
+            .find(|e| {
+                e.model.as_deref() == Some(model)
+                    && e.stage.as_deref() == Some(stage)
+                    && e.batch == Some(batch)
+            })
+            .ok_or_else(|| {
+                anyhow!("no executable for model={model} stage={stage} batch={batch}")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&arts()).expect("run `make artifacts` first");
+        assert!(m.executables.len() >= 10);
+        assert!(m.weights.len() > 100);
+        assert!(m.models.contains_key("deit_t"));
+        let info = &m.models["deit_t"];
+        assert_eq!(info.embed_dim, 192);
+        assert_eq!(info.tokens, 197);
+    }
+
+    #[test]
+    fn smoke_executables_have_two_inputs() {
+        let m = Manifest::load(&arts()).unwrap();
+        for name in ["smoke", "smoke_pallas"] {
+            let e = m.find(name).unwrap();
+            assert_eq!(e.args.len(), 2);
+            assert!(matches!(e.args[0], ArgSpec::Input { .. }));
+        }
+    }
+
+    #[test]
+    fn full_model_arg_schema() {
+        let m = Manifest::load(&arts()).unwrap();
+        let e = m.find("deit_t_full_b1").unwrap();
+        // 152 weights + 1 input
+        let inputs: Vec<_> = e
+            .args
+            .iter()
+            .filter(|a| matches!(a, ArgSpec::Input { .. }))
+            .collect();
+        assert_eq!(inputs.len(), 1);
+        if let ArgSpec::Input { shape, .. } = inputs[0] {
+            assert_eq!(shape, &vec![1, 224, 224, 3]);
+        }
+        assert_eq!(e.outputs, vec![vec![1, 1000]]);
+    }
+
+    #[test]
+    fn attn_stage_has_block_weights() {
+        let m = Manifest::load(&arts()).unwrap();
+        let e = m.find_stage("deit_t", "attn", 1).unwrap();
+        assert!(!e.block_weights.is_empty());
+        for ids in e.block_weights.values() {
+            assert_eq!(ids.len(), 12); // one per block
+        }
+    }
+
+    #[test]
+    fn weight_files_exist() {
+        let m = Manifest::load(&arts()).unwrap();
+        for w in m.weights.iter().take(5) {
+            assert!(w.file.exists(), "{}", w.file.display());
+        }
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let m = Manifest::load(&arts()).unwrap();
+        assert!(m.find("nope").is_err());
+        assert!(m.find_stage("deit_t", "attn", 99).is_err());
+    }
+}

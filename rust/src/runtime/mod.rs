@@ -1,0 +1,31 @@
+//! PJRT serving runtime: load `artifacts/*.hlo.txt`, compile once, execute
+//! from the rust hot path. Python is never invoked here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (executables, arg
+//!   schemas, weight blobs) written by `python/compile/aot.py`.
+//! * [`weights`]  — loads the f32 weight binaries into host arrays.
+//! * [`exec`]     — compiles HLO text on the PJRT CPU client and wraps
+//!   execution: weights are uploaded to device buffers once at load time,
+//!   so a request pays only its input upload + execute + output download.
+
+pub mod exec;
+pub mod manifest;
+pub mod weights;
+
+pub use exec::{Engine, Stage};
+pub use manifest::{ArgSpec, ExeSpec, Manifest};
+pub use weights::WeightStore;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts dir: explicit arg > $SSR_ARTIFACTS > ./artifacts.
+pub fn artifacts_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("SSR_ARTIFACTS") {
+        return p.into();
+    }
+    ARTIFACTS_DIR.into()
+}

@@ -1,0 +1,121 @@
+//! Weight blob loading: f32 little-endian binaries written by `aot.py`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, WeightSpec};
+
+/// A host-resident weight tensor.
+#[derive(Clone, Debug)]
+pub struct Weight {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Weight {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All weight blobs, indexed by weight id.
+#[derive(Debug, Default)]
+pub struct WeightStore {
+    weights: Vec<Weight>,
+}
+
+fn read_f32_le(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!(
+            "{}: {} bytes, expected {} ({} f32)",
+            path.display(),
+            bytes.len(),
+            expect_elems * 4,
+            expect_elems
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for spec in &manifest.weights {
+            weights.push(Self::load_one(spec)?);
+        }
+        Ok(WeightStore { weights })
+    }
+
+    fn load_one(spec: &WeightSpec) -> Result<Weight> {
+        let elems: usize = spec.shape.iter().product();
+        let data = read_f32_le(&spec.file, elems)?;
+        Ok(Weight { name: spec.name.clone(), shape: spec.shape.clone(), data })
+    }
+
+    pub fn get(&self, id: usize) -> Result<&Weight> {
+        self.weights
+            .get(id)
+            .with_context(|| format!("weight id {id} out of range"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Total bytes resident.
+    pub fn bytes(&self) -> usize {
+        self.weights.iter().map(|w| w.data.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn loads_all_weights() {
+        let m = Manifest::load(&PathBuf::from("artifacts")).unwrap();
+        let s = WeightStore::load(&m).unwrap();
+        assert_eq!(s.len(), m.weights.len());
+        // DeiT-T has 5.6M params; full + stage blobs dedup to ~5.7M floats.
+        let total_elems: usize = (0..s.len()).map(|i| s.get(i).unwrap().elems()).sum();
+        assert!(total_elems > 5_000_000, "{total_elems}");
+    }
+
+    #[test]
+    fn shapes_match_data() {
+        let m = Manifest::load(&PathBuf::from("artifacts")).unwrap();
+        let s = WeightStore::load(&m).unwrap();
+        for i in 0..s.len() {
+            let w = s.get(i).unwrap();
+            assert_eq!(w.elems(), w.data.len(), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn values_look_quantized_and_finite() {
+        let m = Manifest::load(&PathBuf::from("artifacts")).unwrap();
+        let s = WeightStore::load(&m).unwrap();
+        let w = s.get(0).unwrap();
+        assert!(w.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn out_of_range_id_errors() {
+        let m = Manifest::load(&PathBuf::from("artifacts")).unwrap();
+        let s = WeightStore::load(&m).unwrap();
+        assert!(s.get(usize::MAX).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Declarative flag parser for the `ssr` binary (offline clap substitute).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+#[derive(Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+#[derive(Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default, takes_value: true });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, takes_value: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let d = f
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse `args` (excluding argv[0]); returns Err with usage on problems.
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        let mut m = Matches::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                m.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                let value = if !spec.takes_value {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("flag --{name} needs a value"))?
+                };
+                m.values.insert(name.to_string(), value);
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("flag --{name} is not a usize"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("flag --{name} is not a number"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    /// Comma-separated list of usizes (`--batches 1,3,6`).
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().expect("bad list element"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .flag("model", Some("deit_t"), "model name")
+            .flag("batch", Some("1"), "batch size")
+            .switch("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Matches, String> {
+        cmd().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = parse(&[]).unwrap();
+        assert_eq!(m.str("model"), "deit_t");
+        assert_eq!(m.usize("batch"), 1);
+        assert!(!m.bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let m = parse(&["--model", "lv_vit_t", "--batch=6", "--verbose"]).unwrap();
+        assert_eq!(m.str("model"), "lv_vit_t");
+        assert_eq!(m.usize("batch"), 6);
+        assert!(m.bool("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let m = parse(&["serve", "--batch", "3", "extra"]).unwrap();
+        assert_eq!(m.positionals, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = parse(&["--help"]).unwrap_err();
+        assert!(err.contains("--model"));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let c = Command::new("t", "t").flag("batches", Some("1,3,6"), "");
+        let m = c.parse(&[]).unwrap();
+        assert_eq!(m.usize_list("batches"), vec![1, 3, 6]);
+    }
+}

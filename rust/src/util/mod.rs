@@ -1,0 +1,21 @@
+//! Build-from-scratch utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate and its
+//! transitive deps are vendored), so the usual ecosystem crates are
+//! reimplemented here as small, tested modules:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256** PRNG (EA search,
+//!   property tests, synthetic inputs),
+//! * [`stats`] — streaming summary statistics (mean/percentiles) for the
+//!   bench harness and coordinator metrics,
+//! * [`json`] — minimal JSON parser/writer (artifact manifest, reports),
+//! * [`cli`] — declarative flag parser for the `ssr` binary,
+//! * [`threadpool`] — fixed thread pool (DSE fan-out, coordinator stages),
+//! * [`prop`] — mini property-testing driver used by invariant tests.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

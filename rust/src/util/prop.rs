@@ -1,0 +1,146 @@
+//! Mini property-testing driver (offline proptest substitute).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it attempts a bounded greedy shrink (caller-provided shrinker)
+//! and panics with the seed + minimal counterexample so the failure replays
+//! deterministically.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0x55AA_1234, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. On failure, greedily shrink
+/// with `shrink` (returns candidate smaller inputs) and panic with context.
+pub fn check_with<T, G, P, S>(cfg: &Config, name: &str, mut gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink: first failing candidate wins, repeat
+            let mut cur = input.clone();
+            let mut cur_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&cur) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, case {case}):\n  \
+                 input: {cur:?}\n  error: {cur_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check<T, G, P>(cfg: &Config, name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_with(cfg, name, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for Vec<usize>-like assignment genomes: try removing
+/// tail elements and halving values.
+pub fn shrink_usize_vec(v: &Vec<usize>) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() - 1].to_vec());
+        out.push(v[..v.len() / 2].to_vec());
+    }
+    for (i, &x) in v.iter().enumerate() {
+        if x > 0 {
+            let mut c = v.clone();
+            c[i] = x / 2;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            &Config { cases: 64, ..Default::default() },
+            "sum-commutes",
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_name() {
+        check(
+            &Config { cases: 4, ..Default::default() },
+            "always-fails",
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinker_reduces_counterexample() {
+        // Property: all elements < 7. Gen produces some >= 7; shrunk failure
+        // should still violate, and halving drives elements toward 7's
+        // minimal violator.
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                &Config { cases: 32, seed: 9, ..Default::default() },
+                "small-elems",
+                |r| vec![r.usize_below(20), r.usize_below(20)],
+                |v: &Vec<usize>| {
+                    if v.iter().all(|&x| x < 7) {
+                        Ok(())
+                    } else {
+                        Err(format!("{v:?} has elem >= 7"))
+                    }
+                },
+                shrink_usize_vec,
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("small-elems"));
+        // the shrunk vector should be short
+        assert!(msg.contains("input: ["));
+    }
+}

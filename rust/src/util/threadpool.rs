@@ -1,0 +1,147 @@
+//! Fixed-size thread pool (offline rayon/tokio substitute).
+//!
+//! Used by the DSE to evaluate EA populations in parallel and by the
+//! coordinator for background work. Plain `std::thread` + channel fan-out;
+//! `scope_map` provides the only primitive the hot paths need: parallel map
+//! over a slice with deterministic output order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived pool of worker threads pulling jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("ssr-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map preserving input order, using scoped threads (no 'static
+/// bound on inputs). Chunks the work across at most `threads` workers.
+pub fn scope_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let chunk = items.len().div_ceil(threads);
+    thread::scope(|s| {
+        for (ci, (in_chunk, out_chunk)) in
+            items.chunks(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let f = &f;
+            thread::Builder::new()
+                .name(format!("ssr-map-{ci}"))
+                .spawn_scoped(s, move || {
+                    for (x, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *slot = Some(f(x));
+                    }
+                })
+                .expect("spawn scoped worker");
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Default parallelism: physical cores (capped — DSE workloads are compute
+/// bound and oversubscription only adds scheduler noise).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = scope_map(&xs, 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_single_item() {
+        assert_eq!(scope_map(&[5u32], 8, |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let e: Vec<u32> = vec![];
+        assert!(scope_map(&e, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn scope_map_threads_exceed_items() {
+        let xs = [1, 2, 3];
+        assert_eq!(scope_map(&xs, 64, |x| x * x), vec![1, 4, 9]);
+    }
+}

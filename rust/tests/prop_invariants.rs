@@ -1,0 +1,224 @@
+//! Property-based tests over DSE/scheduler/simulator invariants, using the
+//! in-repo `util::prop` mini-framework with deterministic seeds.
+
+use ssr::analytical::{AccConfig, Calib, Features};
+use ssr::arch::vck190;
+use ssr::dse::eval::build_design;
+use ssr::dse::pareto::{best_under, pareto_front, Point};
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T, ALL_CLASSES};
+use ssr::sim;
+use ssr::util::prop::{check, check_with, shrink_usize_vec, Config};
+use ssr::util::rng::Rng;
+
+fn rand_assignment(r: &mut Rng) -> Vec<usize> {
+    let nacc = 1 + r.usize_below(8);
+    (0..ALL_CLASSES.len()).map(|_| r.usize_below(nacc)).collect()
+}
+
+#[test]
+fn prop_normalize_idempotent_and_canonical() {
+    check_with(
+        &Config { cases: 200, ..Default::default() },
+        "normalize-idempotent",
+        rand_assignment,
+        |v| {
+            let a = Assignment::new(v.clone());
+            let mut b = a.clone();
+            b.normalize();
+            if a.acc_of != b.acc_of {
+                return Err(format!("not idempotent: {:?} -> {:?}", a.acc_of, b.acc_of));
+            }
+            // canonical form: first appearance order => acc_of[0] == 0 and
+            // every id <= 1 + max of earlier ids
+            let mut max_seen = 0usize;
+            for (i, &x) in a.acc_of.iter().enumerate() {
+                if i == 0 && x != 0 {
+                    return Err("first class not acc 0".into());
+                }
+                if x > max_seen + 1 {
+                    return Err(format!("gap in ids at {i}: {:?}", a.acc_of));
+                }
+                max_seen = max_seen.max(x);
+            }
+            Ok(())
+        },
+        shrink_usize_vec,
+    );
+}
+
+#[test]
+fn prop_classes_on_partitions_exactly() {
+    check(
+        &Config { cases: 100, ..Default::default() },
+        "classes-partition",
+        rand_assignment,
+        |v| {
+            let a = Assignment::new(v.clone());
+            let mut seen = vec![false; ALL_CLASSES.len()];
+            for acc in 0..a.nacc() {
+                for c in a.classes_on(acc) {
+                    if seen[c.index()] {
+                        return Err(format!("class {c:?} on two accs"));
+                    }
+                    seen[c.index()] = true;
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("class on no acc".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_design_eval_invariants() {
+    // For any feasible assignment: latency > 0, monotone in batch, tops
+    // below platform peak, sim within 25% of analytical.
+    let platform = vck190();
+    let calib = Calib::default();
+    let graph = vit_graph(&DEIT_T);
+    check_with(
+        &Config { cases: 30, ..Default::default() },
+        "design-eval-invariants",
+        rand_assignment,
+        |v| {
+            let a = Assignment::new(v.clone());
+            let Some(ev) =
+                build_design(&platform, &calib, &graph, &a, Features::all(), true)
+            else {
+                return Ok(()); // infeasible is allowed
+            };
+            let e1 = ev.evaluate(&platform, &graph, 1);
+            let e6 = ev.evaluate(&platform, &graph, 6);
+            if !(e1.latency_s > 0.0) || !(e6.latency_s >= e1.latency_s) {
+                return Err(format!("latency not monotone: {} vs {}", e1.latency_s, e6.latency_s));
+            }
+            if e6.tops > platform.peak_int8_tops() {
+                return Err(format!("tops {} above peak", e6.tops));
+            }
+            let s = sim::simulate(&platform, &ev, &graph, 6);
+            let err = (e6.latency_s - s.makespan_s).abs() / s.makespan_s;
+            if err > 0.25 {
+                return Err(format!("sim diverges {err:.2} for {:?}", a.acc_of));
+            }
+            // busy seconds conservation: sim busy == sum of node busy x batch
+            let node_busy: f64 = ev.node_costs.iter().map(|c| c.busy_s()).sum();
+            let sim_busy: f64 = s.acc_busy_s.iter().sum();
+            if (sim_busy - 6.0 * node_busy).abs() > 1e-9 {
+                return Err(format!("busy not conserved: {sim_busy} vs {}", 6.0 * node_busy));
+            }
+            Ok(())
+        },
+        shrink_usize_vec,
+    );
+}
+
+#[test]
+fn prop_pareto_front_sound_and_complete() {
+    check(
+        &Config { cases: 200, ..Default::default() },
+        "pareto-front",
+        |r| {
+            let n = 1 + r.usize_below(20);
+            (0..n)
+                .map(|_| (1.0 + 10.0 * r.f64(), 1.0 + 30.0 * r.f64()))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |pts| {
+            let points: Vec<Point> = pts
+                .iter()
+                .map(|&(l, t)| Point { latency_ms: l, tops: t, batch: 1, nacc: 1 })
+                .collect();
+            let front = pareto_front(&points);
+            // soundness: no front point dominated by any input point
+            for f in &front {
+                if points.iter().any(|p| p.dominates(f)) {
+                    return Err(format!("dominated point on front: {f:?}"));
+                }
+            }
+            // completeness: every input point is dominated-or-equal by a front point
+            for p in &points {
+                let covered = front
+                    .iter()
+                    .any(|f| f.latency_ms <= p.latency_ms && f.tops >= p.tops);
+                if !covered {
+                    return Err(format!("point not covered: {p:?}"));
+                }
+            }
+            // best_under consistency: optimum under any cut lies on the front
+            let cut = 1.0 + 10.0 * 0.5;
+            if let Some(b) = best_under(&points, cut) {
+                let fb = best_under(&front, cut).unwrap();
+                if (b.tops - fb.tops).abs() > 1e-12 {
+                    return Err("front lost the constrained optimum".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alignment_symmetric_in_divisibility() {
+    check(
+        &Config { cases: 300, ..Default::default() },
+        "alignment-divisibility",
+        |r| {
+            let vals = [1u64, 2, 3, 4, 6, 8, 12, 16];
+            (
+                *r.choose(&vals),
+                *r.choose(&vals),
+                *r.choose(&vals),
+                *r.choose(&vals),
+            )
+        },
+        |&(pa, pc, ca, cb)| {
+            let prod = AccConfig { h1: 8, w1: 8, w2: 8, a: pa, b: 1, c: pc, part: (1, 1, 1) };
+            let cons = AccConfig { h1: 8, w1: 8, w2: 8, a: ca, b: cb, c: 1, part: (1, 1, 1) };
+            let aligned = prod.aligned_with(&cons);
+            let expect = (pa % ca == 0 || ca % pa == 0) && (pc % cb == 0 || cb % pc == 0);
+            if aligned != expect {
+                return Err(format!("alignment({pa},{pc} vs {ca},{cb}) = {aligned}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_batch_done_monotone_and_bounded() {
+    let platform = vck190();
+    let calib = Calib::default();
+    let graph = vit_graph(&DEIT_T);
+    check(
+        &Config { cases: 15, ..Default::default() },
+        "sim-batch-monotone",
+        |r| (rand_assignment(r), 1 + r.usize_below(6)),
+        |(v, batches)| {
+            let a = Assignment::new(v.clone());
+            let Some(ev) =
+                build_design(&platform, &calib, &graph, &a, Features::all(), true)
+            else {
+                return Ok(());
+            };
+            let s = sim::simulate(&platform, &ev, &graph, *batches);
+            for w in s.batch_done_s.windows(2) {
+                if w[1] < w[0] {
+                    return Err(format!("batch completion not monotone: {:?}", s.batch_done_s));
+                }
+            }
+            let max_busy = s.acc_busy_s.iter().cloned().fold(0.0f64, f64::max);
+            if s.makespan_s < max_busy - 1e-12 {
+                return Err("makespan below busiest acc".into());
+            }
+            for &u in &s.acc_util {
+                if !(0.0..=1.0 + 1e-9).contains(&u) {
+                    return Err(format!("util out of range: {u}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

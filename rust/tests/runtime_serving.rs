@@ -1,0 +1,149 @@
+//! PJRT runtime integration tests (require `make artifacts`).
+//!
+//! These exercise the full build-time -> serve-time contract: manifest,
+//! weight blobs, HLO text compilation, per-block weight indirection, and —
+//! crucially — that the Pallas-kernel block artifact (L1 lowered into HLO)
+//! matches the plain-jnp stage executables numerically on the PJRT CPU.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::StageAssign;
+use ssr::runtime::exec::{Engine, Tensor};
+
+fn engine() -> Arc<Engine> {
+    static E: OnceLock<Arc<Engine>> = OnceLock::new();
+    Arc::clone(E.get_or_init(|| {
+        Engine::load(&PathBuf::from("artifacts")).expect("run `make artifacts` first")
+    }))
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    assert_eq!(a.len(), b.len());
+    let max = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    if max > tol {
+        return Err(format!("max diff {max} > {tol}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn pallas_block_artifact_matches_jnp_stages() {
+    // deit_t_block_pallas_b1 is the whole transformer block built from the
+    // L1 Pallas kernels (matmul/softmax/layernorm/gelu) and lowered into
+    // HLO. Running it must equal attn_b1 + mlp_b1 (plain-jnp path) on the
+    // same block weights.
+    let e = engine();
+    let pallas = e.compile("deit_t_block_pallas_b1").unwrap();
+    let attn = e.compile("deit_t_attn_b1").unwrap();
+    let mlp = e.compile("deit_t_mlp_b1").unwrap();
+
+    let mut rng = ssr::util::rng::Rng::new(99);
+    let x = Tensor::new(
+        vec![1, 197, 192],
+        (0..197 * 192).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect(),
+    );
+    for block in [0usize, 5, 11] {
+        let want = mlp
+            .run(&e, &[attn.run(&e, &[x.clone()], Some(block)).unwrap()], Some(block))
+            .unwrap();
+        let got = pallas.run(&e, &[x.clone()], Some(block)).unwrap();
+        close(&got.data, &want.data, 5e-3).unwrap_or_else(|m| {
+            panic!("block {block}: pallas vs jnp {m}")
+        });
+    }
+}
+
+#[test]
+fn full_model_equals_staged_pipeline_b1_and_b6() {
+    let e = engine();
+    let seq = SequentialServer::new(Arc::clone(&e), "deit_t", &[1, 6]).unwrap();
+    // b1 through the 4-stage pipeline
+    let pipe = PipelineServer::new(Arc::clone(&e), "deit_t", &StageAssign::spatial(), 1).unwrap();
+    let img = synth_images(1, 224, 3);
+    let a = seq.run_batch(1, &img).unwrap();
+    let (_, outs) = pipe.serve(vec![img]).unwrap();
+    close(&a.data, &outs[0].data, 2e-3).unwrap();
+
+    // b6 through the b6-stage pipeline
+    let pipe6 = PipelineServer::new(Arc::clone(&e), "deit_t", &StageAssign::spatial(), 6).unwrap();
+    let img6 = synth_images(6, 224, 4);
+    let a6 = seq.run_batch(6, &img6).unwrap();
+    let (_, outs6) = pipe6.serve(vec![img6]).unwrap();
+    close(&a6.data, &outs6[0].data, 2e-3).unwrap();
+}
+
+#[test]
+fn batch_rows_independent_on_runtime() {
+    // Row 0 of a batch-6 run equals a batch-1 run of the same image.
+    let e = engine();
+    let seq = SequentialServer::new(Arc::clone(&e), "deit_t", &[1, 6]).unwrap();
+    let img6 = synth_images(6, 224, 7);
+    let img1 = Tensor::new(vec![1, 224, 224, 3], img6.data[..224 * 224 * 3].to_vec());
+    let out6 = seq.run_batch(6, &img6).unwrap();
+    let out1 = seq.run_batch(1, &img1).unwrap();
+    close(&out6.data[..1000], &out1.data, 2e-3).unwrap();
+}
+
+#[test]
+fn logits_deterministic_across_runs() {
+    let e = engine();
+    let seq = SequentialServer::new(Arc::clone(&e), "deit_t", &[1]).unwrap();
+    let img = synth_images(1, 224, 11);
+    let a = seq.run_batch(1, &img).unwrap();
+    let b = seq.run_batch(1, &img).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn pipeline_interleaves_many_requests() {
+    let e = engine();
+    let pipe = PipelineServer::new(Arc::clone(&e), "deit_t", &StageAssign::spatial(), 1).unwrap();
+    let imgs: Vec<_> = (0..8).map(|i| synth_images(1, 224, 100 + i)).collect();
+    let expected: Vec<_> = {
+        let seq = SequentialServer::new(Arc::clone(&e), "deit_t", &[1]).unwrap();
+        imgs.iter().map(|im| seq.run_batch(1, im).unwrap()).collect()
+    };
+    let (report, outs) = pipe.serve(imgs).unwrap();
+    assert_eq!(report.requests, 8);
+    for (got, want) in outs.iter().zip(&expected) {
+        close(&got.data, &want.data, 2e-3).unwrap();
+    }
+}
+
+#[test]
+fn all_manifest_models_have_required_stages() {
+    let e = engine();
+    for model in e.manifest.models.keys() {
+        for stage in ["embed", "attn", "mlp", "head"] {
+            e.manifest
+                .find_stage(model, stage, 1)
+                .unwrap_or_else(|_| panic!("{model} missing stage {stage}"));
+        }
+        e.manifest.find(&format!("{model}_full_b1")).unwrap();
+    }
+}
+
+#[test]
+fn batching_server_matches_individual_runs() {
+    use ssr::coordinator::batcher::BatchingServer;
+    let e = engine();
+    let seq = SequentialServer::new(Arc::clone(&e), "deit_t", &[1, 3, 6]).unwrap();
+    let expected: Vec<Tensor> = (0..7)
+        .map(|i| seq.run_batch(1, &synth_images(1, 224, 200 + i)).unwrap())
+        .collect();
+    let batcher = BatchingServer::new(seq);
+    assert_eq!(batcher.policy().plan(7), vec![6, 1]);
+    let reqs: Vec<Tensor> = (0..7).map(|i| synth_images(1, 224, 200 + i)).collect();
+    let (report, outs) = batcher.serve(&reqs).unwrap();
+    assert_eq!(report.requests, 7);
+    assert_eq!(outs.len(), 7);
+    for (got, want) in outs.iter().zip(&expected) {
+        close(&got.data, &want.data, 2e-3).unwrap();
+    }
+}
