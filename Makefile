@@ -1,0 +1,13 @@
+# Build-time artifact generation (python AOT -> HLO text + weights) and the
+# tier-1 verify loop.
+
+.PHONY: artifacts test verify
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+test:
+	cargo test -q
+
+verify:
+	cargo build --release && cargo test -q

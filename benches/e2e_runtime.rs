@@ -9,6 +9,8 @@ use std::sync::Arc;
 use ssr::bench::{fmt_s, Table};
 use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
 use ssr::coordinator::StageAssign;
+use ssr::dse::Assignment;
+use ssr::plan::ExecutionPlan;
 use ssr::runtime::exec::Engine;
 
 fn main() -> anyhow::Result<()> {
@@ -51,6 +53,31 @@ fn main() -> anyhow::Result<()> {
         let (rep, _) = pipe.serve(imgs)?;
         t.row(&[
             name.to_string(),
+            rep.requests.to_string(),
+            fmt_s(rep.latency.p50()),
+            fmt_s(rep.latency.p99()),
+            format!("{:.2}", rep.throughput_rps()),
+            format!("{:.4}", rep.effective_tops()),
+        ]);
+    }
+
+    // Plan-driven 8-class hybrids (DSE -> ExecutionPlan -> serve): designs
+    // the 4-stage projection cannot represent. Falls back to the coarsened
+    // shim (with a log line) on manifests without class-granular stages.
+    let depth = engine.manifest.models["deit_t"].depth;
+    for (name, genome) in [
+        ("plan 5-acc (attn split)", vec![0, 1, 2, 2, 1, 3, 4, 0]),
+        ("plan 8-acc (full spatial)", (0..8).collect::<Vec<_>>()),
+    ] {
+        let a = Assignment::new(genome);
+        let plan = ExecutionPlan::from_depth("deit_t", depth, &a, 1);
+        let pipe = PipelineServer::from_plan(Arc::clone(&engine), &plan)?;
+        let warm: Vec<_> = (0..2).map(|i| synth_images(1, 224, i)).collect();
+        let _ = pipe.serve(warm)?;
+        let imgs: Vec<_> = (0..requests).map(|i| synth_images(1, 224, i as u64)).collect();
+        let (rep, _) = pipe.serve(imgs)?;
+        t.row(&[
+            format!("{name} [{} accs]", pipe.plan().nacc),
             rep.requests.to_string(),
             fmt_s(rep.latency.p50()),
             fmt_s(rep.latency.p99()),

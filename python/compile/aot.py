@@ -277,6 +277,28 @@ def emit_model(w: ArtifactWriter, cfg: M.ModelConfig, batches: Sequence[int],
                 },
             )
 
+        # Class-granular stage executables (one per SSR LayerClass): what
+        # lets the rust coordinator serve an 8-class ExecutionPlan directly
+        # instead of coarsening it to the four fused stages. Carry-state
+        # layouts are documented at model.CLASS_STAGES. The weight-free
+        # attention BMMs compile with no block_weight args.
+        for stage, fields, fwd, in_width in M.CLASS_STAGES:
+            xin = jax.ShapeDtypeStruct((b, t, in_width(cfg)), jnp.float32)
+            w.add_executable(
+                name=f"{cfg.name}_{stage}_b{b}",
+                fn=make_sub(list(fields), fwd),
+                args=[{"kind": "block_weight", "field": f} for f in fields]
+                + [{"kind": "input", "name": "x", "shape": list(xin.shape)}],
+                arrays=[block0[f] for f in fields] + [xin],
+                outputs_of=make_sub(list(fields), fwd),
+                extra={
+                    "model": cfg.name,
+                    "stage": stage,
+                    "batch": b,
+                    "block_weights": {f: blk_weight_ids[f] for f in fields},
+                },
+            )
+
         def head_fn(*args):
             ws, x = args[:-1], args[-1]
             p = jax.tree_util.tree_unflatten(head_treedef, list(ws))

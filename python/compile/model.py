@@ -218,6 +218,117 @@ def block_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=Fal
     return mlp_fwd(bp, attn_fwd(bp, x, cfg, use_pallas), cfg, use_pallas)
 
 
+# ---------------------------------------------------------------------------
+# Class-granular stages (one executable per SSR LayerClass).
+#
+# The 8-class DSE assigns each MM node class (qkv/bmm0/bmm1/proj/fc1/fc2)
+# its own accelerator; serving such an ExecutionPlan needs one executable
+# per class. Each function is a single-tensor-in / single-tensor-out step so
+# the rust pipeline can forward one activation between workers: state that a
+# later class needs (the residual input, V, attention probabilities) rides
+# along concatenated on the feature axis. The chain
+#
+#   qkv -> bmm0 -> bmm1 -> proj -> fc1 -> fc2
+#
+# computes exactly attn_fwd followed by mlp_fwd (pytest enforces this).
+#
+# Carry layouts on the feature axis (D = embed_dim, h = heads, T = tokens):
+#   qkv  : (B,T,D)            -> (B,T,4D)       [x | qkv]
+#   bmm0 : (B,T,4D)           -> (B,T,2D+hT)    [x | v | probs]
+#   bmm1 : (B,T,2D+hT)        -> (B,T,2D)       [x | ctx]
+#   proj : (B,T,2D)           -> (B,T,D)        x + proj(ctx)
+#   fc1  : (B,T,D)            -> (B,T,D+4D)     [x | gelu(fc1(ln2 x))]
+#   fc2  : (B,T,D+4D)         -> (B,T,D)        x + fc2(y)
+# ---------------------------------------------------------------------------
+
+
+def qkv_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """LN1 + QKV projection; carries the sublayer input for the residual."""
+    b, t, d = x.shape
+    y = _layernorm(x.reshape(b * t, d), bp["ln1_g"], bp["ln1_b"], use_pallas)
+    qkv = _mm_pinned(y, bp["wqkv"], use_pallas).reshape(b, t, 3 * d) + bp["bqkv"]
+    return jnp.concatenate([x, qkv], axis=-1)
+
+
+def bmm0_fwd(bp: Dict[str, Any], s: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Scores = softmax(Q K^T / sqrt(dh)) per head (weight-free, HMM-type1)."""
+    b, t, _ = s.shape
+    d, h, dh = cfg.embed_dim, cfg.num_heads, cfg.head_dim
+    x, qkv = s[..., :d], s[..., d:]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):  # (B, T, D) -> (B, h, T, dh)
+        return z.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, s.dtype))
+    scores = _bmm(heads(q), jnp.swapaxes(heads(k), -1, -2), use_pallas) * scale
+    probs = _softmax(scores, use_pallas)  # (B, h, T, T)
+    probs2 = probs.transpose(0, 2, 1, 3).reshape(b, t, h * t)
+    return jnp.concatenate([x, v, probs2], axis=-1)
+
+
+def bmm1_fwd(bp: Dict[str, Any], s: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Context = probs @ V per head, heads merged back (weight-free)."""
+    b, t, _ = s.shape
+    d, h, dh = cfg.embed_dim, cfg.num_heads, cfg.head_dim
+    x, v, probs2 = s[..., :d], s[..., d : 2 * d], s[..., 2 * d :]
+    probs = probs2.reshape(b, t, h, t).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    ctx = _bmm(probs, vh, use_pallas)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return jnp.concatenate([x, ctx], axis=-1)
+
+
+def proj_fwd(bp: Dict[str, Any], s: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """Output projection + the attention sublayer residual."""
+    d = cfg.embed_dim
+    x, ctx = s[..., :d], s[..., d:]
+    return x + _dense(ctx, bp["wproj"], bp["bproj"], use_pallas)
+
+
+def fc1_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """LN2 + FC1 + GELU; carries the sublayer input for the residual."""
+    b, t, d = x.shape
+    y = _layernorm(x.reshape(b * t, d), bp["ln2_g"], bp["ln2_b"], use_pallas)
+    y = _mm_pinned(y, bp["wfc1"], use_pallas) + bp["bfc1"]
+    y = _gelu(y, use_pallas).reshape(b, t, -1)
+    return jnp.concatenate([x, y], axis=-1)
+
+
+def fc2_fwd(bp: Dict[str, Any], s: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """FC2 + the MLP sublayer residual."""
+    b, t, w = s.shape
+    d = cfg.embed_dim
+    x, y = s[..., :d], s[..., d:]
+    y2 = _mm_pinned(y.reshape(b * t, w - d), bp["wfc2"], use_pallas) + bp["bfc2"]
+    return x + y2.reshape(b, t, d)
+
+
+# Per-class block-weight fields and carry widths (input feature dim as a
+# function of cfg), consumed by the AOT path.
+CLASS_STAGES = (
+    ("qkv", ("ln1_g", "ln1_b", "wqkv", "bqkv"), qkv_fwd,
+     lambda cfg: cfg.embed_dim),
+    ("bmm0", (), bmm0_fwd,
+     lambda cfg: 4 * cfg.embed_dim),
+    ("bmm1", (), bmm1_fwd,
+     lambda cfg: 2 * cfg.embed_dim + cfg.num_heads * cfg.tokens),
+    ("proj", ("wproj", "bproj"), proj_fwd,
+     lambda cfg: 2 * cfg.embed_dim),
+    ("fc1", ("ln2_g", "ln2_b", "wfc1", "bfc1"), fc1_fwd,
+     lambda cfg: cfg.embed_dim),
+    ("fc2", ("wfc2", "bfc2"), fc2_fwd,
+     lambda cfg: (1 + cfg.mlp_ratio) * cfg.embed_dim),
+)
+
+
+def class_chain_fwd(bp: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
+    """One block via the six class-granular stages (== block_fwd)."""
+    for _, _, fwd, _ in CLASS_STAGES:
+        x = fwd(bp, x, cfg, use_pallas)
+    return x
+
+
 def head_fwd(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, use_pallas=False):
     """Final LayerNorm + classifier on the cls token."""
     b, t, d = x.shape

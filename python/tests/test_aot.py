@@ -55,6 +55,21 @@ class TestManifest:
         for field, ids in attn["block_weights"].items():
             assert len(ids) == TINY.depth, field
 
+    def test_class_stage_executables_present_with_carry_widths(self, emitted):
+        # One executable per SSR LayerClass, input width per the
+        # CLASS_STAGES carry contract; the weight-free attention BMMs carry
+        # no block weights (the rust runtime runs them without a block idx).
+        m = load_manifest(emitted)
+        by_name = {e["name"]: e for e in m["executables"]}
+        for stage, fields, _, in_width in M.CLASS_STAGES:
+            e = by_name[f"tiny_{stage}_b1"]
+            assert e["stage"] == stage and e["batch"] == 1
+            (inp,) = [a for a in e["args"] if a["kind"] == "input"]
+            assert inp["shape"] == [1, TINY.tokens, in_width(TINY)], stage
+            assert set(e.get("block_weights", {})) == set(fields), stage
+            if not fields:
+                assert e["args"] == [inp], f"{stage} must be weight-free"
+
     def test_input_args_have_shapes(self, emitted):
         m = load_manifest(emitted)
         full = next(e for e in m["executables"] if e["name"] == "tiny_full_b1")

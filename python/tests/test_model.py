@@ -82,6 +82,27 @@ class TestForward:
         full = M.model_fwd(tiny_params, tiny_img, TINY)
         np.testing.assert_allclose(staged, full, rtol=1e-5, atol=1e-5)
 
+    def test_class_chain_equals_block(self, tiny_params, tiny_img):
+        # The six class-granular stages (qkv -> bmm0 -> bmm1 -> proj -> fc1
+        # -> fc2, carry-state convention) must reproduce the fused block
+        # exactly: this is what lets the rust coordinator serve an 8-class
+        # ExecutionPlan without changing numerics.
+        x = M.embed_fwd(tiny_params["embed"], tiny_img, TINY)
+        bp = tiny_params["blocks"][0]
+        fused = M.block_fwd(bp, x, TINY)
+        chained = M.class_chain_fwd(bp, x, TINY)
+        np.testing.assert_allclose(chained, fused, rtol=1e-5, atol=1e-5)
+
+    def test_class_stage_carry_widths(self, tiny_params, tiny_img):
+        # Each class stage's input width matches the CLASS_STAGES contract
+        # the AOT path compiles against.
+        x = M.embed_fwd(tiny_params["embed"], tiny_img, TINY)
+        bp = tiny_params["blocks"][0]
+        for name, _, fwd, in_width in M.CLASS_STAGES:
+            assert x.shape[-1] == in_width(TINY), name
+            x = fwd(bp, x, TINY)
+        assert x.shape[-1] == TINY.embed_dim  # fc2 closes the block
+
     def test_block_fwd_is_attn_then_mlp(self, tiny_params, tiny_img):
         x = M.embed_fwd(tiny_params["embed"], tiny_img, TINY)
         bp = tiny_params["blocks"][0]

@@ -59,6 +59,15 @@ impl BatchPolicy {
     }
 }
 
+/// Source request index for each row of a packed `b`-deep batch launch
+/// starting at request `next` of `n` total: real rows map 1:1, padding rows
+/// repeat the last real request (their logits are discarded after the run).
+pub fn row_sources(next: usize, n: usize, b: usize) -> Vec<usize> {
+    assert!(next < n, "launch must cover at least one real request");
+    let real = b.min(n - next);
+    (0..b).map(|i| next + i.min(real - 1)).collect()
+}
+
 /// Batching front-end over a [`SequentialServer`].
 pub struct BatchingServer {
     seq: SequentialServer,
@@ -98,9 +107,8 @@ impl BatchingServer {
             // pack b images (padding by repeating the last one)
             let mut data = Vec::with_capacity(b * img_elems);
             let real = b.min(n - next);
-            for i in 0..b {
-                let src = &requests[next + i.min(real - 1)];
-                data.extend_from_slice(&src.data);
+            for &src_idx in &row_sources(next, n, b) {
+                data.extend_from_slice(&requests[src_idx].data);
             }
             let batch_tensor = Tensor::new(vec![b, img, img, 3], data);
             let t = std::time::Instant::now();
@@ -171,5 +179,144 @@ mod tests {
     fn dedup_and_sort() {
         let p = BatchPolicy::new(vec![6, 6, 1, 3, 1]);
         assert_eq!(p.choose(4), 3);
+    }
+
+    // ---- property tests (util::prop mini-framework) ----------------------
+
+    use crate::util::prop::{check, Config};
+
+    /// Random compiled-size set + queue length.
+    fn gen_case(r: &mut crate::util::rng::Rng) -> (Vec<usize>, usize) {
+        let n_sizes = 1 + r.usize_below(4);
+        let sizes: Vec<usize> = (0..n_sizes).map(|_| 1 + r.usize_below(8)).collect();
+        let queued = 1 + r.usize_below(64);
+        (sizes, queued)
+    }
+
+    #[test]
+    fn prop_choose_is_compiled_and_covers_or_fills() {
+        check(
+            &Config { cases: 300, ..Default::default() },
+            "choose-compiled-covers",
+            gen_case,
+            |(sizes, queued)| {
+                let p = BatchPolicy::new(sizes.clone());
+                let b = p.choose(*queued);
+                let mut s = sizes.clone();
+                s.sort_unstable();
+                s.dedup();
+                if !s.contains(&b) {
+                    return Err(format!("chose uncompiled size {b}"));
+                }
+                let min = *s.first().unwrap();
+                if *queued >= min && b > *queued {
+                    return Err(format!(
+                        "padded (b={b}) although queue {queued} fills size {min}"
+                    ));
+                }
+                if *queued < min && b != min {
+                    return Err(format!(
+                        "tail of {queued} must take the smallest executable {min}, got {b}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_plan_covers_queue_with_bounded_padding() {
+        check(
+            &Config { cases: 300, ..Default::default() },
+            "plan-covers-bounded",
+            gen_case,
+            |(sizes, queued)| {
+                let p = BatchPolicy::new(sizes.clone());
+                let plan = p.plan(*queued);
+                let total: usize = plan.iter().sum();
+                if total < *queued {
+                    return Err(format!("plan {plan:?} under-covers queue {queued}"));
+                }
+                let max = *sizes.iter().max().unwrap();
+                if total - *queued >= max {
+                    return Err(format!("plan {plan:?} over-pads queue {queued}"));
+                }
+                // every launch must have at least one real request: the
+                // partial sum before the last launch stays below the queue
+                let before_last: usize = total - plan.last().unwrap();
+                if before_last >= *queued {
+                    return Err(format!("plan {plan:?} launches an all-padding batch"));
+                }
+                // the final launch covers the whole remaining tail
+                if before_last + plan.last().unwrap() < *queued {
+                    return Err(format!("plan {plan:?} leaves a tail"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_row_sources_identity_then_repeat_last() {
+        check(
+            &Config { cases: 300, ..Default::default() },
+            "row-sources-padding",
+            |r| {
+                let n = 1 + r.usize_below(32);
+                let next = r.usize_below(n);
+                let b = 1 + r.usize_below(8);
+                (next, n, b)
+            },
+            |&(next, n, b)| {
+                let rows = row_sources(next, n, b);
+                let real = b.min(n - next);
+                if rows.len() != b {
+                    return Err(format!("{} rows for batch {b}", rows.len()));
+                }
+                for (i, &src) in rows.iter().enumerate() {
+                    let want = if i < real { next + i } else { next + real - 1 };
+                    if src != want {
+                        return Err(format!(
+                            "row {i} sources request {src}, want {want} (real={real})"
+                        ));
+                    }
+                    if src >= n {
+                        return Err(format!("row {i} out of range: {src} >= {n}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_plan_rows_discard_exactly_the_padding() {
+        // Walking a plan with row_sources reconstructs every request exactly
+        // once among the real rows — padded rows never surface as outputs.
+        check(
+            &Config { cases: 200, ..Default::default() },
+            "plan-rows-partition",
+            gen_case,
+            |(sizes, queued)| {
+                let p = BatchPolicy::new(sizes.clone());
+                let mut next = 0usize;
+                let mut served = vec![0usize; *queued];
+                for b in p.plan(*queued) {
+                    let rows = row_sources(next, *queued, b);
+                    let real = b.min(*queued - next);
+                    for &src in rows.iter().take(real) {
+                        served[src] += 1;
+                    }
+                    next += real;
+                }
+                if next != *queued {
+                    return Err(format!("served {next} of {queued}"));
+                }
+                if served.iter().any(|&c| c != 1) {
+                    return Err(format!("requests not served exactly once: {served:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 }

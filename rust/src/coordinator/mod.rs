@@ -1,4 +1,4 @@
-//! L3 serving coordinator: execute a Layer→Acc schedule on real compiled
+//! L3 serving coordinator: execute an [`ExecutionPlan`] on real compiled
 //! PJRT stage executables.
 //!
 //! This is the runtime half of the reproduction: where the paper programs
@@ -9,10 +9,16 @@
 //!
 //! * **sequential** — one worker owning the monolithic `full_bN`
 //!   executable (one acc runs every layer);
-//! * **spatial**    — one worker per stage (embed / attn / mlp / head),
-//!   images pipelined across them (Fig. 1b);
-//! * **hybrid**     — any grouping of stages onto workers (Fig. 1c),
-//!   derived from a DSE assignment via [`StageAssign::from_assignment`].
+//! * **spatial**    — one worker per layer class, images pipelined across
+//!   them (Fig. 1b);
+//! * **hybrid**     — any grouping of the 8 layer classes onto 1..=8
+//!   workers (Fig. 1c), served directly from the DSE's [`ExecutionPlan`]
+//!   via [`PipelineServer::from_plan`].
+//!
+//! [`StageAssign`] survives as the thin 4-stage compatibility shim for
+//! manifests that only carry fused embed/attn/mlp/head executables; its
+//! projection from an 8-class assignment now reports (instead of silently
+//! dropping) every accelerator separation the coarsening destroys.
 //!
 //! Python never runs here; requests are f32 image tensors in, logits out.
 
@@ -20,14 +26,14 @@ pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
 
-pub use metrics::ServeReport;
 pub use batcher::{BatchPolicy, BatchingServer};
+pub use metrics::ServeReport;
 pub use pipeline::{PipelineServer, SequentialServer};
 
 use crate::dse::Assignment;
-use crate::graph::LayerClass;
+use crate::plan::{expand_stage4, project_stage4, CoarsenReport, ExecutionPlan};
 
-/// The four runtime stages the AOT path emits executables for.
+/// The four fused runtime stages the 4-stage AOT path emits executables for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum StageKind {
     Embed,
@@ -50,7 +56,9 @@ impl StageKind {
     }
 }
 
-/// Grouping of the four runtime stages onto worker "accelerators".
+/// Grouping of the four fused runtime stages onto worker "accelerators" —
+/// the coarse compatibility representation. Full-granularity designs should
+/// flow through [`ExecutionPlan`] instead.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StageAssign {
     pub acc_of: [usize; 4], // indexed by STAGE_KINDS order
@@ -65,46 +73,40 @@ impl StageAssign {
         StageAssign { acc_of: [0, 1, 2, 3] }
     }
 
+    /// Project an 8-class DSE assignment onto the 4 runtime stages,
+    /// returning the projection together with the [`CoarsenReport`] of
+    /// every class placement the majority vote dropped.
+    pub fn try_from_assignment(a: &Assignment) -> (Self, CoarsenReport) {
+        let (acc_of, report) = project_stage4(a);
+        (StageAssign { acc_of }, report)
+    }
+
     /// Project an 8-class DSE assignment onto the 4 runtime stages: each
     /// stage goes to the acc hosting the majority of its classes (ties to
-    /// the lowest acc id), then acc ids are re-densified.
+    /// the lowest acc id), then acc ids are re-densified. Logs a warning
+    /// when the projection merges accs the DSE kept separate — use
+    /// [`StageAssign::try_from_assignment`] to inspect the loss instead.
     pub fn from_assignment(a: &Assignment) -> Self {
-        let classes_of = |k: StageKind| -> Vec<LayerClass> {
-            match k {
-                StageKind::Embed => vec![LayerClass::Embed],
-                StageKind::Attn => vec![
-                    LayerClass::Qkv,
-                    LayerClass::Bmm0,
-                    LayerClass::Bmm1,
-                    LayerClass::Proj,
-                ],
-                StageKind::Mlp => vec![LayerClass::Fc1, LayerClass::Fc2],
-                StageKind::Head => vec![LayerClass::Head],
-            }
-        };
-        let mut acc_of = [0usize; 4];
-        for (i, k) in STAGE_KINDS.iter().enumerate() {
-            let mut counts = std::collections::BTreeMap::new();
-            for c in classes_of(*k) {
-                *counts.entry(a.acc_of(c)).or_insert(0usize) += 1;
-            }
-            acc_of[i] = counts
-                .iter()
-                .max_by_key(|(acc, n)| (**n, usize::MAX - **acc))
-                .map(|(acc, _)| *acc)
-                .unwrap();
+        let (assign, report) = Self::try_from_assignment(a);
+        if !report.is_lossless() {
+            eprintln!(
+                "[coordinator] 4-stage projection of assignment {:?} is {}",
+                a.acc_of,
+                report.describe()
+            );
         }
-        // densify
-        let mut seen = Vec::new();
-        for a in acc_of.iter_mut() {
-            if let Some(pos) = seen.iter().position(|s| s == a) {
-                *a = pos;
-            } else {
-                seen.push(*a);
-                *a = seen.len() - 1;
-            }
-        }
-        StageAssign { acc_of }
+        assign
+    }
+
+    /// The 8-class view of this grouping (exact: every class of a fused
+    /// stage runs on that stage's acc).
+    pub fn to_assignment(&self) -> Assignment {
+        expand_stage4(self.acc_of)
+    }
+
+    /// Materialize the fused execution plan for this grouping.
+    pub fn to_plan(&self, model: &str, depth: usize, micro_batch: usize) -> ExecutionPlan {
+        ExecutionPlan::fused(model, depth, micro_batch, self.acc_of, self.to_assignment())
     }
 
     pub fn nacc(&self) -> usize {
@@ -154,5 +156,47 @@ mod tests {
         let s = StageAssign::from_assignment(&a);
         assert!(s.nacc() <= 3);
         assert_eq!(s.acc_of(StageKind::Embed), 0);
+    }
+
+    #[test]
+    fn lossless_projection_reports_lossless() {
+        let a = Assignment::new(vec![0, 1, 1, 1, 1, 2, 2, 3]);
+        let (s, report) = StageAssign::try_from_assignment(&a);
+        assert_eq!(s.nacc(), 4);
+        assert!(report.is_lossless());
+    }
+
+    #[test]
+    fn lossy_projection_reports_merged_classes() {
+        // attention split across accs 1 and 2 — unrepresentable in 4 stages
+        let a = Assignment::new(vec![0, 1, 2, 2, 1, 3, 4, 0]);
+        let (s, report) = StageAssign::try_from_assignment(&a);
+        assert!(s.nacc() < a.nacc());
+        assert!(!report.is_lossless());
+        assert!(report.merges.iter().any(|m| m.class.is_attention()));
+    }
+
+    #[test]
+    fn to_assignment_round_trips_losslessly() {
+        for s in [
+            StageAssign::sequential(),
+            StageAssign::spatial(),
+            StageAssign { acc_of: [0, 1, 0, 0] },
+            StageAssign { acc_of: [0, 1, 2, 0] },
+        ] {
+            let a = s.to_assignment();
+            let (back, report) = StageAssign::try_from_assignment(&a);
+            assert_eq!(back, s);
+            assert!(report.is_lossless(), "{:?}: {}", s.acc_of, report.describe());
+        }
+    }
+
+    #[test]
+    fn to_plan_preserves_grouping() {
+        let s = StageAssign { acc_of: [0, 1, 2, 0] };
+        let p = s.to_plan("deit_t", 12, 1);
+        assert_eq!(p.nacc, 3);
+        assert_eq!(p.steps.len(), 2 + 2 * 12);
+        p.validate().unwrap();
     }
 }

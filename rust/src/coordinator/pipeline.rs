@@ -1,4 +1,4 @@
-//! Worker-thread execution of the three paper execution models.
+//! Worker-thread execution of an [`ExecutionPlan`].
 //!
 //! Each worker thread is one "accelerator": it owns the compiled stage
 //! executables assigned to it and processes jobs FIFO from its channel —
@@ -6,6 +6,12 @@
 //! between workers are the on-chip forwarding paths; images in flight
 //! pipeline across workers exactly as batches do across spatial accs in
 //! Fig. 1(b-c).
+//!
+//! [`PipelineServer::from_plan`] serves any class-granular plan directly
+//! (one executable per `LayerClass`, so every `nacc ∈ 1..=8` hybrid the
+//! DSE emits is servable as found). When the artifact manifest only
+//! carries the four fused stage executables, the plan is coarsened through
+//! the compatibility shim and the lost accelerator separations are logged.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -16,32 +22,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::metrics::ServeReport;
-use super::{StageAssign, StageKind, STAGE_KINDS};
+use super::StageAssign;
+use crate::plan::{ExecutionPlan, Granularity, PlanStep, StageUnit};
 use crate::runtime::exec::{Engine, Stage, Tensor};
 use crate::util::stats::Summary;
-
-/// One step of the per-image schedule.
-#[derive(Clone, Copy, Debug)]
-struct Step {
-    kind: StageKind,
-    block: Option<usize>,
-    acc: usize,
-}
-
-/// Build the per-image step schedule for a model of `depth` blocks.
-fn build_schedule(assign: &StageAssign, depth: usize) -> Vec<Step> {
-    let mut steps = vec![Step {
-        kind: StageKind::Embed,
-        block: None,
-        acc: assign.acc_of(StageKind::Embed),
-    }];
-    for b in 0..depth {
-        steps.push(Step { kind: StageKind::Attn, block: Some(b), acc: assign.acc_of(StageKind::Attn) });
-        steps.push(Step { kind: StageKind::Mlp, block: Some(b), acc: assign.acc_of(StageKind::Mlp) });
-    }
-    steps.push(Step { kind: StageKind::Head, block: None, acc: assign.acc_of(StageKind::Head) });
-    steps
-}
 
 struct WorkItem {
     req_id: usize,
@@ -55,45 +39,72 @@ enum Job {
     Stop,
 }
 
-/// Pipelined (spatial / hybrid) server: one worker per accelerator.
+/// Pipelined (spatial / hybrid) server: one worker per plan accelerator.
 pub struct PipelineServer {
     engine: Arc<Engine>,
     txs: Vec<Sender<Job>>,
     done_rx: Receiver<(usize, Tensor, Instant)>,
     handles: Vec<thread::JoinHandle<()>>,
-    schedule: Vec<Step>,
+    /// The plan actually being served (coarsened if the manifest forced it).
+    plan: ExecutionPlan,
     macs_per_image: u64,
-    micro_batch: usize,
 }
 
 impl PipelineServer {
-    /// Compile the four stage executables at `micro_batch` and spawn one
-    /// worker per accelerator in `assign`.
-    pub fn new(
-        engine: Arc<Engine>,
-        model: &str,
-        assign: &StageAssign,
-        micro_batch: usize,
-    ) -> Result<PipelineServer> {
+    /// Serve `plan` directly: compile every required stage executable at
+    /// the plan's micro-batch and spawn one worker per accelerator.
+    ///
+    /// If the manifest lacks executables for a class-granular plan, the
+    /// plan is coarsened to the 4-stage compatibility grouping and the
+    /// [`crate::plan::CoarsenReport`] is logged — serving degrades
+    /// gracefully instead of failing, but never silently.
+    pub fn from_plan(engine: Arc<Engine>, plan: &ExecutionPlan) -> Result<PipelineServer> {
         let info = engine
             .manifest
             .models
-            .get(model)
-            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .get(&plan.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", plan.model))?
             .clone();
-        let schedule = build_schedule(assign, info.depth);
-        let nacc = assign.nacc();
-
-        // Compile each stage once, share with every worker that needs it.
-        let mut stages: BTreeMap<StageKind, Arc<Stage>> = BTreeMap::new();
-        for kind in STAGE_KINDS {
-            let name = format!("{model}_{}_b{micro_batch}", kind.name());
-            let stage = engine
-                .compile(&name)
-                .with_context(|| format!("compiling stage {name}"))?;
-            stages.insert(kind, Arc::new(stage));
+        if info.depth != plan.depth {
+            return Err(anyhow!(
+                "plan depth {} != manifest depth {} for {}",
+                plan.depth,
+                info.depth,
+                plan.model
+            ));
         }
 
+        let missing: Vec<String> = plan
+            .requirements()
+            .iter()
+            .filter(|r| !engine.manifest.has_stage(&plan.model, r.unit.name(), plan.micro_batch))
+            .map(|r| r.exe_name.clone())
+            .collect();
+        let plan = if missing.is_empty() {
+            plan.clone()
+        } else if plan.granularity == Granularity::Class {
+            let (coarse, report) = plan.coarsen();
+            eprintln!(
+                "[pipeline] manifest lacks {:?}; serving the 4-stage shim instead \
+                 (projection {})",
+                missing,
+                report.describe()
+            );
+            coarse
+        } else {
+            return Err(anyhow!("manifest lacks stage executables {missing:?}"));
+        };
+
+        // Compile each required stage once, share with every worker using it.
+        let mut stages: BTreeMap<StageUnit, Arc<Stage>> = BTreeMap::new();
+        for req in plan.requirements() {
+            let stage = engine
+                .compile(&req.exe_name)
+                .with_context(|| format!("compiling stage {}", req.exe_name))?;
+            stages.insert(req.unit, Arc::new(stage));
+        }
+
+        let nacc = plan.nacc;
         let (done_tx, done_rx) = channel::<(usize, Tensor, Instant)>();
         let mut txs = Vec::with_capacity(nacc);
         let mut rxs = Vec::with_capacity(nacc);
@@ -106,15 +117,16 @@ impl PipelineServer {
         let mut handles = Vec::with_capacity(nacc);
         for acc in 0..nacc {
             let rx = rxs[acc].take().unwrap();
-            let my_stages: BTreeMap<StageKind, Arc<Stage>> = schedule
+            let my_stages: BTreeMap<StageUnit, Arc<Stage>> = plan
+                .steps
                 .iter()
                 .filter(|s| s.acc == acc)
-                .map(|s| (s.kind, Arc::clone(&stages[&s.kind])))
+                .map(|s| (s.unit, Arc::clone(&stages[&s.unit])))
                 .collect();
             let fwd: Vec<Sender<Job>> = txs.clone();
             let done = done_tx.clone();
             let eng = Arc::clone(&engine);
-            let sched = schedule.clone();
+            let sched: Vec<PlanStep> = plan.steps.clone();
             handles.push(
                 thread::Builder::new()
                     .name(format!("ssr-acc-{acc}"))
@@ -125,9 +137,12 @@ impl PipelineServer {
                                 Job::Work(w) => w,
                             };
                             let step = sched[item.step];
-                            let stage = &my_stages[&step.kind];
+                            let stage = &my_stages[&step.unit];
+                            // Weight-free stages (attention BMMs) take no
+                            // block index even though they sit inside a block.
+                            let block = if stage.needs_block() { step.block } else { None };
                             let out = stage
-                                .run(&eng, &[item.tensor], step.block)
+                                .run(&eng, &[item.tensor], block)
                                 .expect("stage execution failed");
                             let next = item.step + 1;
                             if next == sched.len() {
@@ -151,10 +166,32 @@ impl PipelineServer {
             txs,
             done_rx,
             handles,
-            schedule,
+            plan,
             macs_per_image: info.macs_per_image,
-            micro_batch,
         })
+    }
+
+    /// 4-stage compatibility entry point: build the fused plan for `assign`
+    /// and serve it (kept for callers that predate the ExecutionPlan IR).
+    pub fn new(
+        engine: Arc<Engine>,
+        model: &str,
+        assign: &StageAssign,
+        micro_batch: usize,
+    ) -> Result<PipelineServer> {
+        let depth = engine
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .depth;
+        let plan = assign.to_plan(model, depth, micro_batch);
+        Self::from_plan(engine, &plan)
+    }
+
+    /// The plan actually being served (after any compatibility coarsening).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
     }
 
     /// Serve `images` (each shaped `[micro_batch, H, W, 3]`); returns the
@@ -163,7 +200,7 @@ impl PipelineServer {
         let n = images.len();
         let t0 = Instant::now();
         for (i, img) in images.into_iter().enumerate() {
-            self.txs[self.schedule[0].acc]
+            self.txs[self.plan.steps[0].acc]
                 .send(Job::Work(WorkItem {
                     req_id: i,
                     step: 0,
@@ -182,7 +219,7 @@ impl PipelineServer {
         }
         let wall = t0.elapsed().as_secs_f64();
         let report = ServeReport {
-            requests: n * self.micro_batch,
+            requests: n * self.plan.micro_batch,
             wall_s: wall,
             latency,
             macs_per_image: self.macs_per_image,

@@ -14,6 +14,7 @@ use crate::analytical::hmm::mm_time;
 use crate::analytical::{energy, Calib, Features};
 use crate::arch::Platform;
 use crate::graph::Graph;
+use crate::plan::ExecutionPlan;
 
 /// Per-node cost breakdown (per image).
 #[derive(Clone, Debug)]
@@ -45,13 +46,18 @@ pub struct SearchStats {
     pub configs_pruned: usize,
 }
 
-/// A fully evaluated design: per-node costs + derived aggregates.
+/// A fully evaluated design: per-node costs + derived aggregates, plus the
+/// materialized [`ExecutionPlan`] — the DSE result is a directly executable
+/// artifact, not just a score.
 #[derive(Clone, Debug)]
 pub struct Evaluated {
     pub design: Design,
     pub budgets: Vec<AccBudget>,
     pub node_costs: Vec<NodeCost>,
     pub stats: SearchStats,
+    /// Class-granular execution plan (micro-batch 1); re-target other
+    /// micro-batch variants with [`ExecutionPlan::with_micro_batch`].
+    pub plan: ExecutionPlan,
 }
 
 /// Build and cost a design for `assignment` (None if no feasible config).
@@ -160,10 +166,17 @@ pub fn build_design(
         });
     }
 
-    Some(Evaluated { design, budgets, node_costs, stats })
+    let plan = ExecutionPlan::from_graph(graph, assignment, 1);
+    Some(Evaluated { design, budgets, node_costs, stats, plan })
 }
 
 impl Evaluated {
+    /// The execution plan re-targeted at a runtime micro-batch variant
+    /// (`bN` stage executables).
+    pub fn plan_at(&self, micro_batch: usize) -> ExecutionPlan {
+        self.plan.clone().with_micro_batch(micro_batch)
+    }
+
     /// Per-image serial time on each accelerator (pipeline stage weight).
     pub fn acc_busy_per_image(&self) -> Vec<f64> {
         let nacc = self.design.assignment.nacc();

@@ -7,7 +7,9 @@
 //! * **L3 (this crate)** — the SSR framework: application graph IR
 //!   ([`graph`]), platform models ([`arch`]), the paper's analytical cost
 //!   model ([`analytical`]), an event-driven pipeline simulator ([`sim`]),
-//!   the evolutionary design-space exploration ([`dse`]), comparison
+//!   the evolutionary design-space exploration ([`dse`]), the shared
+//!   ExecutionPlan IR tying search, simulation, and serving to one mapping
+//!   representation ([`plan`]), comparison
 //!   baselines ([`baselines`]), a PJRT serving runtime ([`runtime`] +
 //!   [`coordinator`]), and report generators for every paper table/figure
 //!   ([`report`]).
@@ -25,6 +27,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod dse;
 pub mod graph;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -4,7 +4,8 @@
 //!   report            regenerate every paper table/figure (analytical + sim)
 //!   dse               run the evolutionary Layer→Acc search
 //!   simulate          run the event-driven simulator on a named strategy
-//!   serve             serve DeiT-T on the PJRT runtime (sequential/spatial/hybrid)
+//!   serve             serve DeiT-T on the PJRT runtime (sequential/spatial/hybrid,
+//!                     or any 8-class DSE design via --assign c0,..,c7)
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use ssr::analytical::{Calib, Features};
@@ -15,9 +16,23 @@ use ssr::dse::ea::{run_ea, EaParams};
 use ssr::dse::eval::build_design;
 use ssr::dse::Assignment;
 use ssr::graph::{builder, vit_graph};
+use ssr::plan::ExecutionPlan;
 use ssr::report::tables::{self, Ctx};
 use ssr::runtime::exec::Engine;
 use ssr::util::cli::Command;
+
+/// Parse an 8-class Layer→Acc genome like `0,1,1,1,0,2,2,0`.
+fn parse_assignment(s: &str) -> Result<Assignment, String> {
+    let v: Result<Vec<usize>, _> = s.split(',').map(|x| x.trim().parse::<usize>()).collect();
+    let v = v.map_err(|e| format!("bad genome '{s}': {e}"))?;
+    if v.len() != 8 {
+        return Err(format!("genome '{s}' must list 8 classes, got {}", v.len()));
+    }
+    if let Some(bad) = v.iter().find(|&&a| a >= 8) {
+        return Err(format!("genome '{s}' has acc id {bad}; ids must be < 8"));
+    }
+    Ok(Assignment::new(v))
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -169,6 +184,20 @@ fn cmd_dse(args: &[String]) -> i32 {
                 ev.design.assignment.acc_of,
                 ev.design.assignment.nacc()
             );
+            println!("execution plan: {}", ev.plan.summary());
+            println!(
+                "  serve with: ssr serve --assign {}",
+                ev.design
+                    .assignment
+                    .acc_of
+                    .iter()
+                    .map(usize::to_string)
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            for req in ev.plan.requirements() {
+                println!("  requires executable {}", req.exe_name);
+            }
             for (i, c) in ev.design.configs.iter().enumerate() {
                 println!(
                     "  acc{i}: classes {:?} config (h1={},w1={},w2={},A={},B={},C={}) AIE={} PLIO={}",
@@ -199,23 +228,36 @@ fn cmd_simulate(args: &[String]) -> i32 {
     let cmd = Command::new("ssr simulate", "event-driven simulation of a strategy")
         .flag("model", Some("deit_t"), "model name")
         .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
+        .flag("assign", Some(""), "8-class genome c0,..,c7 (overrides --strategy)")
         .flag("batch", Some("6"), "batch size");
     let m = parse_or_exit(cmd, args);
     let cfg = builder::by_name(&m.str("model")).expect("unknown model");
     let g = vit_graph(cfg);
     let platform = arch::vck190();
-    let assignment = match m.str("strategy").as_str() {
-        "sequential" => Assignment::sequential(),
-        "spatial" => Assignment::spatial(),
-        "hybrid" => Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
-        other => {
-            eprintln!("unknown strategy {other}");
-            return 2;
+    let genome = m.str("assign");
+    let assignment = if !genome.is_empty() {
+        match parse_assignment(&genome) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        match m.str("strategy").as_str() {
+            "sequential" => Assignment::sequential(),
+            "spatial" => Assignment::spatial(),
+            "hybrid" => Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
+            other => {
+                eprintln!("unknown strategy {other}");
+                return 2;
+            }
         }
     };
     let ev = build_design(&platform, &Calib::default(), &g, &assignment, Features::all(), true)
         .expect("design");
     let batch = m.usize("batch");
+    println!("{}", ev.plan.summary());
     let ana = ev.evaluate(&platform, &g, batch);
     let sim = ssr::sim::simulate(&platform, &ev, &g, batch);
     println!("analytical: {:.3} ms, {:.2} TOPS", ana.latency_s * 1e3, ana.tops);
@@ -235,6 +277,11 @@ fn cmd_serve(args: &[String]) -> i32 {
         .flag("artifacts", None, "artifacts dir (default ./artifacts)")
         .flag("model", Some("deit_t"), "model name")
         .flag("mode", Some("spatial"), "sequential|spatial|hybrid")
+        .flag(
+            "assign",
+            Some(""),
+            "8-class genome c0,..,c7 (plan-driven serve of a DSE design; overrides --mode)",
+        )
         .flag("requests", Some("16"), "number of requests")
         .flag("batch", Some("1"), "images per request (sequential: 1|3|6)");
     let m = parse_or_exit(cmd, args);
@@ -249,6 +296,32 @@ fn cmd_serve(args: &[String]) -> i32 {
     let n = m.usize("requests");
     let batch = m.usize("batch");
     let mode = m.str("mode");
+    let genome = m.str("assign");
+    if !genome.is_empty() {
+        // DSE → ExecutionPlan → live serving: any nacc ∈ 1..=8 grouping.
+        let a = match parse_assignment(&genome) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let info = engine
+            .manifest
+            .models
+            .get(&model)
+            .unwrap_or_else(|| panic!("model {model} not in manifest"))
+            .clone();
+        let plan = ExecutionPlan::from_depth(&model, info.depth, &a, batch);
+        println!("{}", plan.summary());
+        let s = PipelineServer::from_plan(engine, &plan).expect("compile plan stages");
+        println!("serving plan: {}", s.plan().summary());
+        let reqs: Vec<_> =
+            (0..n).map(|i| synth_images(batch, info.img_size, i as u64)).collect();
+        let (r, _) = s.serve(reqs).expect("serve");
+        println!("{}", r.summary_line());
+        return 0;
+    }
     let report = match mode.as_str() {
         "sequential" => {
             let s = SequentialServer::new(engine, &model, &[batch]).expect("compile full model");

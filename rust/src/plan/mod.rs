@@ -1,0 +1,698 @@
+//! ExecutionPlan IR — the single mapping representation shared by search,
+//! simulation, and live serving.
+//!
+//! The DSE emits 8-class [`Assignment`] genomes (`LayerClass` → accelerator),
+//! but before this module existed only a lossy majority-vote projection onto
+//! four hardcoded runtime stages was servable: most hybrid points the EA
+//! finds (SSR Sec. 4.4, Fig. 1c) were analytical-only. An [`ExecutionPlan`]
+//! materializes, for a concrete `Graph` + `Assignment` (+ micro-batch
+//! variant):
+//!
+//! * **per-accelerator step schedules** ([`PlanStep`]) at full `LayerClass`
+//!   granularity — one step per MM node instance (embed, then per block
+//!   qkv → bmm0 → bmm1 → proj → fc1 → fc2, then head);
+//! * **inter-accelerator forwarding edges** ([`ForwardEdge`]) — the data
+//!   dependencies between steps, flagged when they cross accelerators (the
+//!   on-chip PLIO forwarding paths of the paper);
+//! * **stage-executable requirements** ([`StageReq`]) — exactly which
+//!   compiled artifacts (`{model}_{unit}_b{N}`) the runtime must load.
+//!
+//! The three consumers all flow through it:
+//!
+//! ```text
+//!   dse::eval::build_design ──► Evaluated { plan, .. }
+//!                                  │
+//!            ┌─────────────────────┼──────────────────────┐
+//!            ▼                     ▼                      ▼
+//!   Evaluated::evaluate     sim::simulate_plan    PipelineServer::from_plan
+//!   (analytical estimate)   (event-driven board   (live PJRT serving, any
+//!                            substitute)           nacc ∈ 1..=8)
+//! ```
+//!
+//! When the artifact manifest only contains the four fused stage
+//! executables (embed/attn/mlp/head), [`ExecutionPlan::coarsen`] projects a
+//! class-granular plan down to them and returns a [`CoarsenReport`] naming
+//! every accelerator separation the projection destroyed — the projection
+//! is a compatibility shim now, never a silent default.
+
+use crate::dse::Assignment;
+use crate::graph::{Graph, LayerClass, ALL_CLASSES};
+
+/// Execution granularity of a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One step per `LayerClass` node — serves any `nacc` in `1..=8`.
+    Class,
+    /// Coarsened to the four fused runtime stages (embed/attn/mlp/head).
+    Fused,
+}
+
+/// The executable unit a plan step runs. Class units map 1:1 onto
+/// `LayerClass`; `Attn`/`Mlp` are the fused 4-stage units the compatibility
+/// shim coarsens to. `name()` matches the manifest `stage` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StageUnit {
+    Embed,
+    Qkv,
+    Bmm0,
+    Bmm1,
+    Proj,
+    Fc1,
+    Fc2,
+    Head,
+    /// Fused attention sublayer (qkv + bmm0 + bmm1 + proj).
+    Attn,
+    /// Fused MLP sublayer (fc1 + fc2).
+    Mlp,
+}
+
+impl StageUnit {
+    /// Manifest stage name (`{model}_{name}_b{N}` executables).
+    pub fn name(self) -> &'static str {
+        match self {
+            StageUnit::Embed => "embed",
+            StageUnit::Qkv => "qkv",
+            StageUnit::Bmm0 => "bmm0",
+            StageUnit::Bmm1 => "bmm1",
+            StageUnit::Proj => "proj",
+            StageUnit::Fc1 => "fc1",
+            StageUnit::Fc2 => "fc2",
+            StageUnit::Head => "head",
+            StageUnit::Attn => "attn",
+            StageUnit::Mlp => "mlp",
+        }
+    }
+
+    /// The class-granular unit executing `class`.
+    pub fn of_class(class: LayerClass) -> StageUnit {
+        match class {
+            LayerClass::Embed => StageUnit::Embed,
+            LayerClass::Qkv => StageUnit::Qkv,
+            LayerClass::Bmm0 => StageUnit::Bmm0,
+            LayerClass::Bmm1 => StageUnit::Bmm1,
+            LayerClass::Proj => StageUnit::Proj,
+            LayerClass::Fc1 => StageUnit::Fc1,
+            LayerClass::Fc2 => StageUnit::Fc2,
+            LayerClass::Head => StageUnit::Head,
+        }
+    }
+
+    /// The fused 4-stage unit that covers `class`.
+    pub fn fused_of_class(class: LayerClass) -> StageUnit {
+        match class {
+            LayerClass::Embed => StageUnit::Embed,
+            LayerClass::Qkv | LayerClass::Bmm0 | LayerClass::Bmm1 | LayerClass::Proj => {
+                StageUnit::Attn
+            }
+            LayerClass::Fc1 | LayerClass::Fc2 => StageUnit::Mlp,
+            LayerClass::Head => StageUnit::Head,
+        }
+    }
+
+    /// Layer classes this unit executes.
+    pub fn classes(self) -> &'static [LayerClass] {
+        match self {
+            StageUnit::Embed => &[LayerClass::Embed],
+            StageUnit::Qkv => &[LayerClass::Qkv],
+            StageUnit::Bmm0 => &[LayerClass::Bmm0],
+            StageUnit::Bmm1 => &[LayerClass::Bmm1],
+            StageUnit::Proj => &[LayerClass::Proj],
+            StageUnit::Fc1 => &[LayerClass::Fc1],
+            StageUnit::Fc2 => &[LayerClass::Fc2],
+            StageUnit::Head => &[LayerClass::Head],
+            StageUnit::Attn => &[
+                LayerClass::Qkv,
+                LayerClass::Bmm0,
+                LayerClass::Bmm1,
+                LayerClass::Proj,
+            ],
+            StageUnit::Mlp => &[LayerClass::Fc1, LayerClass::Fc2],
+        }
+    }
+
+    pub fn is_fused(self) -> bool {
+        matches!(self, StageUnit::Attn | StageUnit::Mlp)
+    }
+}
+
+/// One step of the per-image schedule: run `unit` (with `block`'s weights
+/// where applicable) on accelerator `acc`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanStep {
+    pub unit: StageUnit,
+    /// Transformer block index for per-block units; None for embed/head.
+    pub block: Option<usize>,
+    /// Accelerator (worker) executing this step.
+    pub acc: usize,
+    /// Graph node id this step covers (None for fused units, which cover
+    /// several nodes).
+    pub node: Option<usize>,
+}
+
+/// A data dependency between two plan steps (producer → consumer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ForwardEdge {
+    pub from: usize,
+    pub to: usize,
+    /// Producer output bytes (0 when built without a `Graph`).
+    pub bytes: u64,
+    /// Whether the edge crosses accelerators (an inter-acc forwarding path).
+    pub cross_acc: bool,
+}
+
+/// One stage executable the runtime must compile to serve a plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageReq {
+    pub unit: StageUnit,
+    /// Manifest executable name, e.g. `deit_t_qkv_b1`.
+    pub exe_name: String,
+}
+
+/// A class whose DSE accelerator was dropped by 4-stage coarsening.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassMerge {
+    pub class: LayerClass,
+    /// The fused unit the class was folded into.
+    pub unit: StageUnit,
+    /// Accelerator the DSE assignment placed the class on (pre-densify id).
+    pub from_acc: usize,
+    /// Accelerator the fused unit runs on (pre-densify id).
+    pub into_acc: usize,
+}
+
+/// What 4-stage coarsening lost, if anything. Returned instead of dropping
+/// the information on the floor.
+#[derive(Clone, Debug, Default)]
+pub struct CoarsenReport {
+    pub merges: Vec<ClassMerge>,
+    pub nacc_before: usize,
+    pub nacc_after: usize,
+}
+
+impl CoarsenReport {
+    /// True when the 4-stage projection represents the assignment exactly.
+    pub fn is_lossless(&self) -> bool {
+        self.merges.is_empty() && self.nacc_before == self.nacc_after
+    }
+
+    /// Human-readable account of the lost separations.
+    pub fn describe(&self) -> String {
+        if self.is_lossless() {
+            return "lossless (assignment is 4-stage representable)".to_string();
+        }
+        let moved: Vec<String> = self
+            .merges
+            .iter()
+            .map(|m| {
+                format!(
+                    "{:?}: acc{} -> acc{} ({})",
+                    m.class,
+                    m.from_acc,
+                    m.into_acc,
+                    m.unit.name()
+                )
+            })
+            .collect();
+        format!(
+            "lossy: {} -> {} accs, merged [{}]",
+            self.nacc_before,
+            self.nacc_after,
+            moved.join(", ")
+        )
+    }
+}
+
+/// Expand a 4-stage grouping (embed/attn/mlp/head accs) back to the exact
+/// 8-class assignment it serves — the inverse direction of
+/// [`project_stage4`] (lossless by construction).
+pub fn expand_stage4(accs: [usize; 4]) -> Assignment {
+    Assignment::new(
+        ALL_CLASSES
+            .iter()
+            .map(|&c| {
+                let stage = match StageUnit::fused_of_class(c) {
+                    StageUnit::Embed => 0,
+                    StageUnit::Attn => 1,
+                    StageUnit::Mlp => 2,
+                    _ => 3,
+                };
+                accs[stage]
+            })
+            .collect(),
+    )
+}
+
+/// Project an 8-class assignment onto the four runtime stages
+/// (embed/attn/mlp/head order): each stage goes to the acc hosting the
+/// majority of its classes (ties to the lowest acc id), then acc ids are
+/// re-densified. Returns the projection together with a [`CoarsenReport`]
+/// naming every class whose DSE placement the projection dropped.
+pub fn project_stage4(a: &Assignment) -> ([usize; 4], CoarsenReport) {
+    let stage_units = [StageUnit::Embed, StageUnit::Attn, StageUnit::Mlp, StageUnit::Head];
+    let mut acc_of = [0usize; 4];
+    let mut merges = Vec::new();
+    for (i, unit) in stage_units.iter().enumerate() {
+        let mut counts = std::collections::BTreeMap::new();
+        for &c in unit.classes() {
+            *counts.entry(a.acc_of(c)).or_insert(0usize) += 1;
+        }
+        let chosen = *counts
+            .iter()
+            .max_by_key(|(acc, n)| (**n, usize::MAX - **acc))
+            .map(|(acc, _)| acc)
+            .unwrap();
+        acc_of[i] = chosen;
+        for &c in unit.classes() {
+            if a.acc_of(c) != chosen {
+                merges.push(ClassMerge {
+                    class: c,
+                    unit: *unit,
+                    from_acc: a.acc_of(c),
+                    into_acc: chosen,
+                });
+            }
+        }
+    }
+    // densify acc ids in order of first appearance
+    let mut seen: Vec<usize> = Vec::new();
+    for acc in acc_of.iter_mut() {
+        if let Some(pos) = seen.iter().position(|s| s == acc) {
+            *acc = pos;
+        } else {
+            seen.push(*acc);
+            *acc = seen.len() - 1;
+        }
+    }
+    let report = CoarsenReport {
+        merges,
+        nacc_before: a.nacc(),
+        nacc_after: seen.len(),
+    };
+    (acc_of, report)
+}
+
+/// The materialized execution plan for one design point.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub model: String,
+    pub depth: usize,
+    /// Images per step invocation (the runtime micro-batch / `bN` variant).
+    pub micro_batch: usize,
+    pub granularity: Granularity,
+    /// The 8-class assignment this plan realizes (for a fused plan, the
+    /// coarsened assignment actually being served).
+    pub assignment: Assignment,
+    pub nacc: usize,
+    /// Per-image step schedule in dependency (topological) order.
+    pub steps: Vec<PlanStep>,
+    /// Data dependencies between steps (producer index < consumer index).
+    pub edges: Vec<ForwardEdge>,
+}
+
+impl ExecutionPlan {
+    /// Materialize a class-granular plan from an application graph and a
+    /// DSE assignment. One step per graph node, edges from node deps.
+    pub fn from_graph(graph: &Graph, assignment: &Assignment, micro_batch: usize) -> ExecutionPlan {
+        let steps: Vec<PlanStep> = graph
+            .nodes
+            .iter()
+            .map(|n| PlanStep {
+                unit: StageUnit::of_class(n.class),
+                block: match n.class {
+                    LayerClass::Embed | LayerClass::Head => None,
+                    _ => Some(n.block),
+                },
+                acc: assignment.acc_of(n.class),
+                node: Some(n.id),
+            })
+            .collect();
+        let mut edges = Vec::new();
+        for (to, n) in graph.nodes.iter().enumerate() {
+            for &d in &n.deps {
+                edges.push(ForwardEdge {
+                    from: d,
+                    to,
+                    bytes: graph.nodes[d].out_bytes,
+                    cross_acc: steps[d].acc != steps[to].acc,
+                });
+            }
+        }
+        ExecutionPlan {
+            model: graph.model.clone(),
+            depth: graph.depth,
+            micro_batch,
+            granularity: Granularity::Class,
+            assignment: assignment.clone(),
+            nacc: assignment.nacc(),
+            steps,
+            edges,
+        }
+    }
+
+    /// Materialize a class-granular plan from model metadata alone (the
+    /// serving path, where no `Graph` is in scope): the canonical ViT chain
+    /// embed → (qkv bmm0 bmm1 proj fc1 fc2) × depth → head. Node ids follow
+    /// the same numbering `graph::vit_graph` uses.
+    pub fn from_depth(
+        model: &str,
+        depth: usize,
+        assignment: &Assignment,
+        micro_batch: usize,
+    ) -> ExecutionPlan {
+        const BLOCK_CLASSES: [LayerClass; 6] = [
+            LayerClass::Qkv,
+            LayerClass::Bmm0,
+            LayerClass::Bmm1,
+            LayerClass::Proj,
+            LayerClass::Fc1,
+            LayerClass::Fc2,
+        ];
+        let mut steps = Vec::with_capacity(2 + 6 * depth);
+        steps.push(PlanStep {
+            unit: StageUnit::Embed,
+            block: None,
+            acc: assignment.acc_of(LayerClass::Embed),
+            node: Some(0),
+        });
+        for b in 0..depth {
+            for c in BLOCK_CLASSES {
+                steps.push(PlanStep {
+                    unit: StageUnit::of_class(c),
+                    block: Some(b),
+                    acc: assignment.acc_of(c),
+                    node: Some(steps.len()),
+                });
+            }
+        }
+        steps.push(PlanStep {
+            unit: StageUnit::Head,
+            block: None,
+            acc: assignment.acc_of(LayerClass::Head),
+            node: Some(steps.len()),
+        });
+        let edges = chain_edges(&steps);
+        ExecutionPlan {
+            model: model.to_string(),
+            depth,
+            micro_batch,
+            granularity: Granularity::Class,
+            assignment: assignment.clone(),
+            nacc: assignment.nacc(),
+            steps,
+            edges,
+        }
+    }
+
+    /// Materialize a fused (4-stage) plan directly from a stage grouping
+    /// (`accs` in embed/attn/mlp/head order). `assignment` records the
+    /// 8-class view of the grouping being served.
+    pub fn fused(
+        model: &str,
+        depth: usize,
+        micro_batch: usize,
+        accs: [usize; 4],
+        assignment: Assignment,
+    ) -> ExecutionPlan {
+        let mut steps = Vec::with_capacity(2 + 2 * depth);
+        steps.push(PlanStep { unit: StageUnit::Embed, block: None, acc: accs[0], node: None });
+        for b in 0..depth {
+            steps.push(PlanStep {
+                unit: StageUnit::Attn,
+                block: Some(b),
+                acc: accs[1],
+                node: None,
+            });
+            steps.push(PlanStep { unit: StageUnit::Mlp, block: Some(b), acc: accs[2], node: None });
+        }
+        steps.push(PlanStep { unit: StageUnit::Head, block: None, acc: accs[3], node: None });
+        let edges = chain_edges(&steps);
+        let nacc = accs.iter().copied().max().unwrap() + 1;
+        ExecutionPlan {
+            model: model.to_string(),
+            depth,
+            micro_batch,
+            granularity: Granularity::Fused,
+            assignment,
+            nacc,
+            steps,
+            edges,
+        }
+    }
+
+    /// Project a class-granular plan down to the four fused runtime stages
+    /// (the compatibility shim for manifests that only carry
+    /// embed/attn/mlp/head executables). Returns the coarse plan and the
+    /// report of what the projection lost.
+    pub fn coarsen(&self) -> (ExecutionPlan, CoarsenReport) {
+        let (accs, report) = project_stage4(&self.assignment);
+        let plan = ExecutionPlan::fused(
+            &self.model,
+            self.depth,
+            self.micro_batch,
+            accs,
+            expand_stage4(accs),
+        );
+        (plan, report)
+    }
+
+    /// Same plan at a different runtime micro-batch.
+    pub fn with_micro_batch(mut self, micro_batch: usize) -> ExecutionPlan {
+        self.micro_batch = micro_batch;
+        self
+    }
+
+    /// Distinct stage units the plan schedules, in first-use order.
+    pub fn required_units(&self) -> Vec<StageUnit> {
+        let mut units = Vec::new();
+        for s in &self.steps {
+            if !units.contains(&s.unit) {
+                units.push(s.unit);
+            }
+        }
+        units
+    }
+
+    /// Stage executables the runtime must compile to serve this plan.
+    pub fn requirements(&self) -> Vec<StageReq> {
+        self.required_units()
+            .into_iter()
+            .map(|unit| StageReq {
+                unit,
+                exe_name: format!("{}_{}_b{}", self.model, unit.name(), self.micro_batch),
+            })
+            .collect()
+    }
+
+    /// Stage units scheduled on accelerator `acc`, in first-use order.
+    pub fn units_on(&self, acc: usize) -> Vec<StageUnit> {
+        let mut units = Vec::new();
+        for s in self.steps.iter().filter(|s| s.acc == acc) {
+            if !units.contains(&s.unit) {
+                units.push(s.unit);
+            }
+        }
+        units
+    }
+
+    /// Number of inter-accelerator forwarding edges per image.
+    pub fn cross_acc_edges(&self) -> usize {
+        self.edges.iter().filter(|e| e.cross_acc).count()
+    }
+
+    /// Structural invariants: dense acc ids, topological edges, chain ends.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps.is_empty() {
+            return Err("empty plan".into());
+        }
+        let mut used = vec![false; self.nacc];
+        for (i, s) in self.steps.iter().enumerate() {
+            if s.acc >= self.nacc {
+                return Err(format!("step {i} acc {} >= nacc {}", s.acc, self.nacc));
+            }
+            used[s.acc] = true;
+            if s.unit.is_fused() != (self.granularity == Granularity::Fused) {
+                return Err(format!("step {i} unit {:?} vs granularity", s.unit));
+            }
+        }
+        if !used.iter().all(|&u| u) {
+            return Err("acc ids not dense".into());
+        }
+        for e in &self.edges {
+            if e.from >= e.to || e.to >= self.steps.len() {
+                return Err(format!("edge {} -> {} not topological", e.from, e.to));
+            }
+            if e.cross_acc != (self.steps[e.from].acc != self.steps[e.to].acc) {
+                return Err(format!("edge {} -> {} cross_acc flag wrong", e.from, e.to));
+            }
+        }
+        if self.steps.first().unwrap().unit != StageUnit::Embed
+            || self.steps.last().unwrap().unit != StageUnit::Head
+        {
+            return Err("plan must start at embed and end at head".into());
+        }
+        Ok(())
+    }
+
+    /// One-paragraph human summary (CLI / logs).
+    pub fn summary(&self) -> String {
+        let per_acc: Vec<String> = (0..self.nacc)
+            .map(|a| {
+                let units: Vec<&str> =
+                    self.units_on(a).into_iter().map(|u| u.name()).collect();
+                format!("acc{a}:{{{}}}", units.join(","))
+            })
+            .collect();
+        format!(
+            "{} plan for {} (depth {}, micro-batch {}): {} accs [{}], {} steps, {} fwd edges ({} cross-acc)",
+            match self.granularity {
+                Granularity::Class => "class-granular",
+                Granularity::Fused => "4-stage fused",
+            },
+            self.model,
+            self.depth,
+            self.micro_batch,
+            self.nacc,
+            per_acc.join(" "),
+            self.steps.len(),
+            self.edges.len(),
+            self.cross_acc_edges(),
+        )
+    }
+}
+
+/// Chain edges (step i-1 → step i) for single-stream plans.
+fn chain_edges(steps: &[PlanStep]) -> Vec<ForwardEdge> {
+    (1..steps.len())
+        .map(|i| ForwardEdge {
+            from: i - 1,
+            to: i,
+            bytes: 0,
+            cross_acc: steps[i - 1].acc != steps[i].acc,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{vit_graph, DEIT_T};
+
+    /// An 8-class hybrid with attention split across two accs (nacc = 5) —
+    /// the kind of EA output the 4-stage projection cannot represent.
+    fn hybrid5() -> Assignment {
+        Assignment::new(vec![0, 1, 2, 2, 1, 3, 4, 0])
+    }
+
+    #[test]
+    fn from_depth_matches_graph_shape() {
+        let g = vit_graph(&DEIT_T);
+        let a = Assignment::spatial();
+        let pd = ExecutionPlan::from_depth("deit_t", 12, &a, 1);
+        let pg = ExecutionPlan::from_graph(&g, &a, 1);
+        assert_eq!(pd.steps.len(), g.nodes.len());
+        assert_eq!(pd.steps.len(), pg.steps.len());
+        for (s, t) in pd.steps.iter().zip(&pg.steps) {
+            assert_eq!(s.unit, t.unit);
+            assert_eq!(s.block, t.block);
+            assert_eq!(s.acc, t.acc);
+            assert_eq!(s.node, t.node);
+        }
+        assert_eq!(pd.edges.len(), pg.edges.len());
+        pd.validate().unwrap();
+        pg.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_preserves_full_hybrid_granularity() {
+        let a = hybrid5();
+        assert_eq!(a.nacc(), 5);
+        let p = ExecutionPlan::from_depth("deit_t", 12, &a, 1);
+        assert_eq!(p.nacc, 5, "plan must keep all 5 accs");
+        // attention classes land on their own accs, not one fused stage
+        let qkv = p.steps.iter().find(|s| s.unit == StageUnit::Qkv).unwrap();
+        let bmm0 = p.steps.iter().find(|s| s.unit == StageUnit::Bmm0).unwrap();
+        assert_ne!(qkv.acc, bmm0.acc);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn stage4_projection_cannot_represent_hybrid5() {
+        // The acceptance-criterion witness: the old 4-stage path collapses
+        // the attention split, the plan does not.
+        let a = hybrid5();
+        let (accs, report) = project_stage4(&a);
+        let nacc_proj = accs.iter().copied().max().unwrap() + 1;
+        assert!(nacc_proj < a.nacc(), "projection must lose accs: {accs:?}");
+        assert!(!report.is_lossless());
+        assert!(report.merges.iter().any(|m| m.class.is_attention()));
+        assert_eq!(report.nacc_before, 5);
+        assert!(report.describe().contains("lossy"));
+    }
+
+    #[test]
+    fn projection_lossless_for_stage_aligned_assignment() {
+        // embed | attn | mlp | head on four separate accs — exactly 4-stage
+        // representable, so coarsening must report lossless.
+        let a = Assignment::new(vec![0, 1, 1, 1, 1, 2, 2, 3]);
+        let (accs, report) = project_stage4(&a);
+        assert_eq!(accs, [0, 1, 2, 3]);
+        assert!(report.is_lossless(), "{}", report.describe());
+    }
+
+    #[test]
+    fn coarsen_produces_valid_fused_plan() {
+        let p = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 1);
+        let (coarse, report) = p.coarsen();
+        assert_eq!(coarse.granularity, Granularity::Fused);
+        assert_eq!(coarse.steps.len(), 2 + 2 * 12);
+        assert!(coarse.nacc <= 4);
+        assert_eq!(coarse.nacc, report.nacc_after);
+        coarse.validate().unwrap();
+    }
+
+    #[test]
+    fn sequential_plan_has_no_cross_acc_edges() {
+        let p = ExecutionPlan::from_depth("deit_t", 12, &Assignment::sequential(), 1);
+        assert_eq!(p.nacc, 1);
+        assert_eq!(p.cross_acc_edges(), 0);
+    }
+
+    #[test]
+    fn spatial_plan_crosses_on_every_class_boundary() {
+        let g = vit_graph(&DEIT_T);
+        let p = ExecutionPlan::from_graph(&g, &Assignment::spatial(), 1);
+        assert_eq!(p.nacc, 8);
+        // chain of 74 nodes, every consecutive pair on different accs
+        assert_eq!(p.cross_acc_edges(), p.edges.len());
+        assert!(p.edges.iter().all(|e| e.bytes > 0));
+    }
+
+    #[test]
+    fn requirements_name_the_manifest_executables() {
+        let p = ExecutionPlan::from_depth("deit_t", 12, &Assignment::spatial(), 6);
+        let names: Vec<String> = p.requirements().into_iter().map(|r| r.exe_name).collect();
+        assert_eq!(names.len(), 8);
+        assert!(names.contains(&"deit_t_qkv_b6".to_string()));
+        assert!(names.contains(&"deit_t_bmm0_b6".to_string()));
+        let (coarse, _) = p.coarsen();
+        let cnames: Vec<String> =
+            coarse.requirements().into_iter().map(|r| r.exe_name).collect();
+        assert_eq!(cnames.len(), 4);
+        assert!(cnames.contains(&"deit_t_attn_b6".to_string()));
+    }
+
+    #[test]
+    fn units_on_partitions_the_schedule() {
+        let p = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 1);
+        let total: usize = (0..p.nacc).map(|a| p.units_on(a).len()).sum();
+        assert_eq!(total, 8);
+        assert!(p.summary().contains("5 accs"));
+    }
+
+    #[test]
+    fn with_micro_batch_renames_requirements() {
+        let p = ExecutionPlan::from_depth("deit_t", 12, &Assignment::sequential(), 1)
+            .with_micro_batch(6);
+        assert!(p.requirements().iter().all(|r| r.exe_name.ends_with("_b6")));
+    }
+}

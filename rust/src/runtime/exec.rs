@@ -154,6 +154,13 @@ impl Stage {
         self.input_pos.len()
     }
 
+    /// Whether this stage resolves per-block weights (and so must be run
+    /// with `block: Some(..)`). Weight-free stages (e.g. the attention
+    /// BMMs) and fixed-weight stages (embed/head/full) take `None`.
+    pub fn needs_block(&self) -> bool {
+        !self.per_block.is_empty()
+    }
+
     /// Expected shape of runtime input `i`.
     pub fn input_shape(&self, i: usize) -> &[usize] {
         match &self.spec.args[self.input_pos[i]] {

@@ -187,6 +187,21 @@ impl Manifest {
             .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))
     }
 
+    /// Whether a stage executable exists for (model, stage, batch).
+    pub fn has_stage(&self, model: &str, stage: &str, batch: usize) -> bool {
+        self.find_stage(model, stage, batch).is_ok()
+    }
+
+    /// Whether the manifest carries the full set of class-granular stage
+    /// executables (qkv/bmm0/bmm1/proj/fc1/fc2 alongside embed/head) for
+    /// (model, batch) — the prerequisite for serving an 8-class
+    /// `ExecutionPlan` without coarsening.
+    pub fn has_class_stages(&self, model: &str, batch: usize) -> bool {
+        ["embed", "qkv", "bmm0", "bmm1", "proj", "fc1", "fc2", "head"]
+            .iter()
+            .all(|s| self.has_stage(model, s, batch))
+    }
+
     /// Stage executable for (model, stage, batch).
     pub fn find_stage(&self, model: &str, stage: &str, batch: usize) -> Result<&ExeSpec> {
         self.executables

@@ -8,7 +8,10 @@
 //! makes (no steady-state assumption, real slack between dependent stages,
 //! DDR serialization).
 //!
-//! Tasks are (node, batch-index) instances. Scheduling is non-preemptive
+//! Tasks are (node, batch-index) instances, materialized from the design's
+//! [`ExecutionPlan`] (the same IR the live pipeline server executes, so
+//! simulated and served schedules cannot drift apart). Scheduling is
+//! non-preemptive
 //! earliest-start-first, which models the paper's greedy runtime ("assign
 //! a layer to the pipeline as soon as its accelerator is available and its
 //! dependencies are resolved", Sec. 4.4).
@@ -17,6 +20,7 @@ use crate::analytical::comm::CommPath;
 use crate::arch::Platform;
 use crate::dse::eval::Evaluated;
 use crate::graph::Graph;
+use crate::plan::{ExecutionPlan, Granularity};
 
 /// One schedulable task instance.
 #[derive(Clone, Debug)]
@@ -57,45 +61,94 @@ pub struct SimResult {
 }
 
 /// Simulate `ev` on `platform` with `batches` images launched at t=0.
+/// Replays the design's own [`ExecutionPlan`] (`ev.plan`) — the same IR the
+/// pipeline server executes live.
 pub fn simulate(
     platform: &Platform,
     ev: &Evaluated,
     graph: &Graph,
     batches: usize,
 ) -> SimResult {
-    let n = graph.nodes.len();
+    simulate_plan(platform, ev, graph, &ev.plan, batches)
+}
+
+/// Simulate an explicit class-granular plan (one step per graph node).
+pub fn simulate_plan(
+    platform: &Platform,
+    ev: &Evaluated,
+    graph: &Graph,
+    plan: &ExecutionPlan,
+    batches: usize,
+) -> SimResult {
+    let tasks = tasks_from_plan(platform, ev, graph, plan, batches);
+    run(platform, &tasks, plan.nacc, graph, batches)
+}
+
+/// Materialize the (node, batch) task instances of `plan`: step schedules
+/// and forwarding edges come from the plan, per-node busy/comm costs from
+/// the evaluated design. Requires a class-granular plan whose steps cover
+/// the graph 1:1.
+pub fn tasks_from_plan(
+    platform: &Platform,
+    ev: &Evaluated,
+    graph: &Graph,
+    plan: &ExecutionPlan,
+    batches: usize,
+) -> Vec<Task> {
+    assert_eq!(
+        plan.granularity,
+        Granularity::Class,
+        "simulation needs a class-granular plan"
+    );
+    let n = plan.steps.len();
+    assert_eq!(n, graph.nodes.len(), "plan does not cover the graph");
+
+    // Incoming forwarding edges per step, in plan edge order.
+    let mut incoming: Vec<Vec<&crate::plan::ForwardEdge>> = vec![Vec::new(); n];
+    for e in &plan.edges {
+        incoming[e.to].push(e);
+    }
+
+    let calib = crate::analytical::Calib::default();
     let mut tasks = Vec::with_capacity(n * batches);
     for b in 0..batches {
-        for (i, node) in graph.nodes.iter().enumerate() {
-            let cost = &ev.node_costs[i];
-            let mut deps: Vec<usize> = node.deps.iter().map(|&d| b * n + d).collect();
-            let mut comm: Vec<(f64, bool)> = cost
-                .comm_paths
-                .iter()
-                .map(|(_, path, bytes)| {
-                    let t = crate::analytical::comm::comm_time(
-                        platform,
-                        &crate::analytical::Calib::default(),
-                        *path,
-                        *bytes,
-                    );
-                    (t, *path == CommPath::Ddr)
-                })
-                .collect();
+        for (si, step) in plan.steps.iter().enumerate() {
+            let node_id = step.node.expect("class-granular step carries its node");
+            let cost = &ev.node_costs[node_id];
+            let mut deps: Vec<usize> = Vec::with_capacity(incoming[si].len() + 1);
+            let mut comm: Vec<(f64, bool)> = Vec::with_capacity(incoming[si].len() + 1);
+            for e in &incoming[si] {
+                deps.push(b * n + e.from);
+                // Exposed comm cost of this edge, looked up by producer node.
+                let prod_node = plan.steps[e.from].node.unwrap();
+                let (t, is_ddr) = cost
+                    .comm_paths
+                    .iter()
+                    .find(|(p, _, _)| *p == prod_node)
+                    .map(|(_, path, bytes)| {
+                        (
+                            crate::analytical::comm::comm_time(platform, &calib, *path, *bytes),
+                            *path == CommPath::Ddr,
+                        )
+                    })
+                    .unwrap_or((0.0, false));
+                comm.push((t, is_ddr));
+            }
             if b > 0 {
-                deps.push((b - 1) * n + i);
+                // Stream order through the shared executable/acc state.
+                deps.push((b - 1) * n + si);
                 comm.push((0.0, false));
             }
             // Embed nodes load the raw image over DDR (INT8 HxWx3).
-            let input_bytes = if node.class == crate::graph::LayerClass::Embed {
+            let input_bytes = if graph.nodes[node_id].class == crate::graph::LayerClass::Embed {
                 224 * 224 * 3
             } else {
                 0
             };
             tasks.push(Task {
-                node: i,
+                node: node_id,
                 batch: b,
-                acc: cost.acc,
+                acc: step.acc,
                 dur: cost.busy_s(),
                 deps,
                 comm,
@@ -103,7 +156,7 @@ pub fn simulate(
             });
         }
     }
-    run(platform, &tasks, ev.design.assignment.nacc(), graph, batches)
+    tasks
 }
 
 /// Core event loop over prepared tasks: readiness-FIFO per accelerator
@@ -299,5 +352,47 @@ mod tests {
         let (sim, _) = sim_of(Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]), 6);
         assert!(sim.makespan_s.is_finite() && sim.makespan_s > 0.0);
         assert!(sim.tops.is_finite() && sim.tops > 0.0);
+    }
+
+    #[test]
+    fn plan_sim_execution_model_ordering() {
+        // The plan-driven simulator must reproduce the paper's Fig. 2
+        // ordering between execution models — the same qualitative relations
+        // the plan-driven pipeline server is held to (see
+        // tests/plan_roundtrip.rs): sequential wins latency at batch 1,
+        // spatial wins throughput at large batch.
+        let (seq1, _) = sim_of(Assignment::sequential(), 1);
+        let (spa1, _) = sim_of(Assignment::spatial(), 1);
+        assert!(
+            seq1.makespan_s <= spa1.makespan_s,
+            "sequential b1 latency {} must not exceed spatial {}",
+            seq1.makespan_s,
+            spa1.makespan_s
+        );
+        let (seq6, _) = sim_of(Assignment::sequential(), 6);
+        let (spa6, _) = sim_of(Assignment::spatial(), 6);
+        assert!(
+            spa6.tops >= seq6.tops,
+            "spatial b6 throughput {} must not trail sequential {}",
+            spa6.tops,
+            seq6.tops
+        );
+    }
+
+    #[test]
+    fn explicit_plan_equals_builtin_plan() {
+        // simulate() routes through ev.plan; an independently materialized
+        // plan for the same assignment must give the identical schedule.
+        let p = vck190();
+        let cal = Calib::default();
+        let g = vit_graph(&DEIT_T);
+        let a = Assignment::new(vec![0, 1, 2, 2, 1, 3, 4, 0]); // nacc = 5 hybrid
+        let ev = build_design(&p, &cal, &g, &a, Features::all(), true).unwrap();
+        let external = crate::plan::ExecutionPlan::from_graph(&g, &a, 1);
+        let s1 = simulate(&p, &ev, &g, 4);
+        let s2 = simulate_plan(&p, &ev, &g, &external, 4);
+        assert_eq!(s1.makespan_s, s2.makespan_s);
+        assert_eq!(s1.acc_busy_s, s2.acc_busy_s);
+        assert_eq!(s1.acc_busy_s.len(), 5);
     }
 }

@@ -1,0 +1,176 @@
+//! ExecutionPlan round-trip tests: the DSE's 8-class hybrid designs must be
+//! servable *as found* — DSE assignment → ExecutionPlan → {simulator, live
+//! pipeline server} — including designs the old 4-stage projection could
+//! not represent (`nacc > 4`, attention split across accelerators).
+//!
+//! Tests that need compiled artifacts skip themselves (with a log line)
+//! when `artifacts/` is absent, so `cargo test` stays runnable before
+//! `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use ssr::analytical::{Calib, Features};
+use ssr::arch::vck190;
+use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::StageAssign;
+use ssr::dse::eval::build_design;
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T};
+use ssr::plan::{project_stage4, ExecutionPlan, Granularity};
+use ssr::runtime::exec::Engine;
+
+/// The acceptance-criterion design: attention split across two accs
+/// (qkv+proj on acc 1, bmm0+bmm1 on acc 2), MLP split across two more —
+/// nacc = 5, strictly outside the 4-stage representable set.
+fn hybrid5() -> Assignment {
+    Assignment::new(vec![0, 1, 2, 2, 1, 3, 4, 0])
+}
+
+fn try_engine() -> Option<Arc<Engine>> {
+    static E: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    E.get_or_init(|| Engine::load(&PathBuf::from("artifacts")).ok()).clone()
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    let max = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max <= tol, "max diff {max} > {tol}");
+}
+
+#[test]
+fn old_projection_cannot_represent_hybrid5_but_plan_can() {
+    // DSE side: the design builds and its emitted plan keeps all 5 accs.
+    let platform = vck190();
+    let graph = vit_graph(&DEIT_T);
+    let a = hybrid5();
+    assert_eq!(a.nacc(), 5);
+    let ev = build_design(&platform, &Calib::default(), &graph, &a, Features::all(), true)
+        .expect("hybrid5 must be feasible on vck190");
+    assert_eq!(ev.plan.nacc, 5);
+    assert_eq!(ev.plan.granularity, Granularity::Class);
+    ev.plan.validate().unwrap();
+
+    // The old 4-stage projection loses the attention split entirely.
+    let (accs, report) = project_stage4(&a);
+    let proj_nacc = accs.iter().copied().max().unwrap() + 1;
+    assert!(proj_nacc < a.nacc(), "projection kept {proj_nacc} accs of {}", a.nacc());
+    assert!(!report.is_lossless());
+    assert!(
+        report.merges.iter().any(|m| m.class.is_attention()),
+        "the dropped separations include the attention split: {}",
+        report.describe()
+    );
+    let (shim, shim_report) = StageAssign::try_from_assignment(&a);
+    assert_eq!(shim.nacc(), proj_nacc);
+    assert!(!shim_report.is_lossless());
+
+    // The plan-driven simulator schedules the full design: all 5 accs busy.
+    let sim = ssr::sim::simulate(&platform, &ev, &graph, 4);
+    assert_eq!(sim.acc_busy_s.len(), 5);
+    assert!(sim.acc_busy_s.iter().all(|&b| b > 0.0), "{:?}", sim.acc_busy_s);
+}
+
+#[test]
+fn hybrid5_plan_roundtrips_through_live_server_with_correct_logits() {
+    let Some(engine) = try_engine() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let a = hybrid5();
+    let depth = engine.manifest.models["deit_t"].depth;
+    let plan = ExecutionPlan::from_depth("deit_t", depth, &a, 1);
+    let server = PipelineServer::from_plan(Arc::clone(&engine), &plan).unwrap();
+
+    if engine.manifest.has_class_stages("deit_t", 1) {
+        // Full round-trip: the served plan is the DSE design, not a shim.
+        assert_eq!(server.plan().granularity, Granularity::Class);
+        assert_eq!(server.plan().nacc, 5, "all 5 accelerators must be live");
+    } else {
+        eprintln!(
+            "note: manifest predates class-granular stages; served \
+             coarsened plan ({} accs)",
+            server.plan().nacc
+        );
+    }
+
+    // Logits must match the monolithic executable bit-for-tolerance.
+    let seq = SequentialServer::new(Arc::clone(&engine), "deit_t", &[1]).unwrap();
+    let imgs: Vec<_> = (0..3).map(|i| synth_images(1, 224, 500 + i)).collect();
+    let expected: Vec<_> = imgs.iter().map(|im| seq.run_batch(1, im).unwrap()).collect();
+    let (report, outs) = server.serve(imgs).unwrap();
+    assert_eq!(report.requests, 3);
+    for (got, want) in outs.iter().zip(&expected) {
+        assert_eq!(got.shape, vec![1, 1000]);
+        close(&got.data, &want.data, 2e-3);
+    }
+}
+
+#[test]
+fn plan_sim_and_plan_server_agree_on_execution_model_ordering() {
+    // Satellite consistency check: the plan-driven simulator and the
+    // plan-driven live server must agree on the paper's Fig. 2 ordering for
+    // a fixed seed design pair — sequential wins latency at batch 1,
+    // pipelining wins throughput once requests overlap.
+    let platform = vck190();
+    let graph = vit_graph(&DEIT_T);
+    let cal = Calib::default();
+    let seq_ev =
+        build_design(&platform, &cal, &graph, &Assignment::sequential(), Features::all(), true)
+            .unwrap();
+    let spa_ev =
+        build_design(&platform, &cal, &graph, &Assignment::spatial(), Features::all(), true)
+            .unwrap();
+
+    // Simulator side (always runs).
+    let sim_seq1 = ssr::sim::simulate(&platform, &seq_ev, &graph, 1);
+    let sim_spa1 = ssr::sim::simulate(&platform, &spa_ev, &graph, 1);
+    assert!(sim_seq1.makespan_s <= sim_spa1.makespan_s);
+    let sim_seq6 = ssr::sim::simulate(&platform, &seq_ev, &graph, 6);
+    let sim_spa6 = ssr::sim::simulate(&platform, &spa_ev, &graph, 6);
+    assert!(sim_spa6.tops >= sim_seq6.tops);
+
+    // Server side (needs artifacts).
+    let Some(engine) = try_engine() else {
+        eprintln!("skipping server half: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let seq = SequentialServer::new(Arc::clone(&engine), "deit_t", &[1]).unwrap();
+    let spa_plan = ExecutionPlan::from_depth(
+        "deit_t",
+        engine.manifest.models["deit_t"].depth,
+        &Assignment::spatial(),
+        1,
+    );
+    let spa = PipelineServer::from_plan(Arc::clone(&engine), &spa_plan).unwrap();
+
+    // Warm both paths, then measure.
+    let warm = synth_images(1, 224, 0);
+    let _ = seq.run_batch(1, &warm).unwrap();
+    let _ = spa.serve(vec![synth_images(1, 224, 1)]).unwrap();
+
+    let reqs: Vec<_> = (0..6).map(|i| synth_images(1, 224, 10 + i)).collect();
+    let (seq_rep, _) = seq.serve(1, &reqs).unwrap();
+    let (spa1_rep, _) = spa.serve(vec![synth_images(1, 224, 40)]).unwrap();
+    // Sequential batch-1 latency <= staged-pipeline batch-1 latency (the
+    // pipeline pays per-stage upload/download + hop overhead); 1.25 slack
+    // absorbs host timing noise.
+    assert!(
+        seq_rep.latency.p50() <= spa1_rep.latency.p50() * 1.25,
+        "server disagrees with sim on batch-1 latency ordering: seq {} vs spatial {}",
+        seq_rep.latency.p50(),
+        spa1_rep.latency.p50()
+    );
+
+    // Pipelining throughput: 8 overlapped requests finish well under 8x the
+    // single-request latency — the server-side analog of spatial winning
+    // throughput at large batch.
+    let imgs: Vec<_> = (0..8).map(|i| synth_images(1, 224, 60 + i)).collect();
+    let (spa8_rep, _) = spa.serve(imgs).unwrap();
+    assert!(
+        spa8_rep.wall_s < 8.0 * spa1_rep.latency.p50() * 0.9,
+        "pipeline does not overlap: wall {} vs 8 x {}",
+        spa8_rep.wall_s,
+        spa1_rep.latency.p50()
+    );
+}

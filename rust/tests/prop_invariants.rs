@@ -7,6 +7,7 @@ use ssr::dse::eval::build_design;
 use ssr::dse::pareto::{best_under, pareto_front, Point};
 use ssr::dse::Assignment;
 use ssr::graph::{vit_graph, DEIT_T, ALL_CLASSES};
+use ssr::plan::{expand_stage4, project_stage4, ExecutionPlan};
 use ssr::sim;
 use ssr::util::prop::{check, check_with, shrink_usize_vec, Config};
 use ssr::util::rng::Rng;
@@ -184,6 +185,75 @@ fn prop_alignment_symmetric_in_divisibility() {
             }
             Ok(())
         },
+    );
+}
+
+#[test]
+fn prop_plan_covers_graph_and_preserves_assignment() {
+    // For any genome: the materialized plan is structurally valid, keeps
+    // the full nacc (no silent coarsening), schedules every class on its
+    // assigned acc, and its from_depth twin matches the from_graph build.
+    let graph = vit_graph(&DEIT_T);
+    check_with(
+        &Config { cases: 100, ..Default::default() },
+        "plan-covers-graph",
+        rand_assignment,
+        |v| {
+            let a = Assignment::new(v.clone());
+            let p = ExecutionPlan::from_graph(&graph, &a, 1);
+            p.validate().map_err(|e| format!("invalid plan for {:?}: {e}", a.acc_of))?;
+            if p.nacc != a.nacc() {
+                return Err(format!("plan nacc {} != assignment {}", p.nacc, a.nacc()));
+            }
+            if p.steps.len() != graph.nodes.len() {
+                return Err("plan does not cover the graph".into());
+            }
+            for (s, n) in p.steps.iter().zip(&graph.nodes) {
+                if s.acc != a.acc_of(n.class) {
+                    return Err(format!("{:?} scheduled on acc {}", n.class, s.acc));
+                }
+            }
+            let q = ExecutionPlan::from_depth("deit_t", graph.depth, &a, 1);
+            if q.steps != p.steps {
+                return Err("from_depth disagrees with from_graph".into());
+            }
+            Ok(())
+        },
+        shrink_usize_vec,
+    );
+}
+
+#[test]
+fn prop_stage4_projection_lossless_iff_representable() {
+    // The coarsening report is truthful: lossless exactly when re-expanding
+    // the projected stage grouping reproduces the original assignment.
+    check_with(
+        &Config { cases: 200, ..Default::default() },
+        "projection-report-truthful",
+        rand_assignment,
+        |v| {
+            let a = Assignment::new(v.clone());
+            let (accs, report) = project_stage4(&a);
+            let nacc_proj = accs.iter().copied().max().unwrap() + 1;
+            if nacc_proj > a.nacc() || nacc_proj > 4 {
+                return Err(format!("projection invented accs: {accs:?}"));
+            }
+            if report.nacc_after != nacc_proj {
+                return Err("report nacc_after wrong".into());
+            }
+            // expand the 4-stage grouping back to 8 classes
+            let representable = expand_stage4(accs) == a;
+            if report.is_lossless() != representable {
+                return Err(format!(
+                    "report lossless={} but representable={} for {:?}",
+                    report.is_lossless(),
+                    representable,
+                    a.acc_of
+                ));
+            }
+            Ok(())
+        },
+        shrink_usize_vec,
     );
 }
 
