@@ -1,0 +1,51 @@
+//! Example: build a latency-throughput front analytically and watch the
+//! adaptive scheduler ride a rate ramp (no artifacts needed).
+//!
+//!     cargo run --release --example adaptive_sim
+//!
+//! This is the in-process version of the CLI flow:
+//!
+//!     ssr dse --emit-front front.json
+//!     ssr simulate --front front.json --slo-ms 2 --ramp 1000:4000:8000:1000
+
+use ssr::analytical::Calib;
+use ssr::arch;
+use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+use ssr::dse::Assignment;
+use ssr::graph::{vit_graph, DEIT_T};
+use ssr::plan::front::analytical_front;
+use ssr::sim::serving::serve_ramp;
+
+fn main() {
+    let platform = arch::vck190();
+    let g = vit_graph(&DEIT_T);
+
+    // Evaluate the paper's two pure strategies plus one hybrid across batch
+    // sizes; analytical_front prunes the dominated points (Fig. 2 front).
+    let candidates = vec![
+        ("sequential".to_string(), Assignment::sequential()),
+        ("spatial".to_string(), Assignment::spatial()),
+        ("hybrid".to_string(), Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0])),
+    ];
+    let front =
+        analytical_front(&platform, &Calib::default(), &g, &candidates, &[1, 3, 6]).unwrap();
+    print!("{}", front.describe());
+
+    // Ramp through the regimes of Fig. 2 and replay the SLO scheduler.
+    let ramp = RampSpec::parse("1000:4000:8000:4000:1000", 0.3).unwrap();
+    let cfg = SchedulerCfg { slo_ms: 2.0, ..Default::default() };
+    let report = serve_ramp(&front, &ramp, &cfg, 7);
+
+    for s in &report.switches {
+        println!(
+            "switch @ {:.3} s: [{}] {} -> [{}] {} at {:.0} req/s observed",
+            s.at_s,
+            s.from,
+            front.entries[s.from].label,
+            s.to,
+            front.entries[s.to].label,
+            s.rate_rps
+        );
+    }
+    println!("{}", report.summary_line());
+}

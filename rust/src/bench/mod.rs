@@ -4,7 +4,9 @@
 //! iterations, summary stats, and aligned table printing so each bench
 //! reproduces its paper table/figure as rows on stdout.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Timing result of one benchmark case.
@@ -18,23 +20,31 @@ pub struct BenchResult {
     pub min_s: f64,
 }
 
-/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
-/// until `max_iters` or `max_seconds` elapses (at least 3).
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations.
+///
+/// Loop-termination contract (unit-tested below):
+/// * exactly one timed iteration always runs, even with `max_iters == 0`
+///   or `max_seconds <= 0` — the stats are never empty (no NaN means);
+/// * never more than `max(max_iters, 1)` iterations run;
+/// * no new iteration starts once `max_seconds` has elapsed — the time
+///   budget binds as soon as one sample exists, so a slow case stops at
+///   its first over-budget iteration instead of grinding out a minimum.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize, max_seconds: f64, mut f: F) -> BenchResult {
     for _ in 0..warmup {
         f();
     }
     let mut s = Summary::new();
     let t0 = Instant::now();
+    let max_iters = max_iters.max(1);
     let mut iters = 0;
-    let min_iters = max_iters.clamp(1, 3);
-    while iters < max_iters.max(1)
-        && (iters < min_iters || t0.elapsed().as_secs_f64() < max_seconds)
-    {
+    loop {
         let it = Instant::now();
         f();
         s.push(it.elapsed().as_secs_f64());
         iters += 1;
+        if iters >= max_iters || t0.elapsed().as_secs_f64() >= max_seconds {
+            break;
+        }
     }
     BenchResult {
         name: name.to_string(),
@@ -47,6 +57,18 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize, max_second
 }
 
 impl BenchResult {
+    /// Machine-readable form for the CI perf-regression artifact.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("p50_s".to_string(), Json::Num(self.p50_s));
+        m.insert("p99_s".to_string(), Json::Num(self.p99_s));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        Json::Obj(m)
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>6} iters  mean {:>10}  p50 {:>10}  p99 {:>10}",
@@ -57,6 +79,34 @@ impl BenchResult {
             fmt_s(self.p99_s)
         )
     }
+}
+
+/// Write bench results as a JSON artifact (`{"results": [...]}`), the
+/// machine-readable output behind every bench's `--json <path>` flag. CI
+/// uploads these so the perf trajectory is tracked per commit instead of
+/// scrolling away in logs.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+    );
+    std::fs::write(path, Json::Obj(m).to_string() + "\n")
+}
+
+/// `--json <path>` / `--json=<path>` from the process args (shared by the
+/// `benches/*.rs` mains, which run with `harness = false`).
+pub fn json_path_from_args() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if let Some(v) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(v));
+        }
+        if a == "--json" {
+            return args.get(i + 1).map(PathBuf::from);
+        }
+    }
+    None
 }
 
 /// Human time formatting.
@@ -126,10 +176,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bench_runs_minimum_iters() {
+    fn bench_runs_to_max_iters_within_budget() {
         let mut count = 0;
-        let r = bench("noop", 1, 5, 0.0, || count += 1);
-        assert!(r.iters >= 3);
+        let r = bench("noop", 1, 5, 100.0, || count += 1);
+        assert_eq!(r.iters, 5);
         assert!(r.mean_s >= 0.0);
         assert_eq!(count, r.iters + 1); // +1 warmup
     }
@@ -140,6 +190,45 @@ mod tests {
         let r = bench("once", 0, 1, 100.0, || count += 1);
         assert_eq!(r.iters, 1);
         assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn bench_time_budget_stops_slow_cases_after_one_sample() {
+        // A case slower than the whole budget must stop at its first
+        // iteration instead of grinding toward a minimum count.
+        let mut count = 0;
+        let r = bench("slow", 0, 1000, 0.0, || {
+            count += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(r.iters, 1);
+        assert_eq!(count, 1);
+        assert!(r.mean_s.is_finite());
+    }
+
+    #[test]
+    fn bench_zero_max_iters_still_samples_once() {
+        // max_iters == 0 clamps to one iteration: stats stay well-defined.
+        let mut count = 0;
+        let r = bench("zero", 0, 0, 100.0, || count += 1);
+        assert_eq!(r.iters, 1);
+        assert_eq!(count, 1);
+        assert!(r.mean_s.is_finite() && r.p99_s.is_finite());
+    }
+
+    #[test]
+    fn json_artifact_round_trips() {
+        let r = bench("json-case", 0, 2, 100.0, || {});
+        let path = std::env::temp_dir().join("ssr_bench_json_test.json");
+        write_json(&path, std::slice::from_ref(&r)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let j = Json::parse(&text).unwrap();
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("json-case"));
+        assert_eq!(results[0].get("iters").unwrap().as_usize(), Some(2));
+        assert!(results[0].get("p99_s").unwrap().as_f64().is_some());
     }
 
     #[test]

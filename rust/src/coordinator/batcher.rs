@@ -47,6 +47,28 @@ impl BatchPolicy {
             })
     }
 
+    /// SLA-aware variant of [`BatchPolicy::choose`]: the deepest compiled
+    /// batch that the queue fills AND whose estimated service time fits
+    /// `budget_s` (falling back to the smallest covering executable that
+    /// fits). `service_s` maps a batch size to its estimated service time.
+    /// Returns None when no compiled size meets the budget — the caller
+    /// must shed or switch plans instead of batching deeper.
+    pub fn choose_under<F: Fn(usize) -> f64>(
+        &self,
+        queued: usize,
+        budget_s: f64,
+        service_s: F,
+    ) -> Option<usize> {
+        assert!(queued > 0);
+        let fits: Vec<usize> =
+            self.sizes.iter().copied().filter(|&s| service_s(s) <= budget_s).collect();
+        fits.iter()
+            .rev()
+            .find(|&&s| s <= queued)
+            .or_else(|| fits.iter().find(|&&s| s >= queued))
+            .copied()
+    }
+
     /// Split a queue length into concrete batch launches.
     pub fn plan(&self, mut queued: usize) -> Vec<usize> {
         let mut plan = Vec::new();
@@ -173,6 +195,21 @@ mod tests {
             assert!(total >= q, "q={q} plan under-covers");
             assert!(total - q < 6, "q={q} over-pads");
         }
+    }
+
+    #[test]
+    fn choose_under_respects_the_latency_budget() {
+        let p = policy(); // sizes [1, 3, 6]
+        let service = |b: usize| b as f64 * 1e-3; // 1 ms per image
+        // budget admits every size: same as choose
+        assert_eq!(p.choose_under(10, 10e-3, service), Some(6));
+        // budget only admits b1/b3: cap the launch depth
+        assert_eq!(p.choose_under(10, 3e-3, service), Some(3));
+        assert_eq!(p.choose_under(2, 3e-3, service), Some(1));
+        // padding fallback still honors the budget
+        assert_eq!(p.choose_under(2, 1e-3, service), Some(1));
+        // nothing fits: the caller must shed/switch, not batch
+        assert_eq!(p.choose_under(10, 0.5e-3, service), None);
     }
 
     #[test]

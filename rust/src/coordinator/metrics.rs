@@ -22,6 +22,15 @@ impl ServeReport {
         (self.requests as f64 * self.macs_per_image as f64 * 2.0) / self.wall_s / 1e12
     }
 
+    /// Fraction of requests whose latency met the SLO (1.0 on an empty run:
+    /// no request violated anything).
+    pub fn slo_attainment(&self, slo_s: f64) -> f64 {
+        if self.latency.is_empty() {
+            return 1.0;
+        }
+        self.latency.count_leq(slo_s) as f64 / self.latency.len() as f64
+    }
+
     pub fn summary_line(&self) -> String {
         format!(
             "{} reqs in {:.3} s | {:.2} req/s | lat p50 {:.2} ms p99 {:.2} ms | {:.4} effective TOPS",
@@ -53,6 +62,14 @@ mod tests {
         assert_eq!(r.throughput_rps(), 5.0);
         // 10 * 1.25G * 2 / 2s = 12.5 GOPS
         assert!((r.effective_tops() - 0.0125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment_counts_fraction_under() {
+        let r = report(); // latencies 1..=10 ms
+        assert!((r.slo_attainment(5e-3) - 0.5).abs() < 1e-12);
+        assert_eq!(r.slo_attainment(100e-3), 1.0);
+        assert_eq!(r.slo_attainment(0.1e-3), 0.0);
     }
 
     #[test]

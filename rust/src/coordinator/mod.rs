@@ -15,6 +15,12 @@
 //!   workers (Fig. 1c), served directly from the DSE's [`ExecutionPlan`]
 //!   via [`PipelineServer::from_plan`].
 //!
+//! On top of the single-plan servers, [`scheduler`] keeps the DSE's whole
+//! latency-throughput Pareto front live and switches the active plan
+//! against a latency SLO under observed load (drain-and-swap, hysteresis,
+//! admission control) — the serve-time counterpart of Table 6's
+//! "highest throughput under a latency constraint" column.
+//!
 //! [`StageAssign`] survives as the thin 4-stage compatibility shim for
 //! manifests that only carry fused embed/attn/mlp/head executables; its
 //! projection from an 8-class assignment now reports (instead of silently
@@ -25,10 +31,12 @@
 pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
+pub mod scheduler;
 
 pub use batcher::{BatchPolicy, BatchingServer};
 pub use metrics::ServeReport;
 pub use pipeline::{PipelineServer, SequentialServer};
+pub use scheduler::{AdaptiveScheduler, AdaptiveServer, RampSpec, SchedulerCfg};
 
 use crate::dse::Assignment;
 use crate::plan::{expand_stage4, project_stage4, CoarsenReport, ExecutionPlan};

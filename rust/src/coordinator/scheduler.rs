@@ -1,0 +1,722 @@
+//! SLA-aware adaptive plan scheduler: serve the Pareto front, not one point.
+//!
+//! The DSE (and the paper's Table 6) picks one design per latency
+//! constraint *offline*; which point is right at serve time depends on the
+//! arrival rate (paper Fig. 2: sequential wins latency at low batch,
+//! spatial wins throughput at high batch). This module holds the whole
+//! [`PlanFront`] live and selects against the observed load:
+//!
+//! * [`RampSpec`] — open-loop load generator: Poisson arrivals over
+//!   piecewise-constant rate phases (`--ramp a:b:c`), deterministic per
+//!   seed so scheduler behavior is replayable.
+//! * [`LoadEstimator`] — sliding-window estimate over `ServeReport`-style
+//!   metrics: arrival rate, queue depth, completion p99.
+//! * [`AdaptiveScheduler`] — the switch policy. Per window it targets the
+//!   *lowest-latency* front entry whose sustainable rate covers the
+//!   demand (observed rate / headroom) within the SLO, falling back to
+//!   the throughput-optimal entry under the SLO when saturated
+//!   (`best_under`, Table 6 semantics). Hysteresis: a different target
+//!   must persist for `patience` consecutive windows before a switch
+//!   commits, so the active plan changes at most once per window and
+//!   oscillating load cannot flap plans. Admission control sheds arrivals
+//!   once the estimated queue wait exceeds `shed_slack` SLOs.
+//! * [`AdaptiveServer`] — the live PJRT side: lazily compiles one
+//!   [`PipelineServer`] per front entry (micro-batch variant picked with
+//!   the SLA-aware [`BatchPolicy::choose_under`]) and swaps the active
+//!   server at window boundaries. Window serving is synchronous, so every
+//!   in-flight request finishes on the old plan before the swap —
+//!   drain-and-swap by construction.
+//!
+//! The deterministic queueing counterpart (drain-and-swap mid-batch, real
+//! backlog, shedding) lives in [`crate::sim::serving`], which drives this
+//! same scheduler without artifacts.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::BatchPolicy;
+use super::metrics::ServeReport;
+use super::pipeline::{synth_images, PipelineServer};
+use crate::plan::front::{FrontEntry, PlanFront};
+use crate::runtime::exec::{Engine, Tensor};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+// ---------------------------------------------------------------------------
+// Load generation
+// ---------------------------------------------------------------------------
+
+/// Piecewise-constant arrival-rate ramp (the `--ramp a:b:c` flag): phase
+/// `i` offers `rates_rps[i]` requests/s for `phase_s` seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RampSpec {
+    pub rates_rps: Vec<f64>,
+    pub phase_s: f64,
+}
+
+impl RampSpec {
+    /// Parse `"a:b:c"` (also accepts commas) into a ramp.
+    pub fn parse(spec: &str, phase_s: f64) -> Result<RampSpec, String> {
+        let rates: Result<Vec<f64>, _> = spec
+            .split(|c| c == ':' || c == ',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<f64>())
+            .collect();
+        let rates = rates.map_err(|e| format!("bad ramp '{spec}': {e}"))?;
+        if rates.is_empty() {
+            return Err(format!("ramp '{spec}' has no phases"));
+        }
+        if rates.iter().any(|r| !r.is_finite() || *r < 0.0) {
+            return Err(format!("ramp '{spec}' has a negative or non-finite rate"));
+        }
+        if !(phase_s > 0.0 && phase_s.is_finite()) {
+            return Err(format!("phase duration {phase_s} must be positive"));
+        }
+        Ok(RampSpec { rates_rps: rates, phase_s })
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.rates_rps.len() as f64 * self.phase_s
+    }
+
+    /// Offered rate at time `t` (0 outside the ramp).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if t < 0.0 {
+            return 0.0;
+        }
+        self.rates_rps.get((t / self.phase_s) as usize).copied().unwrap_or(0.0)
+    }
+
+    /// Deterministic Poisson arrival times over the ramp (sorted). Each
+    /// phase draws exponential gaps at its own rate; restarting at phase
+    /// boundaries is exact for a Poisson process (memorylessness).
+    pub fn arrivals(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for (i, &rate) in self.rates_rps.iter().enumerate() {
+            if rate <= 0.0 {
+                continue;
+            }
+            let t0 = i as f64 * self.phase_s;
+            let t1 = t0 + self.phase_s;
+            let mut t = t0;
+            loop {
+                t += -(1.0 - rng.f64()).ln() / rate;
+                if t >= t1 {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy configuration
+// ---------------------------------------------------------------------------
+
+/// Knobs of the adaptive scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerCfg {
+    /// Per-request latency SLO (milliseconds).
+    pub slo_ms: f64,
+    /// Decision window (seconds): load is re-estimated and the switch
+    /// policy runs once per window.
+    pub window_s: f64,
+    /// Hysteresis: consecutive windows a different target must persist
+    /// before a switch commits (>= 1).
+    pub patience: usize,
+    /// Target utilization: a plan is considered sufficient while the
+    /// observed rate stays below `headroom * plan.rps`, so switches fire
+    /// *before* the active plan saturates.
+    pub headroom: f64,
+    /// Admission control: shed arrivals once the estimated queue wait
+    /// exceeds `shed_slack` SLOs.
+    pub shed_slack: f64,
+    /// Sliding-window estimate horizon, in windows.
+    pub horizon_windows: usize,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            slo_ms: 2.0,
+            window_s: 0.05,
+            patience: 2,
+            headroom: 0.8,
+            shed_slack: 4.0,
+            horizon_windows: 4,
+        }
+    }
+}
+
+impl SchedulerCfg {
+    pub fn horizon_s(&self) -> f64 {
+        self.window_s * self.horizon_windows.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load estimation
+// ---------------------------------------------------------------------------
+
+/// One sliding-window load snapshot (`ServeReport`-style metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadEstimate {
+    /// Observed arrival rate over the horizon (req/s).
+    pub rate_rps: f64,
+    /// Queue depth at estimation time.
+    pub queue_depth: usize,
+    /// p99 completion latency over the horizon (0 when nothing completed).
+    pub p99_s: f64,
+    /// Completions inside the horizon.
+    pub completed: usize,
+}
+
+/// Sliding-window estimator over raw arrival/completion events.
+#[derive(Clone, Debug)]
+pub struct LoadEstimator {
+    horizon_s: f64,
+    arrivals: VecDeque<f64>,
+    completions: VecDeque<(f64, f64)>, // (completion time, latency_s)
+}
+
+impl LoadEstimator {
+    pub fn new(horizon_s: f64) -> LoadEstimator {
+        assert!(horizon_s > 0.0, "estimator horizon must be positive");
+        LoadEstimator { horizon_s, arrivals: VecDeque::new(), completions: VecDeque::new() }
+    }
+
+    pub fn record_arrival(&mut self, t_s: f64) {
+        self.arrivals.push_back(t_s);
+    }
+
+    pub fn record_completion(&mut self, t_s: f64, latency_s: f64) {
+        self.completions.push_back((t_s, latency_s));
+    }
+
+    /// Estimate the load at `now_s`. Prunes events older than the horizon.
+    pub fn estimate(&mut self, now_s: f64, queue_depth: usize) -> LoadEstimate {
+        let cut = now_s - self.horizon_s;
+        while self.arrivals.front().is_some_and(|&t| t < cut) {
+            self.arrivals.pop_front();
+        }
+        while self.completions.front().is_some_and(|&(t, _)| t < cut) {
+            self.completions.pop_front();
+        }
+        // Early in the run the horizon has not filled yet: divide by the
+        // elapsed span, not the full horizon, or rates read low.
+        let span = self.horizon_s.min(now_s).max(1e-9);
+        let mut lat = Summary::new();
+        for &(_, l) in &self.completions {
+            lat.push(l);
+        }
+        LoadEstimate {
+            rate_rps: self.arrivals.len() as f64 / span,
+            queue_depth,
+            p99_s: if lat.is_empty() { 0.0 } else { lat.p99() },
+            completed: self.completions.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Switch policy
+// ---------------------------------------------------------------------------
+
+/// Pick the front entry to serve `demand_rps` under `slo_ms`:
+/// the lowest-latency entry with capacity for the demand within the SLO;
+/// when saturated, the throughput-optimal entry under the SLO
+/// ([`PlanFront::best_under`], Table 6 semantics); when nothing meets the
+/// SLO at all, the lowest-latency entry (best effort).
+pub fn choose_plan(front: &PlanFront, slo_ms: f64, demand_rps: f64) -> usize {
+    // Entries are sorted by latency ascending, so the first hit is optimal.
+    if let Some((i, _)) = front
+        .entries
+        .iter()
+        .enumerate()
+        .find(|(_, e)| e.latency_ms <= slo_ms && e.rps >= demand_rps)
+    {
+        return i;
+    }
+    if let Some(i) = front.best_under(slo_ms) {
+        return i;
+    }
+    front.min_latency_idx()
+}
+
+/// One committed plan switch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchRecord {
+    pub at_s: f64,
+    /// Decision-window index the switch committed in.
+    pub window: usize,
+    pub from: usize,
+    pub to: usize,
+    /// Observed rate that motivated the switch.
+    pub rate_rps: f64,
+}
+
+/// The windowed switch policy with hysteresis + admission control. Pure
+/// decision logic: both the deterministic simulator and the live
+/// [`AdaptiveServer`] drive this same struct.
+pub struct AdaptiveScheduler {
+    pub front: PlanFront,
+    pub cfg: SchedulerCfg,
+    active: usize,
+    candidate: Option<usize>,
+    streak: usize,
+    pub switches: Vec<SwitchRecord>,
+}
+
+impl AdaptiveScheduler {
+    /// Start on the plan an idle system wants: lowest latency under SLO.
+    pub fn new(front: PlanFront, cfg: SchedulerCfg) -> AdaptiveScheduler {
+        assert!(!front.is_empty(), "scheduler needs a non-empty front");
+        let active = choose_plan(&front, cfg.slo_ms, 0.0);
+        AdaptiveScheduler { front, cfg, active, candidate: None, streak: 0, switches: Vec::new() }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn active_entry(&self) -> &FrontEntry {
+        &self.front.entries[self.active]
+    }
+
+    /// Run the switch policy for one decision window. Returns the new plan
+    /// index when a switch commits (at most one per window; a committed
+    /// switch resets the hysteresis state, so consecutive switches are at
+    /// least `patience` windows apart).
+    pub fn on_window(&mut self, window: usize, now_s: f64, est: &LoadEstimate) -> Option<usize> {
+        let demand = est.rate_rps / self.cfg.headroom.max(1e-9);
+        let target = choose_plan(&self.front, self.cfg.slo_ms, demand);
+        if target == self.active {
+            self.candidate = None;
+            self.streak = 0;
+            return None;
+        }
+        if self.candidate == Some(target) {
+            self.streak += 1;
+        } else {
+            self.candidate = Some(target);
+            self.streak = 1;
+        }
+        if self.streak < self.cfg.patience.max(1) {
+            return None;
+        }
+        let from = self.active;
+        self.active = target;
+        self.candidate = None;
+        self.streak = 0;
+        self.switches.push(SwitchRecord { at_s: now_s, window, from, to: target, rate_rps: est.rate_rps });
+        Some(target)
+    }
+
+    /// Admission control: admit while the estimated queue wait on the
+    /// active plan stays within `shed_slack` SLOs.
+    pub fn admit(&self, queue_depth: usize) -> bool {
+        if queue_depth == 0 {
+            return true;
+        }
+        let wait_s = queue_depth as f64 / self.active_entry().rps;
+        wait_s <= self.cfg.shed_slack * self.cfg.slo_ms * 1e-3
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live serving of a front (PJRT runtime)
+// ---------------------------------------------------------------------------
+
+/// Per-window outcome of a live adaptive run.
+pub struct WindowReport {
+    pub window: usize,
+    /// Offered arrival rate this window (req/s).
+    pub rate_rps: f64,
+    /// Front entry that served the window.
+    pub active: usize,
+    /// Requests shed by admission control this window.
+    pub shed: usize,
+    /// None for idle or fully-shed windows.
+    pub report: Option<ServeReport>,
+}
+
+/// Outcome of [`AdaptiveServer::serve_ramp`].
+pub struct AdaptiveServeReport {
+    pub windows: Vec<WindowReport>,
+    pub switches: Vec<SwitchRecord>,
+    /// Requests actually served (excludes shed and launch padding).
+    pub total_images: usize,
+    /// Requests shed by admission control across the run.
+    pub total_shed: usize,
+}
+
+/// Live adaptive serving over compiled PJRT stage executables: one lazily
+/// compiled [`PipelineServer`] per front entry, swapped at window
+/// boundaries. Windows serve synchronously, so a swap never interrupts an
+/// in-flight request (drain-and-swap).
+pub struct AdaptiveServer {
+    engine: Arc<Engine>,
+    sched: AdaptiveScheduler,
+    /// Compiled micro-batch variant per front entry.
+    micro_batch: Vec<usize>,
+    servers: Vec<Option<PipelineServer>>,
+    img_size: usize,
+}
+
+impl AdaptiveServer {
+    /// Bind a front to the engine: entries whose stage executables are
+    /// absent at every compiled micro-batch (or whose per-launch latency
+    /// cannot fit the SLO at any compiled variant) are dropped with a log
+    /// line; the rest serve as found.
+    pub fn new(engine: Arc<Engine>, front: PlanFront, cfg: SchedulerCfg) -> Result<AdaptiveServer> {
+        let info = engine
+            .manifest
+            .models
+            .get(&front.model)
+            .ok_or_else(|| anyhow!("model {} not in manifest", front.model))?
+            .clone();
+        let mut variants: Vec<usize> = engine
+            .manifest
+            .executables
+            .iter()
+            .filter(|e| e.model.as_deref() == Some(front.model.as_str()))
+            .filter_map(|e| e.batch)
+            .collect();
+        variants.sort_unstable();
+        variants.dedup();
+        if variants.is_empty() {
+            return Err(anyhow!("manifest has no batch variants for {}", front.model));
+        }
+        let policy = BatchPolicy::new(variants);
+        let mut entries = Vec::new();
+        let mut micro_batch = Vec::new();
+        // Lowest-latency entry that has executables but cannot meet the SLO
+        // at any compiled variant — kept as the best-effort fallback so the
+        // live path matches choose_plan's third tier instead of refusing
+        // to start (the sim serves best-effort under an infeasible SLO too).
+        let mut best_effort: Option<(FrontEntry, usize)> = None;
+        for e in &front.entries {
+            // Estimated per-launch service time of a b-deep variant, from
+            // the entry's analytical metrics (linear in batch depth).
+            let per_image_s = e.latency_s() / e.batch as f64;
+            let (mb, fits_slo) =
+                match policy.choose_under(e.batch, cfg.slo_ms * 1e-3, |b| per_image_s * b as f64)
+                {
+                    Some(mb) => (mb, true),
+                    // choose(1) is the smallest compiled variant.
+                    None => (policy.choose(1), false),
+                };
+            let plan = e.plan(&front.model, front.depth).with_micro_batch(mb);
+            let class_ok = plan
+                .requirements()
+                .iter()
+                .all(|r| engine.manifest.has_stage(&front.model, r.unit.name(), mb));
+            let fused_ok = plan
+                .coarsen()
+                .0
+                .requirements()
+                .iter()
+                .all(|r| engine.manifest.has_stage(&front.model, r.unit.name(), mb));
+            if !class_ok && !fused_ok {
+                eprintln!(
+                    "[scheduler] dropping front entry '{}': manifest lacks its stage \
+                     executables at b{mb}",
+                    e.label
+                );
+                continue;
+            }
+            let mut e = e.clone();
+            if mb < e.batch {
+                // The entry's metrics were evaluated at its full batch; a
+                // smaller compiled variant cannot be assumed to keep that
+                // throughput (pipelining gains are sublinear in batch).
+                // Derate capacity to the guaranteed lower bound — mb images
+                // per launch, launch no slower than the full-batch latency —
+                // so choose_plan/admit never promise more than the variant
+                // can deliver. latency_ms stays as the (upper-bound) full
+                // launch estimate.
+                e.rps = e.rps * mb as f64 / e.batch as f64;
+                eprintln!(
+                    "[scheduler] entry '{}': serving the b{mb} variant, capacity derated to \
+                     {:.0} img/s",
+                    e.label, e.rps
+                );
+            }
+            if fits_slo {
+                entries.push(e);
+                micro_batch.push(mb);
+            } else if best_effort.is_none() {
+                best_effort = Some((e, mb));
+            }
+        }
+        if entries.is_empty() {
+            let Some((e, mb)) = best_effort else {
+                return Err(anyhow!("no servable entries in the front"));
+            };
+            eprintln!(
+                "[scheduler] no front entry fits the {} ms SLO at any compiled variant; \
+                 serving '{}' (b{mb}) best-effort",
+                cfg.slo_ms, e.label
+            );
+            entries.push(e);
+            micro_batch.push(mb);
+        }
+        let n = entries.len();
+        let front = PlanFront { model: front.model.clone(), depth: front.depth, entries };
+        Ok(AdaptiveServer {
+            engine,
+            sched: AdaptiveScheduler::new(front, cfg),
+            micro_batch,
+            servers: (0..n).map(|_| None).collect(),
+            img_size: info.img_size,
+        })
+    }
+
+    pub fn scheduler(&self) -> &AdaptiveScheduler {
+        &self.sched
+    }
+
+    fn server(&mut self, idx: usize) -> Result<&PipelineServer> {
+        if self.servers[idx].is_none() {
+            let e = &self.sched.front.entries[idx];
+            let plan = e
+                .plan(&self.sched.front.model, self.sched.front.depth)
+                .with_micro_batch(self.micro_batch[idx]);
+            let server = PipelineServer::from_plan(Arc::clone(&self.engine), &plan)?;
+            self.servers[idx] = Some(server);
+        }
+        Ok(self.servers[idx].as_ref().unwrap())
+    }
+
+    /// Drive the ramp window by window: each window's Poisson arrival count
+    /// becomes synchronous launches on the active plan's server, then the
+    /// measured window metrics feed the switch policy. Synchronous windows
+    /// mean drain-and-swap by construction; overload shows up as service
+    /// wall time exceeding the window budget, which carries forward as
+    /// backlog — admission control sheds whole windows (the granularity of
+    /// this open-loop harness) once the backlog-equivalent queue depth
+    /// breaches the shed budget, mirroring the sim's per-request policy.
+    pub fn serve_ramp(&mut self, ramp: &RampSpec, seed: u64) -> Result<AdaptiveServeReport> {
+        let window_s = self.sched.cfg.window_s;
+        let arrivals = ramp.arrivals(seed);
+        // ceil (with a float-error guard) so a partial final window still
+        // serves its arrivals; the sim rounds instead, since its event loop
+        // drains remaining arrivals without a tick.
+        let n_windows = (ramp.duration_s() / window_s - 1e-9).ceil() as usize;
+        let mut est = LoadEstimator::new(self.sched.cfg.horizon_s());
+        let mut windows = Vec::with_capacity(n_windows);
+        let mut total_images = 0usize;
+        let mut total_shed = 0usize;
+        let mut backlog_s = 0.0f64;
+        let mut ai = 0usize;
+        for w in 0..n_windows {
+            let end_s = (w + 1) as f64 * window_s;
+            let mut count = 0usize;
+            while ai < arrivals.len() && arrivals[ai] < end_s {
+                est.record_arrival(arrivals[ai]);
+                ai += 1;
+                count += 1;
+            }
+            let active = self.sched.active();
+            let mb = self.micro_batch[active];
+            // Accumulated service overrun, expressed as a queue depth on
+            // the active plan — the live analog of the sim's queue.
+            let queue_depth = (backlog_s * self.sched.front.entries[active].rps) as usize;
+            let admitted = if count > 0 && self.sched.admit(queue_depth) { count } else { 0 };
+            let shed = count - admitted;
+            total_shed += shed;
+            let report = if admitted > 0 {
+                let launches = admitted.div_ceil(mb);
+                let img_size = self.img_size;
+                let reqs: Vec<Tensor> = (0..launches)
+                    .map(|i| {
+                        synth_images(mb, img_size, seed ^ ((w as u64) << 24) ^ i as u64)
+                    })
+                    .collect();
+                let (report, _) = self.server(active)?.serve(reqs)?;
+                // Count offered requests, not launch capacity: the last
+                // launch pads up to mb images and padding is not demand.
+                total_images += admitted;
+                // Service wall time beyond the window budget carries over.
+                backlog_s = (backlog_s + report.wall_s - window_s).max(0.0);
+                Some(report)
+            } else {
+                backlog_s = (backlog_s - window_s).max(0.0);
+                None
+            };
+            // The policy sees the same sliding-window estimate as the sim
+            // (horizon_windows applies identically); only p99/completed come
+            // from the measured window since Summary keeps no raw samples.
+            let mut snapshot = est.estimate(end_s, queue_depth);
+            snapshot.p99_s = report.as_ref().map(|r| r.latency.p99()).unwrap_or(0.0);
+            snapshot.completed = admitted;
+            self.sched.on_window(w, end_s, &snapshot);
+            let rate_rps = count as f64 / window_s; // offered, for display
+            windows.push(WindowReport { window: w, rate_rps, active, shed, report });
+        }
+        Ok(AdaptiveServeReport {
+            windows,
+            switches: self.sched.switches.clone(),
+            total_images,
+            total_shed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    /// seq-like (fast, low rate) / hybrid / spatial-like (slow, high rate).
+    fn front3() -> PlanFront {
+        PlanFront::new(
+            "synthetic",
+            12,
+            vec![
+                entry("seq", 1, 0.2, 5000.0),
+                entry("hybrid", 6, 1.0, 6000.0),
+                entry("spatial", 24, 2.0, 12000.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn est(rate: f64) -> LoadEstimate {
+        LoadEstimate { rate_rps: rate, queue_depth: 0, p99_s: 0.0, completed: 0 }
+    }
+
+    #[test]
+    fn choose_plan_low_latency_until_demand_exceeds_capacity() {
+        let f = front3();
+        assert_eq!(choose_plan(&f, 20.0, 0.0), 0);
+        assert_eq!(choose_plan(&f, 20.0, 4900.0), 0);
+        assert_eq!(choose_plan(&f, 20.0, 5500.0), 1); // seq saturated, hybrid fits
+        assert_eq!(choose_plan(&f, 20.0, 11000.0), 2); // only spatial covers
+    }
+
+    #[test]
+    fn choose_plan_saturated_takes_best_under_slo() {
+        let f = front3();
+        // demand beyond every entry: throughput-optimal under SLO
+        assert_eq!(choose_plan(&f, 20.0, 1e9), 2);
+        // SLO excludes spatial: best under 1.5 ms is hybrid
+        assert_eq!(choose_plan(&f, 1.5, 1e9), 1);
+        // SLO excludes everything: best-effort lowest latency
+        assert_eq!(choose_plan(&f, 0.05, 1e9), 0);
+    }
+
+    #[test]
+    fn hysteresis_commits_after_patience_windows() {
+        let cfg = SchedulerCfg { slo_ms: 20.0, patience: 2, ..Default::default() };
+        let mut s = AdaptiveScheduler::new(front3(), cfg);
+        assert_eq!(s.active(), 0);
+        // sustained rate 4400: demand 4400 / 0.8 = 5500 outgrows seq (5000)
+        // but fits hybrid (6000); window 0 arms the candidate, window 1
+        // commits the switch
+        assert_eq!(s.on_window(0, 0.05, &est(4400.0)), None);
+        assert_eq!(s.on_window(1, 0.10, &est(4400.0)), Some(1));
+        assert_eq!(s.active(), 1);
+        assert_eq!(s.switches.len(), 1);
+        assert_eq!(s.switches[0].from, 0);
+        assert_eq!(s.switches[0].to, 1);
+        // rate falls again: two quiet windows later we are back on seq
+        assert_eq!(s.on_window(2, 0.15, &est(1000.0)), None);
+        assert_eq!(s.on_window(3, 0.20, &est(1000.0)), Some(0));
+        // consecutive switches are >= patience windows apart
+        assert!(s.switches[1].window - s.switches[0].window >= cfg.patience);
+    }
+
+    #[test]
+    fn alternating_targets_never_switch() {
+        let cfg = SchedulerCfg { slo_ms: 20.0, patience: 2, ..Default::default() };
+        let mut s = AdaptiveScheduler::new(front3(), cfg);
+        for w in 0..20 {
+            let rate = if w % 2 == 0 { 5500.0 } else { 1000.0 };
+            assert_eq!(s.on_window(w, w as f64 * 0.05, &est(rate)), None);
+        }
+        assert!(s.switches.is_empty());
+        assert_eq!(s.active(), 0);
+    }
+
+    #[test]
+    fn admission_sheds_only_past_the_slack() {
+        let cfg = SchedulerCfg { slo_ms: 20.0, shed_slack: 4.0, ..Default::default() };
+        let s = AdaptiveScheduler::new(front3(), cfg);
+        // active = seq (5000 rps); budget = 4 * 20 ms = 80 ms => 400 queued
+        assert!(s.admit(0));
+        assert!(s.admit(400));
+        assert!(!s.admit(401));
+    }
+
+    #[test]
+    fn estimator_rates_and_pruning() {
+        let mut e = LoadEstimator::new(0.2);
+        for i in 0..100 {
+            e.record_arrival(i as f64 * 1e-3); // 100 arrivals in 0.1 s
+        }
+        e.record_completion(0.09, 1e-3);
+        let est = e.estimate(0.1, 3);
+        assert!((est.rate_rps - 1000.0).abs() < 1.0, "rate {}", est.rate_rps);
+        assert_eq!(est.queue_depth, 3);
+        assert_eq!(est.completed, 1);
+        // an hour later everything has aged out
+        let est = e.estimate(3600.0, 0);
+        assert_eq!(est.rate_rps, 0.0);
+        assert_eq!(est.completed, 0);
+        assert_eq!(est.p99_s, 0.0);
+    }
+
+    #[test]
+    fn ramp_parse_and_rate_lookup() {
+        let r = RampSpec::parse("1000:4000:1000", 0.5).unwrap();
+        assert_eq!(r.rates_rps, vec![1000.0, 4000.0, 1000.0]);
+        assert!((r.duration_s() - 1.5).abs() < 1e-12);
+        assert_eq!(r.rate_at(0.1), 1000.0);
+        assert_eq!(r.rate_at(0.7), 4000.0);
+        assert_eq!(r.rate_at(2.0), 0.0);
+        assert!(RampSpec::parse("", 0.5).is_err());
+        assert!(RampSpec::parse("1:x", 0.5).is_err());
+        assert!(RampSpec::parse("1:-2", 0.5).is_err());
+        assert!(RampSpec::parse("1:2", 0.0).is_err());
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_sorted_in_bounds() {
+        let r = RampSpec::parse("2000:500", 0.5).unwrap();
+        let a = r.arrivals(42);
+        let b = r.arrivals(42);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| (0.0..1.0).contains(&t)));
+        // ~1250 expected; allow wide Poisson slack
+        assert!((800..1700).contains(&a.len()), "{} arrivals", a.len());
+        assert_ne!(a, r.arrivals(43));
+    }
+
+    #[test]
+    fn scheduler_starts_on_lowest_latency_under_slo() {
+        let s = AdaptiveScheduler::new(front3(), SchedulerCfg { slo_ms: 20.0, ..Default::default() });
+        assert_eq!(s.active(), 0);
+        // SLO that only spatial-class throughput plans could meet does not
+        // exist here; with SLO below every entry we still serve best effort
+        let s = AdaptiveScheduler::new(front3(), SchedulerCfg { slo_ms: 0.05, ..Default::default() });
+        assert_eq!(s.active(), 0);
+    }
+}

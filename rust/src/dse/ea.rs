@@ -54,6 +54,10 @@ pub struct EaResult {
     /// (generation, best-feasible-throughput-so-far) trace for Fig. 10-style
     /// search-quality curves.
     pub trace: Vec<(usize, f64)>,
+    /// Non-dominated feasible designs encountered during the search, on the
+    /// (latency, throughput) plane at the search batch — the raw material
+    /// for `ssr dse --emit-front` (sorted by latency ascending).
+    pub pareto_candidates: Vec<(Assignment, Eval)>,
     pub designs_evaluated: usize,
     pub configs_evaluated: usize,
 }
@@ -177,7 +181,43 @@ pub fn run_ea(
         trace.push((gen, best_tops(&best)));
     }
 
-    EaResult { best, trace, designs_evaluated, configs_evaluated }
+    let pareto_candidates = pareto_of_evaluated(&evaluated, params.lat_cons);
+    EaResult { best, trace, pareto_candidates, designs_evaluated, configs_evaluated }
+}
+
+/// Non-dominated feasible (assignment, eval) pairs from the memo table.
+/// The HashMap iteration order is arbitrary, so candidates are sorted into
+/// a canonical order before pruning to keep the result deterministic.
+fn pareto_of_evaluated(
+    evaluated: &HashMap<Vec<usize>, Option<(Evaluated, Eval)>>,
+    lat_cons: f64,
+) -> Vec<(Assignment, Eval)> {
+    use crate::dse::pareto::{pareto_indices, Point};
+    let mut feasible: Vec<(&Vec<usize>, Eval)> = evaluated
+        .iter()
+        .filter_map(|(g, r)| r.as_ref().map(|(_, e)| (g, *e)))
+        .filter(|(_, e)| e.latency_s <= lat_cons)
+        .collect();
+    feasible.sort_by(|(ga, a), (gb, b)| {
+        a.latency_s
+            .partial_cmp(&b.latency_s)
+            .unwrap()
+            .then(b.tops.partial_cmp(&a.tops).unwrap())
+            .then(ga.cmp(gb))
+    });
+    let points: Vec<Point> = feasible
+        .iter()
+        .map(|(g, e)| Point {
+            latency_ms: e.latency_s * 1e3,
+            tops: e.tops,
+            batch: e.batch,
+            nacc: g.iter().copied().max().unwrap_or(0) + 1,
+        })
+        .collect();
+    pareto_indices(&points)
+        .into_iter()
+        .map(|i| (Assignment::new(feasible[i].0.clone()), feasible[i].1))
+        .collect()
 }
 
 fn best_tops(best: &Option<(Evaluated, Eval)>) -> f64 {
@@ -321,6 +361,25 @@ mod tests {
         for w in r.trace.windows(2) {
             assert!(w[1].1 >= w[0].1);
         }
+    }
+
+    #[test]
+    fn pareto_candidates_feasible_sorted_and_contain_best() {
+        let p = vck190();
+        let g = vit_graph(&DEIT_T);
+        let r = run_ea(&p, &Calib::default(), &g, Features::all(), true, &quick_params());
+        let (_, best) = r.best.as_ref().unwrap();
+        assert!(!r.pareto_candidates.is_empty());
+        for w in r.pareto_candidates.windows(2) {
+            assert!(w[0].1.latency_s <= w[1].1.latency_s);
+            assert!(w[0].1.tops <= w[1].1.tops, "front must trade latency for tops");
+        }
+        let best_on_front = r
+            .pareto_candidates
+            .iter()
+            .map(|(_, e)| e.tops)
+            .fold(0.0f64, f64::max);
+        assert!((best_on_front - best.tops).abs() < 1e-9);
     }
 
     #[test]

@@ -119,6 +119,15 @@ pub struct Eval {
     pub gops_per_w: f64,
 }
 
+impl Eval {
+    /// Service rate in images per second: the whole batch completes in
+    /// `latency_s`, so this is what an SLA-aware scheduler can sustain by
+    /// back-to-back launches of this design point.
+    pub fn imgs_per_s(&self) -> f64 {
+        self.batch as f64 / self.latency_s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +161,12 @@ mod tests {
         let a = Assignment::new(vec![0, 0, 1, 1, 0, 0, 0, 0]);
         assert!(a.has_attention(1));
         assert!(!a.has_attention(0));
+    }
+
+    #[test]
+    fn imgs_per_s_is_batch_over_latency() {
+        let e = Eval { batch: 6, latency_s: 0.58e-3, tops: 26.7, gops_per_w: 0.0 };
+        assert!((e.imgs_per_s() - 6.0 / 0.58e-3).abs() < 1e-9);
     }
 
     #[test]

@@ -39,6 +39,27 @@ pub fn pareto_front(points: &[Point]) -> Vec<Point> {
     front
 }
 
+/// Indices of the non-dominated subset, sorted by latency ascending (ties:
+/// higher throughput first). Keeps provenance: callers that carry richer
+/// records per point (e.g. a serializable plan front) can prune without
+/// losing the mapping back to their own data.
+pub fn pareto_indices(points: &[Point]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| !points.iter().any(|q| q.dominates(&points[i])))
+        .collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .latency_ms
+            .partial_cmp(&points[b].latency_ms)
+            .unwrap()
+            .then(points[b].tops.partial_cmp(&points[a].tops).unwrap())
+    });
+    idx.dedup_by(|&mut a, &mut b| {
+        points[a].latency_ms == points[b].latency_ms && points[a].tops == points[b].tops
+    });
+    idx
+}
+
 /// Best throughput meeting a latency constraint (Table 6 cells); None = "x".
 pub fn best_under(points: &[Point], lat_cons_ms: f64) -> Option<Point> {
     points
@@ -99,6 +120,15 @@ mod tests {
         let seq = [pt(0.22, 10.9), pt(1.3, 11.17)];
         assert!(front_dominates(&hybrid, &seq));
         assert!(!front_dominates(&seq, &hybrid));
+    }
+
+    #[test]
+    fn indices_match_front_and_keep_provenance() {
+        let pts = [pt(1.0, 10.0), pt(2.0, 5.0), pt(0.5, 3.0), pt(3.0, 12.0)];
+        let idx = pareto_indices(&pts);
+        let via_idx: Vec<Point> = idx.iter().map(|&i| pts[i]).collect();
+        assert_eq!(via_idx, pareto_front(&pts));
+        assert_eq!(idx, vec![2, 0, 3]); // sorted by latency, (2.0, 5) dominated
     }
 
     #[test]

@@ -3,23 +3,31 @@
 //! Subcommands:
 //!   report            regenerate every paper table/figure (analytical + sim)
 //!   dse               run the evolutionary Layer→Acc search
-//!   simulate          run the event-driven simulator on a named strategy
+//!                     (--emit-front writes the Pareto front of plans as JSON)
+//!   simulate          run the event-driven simulator on a named strategy, or
+//!                     replay the adaptive SLO scheduler over a plan front
+//!                     (--front front.json --slo-ms 2 --ramp 1000:4000:1000)
 //!   serve             serve DeiT-T on the PJRT runtime (sequential/spatial/hybrid,
-//!                     or any 8-class DSE design via --assign c0,..,c7)
+//!                     any 8-class DSE design via --assign c0,..,c7, or the whole
+//!                     front adaptively via --front)
 //!   calibrate         print model-vs-paper residuals for the anchor points
+
+use std::path::Path;
 
 use ssr::analytical::{Calib, Features};
 use ssr::arch;
 use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
+use ssr::coordinator::scheduler::{AdaptiveServer, RampSpec, SchedulerCfg};
 use ssr::coordinator::StageAssign;
-use ssr::dse::ea::{run_ea, EaParams};
+use ssr::dse::ea::{run_ea, EaParams, EaResult};
 use ssr::dse::eval::build_design;
 use ssr::dse::Assignment;
-use ssr::graph::{builder, vit_graph};
+use ssr::graph::{builder, vit_graph, Graph};
+use ssr::plan::front::{analytical_front, PlanFront};
 use ssr::plan::ExecutionPlan;
 use ssr::report::tables::{self, Ctx};
 use ssr::runtime::exec::Engine;
-use ssr::util::cli::Command;
+use ssr::util::cli::{Command, Matches};
 
 /// Parse an 8-class Layer→Acc genome like `0,1,1,1,0,2,2,0`.
 fn parse_assignment(s: &str) -> Result<Assignment, String> {
@@ -149,6 +157,37 @@ fn cmd_report(args: &[String]) -> i32 {
     0
 }
 
+/// The adaptive-scheduler flags shared by `simulate --front` and
+/// `serve --front`.
+fn scheduler_flags(cmd: Command) -> Command {
+    cmd.flag("front", Some(""), "plan-front JSON from `ssr dse --emit-front` (enables the adaptive scheduler)")
+        .flag("slo-ms", Some("2.0"), "per-request latency SLO (ms)")
+        .flag("ramp", Some("1000:4000:1000"), "arrival-rate ramp, req/s per phase (a:b:c)")
+        .flag("phase-s", Some("0.5"), "seconds per ramp phase")
+        .flag("window-ms", Some("50"), "scheduler decision window (ms)")
+        .flag("patience", Some("2"), "hysteresis: windows before a switch commits")
+        .flag("load-seed", Some("7"), "Poisson load-generator seed")
+}
+
+fn scheduler_cfg(m: &Matches) -> SchedulerCfg {
+    SchedulerCfg {
+        slo_ms: m.f64("slo-ms"),
+        window_s: m.f64("window-ms") * 1e-3,
+        patience: m.usize("patience"),
+        ..Default::default()
+    }
+}
+
+fn parse_ramp_or_exit(m: &Matches) -> RampSpec {
+    match RampSpec::parse(&m.str("ramp"), m.f64("phase-s")) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_dse(args: &[String]) -> i32 {
     let cmd = Command::new("ssr dse", "evolutionary Layer→Acc search")
         .flag("model", Some("deit_t"), "model name")
@@ -156,7 +195,9 @@ fn cmd_dse(args: &[String]) -> i32 {
         .flag("lat-cons-ms", Some("inf"), "latency constraint (ms)")
         .flag("pop", Some("24"), "population size")
         .flag("iters", Some("12"), "EA generations")
-        .flag("seed", Some("57005"), "EA seed");
+        .flag("seed", Some("57005"), "EA seed")
+        .flag("emit-front", Some(""), "write the latency-throughput front of plans to this JSON path")
+        .flag("front-batches", Some("1,2,3,4,6"), "batch sizes evaluated when emitting the front");
     let m = parse_or_exit(cmd, args);
     let cfg = builder::by_name(&m.str("model")).expect("unknown model");
     let g = vit_graph(cfg);
@@ -177,6 +218,19 @@ fn cmd_dse(args: &[String]) -> i32 {
         ..Default::default()
     };
     let r = run_ea(&platform, &Calib::default(), &g, Features::all(), true, &params);
+    let emit = m.str("emit-front");
+    if !emit.is_empty() {
+        match emit_front(&platform, &g, &r, &m.usize_list("front-batches"), Path::new(&emit)) {
+            Ok(n) => println!(
+                "wrote {emit}: {n} non-dominated plans ({} EA candidates + pure strategies)",
+                r.pareto_candidates.len()
+            ),
+            Err(e) => {
+                eprintln!("emit-front failed: {e}");
+                return 1;
+            }
+        }
+    }
     match r.best {
         Some((ev, e)) => {
             println!(
@@ -224,13 +278,90 @@ fn cmd_dse(args: &[String]) -> i32 {
     }
 }
 
+/// Build and save the serve-time plan front: EA Pareto candidates plus the
+/// two pure strategies, each evaluated across `batches`, pruned to the
+/// non-dominated (latency, rate) set.
+fn emit_front(
+    platform: &arch::Platform,
+    g: &Graph,
+    r: &EaResult,
+    batches: &[usize],
+    path: &Path,
+) -> Result<usize, String> {
+    let mut candidates: Vec<(String, Assignment)> = vec![
+        ("sequential".to_string(), Assignment::sequential()),
+        ("spatial".to_string(), Assignment::spatial()),
+    ];
+    for (i, (a, _)) in r.pareto_candidates.iter().enumerate() {
+        candidates.push((format!("ea-{i}"), a.clone()));
+    }
+    let front = analytical_front(platform, &Calib::default(), g, &candidates, batches)?;
+    front.save(path).map_err(|e| format!("writing {}: {e}", path.display()))?;
+    Ok(front.len())
+}
+
+/// Print a simulated adaptive run: per-window trace, switches, summary.
+fn print_sim_report(front: &PlanFront, r: &ssr::sim::serving::ServeSimReport) {
+    let mut t = ssr::bench::Table::new(&[
+        "window", "t (s)", "rate (req/s)", "queue", "p99 (ms)", "active plan",
+    ]);
+    for ws in &r.windows {
+        t.row(&[
+            ws.window.to_string(),
+            format!("{:.2}", ws.end_s),
+            format!("{:.0}", ws.rate_rps),
+            ws.queue_depth.to_string(),
+            format!("{:.2}", ws.p99_s * 1e3),
+            format!("[{}] {}", ws.active, front.entries[ws.active].label),
+        ]);
+    }
+    println!("{}", t.render());
+    for s in &r.switches {
+        println!(
+            "switch @ {:.3} s (window {}): [{}] {} -> [{}] {} at {:.0} req/s observed",
+            s.at_s,
+            s.window,
+            s.from,
+            front.entries[s.from].label,
+            s.to,
+            front.entries[s.to].label,
+            s.rate_rps
+        );
+    }
+    println!("{}", r.summary_line());
+}
+
 fn cmd_simulate(args: &[String]) -> i32 {
-    let cmd = Command::new("ssr simulate", "event-driven simulation of a strategy")
-        .flag("model", Some("deit_t"), "model name")
-        .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
-        .flag("assign", Some(""), "8-class genome c0,..,c7 (overrides --strategy)")
-        .flag("batch", Some("6"), "batch size");
+    let cmd = scheduler_flags(
+        Command::new("ssr simulate", "event-driven simulation of a strategy")
+            .flag("model", Some("deit_t"), "model name")
+            .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
+            .flag("assign", Some(""), "8-class genome c0,..,c7 (overrides --strategy)")
+            .flag("batch", Some("6"), "batch size"),
+    );
     let m = parse_or_exit(cmd, args);
+    let frontp = m.str("front");
+    if !frontp.is_empty() {
+        // Adaptive-scheduler replay: deterministic queueing sim over the
+        // serialized front, no artifacts required.
+        let front = match PlanFront::load(Path::new(&frontp)) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let ramp = parse_ramp_or_exit(&m);
+        let cfg = scheduler_cfg(&m);
+        print!("{}", front.describe());
+        println!(
+            "slo {} ms, window {} ms, patience {}, ramp {:?} req/s x {} s",
+            cfg.slo_ms, cfg.window_s * 1e3, cfg.patience, ramp.rates_rps, ramp.phase_s
+        );
+        let r = ssr::sim::serving::serve_ramp(&front, &ramp, &cfg, m.usize("load-seed") as u64);
+        print_sim_report(&front, &r);
+        return 0;
+    }
     let cfg = builder::by_name(&m.str("model")).expect("unknown model");
     let g = vit_graph(cfg);
     let platform = arch::vck190();
@@ -273,17 +404,19 @@ fn cmd_simulate(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    let cmd = Command::new("ssr serve", "serve DeiT-T on the PJRT runtime")
-        .flag("artifacts", None, "artifacts dir (default ./artifacts)")
-        .flag("model", Some("deit_t"), "model name")
-        .flag("mode", Some("spatial"), "sequential|spatial|hybrid")
-        .flag(
-            "assign",
-            Some(""),
-            "8-class genome c0,..,c7 (plan-driven serve of a DSE design; overrides --mode)",
-        )
-        .flag("requests", Some("16"), "number of requests")
-        .flag("batch", Some("1"), "images per request (sequential: 1|3|6)");
+    let cmd = scheduler_flags(
+        Command::new("ssr serve", "serve DeiT-T on the PJRT runtime")
+            .flag("artifacts", None, "artifacts dir (default ./artifacts)")
+            .flag("model", Some("deit_t"), "model name")
+            .flag("mode", Some("spatial"), "sequential|spatial|hybrid")
+            .flag(
+                "assign",
+                Some(""),
+                "8-class genome c0,..,c7 (plan-driven serve of a DSE design; overrides --mode)",
+            )
+            .flag("requests", Some("16"), "number of requests")
+            .flag("batch", Some("1"), "images per request (sequential: 1|3|6)"),
+    );
     let m = parse_or_exit(cmd, args);
     let dir = ssr::runtime::artifacts_dir(m.get("artifacts"));
     let engine = Engine::load(&dir).expect("load artifacts (run `make artifacts`)");
@@ -297,6 +430,89 @@ fn cmd_serve(args: &[String]) -> i32 {
     let batch = m.usize("batch");
     let mode = m.str("mode");
     let genome = m.str("assign");
+    let frontp = m.str("front");
+    if !frontp.is_empty() {
+        // Adaptive serving of the DSE front: hold every plan live, switch
+        // against the SLO under the generated load ramp.
+        let front = match PlanFront::load(Path::new(&frontp)) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let ramp = parse_ramp_or_exit(&m);
+        let cfg = scheduler_cfg(&m);
+        println!("loaded {} with {} front entries", frontp, front.len());
+        let mut server = match AdaptiveServer::new(engine, front, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("adaptive server: {e}");
+                return 1;
+            }
+        };
+        // Describe the *servable* front: entries the manifest cannot serve
+        // were dropped above, and all later [i] indices refer to this list.
+        print!("{}", server.scheduler().front.describe());
+        let r = match server.serve_ramp(&ramp, m.usize("load-seed") as u64) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("adaptive serve: {e}");
+                return 1;
+            }
+        };
+        let sched = server.scheduler();
+        let slo_s = cfg.slo_ms * 1e-3;
+        let (mut slo_met, mut slo_total) = (0usize, 0usize);
+        for wr in &r.windows {
+            let label = &sched.front.entries[wr.active].label;
+            let shed = if wr.shed > 0 { format!("  shed {}", wr.shed) } else { String::new() };
+            match &wr.report {
+                Some(rep) => {
+                    slo_met += rep.latency.count_leq(slo_s);
+                    slo_total += rep.latency.len();
+                    println!(
+                        "window {:>3}  {:>6.0} req/s  [{}] {:<12} {}  slo {:.0}%{shed}",
+                        wr.window,
+                        wr.rate_rps,
+                        wr.active,
+                        label,
+                        rep.summary_line(),
+                        rep.slo_attainment(slo_s) * 100.0
+                    );
+                }
+                None => println!(
+                    "window {:>3}  {:>6.0} req/s  [{}] {:<12} idle{shed}",
+                    wr.window, wr.rate_rps, wr.active, label
+                ),
+            }
+        }
+        for s in &r.switches {
+            println!(
+                "switch @ window {}: [{}] {} -> [{}] {} at {:.0} req/s",
+                s.window,
+                s.from,
+                sched.front.entries[s.from].label,
+                s.to,
+                sched.front.entries[s.to].label,
+                s.rate_rps
+            );
+        }
+        let attainment = if slo_total > 0 {
+            slo_met as f64 / slo_total as f64 * 100.0
+        } else {
+            100.0
+        };
+        println!(
+            "{} images served, {} shed over {} windows, {} plan switches, SLO attainment \
+             {attainment:.1}% (per-launch)",
+            r.total_images,
+            r.total_shed,
+            r.windows.len(),
+            r.switches.len()
+        );
+        return 0;
+    }
     if !genome.is_empty() {
         // DSE → ExecutionPlan → live serving: any nacc ∈ 1..=8 grouping.
         let a = match parse_assignment(&genome) {

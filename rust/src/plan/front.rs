@@ -1,0 +1,391 @@
+//! Serialized Pareto front of execution plans — the artifact the DSE hands
+//! to the serving layer.
+//!
+//! The paper's Table 6 picks one design ("highest throughput under a
+//! latency constraint") ahead of time; the adaptive scheduler instead keeps
+//! the whole latency-throughput front live and chooses against the observed
+//! load (see [`crate::coordinator::scheduler`]). A [`PlanFront`] is the
+//! interchange format between the two sides:
+//!
+//! ```text
+//!   ssr dse --emit-front front.json       # search → pruned front on disk
+//!   ssr simulate --front front.json ...   # deterministic scheduler replay
+//!   ssr serve    --front front.json ...   # live PJRT serving of the front
+//! ```
+//!
+//! Each [`FrontEntry`] carries the 8-class assignment genome plus the
+//! analytical metrics the scheduler selects on, so any entry can be
+//! re-materialized into an [`ExecutionPlan`] without re-running the search.
+
+use std::path::Path;
+
+use crate::dse::pareto::{pareto_indices, Point};
+use crate::dse::Assignment;
+use crate::graph::ALL_CLASSES;
+use crate::plan::ExecutionPlan;
+use crate::util::json::Json;
+
+/// One design point of the front: a servable plan plus its metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontEntry {
+    /// 8-class Layer→Acc genome (same encoding as `ssr serve --assign`).
+    pub assign: Vec<usize>,
+    /// Batch size the metrics were evaluated at (also the plan micro-batch).
+    pub batch: usize,
+    pub latency_ms: f64,
+    pub tops: f64,
+    /// Sustainable service rate (images/s) under back-to-back launches.
+    pub rps: f64,
+    pub nacc: usize,
+    /// Provenance tag ("sequential", "spatial", "ea", ...).
+    pub label: String,
+}
+
+impl FrontEntry {
+    pub fn from_eval(label: &str, assignment: &Assignment, e: &crate::dse::Eval) -> FrontEntry {
+        FrontEntry {
+            assign: assignment.acc_of.clone(),
+            batch: e.batch,
+            latency_ms: e.latency_s * 1e3,
+            tops: e.tops,
+            rps: e.imgs_per_s(),
+            nacc: assignment.nacc(),
+            label: label.to_string(),
+        }
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.latency_ms * 1e-3
+    }
+
+    pub fn assignment(&self) -> Assignment {
+        Assignment::new(self.assign.clone())
+    }
+
+    /// Materialize the class-granular execution plan this entry names.
+    pub fn plan(&self, model: &str, depth: usize) -> ExecutionPlan {
+        ExecutionPlan::from_depth(model, depth, &self.assignment(), self.batch)
+    }
+
+    /// The (latency, throughput) view the Pareto pruning runs on. Rate in
+    /// images/s stands in for TOPS — proportional within one model, and it
+    /// is the unit the scheduler compares against arrival rates.
+    fn point(&self) -> Point {
+        Point {
+            latency_ms: self.latency_ms,
+            tops: self.rps,
+            batch: self.batch,
+            nacc: self.nacc,
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.assign.len() != ALL_CLASSES.len() {
+            return Err(format!(
+                "entry '{}' has {} classes, want {}",
+                self.label,
+                self.assign.len(),
+                ALL_CLASSES.len()
+            ));
+        }
+        if let Some(bad) = self.assign.iter().find(|&&a| a >= ALL_CLASSES.len()) {
+            return Err(format!("entry '{}' has acc id {bad} >= 8", self.label));
+        }
+        if self.batch == 0 {
+            return Err(format!("entry '{}' has batch 0", self.label));
+        }
+        if !(self.latency_ms > 0.0 && self.latency_ms.is_finite()) {
+            return Err(format!("entry '{}' latency {} not positive", self.label, self.latency_ms));
+        }
+        if !(self.rps > 0.0 && self.rps.is_finite()) {
+            return Err(format!("entry '{}' rps {} not positive", self.label, self.rps));
+        }
+        Ok(())
+    }
+}
+
+/// The full front for one model, pruned to non-dominated entries and
+/// sorted by latency ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanFront {
+    pub model: String,
+    pub depth: usize,
+    pub entries: Vec<FrontEntry>,
+}
+
+impl PlanFront {
+    /// Build a front from raw candidates: validates every entry, drops the
+    /// dominated ones, sorts by latency ascending.
+    pub fn new(model: &str, depth: usize, candidates: Vec<FrontEntry>) -> Result<PlanFront, String> {
+        for c in &candidates {
+            c.validate()?;
+        }
+        let points: Vec<Point> = candidates.iter().map(FrontEntry::point).collect();
+        let entries: Vec<FrontEntry> = pareto_indices(&points)
+            .into_iter()
+            .map(|i| candidates[i].clone())
+            .collect();
+        if entries.is_empty() {
+            return Err("empty plan front".into());
+        }
+        Ok(PlanFront { model: model.to_string(), depth, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Index of the lowest-latency entry (entries are latency-sorted).
+    pub fn min_latency_idx(&self) -> usize {
+        0
+    }
+
+    /// Highest-rate entry meeting the latency SLO (Table 6 semantics on
+    /// the serve-time front); None when nothing fits.
+    pub fn best_under(&self, slo_ms: f64) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.latency_ms <= slo_ms)
+            .max_by(|(_, a), (_, b)| a.rps.partial_cmp(&b.rps).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert(
+                    "assign".to_string(),
+                    Json::Arr(e.assign.iter().map(|&a| Json::Num(a as f64)).collect()),
+                );
+                m.insert("batch".to_string(), Json::Num(e.batch as f64));
+                m.insert("latency_ms".to_string(), Json::Num(e.latency_ms));
+                m.insert("tops".to_string(), Json::Num(e.tops));
+                m.insert("rps".to_string(), Json::Num(e.rps));
+                m.insert("nacc".to_string(), Json::Num(e.nacc as f64));
+                m.insert("label".to_string(), Json::Str(e.label.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("depth".to_string(), Json::Num(self.depth as f64));
+        m.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanFront, String> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("front missing 'model'")?
+            .to_string();
+        let depth = j
+            .get("depth")
+            .and_then(Json::as_usize)
+            .ok_or("front missing 'depth'")?;
+        let mut candidates = Vec::new();
+        for (i, e) in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("front missing 'entries'")?
+            .iter()
+            .enumerate()
+        {
+            let assign: Vec<usize> = e
+                .get("assign")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("entry {i} missing 'assign'"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| format!("entry {i} bad acc id")))
+                .collect::<Result<_, _>>()?;
+            candidates.push(FrontEntry {
+                assign,
+                batch: e
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("entry {i} missing 'batch'"))?,
+                latency_ms: e
+                    .get("latency_ms")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("entry {i} missing 'latency_ms'"))?,
+                tops: e.get("tops").and_then(Json::as_f64).unwrap_or(0.0),
+                rps: e
+                    .get("rps")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("entry {i} missing 'rps'"))?,
+                nacc: e.get("nacc").and_then(Json::as_usize).unwrap_or(1),
+                label: e
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .unwrap_or("plan")
+                    .to_string(),
+            });
+        }
+        PlanFront::new(&model, depth, candidates)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    pub fn load(path: &Path) -> Result<PlanFront, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        PlanFront::from_json(&Json::parse(&text)?)
+    }
+
+    /// One line per entry, for CLI output.
+    pub fn describe(&self) -> String {
+        let mut out = format!("plan front for {} ({} entries):\n", self.model, self.len());
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "  [{i}] {:<12} assign {:?} batch {} nacc {}  {:.3} ms  {:.0} img/s  {:.2} TOPS\n",
+                e.label, e.assign, e.batch, e.nacc, e.latency_ms, e.rps, e.tops
+            ));
+        }
+        out
+    }
+}
+
+/// Evaluate labeled assignments across `batches` on the analytical model
+/// and prune to the serving front — the shared construction behind
+/// `ssr dse --emit-front`, the adaptive bench, and the examples.
+/// Infeasible assignments are skipped.
+pub fn analytical_front(
+    platform: &crate::arch::Platform,
+    calib: &crate::analytical::Calib,
+    graph: &crate::graph::Graph,
+    candidates: &[(String, Assignment)],
+    batches: &[usize],
+) -> Result<PlanFront, String> {
+    if batches.is_empty() {
+        return Err("need at least one batch size".into());
+    }
+    let mut entries = Vec::new();
+    for (label, a) in candidates {
+        let Some(ev) = crate::dse::eval::build_design(
+            platform,
+            calib,
+            graph,
+            a,
+            crate::analytical::Features::all(),
+            true,
+        ) else {
+            continue;
+        };
+        for &b in batches {
+            entries.push(FrontEntry::from_eval(label, a, &ev.evaluate(platform, graph, b)));
+        }
+    }
+    PlanFront::new(&graph.model, graph.depth, entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn entry(label: &str, assign: Vec<usize>, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        let nacc = assign.iter().copied().max().unwrap() + 1;
+        FrontEntry {
+            assign,
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc,
+            label: label.to_string(),
+        }
+    }
+
+    fn sample() -> PlanFront {
+        PlanFront::new(
+            "deit_t",
+            12,
+            vec![
+                entry("sequential", vec![0; 8], 1, 0.22, 4545.0),
+                entry("dominated", vec![0; 8], 1, 0.5, 4000.0),
+                entry("spatial", (0..8).collect(), 6, 0.58, 10344.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_prunes_dominated_and_sorts() {
+        let f = sample();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.entries[0].label, "sequential");
+        assert_eq!(f.entries[1].label, "spatial");
+        assert!(f.entries.windows(2).all(|w| w[0].latency_ms <= w[1].latency_ms));
+    }
+
+    #[test]
+    fn best_under_matches_table6_semantics() {
+        let f = sample();
+        assert_eq!(f.best_under(2.0), Some(1)); // spatial: max rate under SLO
+        assert_eq!(f.best_under(0.3), Some(0)); // only sequential fits
+        assert_eq!(f.best_under(0.1), None); // the "x" cell
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let f = sample();
+        let back = PlanFront::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let f = sample();
+        let path = std::env::temp_dir().join("ssr_front_test.json");
+        f.save(&path).unwrap();
+        let back = PlanFront::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn entry_materializes_a_valid_plan() {
+        let f = sample();
+        let p = f.entries[1].plan("deit_t", 12);
+        assert_eq!(p.nacc, 8);
+        assert_eq!(p.micro_batch, 6);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn analytical_front_spans_the_tradeoff() {
+        let platform = crate::arch::vck190();
+        let calib = crate::analytical::Calib::default();
+        let g = crate::graph::vit_graph(&crate::graph::DEIT_T);
+        let cands = vec![
+            ("sequential".to_string(), Assignment::sequential()),
+            ("spatial".to_string(), Assignment::spatial()),
+        ];
+        let f = analytical_front(&platform, &calib, &g, &cands, &[1, 6]).unwrap();
+        assert!(!f.is_empty());
+        // latency-sorted and non-dominated: rate must rise with latency
+        assert!(f
+            .entries
+            .windows(2)
+            .all(|w| w[0].latency_ms <= w[1].latency_ms && w[0].rps <= w[1].rps));
+        assert!(analytical_front(&platform, &calib, &g, &cands, &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        assert!(PlanFront::new("m", 12, vec![]).is_err());
+        assert!(PlanFront::new("m", 12, vec![entry("bad", vec![0; 3], 1, 1.0, 1.0)]).is_err());
+        let mut e = entry("bad", vec![0; 8], 1, 1.0, 1.0);
+        e.latency_ms = -1.0;
+        assert!(PlanFront::new("m", 12, vec![e]).is_err());
+    }
+}

@@ -35,6 +35,10 @@
 //! every accelerator separation the projection destroyed — the projection
 //! is a compatibility shim now, never a silent default.
 
+pub mod front;
+
+pub use front::{FrontEntry, PlanFront};
+
 use crate::dse::Assignment;
 use crate::graph::{Graph, LayerClass, ALL_CLASSES};
 

@@ -1,0 +1,315 @@
+//! Deterministic serving simulation of the adaptive scheduler.
+//!
+//! The artifact-free counterpart of
+//! [`crate::coordinator::scheduler::AdaptiveServer`]: a discrete-event
+//! queueing replay that drives the *same* [`AdaptiveScheduler`] policy
+//! (same hysteresis, same admission control) against Poisson arrivals from
+//! a [`RampSpec`], with the service model taken from each front entry's
+//! analytical metrics — one launch serves up to `entry.batch` images and
+//! occupies the server for `entry.latency_ms`.
+//!
+//! Drain-and-swap is modeled exactly: a committed switch while a launch is
+//! in flight is applied at that launch's completion; queued requests carry
+//! over to the new plan and are never dropped. The only way a request is
+//! lost is explicit admission-control shedding, which the report accounts
+//! separately — so `served + shed == arrivals` is an invariant, asserted
+//! by `tests/adaptive_scheduler.rs`.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::scheduler::{
+    AdaptiveScheduler, LoadEstimator, RampSpec, SchedulerCfg, SwitchRecord,
+};
+use crate::plan::front::PlanFront;
+use crate::util::stats::Summary;
+
+/// Per-window snapshot of the simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowStat {
+    pub window: usize,
+    pub end_s: f64,
+    /// Estimated arrival rate at the window boundary (req/s).
+    pub rate_rps: f64,
+    pub queue_depth: usize,
+    /// p99 completion latency over the estimator horizon (seconds).
+    pub p99_s: f64,
+    /// Front entry actually serving at the window boundary (lags the
+    /// scheduler's choice while a committed switch drains).
+    pub active: usize,
+}
+
+/// Outcome of a simulated adaptive serving run.
+#[derive(Clone, Debug)]
+pub struct ServeSimReport {
+    pub arrivals: usize,
+    pub served: usize,
+    pub shed: usize,
+    /// Per-request sojourn time (queue wait + service), served requests.
+    pub latency: Summary,
+    /// Served requests whose sojourn exceeded the SLO.
+    pub slo_violations: usize,
+    pub switches: Vec<SwitchRecord>,
+    pub windows: Vec<WindowStat>,
+    pub max_queue_depth: usize,
+    /// Completion time of the last served request.
+    pub makespan_s: f64,
+    pub active_final: usize,
+}
+
+impl ServeSimReport {
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.p50() * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.p99() * 1e3
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            return 1.0;
+        }
+        1.0 - self.slo_violations as f64 / self.served as f64
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} arrivals | {} served, {} shed | p50 {:.2} ms p99 {:.2} ms | SLO attainment \
+             {:.1}% | {} plan switches | max queue {}",
+            self.arrivals,
+            self.served,
+            self.shed,
+            self.p50_ms(),
+            self.p99_ms(),
+            self.slo_attainment() * 100.0,
+            self.switches.len(),
+            self.max_queue_depth
+        )
+    }
+}
+
+/// One in-flight launch: the arrival times it serves and its completion.
+struct Launch {
+    done_s: f64,
+    arrivals: Vec<f64>,
+}
+
+/// Simulate serving `ramp` over `front` with the adaptive policy in `cfg`.
+/// Fully deterministic for a given seed.
+pub fn serve_ramp(
+    front: &PlanFront,
+    ramp: &RampSpec,
+    cfg: &SchedulerCfg,
+    seed: u64,
+) -> ServeSimReport {
+    let arrivals = ramp.arrivals(seed);
+    let duration = ramp.duration_s();
+    // round(): `duration / window_s` is float (3 * 0.6 / 0.05 = 35.999...),
+    // and truncation would silently drop the final decision window.
+    let n_windows = (duration / cfg.window_s).round() as usize;
+
+    let mut sched = AdaptiveScheduler::new(front.clone(), *cfg);
+    let mut est = LoadEstimator::new(cfg.horizon_s());
+    // Plan executing the current launch — lags `sched.active()` while a
+    // committed switch drains.
+    let mut serving = sched.active();
+    let mut pending_switch: Option<usize> = None;
+
+    let mut queue: VecDeque<f64> = VecDeque::new();
+    let mut in_flight: Option<Launch> = None;
+    let mut latency = Summary::new();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut max_queue_depth = 0usize;
+    let mut makespan_s = 0.0f64;
+    let mut windows = Vec::with_capacity(n_windows);
+
+    let slo_s = cfg.slo_ms * 1e-3;
+    let mut ai = 0usize; // next arrival index
+    let mut w = 0usize; // next window index
+
+    // Start the next launch from the queue on the serving plan at time `t`.
+    let start_launch = |t: f64,
+                        serving: usize,
+                        queue: &mut VecDeque<f64>,
+                        in_flight: &mut Option<Launch>,
+                        front: &PlanFront| {
+        if queue.is_empty() {
+            return;
+        }
+        let e = &front.entries[serving];
+        let take = e.batch.min(queue.len());
+        let batch: Vec<f64> = queue.drain(..take).collect();
+        *in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
+    };
+
+    loop {
+        let t_arr = arrivals.get(ai).copied().unwrap_or(f64::INFINITY);
+        let t_done = in_flight.as_ref().map(|l| l.done_s).unwrap_or(f64::INFINITY);
+        let t_win = if w < n_windows { (w + 1) as f64 * cfg.window_s } else { f64::INFINITY };
+        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
+            break;
+        }
+
+        // Deterministic event order on ties: completion, then window tick,
+        // then arrival.
+        if t_done <= t_win && t_done <= t_arr {
+            // -- launch completion (and switch drain point) --------------
+            let launch = in_flight.take().unwrap();
+            for &a in &launch.arrivals {
+                let sojourn = launch.done_s - a;
+                latency.push(sojourn);
+                est.record_completion(launch.done_s, sojourn);
+                served += 1;
+            }
+            makespan_s = makespan_s.max(launch.done_s);
+            if let Some(to) = pending_switch.take() {
+                serving = to; // drain complete: swap now
+            }
+            start_launch(launch.done_s, serving, &mut queue, &mut in_flight, front);
+        } else if t_win <= t_arr {
+            // -- decision window boundary --------------------------------
+            let snapshot = est.estimate(t_win, queue.len());
+            if pending_switch.is_none() {
+                if let Some(to) = sched.on_window(w, t_win, &snapshot) {
+                    if in_flight.is_some() {
+                        pending_switch = Some(to); // drain-and-swap
+                    } else {
+                        serving = to;
+                    }
+                }
+            }
+            windows.push(WindowStat {
+                window: w,
+                end_s: t_win,
+                rate_rps: snapshot.rate_rps,
+                queue_depth: snapshot.queue_depth,
+                p99_s: snapshot.p99_s,
+                active: serving,
+            });
+            w += 1;
+        } else {
+            // -- arrival -------------------------------------------------
+            est.record_arrival(t_arr);
+            if sched.admit(queue.len()) {
+                queue.push_back(t_arr);
+                max_queue_depth = max_queue_depth.max(queue.len());
+                if in_flight.is_none() {
+                    start_launch(t_arr, serving, &mut queue, &mut in_flight, front);
+                }
+            } else {
+                shed += 1;
+            }
+            ai += 1;
+        }
+    }
+
+    let active_final = sched.active();
+    let slo_violations = served - latency.count_leq(slo_s);
+    ServeSimReport {
+        arrivals: arrivals.len(),
+        served,
+        shed,
+        latency,
+        slo_violations,
+        switches: sched.switches,
+        windows,
+        max_queue_depth,
+        makespan_s,
+        active_final,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::front::FrontEntry;
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    fn front() -> PlanFront {
+        PlanFront::new(
+            "synthetic",
+            12,
+            vec![
+                entry("seq", 1, 0.2, 5000.0),
+                entry("hybrid", 6, 1.0, 6000.0),
+                entry("spatial", 24, 2.0, 12000.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> SchedulerCfg {
+        SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+    }
+
+    #[test]
+    fn conservation_served_plus_shed_equals_arrivals() {
+        let ramp = RampSpec::parse("1000:4000:1000", 0.4).unwrap();
+        let r = serve_ramp(&front(), &ramp, &cfg(), 7);
+        assert_eq!(r.served + r.shed, r.arrivals);
+        assert_eq!(r.latency.len(), r.served);
+        assert!(r.arrivals > 1000, "load generator produced {}", r.arrivals);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ramp = RampSpec::parse("1000:4000", 0.3).unwrap();
+        let a = serve_ramp(&front(), &ramp, &cfg(), 11);
+        let b = serve_ramp(&front(), &ramp, &cfg(), 11);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.switches, b.switches);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+    }
+
+    #[test]
+    fn idle_ramp_serves_nothing_without_panicking() {
+        let ramp = RampSpec::parse("0:0", 0.1).unwrap();
+        let r = serve_ramp(&front(), &ramp, &cfg(), 3);
+        assert_eq!(r.arrivals, 0);
+        assert_eq!(r.served, 0);
+        assert_eq!(r.shed, 0);
+        assert!(r.switches.is_empty());
+        assert_eq!(r.slo_attainment(), 1.0);
+    }
+
+    #[test]
+    fn low_load_never_switches_off_the_latency_point() {
+        let ramp = RampSpec::parse("500:500:500", 0.2).unwrap();
+        let r = serve_ramp(&front(), &ramp, &cfg(), 5);
+        assert!(r.switches.is_empty(), "switched under trivial load: {:?}", r.switches);
+        assert_eq!(r.active_final, 0);
+        assert_eq!(r.shed, 0);
+        // one launch at a time, batch 1: queue stays tiny
+        assert!(r.max_queue_depth < 50);
+    }
+
+    #[test]
+    fn windows_cover_the_ramp() {
+        let c = cfg();
+        let ramp = RampSpec::parse("1000:1000", 0.25).unwrap();
+        let r = serve_ramp(&front(), &ramp, &c, 9);
+        assert_eq!(r.windows.len(), 10); // 0.5 s of ramp / 50 ms windows
+        // the float-truncation trap: 3 * 0.6 / 0.05 is 35.999..., and the
+        // final decision window must not be lost to it
+        let ramp = RampSpec::parse("1000:1000:1000", 0.6).unwrap();
+        let r = serve_ramp(&front(), &ramp, &c, 9);
+        assert_eq!(r.windows.len(), 36);
+        for (i, ws) in r.windows.iter().enumerate() {
+            assert_eq!(ws.window, i);
+        }
+    }
+}

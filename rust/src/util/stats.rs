@@ -67,6 +67,11 @@ impl Summary {
         }
     }
 
+    /// Number of samples at or below `x` (SLO-attainment accounting).
+    pub fn count_leq(&self, x: f64) -> usize {
+        self.samples.iter().filter(|&&s| s <= x).count()
+    }
+
     pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
@@ -123,6 +128,18 @@ mod tests {
         assert_eq!(s.mean(), 3.25);
         assert_eq!(s.p50(), 3.25);
         assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn count_leq_boundaries() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count_leq(0.5), 0);
+        assert_eq!(s.count_leq(2.0), 2);
+        assert_eq!(s.count_leq(10.0), 3);
+        assert_eq!(Summary::new().count_leq(1.0), 0);
     }
 
     #[test]
