@@ -1,0 +1,130 @@
+//! Bench: fleet serving under one traffic ramp — homogeneous seq-only vs
+//! homogeneous spatial-only vs the provisioned heterogeneous hybrid
+//! fleet. The fleet-scale version of the adaptive-serving bench: instead
+//! of one device switching plans, the provisioner picks a platform mix
+//! and every device runs its own adaptive scheduler behind the router.
+//!
+//! Sim-backed (analytical fronts + deterministic fleet replay), so it
+//! runs without artifacts — CI uses `--quick --json BENCH_cluster.json`.
+
+use ssr::bench::{bench, json_path_from_args, write_json, BenchResult, Table};
+use ssr::cluster::fleet::strategy_front;
+use ssr::cluster::{
+    provision, simulate_fleet, FleetSimReport, PlatformOption, ProvisionResult, RoutePolicy,
+    TrafficMix,
+};
+use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+
+const SLO_MS: f64 = 25.0;
+const HEADROOM: f64 = 0.8;
+const BATCHES: [usize; 3] = [1, 3, 6];
+
+fn homogeneous(strategy: &str) -> Vec<PlatformOption> {
+    vec![PlatformOption {
+        platform: "vck190".to_string(),
+        front: strategy_front("vck190", "deit_t", strategy, &BATCHES).expect("strategy front"),
+    }]
+}
+
+fn heterogeneous() -> Vec<PlatformOption> {
+    ["vck190", "stratix10nx", "zcu102", "u250"]
+        .into_iter()
+        .map(|p| PlatformOption::synth(p, "deit_t", &BATCHES).expect("platform front"))
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let phase_s = if quick { 0.2 } else { 0.4 };
+    // Forecast peaking at 12k req/s — several times one VCK190's
+    // sequential-point capacity, under two spatial points.
+    let forecast = RampSpec::parse("3000:8000:12000:8000:3000", phase_s).unwrap();
+    let cfg = SchedulerCfg { slo_ms: SLO_MS, ..Default::default() };
+    let seed = 2024;
+
+    let size = |name: &str, options: &[PlatformOption]| {
+        provision(name, options, &forecast, SLO_MS, HEADROOM).expect("provisioning")
+    };
+    let fleets: Vec<(&str, ProvisionResult)> = vec![
+        ("seq-only", size("seq-only", &homogeneous("sequential"))),
+        ("spatial-only", size("spatial-only", &homogeneous("spatial"))),
+        ("het-hybrid", size("het-hybrid", &heterogeneous())),
+    ];
+
+    let mix = TrafficMix::single("deit_t", forecast);
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut runs: Vec<(&str, &ProvisionResult, FleetSimReport)> = Vec::new();
+    for (name, p) in &fleets {
+        let mut run = None;
+        let r = bench(
+            &format!("cluster_serving: {name}"),
+            0,
+            if quick { 1 } else { 3 },
+            60.0,
+            || {
+                run = Some(
+                    simulate_fleet(&p.fleet, &mix, &cfg, RoutePolicy::PowerOfTwoSlo, seed)
+                        .expect("fleet sim"),
+                );
+            },
+        );
+        println!("{}", r.report());
+        results.push(r);
+        runs.push((*name, p, run.unwrap()));
+    }
+    println!();
+
+    let mut t = Table::new(&[
+        "fleet", "devices", "power (W)", "arrivals", "served", "shed", "p50 (ms)",
+        "p99 (ms)", "SLO %", "switches",
+    ]);
+    for (name, p, r) in &runs {
+        let (p50, p99) = r.latency_ms();
+        t.row(&[
+            name.to_string(),
+            p.devices.to_string(),
+            format!("{:.1}", p.power_w),
+            r.arrivals.to_string(),
+            r.served.to_string(),
+            r.shed.to_string(),
+            format!("{:.3}", p50),
+            format!("{:.3}", p99),
+            format!("{:.1}", r.slo_attainment() * 100.0),
+            r.total_switches().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Structural claims, fleet-scale: every arrival is accounted for on
+    // every fleet, and the heterogeneous hybrid provisioning needs no
+    // more devices than either homogeneous corner (no more power on a
+    // device-count tie).
+    for (name, _, r) in &runs {
+        assert_eq!(r.served + r.shed, r.arrivals, "{name} lost requests");
+    }
+    let (seq, spa, het) = (&runs[0].1, &runs[1].1, &runs[2].1);
+    assert!(
+        het.devices <= seq.devices && het.devices <= spa.devices,
+        "het {} devices vs seq {} / spatial {}",
+        het.devices,
+        seq.devices,
+        spa.devices
+    );
+    if het.devices == spa.devices {
+        assert!(
+            het.power_w <= spa.power_w + 1e-9 || het.capacity_rps > spa.capacity_rps + 1e-9,
+            "het {} W > spatial-only {} W at equal devices and no capacity gain",
+            het.power_w,
+            spa.power_w
+        );
+    }
+    println!(
+        "structural checks passed: conservation on all fleets; het-hybrid <= homogeneous \
+         on devices (power on ties)"
+    );
+
+    if let Some(path) = json_path_from_args() {
+        write_json(&path, &results).expect("write bench JSON");
+        println!("wrote {}", path.display());
+    }
+}

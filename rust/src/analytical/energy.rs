@@ -19,10 +19,19 @@ pub fn gops_per_w(platform: &Platform, achieved_tops: f64) -> f64 {
     achieved_tops * 1e3 / power_w(platform, achieved_tops)
 }
 
-/// Same model for GPU/FPGA baselines expressed as (static, dyn, peak).
-pub fn gops_per_w_generic(static_w: f64, dyn_w: f64, peak_tops: f64, achieved_tops: f64) -> f64 {
+/// Same model for GPU/FPGA baselines expressed as (static, dyn, peak):
+/// watts at a given achieved throughput. The fleet provisioner sums this
+/// across heterogeneous devices, so it must agree with [`power_w`] for
+/// Versal platforms (it does: `power_w` is this with the platform's
+/// constants plugged in).
+pub fn power_w_generic(static_w: f64, dyn_w: f64, peak_tops: f64, achieved_tops: f64) -> f64 {
     let util = (achieved_tops / peak_tops).clamp(0.0, 1.0);
-    achieved_tops * 1e3 / (static_w + dyn_w * util)
+    static_w + dyn_w * util
+}
+
+/// Energy efficiency of the generic model, in GOPS/W.
+pub fn gops_per_w_generic(static_w: f64, dyn_w: f64, peak_tops: f64, achieved_tops: f64) -> f64 {
+    achieved_tops * 1e3 / power_w_generic(static_w, dyn_w, peak_tops, achieved_tops)
 }
 
 #[cfg(test)]
@@ -50,6 +59,16 @@ mod tests {
         let eff = gops_per_w(&p, 26.70);
         let rel = (eff - 453.3) / 453.3;
         assert!(rel.abs() < 0.10, "eff={eff}");
+    }
+
+    #[test]
+    fn generic_power_agrees_with_platform_power() {
+        let p = vck190();
+        for tops in [0.0, 10.0, 26.7, 200.0] {
+            let generic =
+                power_w_generic(p.static_w, p.dyn_w, p.peak_int8_tops(), tops);
+            assert!((generic - power_w(&p, tops)).abs() < 1e-12);
+        }
     }
 
     #[test]

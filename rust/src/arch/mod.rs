@@ -148,6 +148,13 @@ pub struct FpgaSpec {
     pub dyn_w: f64,
 }
 
+impl FpgaSpec {
+    /// Peak INT8 TOPS of the DSP array (2 ops per MAC).
+    pub fn peak_int8_tops(&self) -> f64 {
+        self.dsp_total as f64 * self.macs_per_dsp_cycle * 2.0 * self.freq_mhz * 1e6 / 1e12
+    }
+}
+
 pub fn zcu102() -> FpgaSpec {
     FpgaSpec {
         name: "zcu102",
@@ -172,9 +179,78 @@ pub fn u250() -> FpgaSpec {
     }
 }
 
+/// Any named board the cluster layer can put in a fleet: Versal-class SSR
+/// platforms (full 8-class hybrid design space) or monolithic FPGA
+/// baselines (HeatViT-style engines, sequential-only). Unifies name lookup
+/// and the power-model constants the provisioner needs.
+#[derive(Clone, Debug)]
+pub enum AnyPlatform {
+    Versal(Platform),
+    Fpga(FpgaSpec),
+}
+
+impl AnyPlatform {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnyPlatform::Versal(p) => p.name,
+            AnyPlatform::Fpga(f) => f.name,
+        }
+    }
+
+    pub fn static_w(&self) -> f64 {
+        match self {
+            AnyPlatform::Versal(p) => p.static_w,
+            AnyPlatform::Fpga(f) => f.static_w,
+        }
+    }
+
+    pub fn dyn_w(&self) -> f64 {
+        match self {
+            AnyPlatform::Versal(p) => p.dyn_w,
+            AnyPlatform::Fpga(f) => f.dyn_w,
+        }
+    }
+
+    pub fn peak_int8_tops(&self) -> f64 {
+        match self {
+            AnyPlatform::Versal(p) => p.peak_int8_tops(),
+            AnyPlatform::Fpga(f) => f.peak_int8_tops(),
+        }
+    }
+}
+
+/// Board lookup for fleet specs (`FleetSpec` serializes platform by name).
+pub fn by_name(name: &str) -> Option<AnyPlatform> {
+    match name {
+        "vck190" => Some(AnyPlatform::Versal(vck190())),
+        "vck190_hbm" => Some(AnyPlatform::Versal(vck190_hbm())),
+        "stratix10nx" => Some(AnyPlatform::Versal(stratix10nx())),
+        "zcu102" => Some(AnyPlatform::Fpga(zcu102())),
+        "u250" => Some(AnyPlatform::Fpga(u250())),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn by_name_covers_every_board_and_rejects_unknown() {
+        for name in ["vck190", "vck190_hbm", "stratix10nx", "zcu102", "u250"] {
+            let p = by_name(name).unwrap();
+            assert_eq!(p.name(), name);
+            assert!(p.peak_int8_tops() > 0.0);
+            assert!(p.static_w() > 0.0 && p.dyn_w() > 0.0);
+        }
+        assert!(by_name("tpu_v9").is_none());
+    }
+
+    #[test]
+    fn fpga_peak_matches_heatvit_formula() {
+        // 2520 DSPs x 1 MAC x 2 ops @ 250 MHz = 1.26 TOPS
+        assert!((zcu102().peak_int8_tops() - 1.26).abs() < 1e-9);
+    }
 
     #[test]
     fn vck190_peak_matches_table1() {

@@ -30,8 +30,7 @@ pub fn calib_for(board: &FpgaSpec) -> FpgaCalib {
 
 /// Peak INT8 TOPS of the DSP array.
 pub fn peak_tops(board: &FpgaSpec) -> f64 {
-    board.dsp_total as f64 * board.macs_per_dsp_cycle * 2.0 * board.freq_mhz * 1e6
-        / 1e12
+    board.peak_int8_tops()
 }
 
 /// Sustained effective TOPS.

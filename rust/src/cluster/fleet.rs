@@ -1,0 +1,398 @@
+//! Fleet specification: which devices exist, what board each one is, and
+//! the plan front each serves.
+//!
+//! A [`FleetSpec`] is the cluster-level analog of a single device's
+//! [`PlanFront`] — the interchange artifact between provisioning and
+//! serving:
+//!
+//! ```text
+//!   ssr cluster provision --ramp ... --slo-ms 2 --out fleet.json
+//!   ssr cluster simulate  --fleet fleet.json --ramp ...   # deterministic
+//!   ssr cluster serve     --fleet fleet.json --ramp ...   # live PJRT
+//! ```
+//!
+//! Devices reference their board by `arch` name (`vck190`, `stratix10nx`,
+//! `zcu102`, `u250`, ...), so the power model can be re-derived after a
+//! JSON round-trip without serializing platform constants.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::analytical::Calib;
+use crate::arch::{self, AnyPlatform};
+use crate::baselines::heatvit;
+use crate::dse::Assignment;
+use crate::graph::{builder, vit_graph};
+use crate::plan::front::{analytical_front, FrontEntry, PlanFront};
+use crate::util::json::Json;
+
+/// One device of the fleet: a board identity plus the front it serves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    /// Unique device id (e.g. `vck190-0`).
+    pub id: String,
+    /// Board name resolvable via [`arch::by_name`].
+    pub platform: String,
+    /// The latency-throughput front this device holds live.
+    pub front: PlanFront,
+}
+
+impl DeviceSpec {
+    /// The board behind this device (validated at fleet construction).
+    pub fn board(&self) -> AnyPlatform {
+        arch::by_name(&self.platform).expect("platform validated at fleet construction")
+    }
+}
+
+/// A named set of devices — possibly heterogeneous in both board and
+/// front shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub name: String,
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl FleetSpec {
+    /// Validating constructor: at least one device, unique ids, known
+    /// platform names (fronts are validated by [`PlanFront`] itself).
+    pub fn new(name: &str, devices: Vec<DeviceSpec>) -> Result<FleetSpec, String> {
+        if devices.is_empty() {
+            return Err("fleet has no devices".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for d in &devices {
+            if !seen.insert(d.id.clone()) {
+                return Err(format!("duplicate device id '{}'", d.id));
+            }
+            if arch::by_name(&d.platform).is_none() {
+                return Err(format!("device '{}' has unknown platform '{}'", d.id, d.platform));
+            }
+        }
+        Ok(FleetSpec { name: name.to_string(), devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Distinct models served anywhere in the fleet.
+    pub fn models(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.devices.iter().map(|d| d.front.model.clone()).collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("id".to_string(), Json::Str(d.id.clone()));
+                m.insert("platform".to_string(), Json::Str(d.platform.clone()));
+                m.insert("front".to_string(), d.front.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("devices".to_string(), Json::Arr(devices));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetSpec, String> {
+        let name = j.get("name").and_then(Json::as_str).ok_or("fleet missing 'name'")?;
+        let mut devices = Vec::new();
+        for (i, d) in j
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or("fleet missing 'devices'")?
+            .iter()
+            .enumerate()
+        {
+            devices.push(DeviceSpec {
+                id: d
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("device {i} missing 'id'"))?
+                    .to_string(),
+                platform: d
+                    .get("platform")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("device {i} missing 'platform'"))?
+                    .to_string(),
+                front: PlanFront::from_json(
+                    d.get("front").ok_or_else(|| format!("device {i} missing 'front'"))?,
+                )?,
+            });
+        }
+        FleetSpec::new(name, devices)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    pub fn load(path: &Path) -> Result<FleetSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        FleetSpec::from_json(&Json::parse(&text)?)
+    }
+
+    /// One line per device, for CLI output.
+    pub fn describe(&self) -> String {
+        let mut out = format!("fleet '{}' ({} devices):\n", self.name, self.len());
+        for d in &self.devices {
+            let lat_lo = d.front.entries.first().map(|e| e.latency_ms).unwrap_or(0.0);
+            let lat_hi = d.front.entries.last().map(|e| e.latency_ms).unwrap_or(0.0);
+            let rps_hi = d.front.entries.last().map(|e| e.rps).unwrap_or(0.0);
+            out.push_str(&format!(
+                "  {:<14} {:<12} {:<10} {} plans, {:.2}-{:.2} ms, up to {:.0} img/s\n",
+                d.id,
+                d.platform,
+                d.front.model,
+                d.front.len(),
+                lat_lo,
+                lat_hi,
+                rps_hi
+            ));
+        }
+        out
+    }
+}
+
+/// Serving front of one device of `platform` for `model`, synthesized
+/// from the analytical models: Versal-class boards get the three
+/// canonical SSR strategies (sequential / spatial / hybrid) evaluated
+/// across `batches` — the same construction as the adaptive bench —
+/// while monolithic FPGA boards get their HeatViT-style engine at each
+/// batch depth (sequential-only: every class on acc 0).
+pub fn device_front(platform: &str, model: &str, batches: &[usize]) -> Result<PlanFront, String> {
+    let board =
+        arch::by_name(platform).ok_or_else(|| format!("unknown platform '{platform}'"))?;
+    let cfg = builder::by_name(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let g = vit_graph(cfg);
+    match board {
+        AnyPlatform::Versal(p) => {
+            let candidates = vec![
+                ("sequential".to_string(), Assignment::sequential()),
+                ("spatial".to_string(), Assignment::spatial()),
+                ("hybrid".to_string(), Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0])),
+            ];
+            analytical_front(&p, &Calib::default(), &g, &candidates, batches)
+        }
+        AnyPlatform::Fpga(f) => {
+            let cal = heatvit::calib_for(&f);
+            let entries: Vec<FrontEntry> = batches
+                .iter()
+                .map(|&b| {
+                    let lat_s = heatvit::latency_s(&f, &cal, &g, b);
+                    FrontEntry {
+                        assign: vec![0; 8],
+                        batch: b,
+                        latency_ms: lat_s * 1e3,
+                        tops: heatvit::tops(&f, &cal, &g, b),
+                        rps: b as f64 / lat_s,
+                        nacc: 1,
+                        label: "monolithic".to_string(),
+                    }
+                })
+                .collect();
+            PlanFront::new(&g.model, g.depth, entries)
+        }
+    }
+}
+
+/// Front of one named strategy on a Versal platform, evaluated across
+/// `batches` — the honest homogeneous-policy baseline for provisioning
+/// comparisons. (Restricting the *pruned* full front would understate a
+/// pure strategy: e.g. sequential b6 is dominated by hybrid points and
+/// pruned there, yet it is the best a seq-only fleet can do.)
+pub fn strategy_front(
+    platform: &str,
+    model: &str,
+    strategy: &str,
+    batches: &[usize],
+) -> Result<PlanFront, String> {
+    let board =
+        arch::by_name(platform).ok_or_else(|| format!("unknown platform '{platform}'"))?;
+    let AnyPlatform::Versal(p) = board else {
+        return Err(format!("'{platform}' is a monolithic board; it has no strategy choice"));
+    };
+    let assignment = match strategy {
+        "sequential" => Assignment::sequential(),
+        "spatial" => Assignment::spatial(),
+        "hybrid" => Assignment::new(vec![0, 1, 1, 1, 0, 2, 2, 0]),
+        other => return Err(format!("unknown strategy '{other}'")),
+    };
+    let cfg = builder::by_name(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let g = vit_graph(cfg);
+    analytical_front(
+        &p,
+        &Calib::default(),
+        &g,
+        &[(strategy.to_string(), assignment)],
+        batches,
+    )
+}
+
+/// Restrict a front to entries with provenance `label` — the homogeneous
+/// policy baselines ("sequential"-only / "spatial"-only fleets) that the
+/// provisioning comparisons run against.
+pub fn restrict_front(front: &PlanFront, label: &str) -> Result<PlanFront, String> {
+    PlanFront::new(
+        &front.model,
+        front.depth,
+        front.entries.iter().filter(|e| e.label == label).cloned().collect(),
+    )
+}
+
+/// Synthesize a heterogeneous fleet from `(platform, count)` pairs, each
+/// device carrying that platform's analytical front for `model`. Device
+/// ids are `{platform}-{k}`.
+pub fn synth_fleet(
+    name: &str,
+    model: &str,
+    mix: &[(String, usize)],
+    batches: &[usize],
+) -> Result<FleetSpec, String> {
+    // Aggregate repeated platforms (e.g. "vck190:1,vck190:2") so device
+    // numbering stays unique, preserving first-appearance order.
+    let mut totals: Vec<(String, usize)> = Vec::new();
+    for (platform, count) in mix {
+        match totals.iter_mut().find(|(p, _)| p == platform) {
+            Some((_, c)) => *c += count,
+            None => totals.push((platform.clone(), *count)),
+        }
+    }
+    let mut devices = Vec::new();
+    for (platform, count) in &totals {
+        if *count == 0 {
+            continue;
+        }
+        let front = device_front(platform, model, batches)?;
+        for k in 0..*count {
+            devices.push(DeviceSpec {
+                id: format!("{platform}-{k}"),
+                platform: platform.clone(),
+                front: front.clone(),
+            });
+        }
+    }
+    FleetSpec::new(name, devices)
+}
+
+/// Parse a CLI fleet mix like `"vck190:2,u250:1"`.
+pub fn parse_mix(s: &str) -> Result<Vec<(String, usize)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, count) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad mix part '{part}' (want platform:count)"))?;
+        let count: usize =
+            count.trim().parse().map_err(|e| format!("bad count in '{part}': {e}"))?;
+        out.push((name.trim().to_string(), count));
+    }
+    if out.is_empty() {
+        return Err(format!("empty fleet mix '{s}'"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versal_front_spans_the_tradeoff_and_fpga_front_is_monolithic() {
+        let v = device_front("vck190", "deit_t", &[1, 3, 6]).unwrap();
+        assert!(v.len() >= 2);
+        // the tradeoff's corners: lowest latency is the 1-acc sequential
+        // point, highest rate is a multi-acc (spatial/hybrid) point
+        assert_eq!(v.entries.first().unwrap().label, "sequential");
+        assert!(v.entries.last().unwrap().nacc >= 3);
+        let f = device_front("u250", "deit_t", &[1, 3, 6]).unwrap();
+        assert!(f.entries.iter().all(|e| e.label == "monolithic" && e.nacc == 1));
+        // a monolithic U250 cannot touch the Versal front's throughput
+        let v_best = v.entries.last().unwrap().rps;
+        let f_best = f.entries.last().unwrap().rps;
+        assert!(v_best > 5.0 * f_best, "vck {v_best} vs u250 {f_best}");
+        assert!(device_front("tpu_v9", "deit_t", &[1]).is_err());
+        assert!(device_front("vck190", "nope", &[1]).is_err());
+    }
+
+    #[test]
+    fn strategy_front_is_pure_and_fpga_boards_reject_it() {
+        let seq = strategy_front("vck190", "deit_t", "sequential", &[1, 3, 6]).unwrap();
+        assert!(seq.entries.iter().all(|e| e.label == "sequential" && e.nacc == 1));
+        let spa = strategy_front("vck190", "deit_t", "spatial", &[1, 3, 6]).unwrap();
+        assert!(spa.entries.iter().all(|e| e.label == "spatial" && e.nacc == 8));
+        // the pure-strategy capacities bracket the paper's tradeoff
+        let seq_best = seq.entries.last().unwrap().rps;
+        let spa_best = spa.entries.last().unwrap().rps;
+        assert!(spa_best > seq_best, "spatial {spa_best} <= sequential {seq_best}");
+        assert!(strategy_front("zcu102", "deit_t", "sequential", &[1]).is_err());
+        assert!(strategy_front("vck190", "deit_t", "nope", &[1]).is_err());
+    }
+
+    #[test]
+    fn restrict_front_keeps_only_the_label() {
+        let v = device_front("vck190", "deit_t", &[1, 3, 6]).unwrap();
+        let seq = restrict_front(&v, "sequential").unwrap();
+        assert!(seq.entries.iter().all(|e| e.label == "sequential"));
+        assert!(restrict_front(&v, "no-such-label").is_err());
+    }
+
+    #[test]
+    fn synth_fleet_ids_and_validation() {
+        let mix = parse_mix("vck190:2,u250:1").unwrap();
+        let fleet = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet.devices[0].id, "vck190-0");
+        assert_eq!(fleet.devices[2].id, "u250-0");
+        assert_eq!(fleet.models(), vec!["deit_t".to_string()]);
+        // a platform listed twice aggregates instead of colliding on ids
+        let dup = parse_mix("vck190:1,vck190:2").unwrap();
+        let fleet = synth_fleet("dup", "deit_t", &dup, &[1]).unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet.devices[2].id, "vck190-2");
+        // zero-count platforms are dropped, empty fleets rejected
+        assert!(synth_fleet("x", "deit_t", &[("vck190".to_string(), 0)], &[1]).is_err());
+        assert!(parse_mix("vck190").is_err());
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("vck190:x").is_err());
+    }
+
+    #[test]
+    fn fleet_json_round_trip() {
+        let mix = parse_mix("vck190:1,zcu102:1").unwrap();
+        let fleet = synth_fleet("rt", "deit_t", &mix, &[1, 6]).unwrap();
+        let back = FleetSpec::from_json(&Json::parse(&fleet.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, fleet);
+        let path = std::env::temp_dir().join("ssr_fleet_roundtrip.json");
+        fleet.save(&path).unwrap();
+        let loaded = FleetSpec::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded, fleet);
+    }
+
+    #[test]
+    fn fleet_validation_rejects_bad_specs() {
+        let front = device_front("vck190", "deit_t", &[1]).unwrap();
+        let dev = |id: &str, platform: &str| DeviceSpec {
+            id: id.to_string(),
+            platform: platform.to_string(),
+            front: front.clone(),
+        };
+        assert!(FleetSpec::new("empty", vec![]).is_err());
+        assert!(FleetSpec::new("dup", vec![dev("a", "vck190"), dev("a", "vck190")]).is_err());
+        assert!(FleetSpec::new("bad", vec![dev("a", "tpu_v9")]).is_err());
+        assert!(FleetSpec::new("ok", vec![dev("a", "vck190"), dev("b", "u250")]).is_ok());
+    }
+}

@@ -1,0 +1,37 @@
+//! Fleet-level serving: many devices, heterogeneous platforms, one queue
+//! of multi-model traffic.
+//!
+//! The paper's §6 analytical models show SSR generalizing across boards
+//! (VCK190, Stratix 10 NX) alongside the monolithic-FPGA baselines
+//! (ZCU102, U250); one board, however, caps out at its front's
+//! throughput-optimal point. This subsystem layers the missing scale
+//! dimension on top of the single-device plan/scheduler stack:
+//!
+//! * [`fleet`] — the serializable [`fleet::FleetSpec`]: N devices, each a
+//!   named `arch` board plus the [`crate::plan::front::PlanFront`] it
+//!   serves, loadable from JSON and synthesizable from the analytical
+//!   fronts.
+//! * [`router`] — pluggable dispatch (round-robin, join-shortest-queue,
+//!   SLO-aware power-of-two-choices) of a multi-model traffic mix onto
+//!   per-device [`crate::coordinator::AdaptiveScheduler`]s, plus the live
+//!   [`router::FleetServer`] over PJRT.
+//! * [`sim`] — deterministic discrete-event replay of the whole fleet
+//!   (the N-device extension of [`crate::sim::serving::serve_ramp`]), so
+//!   routing and provisioning behavior is testable without hardware.
+//! * [`provision`] — given a traffic forecast and an SLO, search the
+//!   platform mix + per-device plan selection that minimizes device count
+//!   then power, emitting a ready-to-serve `FleetSpec`.
+//!
+//! CLI: `ssr cluster provision|simulate|serve`. Invariants (conservation,
+//! determinism, heterogeneous-vs-homogeneous provisioning) are pinned in
+//! `rust/tests/cluster_serving.rs`.
+
+pub mod fleet;
+pub mod provision;
+pub mod router;
+pub mod sim;
+
+pub use fleet::{DeviceSpec, FleetSpec};
+pub use provision::{provision, PlatformOption, ProvisionResult};
+pub use router::{DeviceView, RoutePolicy, Router, TrafficClass, TrafficMix};
+pub use sim::{simulate_fleet, DeviceStat, FleetSimReport};

@@ -1,0 +1,365 @@
+//! Provisioning optimizer: turn a traffic forecast + SLO into a fleet.
+//!
+//! Given the platform options (each a board name plus the plan front one
+//! device of it can serve), a [`RampSpec`] forecast, and a latency SLO,
+//! pick the platform mix and per-device serving point that covers the
+//! forecast peak with the fewest devices, breaking ties by total power:
+//!
+//! 1. per platform, the serving point is the Table 6 cell
+//!    ([`PlanFront::best_under`]) derated by the scheduler's target
+//!    utilization (`headroom`), so provisioned devices run below
+//!    saturation and the adaptive scheduler can absorb transients;
+//! 2. an exact bounded DFS enumerates every mix whose capacity covers the
+//!    peak, pruned by the best device count found so far (a capacity
+//!    lower bound keeps it exact);
+//! 3. the feasible mixes are Pareto-pruned on (devices, watts) via
+//!    [`pareto_indices`] — the same machinery that prunes the DSE's
+//!    latency-throughput front — and the min-device / min-power corner is
+//!    emitted as a ready-to-serve [`FleetSpec`].
+//!
+//! Power per device comes from [`power_w_generic`] with the board
+//! constants from [`arch::by_name`], evaluated at the derated operating
+//! point (utilization = headroom of the chosen entry's throughput).
+
+use crate::analytical::energy::power_w_generic;
+use crate::arch;
+use crate::cluster::fleet::{DeviceSpec, FleetSpec};
+use crate::coordinator::scheduler::RampSpec;
+use crate::dse::pareto::{pareto_indices, Point};
+use crate::plan::front::PlanFront;
+
+/// One platform the provisioner may buy devices of.
+#[derive(Clone, Debug)]
+pub struct PlatformOption {
+    /// Board name resolvable via [`arch::by_name`].
+    pub platform: String,
+    /// Front one device of this platform serves.
+    pub front: PlanFront,
+}
+
+impl PlatformOption {
+    /// Synthesize the option from the analytical models
+    /// ([`crate::cluster::fleet::device_front`]).
+    pub fn synth(platform: &str, model: &str, batches: &[usize]) -> Result<PlatformOption, String> {
+        Ok(PlatformOption {
+            platform: platform.to_string(),
+            front: crate::cluster::fleet::device_front(platform, model, batches)?,
+        })
+    }
+}
+
+/// Per-platform slice of a provisioned fleet.
+#[derive(Clone, Debug)]
+pub struct ProvisionChoice {
+    pub platform: String,
+    pub count: usize,
+    /// Front entry each device of this platform serves at the peak.
+    pub entry_idx: usize,
+    pub entry_label: String,
+    /// Headroom-derated per-device service rate (req/s).
+    pub capacity_rps: f64,
+    /// Per-device watts at the derated operating point.
+    pub device_w: f64,
+}
+
+/// Outcome of [`provision`].
+#[derive(Clone, Debug)]
+pub struct ProvisionResult {
+    pub peak_rps: f64,
+    pub slo_ms: f64,
+    /// Platforms with non-zero counts, in option order.
+    pub choices: Vec<ProvisionChoice>,
+    pub devices: usize,
+    /// Total derated capacity (req/s).
+    pub capacity_rps: f64,
+    /// Total fleet power at the provisioned operating point (watts).
+    pub power_w: f64,
+    /// The ready-to-serve fleet (full fronts — the per-device scheduler
+    /// still adapts below the provisioned peak).
+    pub fleet: FleetSpec,
+}
+
+impl ProvisionResult {
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "provisioned {} devices for {:.0} req/s peak under {} ms SLO \
+             ({:.0} req/s capacity, {:.1} W):\n",
+            self.devices, self.peak_rps, self.slo_ms, self.capacity_rps, self.power_w
+        );
+        for c in &self.choices {
+            out.push_str(&format!(
+                "  {:>2} x {:<12} serving [{}] {:<12} {:.0} req/s/device, {:.1} W/device\n",
+                c.count, c.platform, c.entry_idx, c.entry_label, c.capacity_rps, c.device_w
+            ));
+        }
+        out
+    }
+}
+
+/// One SLO-feasible platform candidate, with its derated serving point.
+struct Cand {
+    opt_idx: usize,
+    entry_idx: usize,
+    cap_rps: f64,
+    device_w: f64,
+}
+
+/// Enumerate counts per candidate (DFS). Exact within the per-platform
+/// bound `ceil(peak / cap)` (more of one platform than covers the peak
+/// alone is never count-optimal): prunes only branches that provably
+/// cannot tie the best device count, so every count-minimal mix is kept
+/// for the power tie-break.
+#[allow(clippy::too_many_arguments)]
+fn search(
+    cands: &[Cand],
+    i: usize,
+    counts: &mut Vec<usize>,
+    used: usize,
+    cap: f64,
+    watts: f64,
+    peak: f64,
+    max_cap: f64,
+    best: &mut usize,
+    out: &mut Vec<(Vec<usize>, usize, f64)>,
+) {
+    let deficit = (peak - cap).max(0.0);
+    let lower_bound = (deficit / max_cap).ceil() as usize;
+    if used + lower_bound > *best {
+        return;
+    }
+    if i == cands.len() {
+        if cap + 1e-9 >= peak {
+            *best = (*best).min(used);
+            out.push((counts.clone(), used, watts));
+        }
+        return;
+    }
+    let enough_alone = (peak / cands[i].cap_rps).ceil() as usize;
+    let bound = enough_alone.min(*best - used);
+    for n in 0..=bound {
+        counts.push(n);
+        search(
+            cands,
+            i + 1,
+            counts,
+            used + n,
+            cap + n as f64 * cands[i].cap_rps,
+            watts + n as f64 * cands[i].device_w,
+            peak,
+            max_cap,
+            best,
+            out,
+        );
+        counts.pop();
+    }
+}
+
+/// Provision a fleet for the forecast `ramp` under `slo_ms`: minimum
+/// device count first, minimum power among count-minimal mixes second.
+/// `headroom` is the target utilization the devices are sized at
+/// (matching [`crate::coordinator::scheduler::SchedulerCfg::headroom`]).
+pub fn provision(
+    name: &str,
+    options: &[PlatformOption],
+    ramp: &RampSpec,
+    slo_ms: f64,
+    headroom: f64,
+) -> Result<ProvisionResult, String> {
+    if options.is_empty() {
+        return Err("no platform options to provision from".into());
+    }
+    {
+        let mut names: Vec<&str> = options.iter().map(|o| o.platform.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != options.len() {
+            return Err("duplicate platform in provisioning options".into());
+        }
+    }
+    let peak = ramp.rates_rps.iter().copied().fold(0.0, f64::max);
+    if peak <= 0.0 {
+        return Err("forecast offers no load".into());
+    }
+    let headroom = headroom.clamp(0.05, 1.0);
+
+    let mut cands = Vec::new();
+    for (i, o) in options.iter().enumerate() {
+        let board = arch::by_name(&o.platform)
+            .ok_or_else(|| format!("unknown platform '{}'", o.platform))?;
+        let Some(entry_idx) = o.front.best_under(slo_ms) else {
+            continue; // this platform cannot meet the SLO at all
+        };
+        let e = &o.front.entries[entry_idx];
+        cands.push(Cand {
+            opt_idx: i,
+            entry_idx,
+            cap_rps: e.rps * headroom,
+            device_w: power_w_generic(
+                board.static_w(),
+                board.dyn_w(),
+                board.peak_int8_tops(),
+                e.tops * headroom,
+            ),
+        });
+    }
+    if cands.is_empty() {
+        return Err(format!("no platform option meets the {slo_ms} ms SLO"));
+    }
+
+    let max_cap = cands.iter().map(|c| c.cap_rps).fold(0.0, f64::max);
+    // A feasible upper bound: the best single-platform fleet.
+    let mut best = cands
+        .iter()
+        .map(|c| (peak / c.cap_rps).ceil() as usize)
+        .min()
+        .expect("non-empty candidates");
+    let mut feasible: Vec<(Vec<usize>, usize, f64)> = Vec::new();
+    search(
+        &cands,
+        0,
+        &mut Vec::with_capacity(cands.len()),
+        0,
+        0.0,
+        0.0,
+        peak,
+        max_cap,
+        &mut best,
+        &mut feasible,
+    );
+    if feasible.is_empty() {
+        return Err("provisioning search found no feasible mix".into());
+    }
+
+    // Pareto on (devices, watts): encode devices as the latency axis and
+    // negated watts as the throughput axis so pareto_indices' ordering
+    // (latency asc, ties by tops desc) surfaces the min-count / min-power
+    // corner at index 0.
+    let points: Vec<Point> = feasible
+        .iter()
+        .map(|(_, n, w)| Point { latency_ms: *n as f64, tops: -*w, batch: 0, nacc: 0 })
+        .collect();
+    let idx = pareto_indices(&points);
+    let (counts, devices, power_w) = feasible[idx[0]].clone();
+
+    let mut choices = Vec::new();
+    let mut fleet_devices = Vec::new();
+    let mut capacity_rps = 0.0;
+    for (ci, c) in cands.iter().enumerate() {
+        let n = counts[ci];
+        if n == 0 {
+            continue;
+        }
+        let o = &options[c.opt_idx];
+        let e = &o.front.entries[c.entry_idx];
+        choices.push(ProvisionChoice {
+            platform: o.platform.clone(),
+            count: n,
+            entry_idx: c.entry_idx,
+            entry_label: e.label.clone(),
+            capacity_rps: c.cap_rps,
+            device_w: c.device_w,
+        });
+        capacity_rps += n as f64 * c.cap_rps;
+        for k in 0..n {
+            fleet_devices.push(DeviceSpec {
+                id: format!("{}-{k}", o.platform),
+                platform: o.platform.clone(),
+                front: o.front.clone(),
+            });
+        }
+    }
+    let fleet = FleetSpec::new(name, fleet_devices)?;
+    Ok(ProvisionResult { peak_rps: peak, slo_ms, choices, devices, capacity_rps, power_w, fleet })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::front::FrontEntry;
+
+    /// Synthetic single-entry option with controlled capacity/tops (the
+    /// platform name only feeds the power constants).
+    fn option(platform: &str, rps: f64, tops: f64, lat_ms: f64) -> PlatformOption {
+        PlatformOption {
+            platform: platform.to_string(),
+            front: PlanFront::new(
+                "m",
+                12,
+                vec![FrontEntry {
+                    assign: vec![0; 8],
+                    batch: 1,
+                    latency_ms: lat_ms,
+                    tops,
+                    rps,
+                    nacc: 1,
+                    label: "pt".to_string(),
+                }],
+            )
+            .unwrap(),
+        }
+    }
+
+    fn ramp(peak: f64) -> RampSpec {
+        RampSpec::parse(&format!("100:{peak}:100"), 0.5).unwrap()
+    }
+
+    #[test]
+    fn single_platform_count_is_the_ceiling() {
+        let opts = [option("vck190", 10_000.0, 20.0, 1.0)];
+        let r = provision("f", &opts, &ramp(24_000.0), 5.0, 1.0).unwrap();
+        assert_eq!(r.devices, 3);
+        assert_eq!(r.choices.len(), 1);
+        assert_eq!(r.fleet.len(), 3);
+        assert!(r.capacity_rps + 1e-9 >= 24_000.0);
+        // headroom derates capacity: at 0.5 the same peak needs double
+        let r = provision("f", &opts, &ramp(24_000.0), 5.0, 0.5).unwrap();
+        assert_eq!(r.devices, 5);
+    }
+
+    #[test]
+    fn equal_count_breaks_ties_by_power() {
+        // both cover the peak with one device; zcu102 burns far less
+        let opts =
+            [option("vck190", 10_000.0, 20.0, 1.0), option("zcu102", 5_000.0, 0.63, 1.0)];
+        let r = provision("f", &opts, &ramp(4_000.0), 5.0, 1.0).unwrap();
+        assert_eq!(r.devices, 1);
+        assert_eq!(r.choices[0].platform, "zcu102");
+        // count still dominates power: at 9000 only vck190 manages 1 device
+        let r = provision("f", &opts, &ramp(9_000.0), 5.0, 1.0).unwrap();
+        assert_eq!(r.devices, 1);
+        assert_eq!(r.choices[0].platform, "vck190");
+    }
+
+    #[test]
+    fn heterogeneous_mix_beats_homogeneous_on_power() {
+        // peak 12000: 2x vck190 (108 W) vs 1x vck190 + 1x zcu102 (~66 W);
+        // both are 2 devices, the mixed fleet wins the power tie-break
+        let opts =
+            [option("vck190", 10_000.0, 20.0, 1.0), option("zcu102", 5_000.0, 0.63, 1.0)];
+        let r = provision("f", &opts, &ramp(12_000.0), 5.0, 1.0).unwrap();
+        assert_eq!(r.devices, 2);
+        let platforms: Vec<&str> = r.choices.iter().map(|c| c.platform.as_str()).collect();
+        assert_eq!(platforms, vec!["vck190", "zcu102"]);
+        assert_eq!(r.fleet.len(), 2);
+        assert!(r.fleet.devices.iter().any(|d| d.platform == "zcu102"));
+    }
+
+    #[test]
+    fn slo_filters_platforms_and_can_make_provisioning_infeasible() {
+        let opts =
+            [option("vck190", 10_000.0, 20.0, 1.0), option("zcu102", 50_000.0, 0.63, 30.0)];
+        // 2 ms SLO excludes the 30 ms zcu102 point despite its huge rate
+        let r = provision("f", &opts, &ramp(9_000.0), 2.0, 1.0).unwrap();
+        assert_eq!(r.choices[0].platform, "vck190");
+        assert!(provision("f", &opts, &ramp(9_000.0), 0.5, 1.0).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let o = option("vck190", 10_000.0, 20.0, 1.0);
+        assert!(provision("f", &[], &ramp(1000.0), 5.0, 1.0).is_err());
+        assert!(provision("f", &[o.clone(), o.clone()], &ramp(1000.0), 5.0, 1.0).is_err());
+        let idle = RampSpec::parse("0:0", 0.5).unwrap();
+        assert!(provision("f", &[o], &idle, 5.0, 1.0).is_err());
+    }
+}

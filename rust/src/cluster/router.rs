@@ -1,0 +1,414 @@
+//! Request routing across a fleet: pluggable dispatch policies plus the
+//! multi-model traffic generator, and the live [`FleetServer`] that
+//! drives one [`AdaptiveServer`] per device over the PJRT runtime.
+//!
+//! The router only sees what a real dispatcher could observe — each
+//! device's current queue depth and the latency/rate of the plan it is
+//! *currently* serving (which moves as the per-device adaptive schedulers
+//! switch plans) — never oracle knowledge of future arrivals.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::fleet::FleetSpec;
+use crate::coordinator::scheduler::{
+    AdaptiveServeReport, AdaptiveServer, RampSpec, SchedulerCfg, WindowReport,
+};
+use crate::runtime::exec::Engine;
+use crate::util::rng::Rng;
+
+/// Stream id the router's RNG splits off the base seed (traffic classes
+/// use 0..n_classes, live per-device serving uses u64::MAX-1-dev).
+pub const ROUTER_STREAM: u64 = u64::MAX;
+
+// ---------------------------------------------------------------------------
+// Routing policies
+// ---------------------------------------------------------------------------
+
+/// Pluggable dispatch policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through the eligible devices.
+    RoundRobin,
+    /// Join-shortest-queue over the eligible devices (ties: lowest index).
+    ShortestQueue,
+    /// SLO-aware power-of-two-choices: sample two eligible devices,
+    /// estimate each one's completion time for one more request (queue
+    /// drain at the current plan's rate + the plan's latency), prefer the
+    /// one that would still meet the SLO, else the smaller estimate.
+    PowerOfTwoSlo,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy, String> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Ok(RoutePolicy::ShortestQueue),
+            "p2c" | "slo-p2c" | "power-of-two" => Ok(RoutePolicy::PowerOfTwoSlo),
+            other => Err(format!("unknown routing policy '{other}' (rr|jsq|p2c)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::ShortestQueue => "shortest-queue",
+            RoutePolicy::PowerOfTwoSlo => "slo-p2c",
+        }
+    }
+}
+
+/// What the router may know about one device at dispatch time.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceView {
+    /// Requests queued or in flight on the device.
+    pub depth: usize,
+    /// Latency of the plan the device is currently serving (ms).
+    pub latency_ms: f64,
+    /// Sustainable rate of that plan (req/s).
+    pub rps: f64,
+}
+
+impl DeviceView {
+    /// Estimated completion time for one more request (seconds): drain
+    /// the standing depth at the plan's rate, then one service latency.
+    pub fn est_completion_s(&self) -> f64 {
+        self.depth as f64 / self.rps.max(1e-9) + self.latency_ms * 1e-3
+    }
+}
+
+/// Stateful dispatcher. Deterministic for a given RNG stream: replaying
+/// the same arrival sequence over the same views reproduces every pick.
+pub struct Router {
+    pub policy: RoutePolicy,
+    rr_next: usize,
+    rng: Rng,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, rng: Rng) -> Router {
+        Router { policy, rr_next: 0, rng }
+    }
+
+    /// Pick a device among `eligible` (indices into `views`, i.e. the
+    /// devices serving the request's model). `None` = unroutable.
+    pub fn pick(&mut self, views: &[DeviceView], eligible: &[usize], slo_ms: f64) -> Option<usize> {
+        match eligible.len() {
+            0 => None,
+            1 => Some(eligible[0]),
+            n => Some(match self.policy {
+                RoutePolicy::RoundRobin => {
+                    let d = eligible[self.rr_next % n];
+                    self.rr_next = (self.rr_next + 1) % n;
+                    d
+                }
+                RoutePolicy::ShortestQueue => eligible
+                    .iter()
+                    .copied()
+                    .min_by_key(|&d| (views[d].depth, d))
+                    .expect("non-empty eligible set"),
+                RoutePolicy::PowerOfTwoSlo => {
+                    let i = self.rng.usize_below(n);
+                    let mut j = self.rng.usize_below(n - 1);
+                    if j >= i {
+                        j += 1; // uniform over unordered distinct pairs
+                    }
+                    better_of(views, eligible[i], eligible[j], slo_ms)
+                }
+            }),
+        }
+    }
+}
+
+/// The SLO-aware comparison behind power-of-two-choices.
+fn better_of(views: &[DeviceView], a: usize, b: usize, slo_ms: f64) -> usize {
+    let (ca, cb) = (views[a].est_completion_s(), views[b].est_completion_s());
+    let slo_s = slo_ms * 1e-3;
+    match (ca <= slo_s, cb <= slo_s) {
+        (true, false) => a,
+        (false, true) => b,
+        // both (or neither) can make it: less loaded wins, ties to the
+        // lower index for determinism
+        _ => match ca.total_cmp(&cb) {
+            std::cmp::Ordering::Less => a,
+            std::cmp::Ordering::Greater => b,
+            std::cmp::Ordering::Equal => a.min(b),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model traffic
+// ---------------------------------------------------------------------------
+
+/// One model's offered load.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    pub model: String,
+    pub ramp: RampSpec,
+}
+
+/// A multi-model traffic mix: each class generates Poisson arrivals from
+/// its own ramp on an independent split RNG stream, so adding a class
+/// never perturbs another class's arrival times.
+#[derive(Clone, Debug)]
+pub struct TrafficMix {
+    pub classes: Vec<TrafficClass>,
+}
+
+impl TrafficMix {
+    pub fn single(model: &str, ramp: RampSpec) -> TrafficMix {
+        TrafficMix { classes: vec![TrafficClass { model: model.to_string(), ramp }] }
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.classes.iter().map(|c| c.ramp.duration_s()).fold(0.0, f64::max)
+    }
+
+    /// Merged `(arrival time, class index)` timeline, sorted by time with
+    /// ties broken by class order — fully deterministic per seed.
+    pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
+        let base = Rng::new(seed);
+        let mut out = Vec::new();
+        for (ci, c) in self.classes.iter().enumerate() {
+            let class_seed = base.split(ci as u64).next_u64();
+            out.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
+        }
+        out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live fleet serving (PJRT runtime)
+// ---------------------------------------------------------------------------
+
+/// Outcome of a live fleet run: per-device adaptive reports plus the
+/// requests no device could take.
+pub struct FleetServeOutcome {
+    /// `(device id, report)` in fleet order.
+    pub per_device: Vec<(String, AdaptiveServeReport)>,
+    /// Arrivals whose model no servable device carries.
+    pub unroutable: usize,
+}
+
+/// Live fleet serving: one [`AdaptiveServer`] per device, the router
+/// splitting each window's arrivals across them. All devices share the
+/// engine's compiled artifacts — this emulates N boards on one host; a
+/// real deployment would hand each device its own engine. Devices whose
+/// front the manifest cannot serve are dropped with a log line, exactly
+/// like single-device adaptive serving drops unservable front entries.
+pub struct FleetServer {
+    ids: Vec<String>,
+    servers: Vec<AdaptiveServer>,
+    router: Router,
+    cfg: SchedulerCfg,
+}
+
+impl FleetServer {
+    pub fn new(
+        engine: Arc<Engine>,
+        fleet: &FleetSpec,
+        cfg: SchedulerCfg,
+        policy: RoutePolicy,
+        seed: u64,
+    ) -> Result<FleetServer> {
+        let mut ids = Vec::new();
+        let mut servers = Vec::new();
+        for d in &fleet.devices {
+            match AdaptiveServer::new(Arc::clone(&engine), d.front.clone(), cfg) {
+                Ok(s) => {
+                    ids.push(d.id.clone());
+                    servers.push(s);
+                }
+                Err(e) => eprintln!("[cluster] dropping device '{}': {e}", d.id),
+            }
+        }
+        if servers.is_empty() {
+            return Err(anyhow!("no servable devices in fleet '{}'", fleet.name));
+        }
+        let router = Router::new(policy, Rng::new(seed).split(ROUTER_STREAM));
+        Ok(FleetServer { ids, servers, router, cfg })
+    }
+
+    pub fn device_ids(&self) -> &[String] {
+        &self.ids
+    }
+
+    /// Drive the mix window by window: arrivals inside a window are routed
+    /// one by one against the devices' observable state (standing backlog
+    /// plus what this window already routed to them), then every device
+    /// serves its share of the window via
+    /// [`AdaptiveServer::serve_window`].
+    pub fn serve_mix(&mut self, mix: &TrafficMix, seed: u64) -> Result<FleetServeOutcome> {
+        let window_s = self.cfg.window_s;
+        let arrivals = mix.arrivals(seed);
+        let n_windows = (mix.duration_s() / window_s - 1e-9).ceil() as usize;
+        let eligible: Vec<Vec<usize>> = mix
+            .classes
+            .iter()
+            .map(|c| {
+                self.servers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.model() == c.model)
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .collect();
+        let base = Rng::new(seed);
+        let dev_seeds: Vec<u64> = (0..self.servers.len())
+            .map(|i| base.split(ROUTER_STREAM - 1 - i as u64).next_u64())
+            .collect();
+        let mut reports: Vec<Vec<WindowReport>> =
+            (0..self.servers.len()).map(|_| Vec::new()).collect();
+        let mut unroutable = 0usize;
+        let mut ai = 0usize;
+        for w in 0..n_windows {
+            let end_s = (w + 1) as f64 * window_s;
+            let mut buckets: Vec<Vec<f64>> =
+                (0..self.servers.len()).map(|_| Vec::new()).collect();
+            while ai < arrivals.len() && arrivals[ai].0 < end_s {
+                let (t, class) = arrivals[ai];
+                let views: Vec<DeviceView> = self
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let e = s.active_entry();
+                        DeviceView {
+                            depth: s.queue_depth() + buckets[i].len(),
+                            latency_ms: e.latency_ms,
+                            rps: e.rps,
+                        }
+                    })
+                    .collect();
+                match self.router.pick(&views, &eligible[class], self.cfg.slo_ms) {
+                    Some(d) => buckets[d].push(t),
+                    None => unroutable += 1,
+                }
+                ai += 1;
+            }
+            for (d, server) in self.servers.iter_mut().enumerate() {
+                reports[d].push(server.serve_window(w, &buckets[d], dev_seeds[d])?);
+            }
+        }
+        let per_device = self
+            .ids
+            .iter()
+            .zip(reports)
+            .zip(&self.servers)
+            .map(|((id, windows), s)| {
+                let total_images = windows.iter().map(|w| w.admitted).sum();
+                let total_shed = windows.iter().map(|w| w.shed).sum();
+                let report = AdaptiveServeReport {
+                    windows,
+                    switches: s.scheduler().switches.clone(),
+                    total_images,
+                    total_shed,
+                };
+                (id.clone(), report)
+            })
+            .collect();
+        Ok(FleetServeOutcome { per_device, unroutable })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(depths: &[usize]) -> Vec<DeviceView> {
+        depths
+            .iter()
+            .map(|&d| DeviceView { depth: d, latency_ms: 1.0, rps: 1000.0 })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_eligible_only() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, Rng::new(1));
+        let v = views(&[0, 0, 0, 0]);
+        let picks: Vec<usize> =
+            (0..6).map(|_| r.pick(&v, &[1, 3], 2.0).unwrap()).collect();
+        assert_eq!(picks, vec![1, 3, 1, 3, 1, 3]);
+        assert_eq!(r.pick(&v, &[], 2.0), None);
+        assert_eq!(r.pick(&v, &[2], 2.0), Some(2));
+    }
+
+    #[test]
+    fn shortest_queue_picks_min_depth_ties_low_index() {
+        let mut r = Router::new(RoutePolicy::ShortestQueue, Rng::new(1));
+        assert_eq!(r.pick(&views(&[5, 2, 9]), &[0, 1, 2], 2.0), Some(1));
+        assert_eq!(r.pick(&views(&[4, 4, 4]), &[0, 1, 2], 2.0), Some(0));
+        assert_eq!(r.pick(&views(&[4, 4, 0]), &[0, 1], 2.0), Some(0));
+    }
+
+    #[test]
+    fn p2c_prefers_slo_feasible_and_is_deterministic() {
+        // device 0 deep (est completion 101 ms), device 1 idle (1 ms):
+        // whichever pair is sampled, the SLO-feasible device must win
+        let v = vec![
+            DeviceView { depth: 100, latency_ms: 1.0, rps: 1000.0 },
+            DeviceView { depth: 0, latency_ms: 1.0, rps: 1000.0 },
+        ];
+        let mut a = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(42).split(0));
+        let mut b = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(42).split(0));
+        for _ in 0..100 {
+            let pa = a.pick(&v, &[0, 1], 5.0).unwrap();
+            assert_eq!(pa, 1, "p2c routed into the SLO-violating queue");
+            assert_eq!(pa, b.pick(&v, &[0, 1], 5.0).unwrap());
+        }
+    }
+
+    #[test]
+    fn p2c_load_orders_the_pick_frequencies() {
+        // depths 9 > 7 > 6 > 5: the less-loaded member of every sampled
+        // pair wins, so pick frequency must be inversely ordered by depth
+        // and the deepest device (in every pair it loses) gets nothing.
+        let v = views(&[9, 5, 7, 6]);
+        let mut r = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(7));
+        let mut hit = [0usize; 4];
+        for _ in 0..600 {
+            hit[r.pick(&v, &[0, 1, 2, 3], 1000.0).unwrap()] += 1;
+        }
+        assert_eq!(hit[0], 0, "deepest device still picked: {hit:?}");
+        assert!(hit[1] > hit[3] && hit[3] > hit[2], "not load-ordered: {hit:?}");
+        assert!(hit[2] > 0, "second-deepest starved: {hit:?}");
+    }
+
+    #[test]
+    fn traffic_mix_merges_sorted_and_streams_are_independent() {
+        let ramp = RampSpec::parse("2000:500", 0.25).unwrap();
+        let mix = TrafficMix {
+            classes: vec![
+                TrafficClass { model: "deit_t".to_string(), ramp: ramp.clone() },
+                TrafficClass { model: "deit_t_256".to_string(), ramp: ramp.clone() },
+            ],
+        };
+        let a = mix.arrivals(9);
+        assert_eq!(a, mix.arrivals(9));
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(a.iter().any(|&(_, c)| c == 0) && a.iter().any(|&(_, c)| c == 1));
+        // class 0's own arrival times are unchanged by the second class
+        let single = TrafficMix::single("deit_t", ramp);
+        let solo: Vec<f64> = single.arrivals(9).into_iter().map(|(t, _)| t).collect();
+        let merged: Vec<f64> =
+            a.iter().filter(|&&(_, c)| c == 0).map(|&(t, _)| t).collect();
+        assert_eq!(solo, merged);
+        assert!((mix.duration_s() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_parse_round_trip() {
+        for (s, p) in [
+            ("rr", RoutePolicy::RoundRobin),
+            ("jsq", RoutePolicy::ShortestQueue),
+            ("p2c", RoutePolicy::PowerOfTwoSlo),
+        ] {
+            assert_eq!(RoutePolicy::parse(s).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+}

@@ -1,0 +1,458 @@
+//! Deterministic discrete-event replay of a whole fleet — the N-device
+//! extension of [`crate::sim::serving::serve_ramp`].
+//!
+//! Every device runs the *same* per-device machinery as the single-device
+//! sim (its own [`AdaptiveScheduler`] with hysteresis + admission control,
+//! its own queue, exact drain-and-swap at launch completion); the router
+//! sits in front, dispatching each arrival of the multi-model mix against
+//! the devices' observable state. Event order is deterministic — on time
+//! ties: completion (lowest device index first), then the window tick,
+//! then the arrival — so a seed fully determines every tally, fleet-wide
+//! and per device. The only ways a request is not served are explicit:
+//! per-device admission shedding, or no device serving its model at all
+//! (`unroutable`). `served + shed == arrivals` holds per device and
+//! fleet-wide, pinned by `tests/cluster_serving.rs`.
+
+use std::collections::VecDeque;
+
+use crate::cluster::fleet::FleetSpec;
+use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
+use crate::coordinator::scheduler::{
+    AdaptiveScheduler, LoadEstimator, SchedulerCfg, SwitchRecord,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One in-flight launch: the arrival times it serves and its completion.
+struct Launch {
+    done_s: f64,
+    arrivals: Vec<f64>,
+}
+
+/// Per-device simulation state.
+struct Dev {
+    sched: AdaptiveScheduler,
+    est: LoadEstimator,
+    queue: VecDeque<f64>,
+    in_flight: Option<Launch>,
+    /// Plan executing the current launch (lags `sched.active()` while a
+    /// committed switch drains).
+    serving: usize,
+    pending_switch: Option<usize>,
+    routed: usize,
+    served: usize,
+    shed: usize,
+    latency: Summary,
+    max_queue_depth: usize,
+}
+
+impl Dev {
+    /// Requests queued or in flight — the router-visible depth.
+    fn depth(&self) -> usize {
+        self.queue.len() + self.in_flight.as_ref().map_or(0, |l| l.arrivals.len())
+    }
+
+    fn view(&self) -> DeviceView {
+        let e = &self.sched.front.entries[self.serving];
+        DeviceView { depth: self.depth(), latency_ms: e.latency_ms, rps: e.rps }
+    }
+
+    /// Start the next launch from the queue if the device is idle.
+    fn start_launch(&mut self, t: f64) {
+        if self.queue.is_empty() || self.in_flight.is_some() {
+            return;
+        }
+        let e = &self.sched.front.entries[self.serving];
+        let take = e.batch.min(self.queue.len());
+        let batch: Vec<f64> = self.queue.drain(..take).collect();
+        self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
+    }
+}
+
+/// Per-device outcome of a fleet simulation.
+#[derive(Clone, Debug)]
+pub struct DeviceStat {
+    pub id: String,
+    pub platform: String,
+    /// Requests the router sent here (`served + shed`).
+    pub routed: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_queue_depth: usize,
+    pub switches: Vec<SwitchRecord>,
+    pub final_active: usize,
+}
+
+/// Outcome of a simulated fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetSimReport {
+    pub arrivals: usize,
+    pub served: usize,
+    /// All requests not served: per-device admission shedding plus the
+    /// `unroutable` ones.
+    pub shed: usize,
+    /// Subset of `shed` whose model no device serves.
+    pub unroutable: usize,
+    /// Fleet-wide per-request sojourn times (served requests).
+    pub latency: Summary,
+    pub slo_violations: usize,
+    /// Completion time of the last served request.
+    pub makespan_s: f64,
+    pub devices: Vec<DeviceStat>,
+}
+
+impl FleetSimReport {
+    /// `(p50, p99)` sojourn in ms, from one sort.
+    pub fn latency_ms(&self) -> (f64, f64) {
+        let p = self.latency.percentiles(&[0.50, 0.99]);
+        (p[0] * 1e3, p[1] * 1e3)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms().1
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            return 1.0;
+        }
+        1.0 - self.slo_violations as f64 / self.served as f64
+    }
+
+    pub fn total_switches(&self) -> usize {
+        self.devices.iter().map(|d| d.switches.len()).sum()
+    }
+
+    pub fn summary_line(&self) -> String {
+        let (p50, p99) = self.latency_ms();
+        format!(
+            "{} devices | {} arrivals | {} served, {} shed ({} unroutable) | p50 {p50:.2} ms \
+             p99 {p99:.2} ms | SLO attainment {:.1}% | {} plan switches",
+            self.devices.len(),
+            self.arrivals,
+            self.served,
+            self.shed,
+            self.unroutable,
+            self.slo_attainment() * 100.0,
+            self.total_switches()
+        )
+    }
+}
+
+/// Simulate serving `mix` on `fleet` with per-device adaptive scheduling
+/// under `cfg` and the given routing policy. Fully deterministic for a
+/// given seed: per-class arrival streams and the router's sampling stream
+/// are all [`Rng::split`] off the one base seed.
+pub fn simulate_fleet(
+    fleet: &FleetSpec,
+    mix: &TrafficMix,
+    cfg: &SchedulerCfg,
+    policy: RoutePolicy,
+    seed: u64,
+) -> Result<FleetSimReport, String> {
+    if fleet.is_empty() {
+        return Err("cannot simulate an empty fleet".into());
+    }
+    if mix.classes.is_empty() {
+        return Err("traffic mix has no classes".into());
+    }
+    let arrivals = mix.arrivals(seed);
+    let base = Rng::new(seed);
+    let mut router = Router::new(policy, base.split(ROUTER_STREAM));
+
+    // Class -> devices serving that model.
+    let eligible: Vec<Vec<usize>> = mix
+        .classes
+        .iter()
+        .map(|c| {
+            fleet
+                .devices
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.front.model == c.model)
+                .map(|(i, _)| i)
+                .collect()
+        })
+        .collect();
+
+    let mut devs: Vec<Dev> = fleet
+        .devices
+        .iter()
+        .map(|d| {
+            let sched = AdaptiveScheduler::new(d.front.clone(), *cfg);
+            let serving = sched.active();
+            Dev {
+                sched,
+                est: LoadEstimator::new(cfg.horizon_s()),
+                queue: VecDeque::new(),
+                in_flight: None,
+                serving,
+                pending_switch: None,
+                routed: 0,
+                served: 0,
+                shed: 0,
+                latency: Summary::new(),
+                max_queue_depth: 0,
+            }
+        })
+        .collect();
+
+    // round(): same float-truncation guard as the single-device sim.
+    let n_windows = (mix.duration_s() / cfg.window_s).round() as usize;
+    let slo_s = cfg.slo_ms * 1e-3;
+
+    let mut fleet_latency = Summary::new();
+    let mut unroutable = 0usize;
+    let mut makespan_s = 0.0f64;
+    let mut ai = 0usize; // next arrival index
+    let mut w = 0usize; // next window index
+
+    loop {
+        let t_arr = arrivals.get(ai).map(|&(t, _)| t).unwrap_or(f64::INFINITY);
+        // Earliest completion across devices (tie: lowest device index).
+        let mut t_done = f64::INFINITY;
+        let mut done_dev = 0usize;
+        for (i, d) in devs.iter().enumerate() {
+            if let Some(l) = &d.in_flight {
+                if l.done_s < t_done {
+                    t_done = l.done_s;
+                    done_dev = i;
+                }
+            }
+        }
+        let t_win = if w < n_windows { (w + 1) as f64 * cfg.window_s } else { f64::INFINITY };
+        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
+            break;
+        }
+
+        // Same deterministic tie order as the single-device sim:
+        // completion, then window tick, then arrival.
+        if t_done <= t_win && t_done <= t_arr {
+            // -- launch completion (and switch drain point) --------------
+            let d = &mut devs[done_dev];
+            let launch = d.in_flight.take().unwrap();
+            for &a in &launch.arrivals {
+                let sojourn = launch.done_s - a;
+                d.latency.push(sojourn);
+                fleet_latency.push(sojourn);
+                d.est.record_completion(launch.done_s, sojourn);
+                d.served += 1;
+            }
+            makespan_s = makespan_s.max(launch.done_s);
+            if let Some(to) = d.pending_switch.take() {
+                d.serving = to; // drain complete: swap now
+            }
+            d.start_launch(launch.done_s);
+        } else if t_win <= t_arr {
+            // -- decision window boundary (all devices) ------------------
+            for d in devs.iter_mut() {
+                let queue_depth = d.queue.len();
+                let snapshot = d.est.estimate(t_win, queue_depth);
+                if d.pending_switch.is_none() {
+                    if let Some(to) = d.sched.on_window(w, t_win, &snapshot) {
+                        if d.in_flight.is_some() {
+                            d.pending_switch = Some(to); // drain-and-swap
+                        } else {
+                            d.serving = to;
+                        }
+                    }
+                }
+            }
+            w += 1;
+        } else {
+            // -- arrival: route, then per-device admission ---------------
+            let (t, class) = arrivals[ai];
+            let views: Vec<DeviceView> = devs.iter().map(Dev::view).collect();
+            match router.pick(&views, &eligible[class], cfg.slo_ms) {
+                None => unroutable += 1,
+                Some(di) => {
+                    let d = &mut devs[di];
+                    d.routed += 1;
+                    d.est.record_arrival(t);
+                    if d.sched.admit(d.queue.len()) {
+                        d.queue.push_back(t);
+                        d.max_queue_depth = d.max_queue_depth.max(d.queue.len());
+                        d.start_launch(t);
+                    } else {
+                        d.shed += 1;
+                    }
+                }
+            }
+            ai += 1;
+        }
+    }
+
+    let served: usize = devs.iter().map(|d| d.served).sum();
+    let dev_shed: usize = devs.iter().map(|d| d.shed).sum();
+    let slo_violations = served - fleet_latency.count_leq(slo_s);
+    let devices: Vec<DeviceStat> = fleet
+        .devices
+        .iter()
+        .zip(devs)
+        .map(|(spec, d)| {
+            let p = d.latency.percentiles(&[0.50, 0.99]);
+            DeviceStat {
+                id: spec.id.clone(),
+                platform: spec.platform.clone(),
+                routed: d.routed,
+                served: d.served,
+                shed: d.shed,
+                p50_ms: p[0] * 1e3,
+                p99_ms: p[1] * 1e3,
+                max_queue_depth: d.max_queue_depth,
+                switches: d.sched.switches.clone(),
+                final_active: d.sched.active(),
+            }
+        })
+        .collect();
+
+    Ok(FleetSimReport {
+        arrivals: arrivals.len(),
+        served,
+        shed: dev_shed + unroutable,
+        unroutable,
+        latency: fleet_latency,
+        slo_violations,
+        makespan_s,
+        devices,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{DeviceSpec, FleetSpec};
+    use crate::cluster::router::TrafficClass;
+    use crate::coordinator::scheduler::RampSpec;
+    use crate::plan::front::{FrontEntry, PlanFront};
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    /// Synthetic two-device fleet over controlled capacities (same shape
+    /// as the single-device scheduler tests).
+    fn fleet(model: &str) -> FleetSpec {
+        let front = PlanFront::new(
+            model,
+            12,
+            vec![
+                entry("seq", 1, 0.2, 5000.0),
+                entry("hybrid", 6, 1.0, 6000.0),
+                entry("spatial", 24, 2.0, 12000.0),
+            ],
+        )
+        .unwrap();
+        FleetSpec::new(
+            "synthetic",
+            vec![
+                DeviceSpec {
+                    id: "vck190-0".to_string(),
+                    platform: "vck190".to_string(),
+                    front: front.clone(),
+                },
+                DeviceSpec {
+                    id: "vck190-1".to_string(),
+                    platform: "vck190".to_string(),
+                    front,
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> SchedulerCfg {
+        SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+    }
+
+    #[test]
+    fn conservation_per_device_and_fleet_wide() {
+        let mix = TrafficMix::single("m", RampSpec::parse("2000:8000:2000", 0.4).unwrap());
+        for policy in
+            [RoutePolicy::RoundRobin, RoutePolicy::ShortestQueue, RoutePolicy::PowerOfTwoSlo]
+        {
+            let r = simulate_fleet(&fleet("m"), &mix, &cfg(), policy, 11).unwrap();
+            assert_eq!(r.served + r.shed, r.arrivals, "{policy:?} lost requests");
+            let routed: usize = r.devices.iter().map(|d| d.routed).sum();
+            assert_eq!(routed + r.unroutable, r.arrivals);
+            for d in &r.devices {
+                assert_eq!(d.served + d.shed, d.routed, "device {} lost requests", d.id);
+            }
+            assert_eq!(r.latency.len(), r.served);
+            // two equal devices under a load-aware policy: neither starves
+            assert!(r.devices.iter().all(|d| d.routed > 0), "{policy:?} starved a device");
+        }
+    }
+
+    #[test]
+    fn identical_seed_identical_per_device_tallies() {
+        let mix = TrafficMix::single("m", RampSpec::parse("3000:9000", 0.3).unwrap());
+        let a = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 5).unwrap();
+        let b = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 5).unwrap();
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.routed, db.routed);
+            assert_eq!(da.served, db.served);
+            assert_eq!(da.shed, db.shed);
+            assert_eq!(da.switches, db.switches);
+        }
+        let c = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 6).unwrap();
+        assert_ne!(
+            a.devices.iter().map(|d| d.routed).collect::<Vec<_>>(),
+            c.devices.iter().map(|d| d.routed).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn unroutable_model_is_accounted_not_lost() {
+        let ramp = RampSpec::parse("1000", 0.3).unwrap();
+        let mix = TrafficMix {
+            classes: vec![
+                TrafficClass { model: "m".to_string(), ramp: ramp.clone() },
+                TrafficClass { model: "other".to_string(), ramp },
+            ],
+        };
+        let r = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::RoundRobin, 3).unwrap();
+        assert!(r.unroutable > 0, "class with no eligible device must be unroutable");
+        assert_eq!(r.served + r.shed, r.arrivals);
+        // the routable class is still fully served under this light load
+        assert_eq!(r.shed, r.unroutable);
+    }
+
+    #[test]
+    fn two_devices_halve_the_per_device_load() {
+        // 8000 req/s across two devices ≈ 4000 each: under each device's
+        // seq capacity, so no shedding and p99 well under the SLO.
+        let mix = TrafficMix::single("m", RampSpec::parse("2000:8000:2000", 0.4).unwrap());
+        let r =
+            simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 17).unwrap();
+        assert_eq!(r.shed, 0, "two-device fleet shed under feasible load");
+        assert!(r.p99_ms() <= cfg().slo_ms, "p99 {:.2} ms", r.p99_ms());
+        // both devices took a meaningful share of the peak
+        let shares: Vec<f64> = r
+            .devices
+            .iter()
+            .map(|d| d.routed as f64 / r.arrivals as f64)
+            .collect();
+        assert!(shares.iter().all(|&s| s > 0.2), "lopsided split {shares:?}");
+    }
+
+    #[test]
+    fn rejects_empty_mix() {
+        let empty = TrafficMix { classes: vec![] };
+        assert!(
+            simulate_fleet(&fleet("m"), &empty, &cfg(), RoutePolicy::RoundRobin, 1).is_err()
+        );
+    }
+}

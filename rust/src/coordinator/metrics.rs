@@ -32,13 +32,16 @@ impl ServeReport {
     }
 
     pub fn summary_line(&self) -> String {
+        // one sort for both quantiles — this prints per window in the
+        // adaptive serving loop
+        let pct = self.latency.percentiles(&[0.50, 0.99]);
         format!(
             "{} reqs in {:.3} s | {:.2} req/s | lat p50 {:.2} ms p99 {:.2} ms | {:.4} effective TOPS",
             self.requests,
             self.wall_s,
             self.throughput_rps(),
-            self.latency.p50() * 1e3,
-            self.latency.p99() * 1e3,
+            pct[0] * 1e3,
+            pct[1] * 1e3,
             self.effective_tops()
         )
     }

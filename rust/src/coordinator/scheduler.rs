@@ -339,6 +339,8 @@ pub struct WindowReport {
     pub rate_rps: f64,
     /// Front entry that served the window.
     pub active: usize,
+    /// Requests admitted (and served) this window.
+    pub admitted: usize,
     /// Requests shed by admission control this window.
     pub shed: usize,
     /// None for idle or fully-shed windows.
@@ -366,6 +368,9 @@ pub struct AdaptiveServer {
     micro_batch: Vec<usize>,
     servers: Vec<Option<PipelineServer>>,
     img_size: usize,
+    est: LoadEstimator,
+    /// Accumulated service overrun (seconds) carried across windows.
+    backlog_s: f64,
 }
 
 impl AdaptiveServer {
@@ -474,11 +479,29 @@ impl AdaptiveServer {
             micro_batch,
             servers: (0..n).map(|_| None).collect(),
             img_size: info.img_size,
+            est: LoadEstimator::new(cfg.horizon_s()),
+            backlog_s: 0.0,
         })
     }
 
     pub fn scheduler(&self) -> &AdaptiveScheduler {
         &self.sched
+    }
+
+    /// Accumulated service overrun expressed as a queue depth on the
+    /// active plan — the live analog of the sim's queue length. A cluster
+    /// router reads this (plus [`Self::active_entry`]) to build its
+    /// per-device load view.
+    pub fn queue_depth(&self) -> usize {
+        (self.backlog_s * self.sched.active_entry().rps) as usize
+    }
+
+    pub fn active_entry(&self) -> &FrontEntry {
+        self.sched.active_entry()
+    }
+
+    pub fn model(&self) -> &str {
+        &self.sched.front.model
     }
 
     fn server(&mut self, idx: usize) -> Result<&PipelineServer> {
@@ -493,71 +516,85 @@ impl AdaptiveServer {
         Ok(self.servers[idx].as_ref().unwrap())
     }
 
-    /// Drive the ramp window by window: each window's Poisson arrival count
-    /// becomes synchronous launches on the active plan's server, then the
-    /// measured window metrics feed the switch policy. Synchronous windows
-    /// mean drain-and-swap by construction; overload shows up as service
-    /// wall time exceeding the window budget, which carries forward as
-    /// backlog — admission control sheds whole windows (the granularity of
-    /// this open-loop harness) once the backlog-equivalent queue depth
-    /// breaches the shed budget, mirroring the sim's per-request policy.
+    /// Serve one decision window: `arrivals` are this window's offered
+    /// arrival times (absolute seconds), handed over by the caller — the
+    /// single-device ramp loop below, or a cluster-level router splitting
+    /// a traffic mix across devices ([`crate::cluster::router`]). The
+    /// window's arrival count becomes synchronous launches on the active
+    /// plan's server, then the measured window metrics feed the switch
+    /// policy. Synchronous windows mean drain-and-swap by construction;
+    /// overload shows up as service wall time exceeding the window budget,
+    /// which carries forward as backlog — admission control sheds whole
+    /// windows (the granularity of this open-loop harness) once the
+    /// backlog-equivalent queue depth breaches the shed budget, mirroring
+    /// the sim's per-request policy.
+    pub fn serve_window(&mut self, w: usize, arrivals: &[f64], seed: u64) -> Result<WindowReport> {
+        let window_s = self.sched.cfg.window_s;
+        let end_s = (w + 1) as f64 * window_s;
+        for &t in arrivals {
+            self.est.record_arrival(t);
+        }
+        let count = arrivals.len();
+        let active = self.sched.active();
+        let mb = self.micro_batch[active];
+        let queue_depth = self.queue_depth();
+        let admitted = if count > 0 && self.sched.admit(queue_depth) { count } else { 0 };
+        let shed = count - admitted;
+        let report = if admitted > 0 {
+            let launches = admitted.div_ceil(mb);
+            let img_size = self.img_size;
+            let reqs: Vec<Tensor> = (0..launches)
+                .map(|i| synth_images(mb, img_size, seed ^ ((w as u64) << 24) ^ i as u64))
+                .collect();
+            let (report, _) = self.server(active)?.serve(reqs)?;
+            // Service wall time beyond the window budget carries over.
+            self.backlog_s = (self.backlog_s + report.wall_s - window_s).max(0.0);
+            Some(report)
+        } else {
+            self.backlog_s = (self.backlog_s - window_s).max(0.0);
+            None
+        };
+        // The policy sees the same sliding-window estimate as the sim
+        // (horizon_windows applies identically); only p99/completed come
+        // from the measured window since Summary keeps no raw samples.
+        let mut snapshot = self.est.estimate(end_s, queue_depth);
+        snapshot.p99_s = report.as_ref().map(|r| r.latency.p99()).unwrap_or(0.0);
+        snapshot.completed = admitted;
+        self.sched.on_window(w, end_s, &snapshot);
+        let rate_rps = count as f64 / window_s; // offered, for display
+        Ok(WindowReport { window: w, rate_rps, active, admitted, shed, report })
+    }
+
+    /// Drive the ramp window by window over [`Self::serve_window`].
     pub fn serve_ramp(&mut self, ramp: &RampSpec, seed: u64) -> Result<AdaptiveServeReport> {
+        // A ramp is a complete run from t=0: discard load state left by a
+        // previous run (serve_window's clock restarts, so stale estimator
+        // timestamps would sit past the horizon prune and inflate the
+        // rate; carried backlog would shed a fresh ramp's first windows).
+        self.est = LoadEstimator::new(self.sched.cfg.horizon_s());
+        self.backlog_s = 0.0;
         let window_s = self.sched.cfg.window_s;
         let arrivals = ramp.arrivals(seed);
         // ceil (with a float-error guard) so a partial final window still
         // serves its arrivals; the sim rounds instead, since its event loop
         // drains remaining arrivals without a tick.
         let n_windows = (ramp.duration_s() / window_s - 1e-9).ceil() as usize;
-        let mut est = LoadEstimator::new(self.sched.cfg.horizon_s());
         let mut windows = Vec::with_capacity(n_windows);
         let mut total_images = 0usize;
         let mut total_shed = 0usize;
-        let mut backlog_s = 0.0f64;
         let mut ai = 0usize;
         for w in 0..n_windows {
             let end_s = (w + 1) as f64 * window_s;
-            let mut count = 0usize;
+            let start = ai;
             while ai < arrivals.len() && arrivals[ai] < end_s {
-                est.record_arrival(arrivals[ai]);
                 ai += 1;
-                count += 1;
             }
-            let active = self.sched.active();
-            let mb = self.micro_batch[active];
-            // Accumulated service overrun, expressed as a queue depth on
-            // the active plan — the live analog of the sim's queue.
-            let queue_depth = (backlog_s * self.sched.front.entries[active].rps) as usize;
-            let admitted = if count > 0 && self.sched.admit(queue_depth) { count } else { 0 };
-            let shed = count - admitted;
-            total_shed += shed;
-            let report = if admitted > 0 {
-                let launches = admitted.div_ceil(mb);
-                let img_size = self.img_size;
-                let reqs: Vec<Tensor> = (0..launches)
-                    .map(|i| {
-                        synth_images(mb, img_size, seed ^ ((w as u64) << 24) ^ i as u64)
-                    })
-                    .collect();
-                let (report, _) = self.server(active)?.serve(reqs)?;
-                // Count offered requests, not launch capacity: the last
-                // launch pads up to mb images and padding is not demand.
-                total_images += admitted;
-                // Service wall time beyond the window budget carries over.
-                backlog_s = (backlog_s + report.wall_s - window_s).max(0.0);
-                Some(report)
-            } else {
-                backlog_s = (backlog_s - window_s).max(0.0);
-                None
-            };
-            // The policy sees the same sliding-window estimate as the sim
-            // (horizon_windows applies identically); only p99/completed come
-            // from the measured window since Summary keeps no raw samples.
-            let mut snapshot = est.estimate(end_s, queue_depth);
-            snapshot.p99_s = report.as_ref().map(|r| r.latency.p99()).unwrap_or(0.0);
-            snapshot.completed = admitted;
-            self.sched.on_window(w, end_s, &snapshot);
-            let rate_rps = count as f64 / window_s; // offered, for display
-            windows.push(WindowReport { window: w, rate_rps, active, shed, report });
+            let wr = self.serve_window(w, &arrivals[start..ai], seed)?;
+            // Count offered requests, not launch capacity: the last launch
+            // pads up to mb images and padding is not demand.
+            total_images += wr.admitted;
+            total_shed += wr.shed;
+            windows.push(wr);
         }
         Ok(AdaptiveServeReport {
             windows,

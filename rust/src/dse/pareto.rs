@@ -29,11 +29,13 @@ pub fn pareto_front(points: &[Point]) -> Vec<Point> {
         .filter(|p| !points.iter().any(|q| q.dominates(p)))
         .copied()
         .collect();
+    // total_cmp, not partial_cmp().unwrap(): a NaN latency/tops from a
+    // degenerate eval must not panic the pruning (NaN sorts last and, by
+    // IEEE comparison semantics, never dominates or is dominated).
     front.sort_by(|a, b| {
         a.latency_ms
-            .partial_cmp(&b.latency_ms)
-            .unwrap()
-            .then(b.tops.partial_cmp(&a.tops).unwrap())
+            .total_cmp(&b.latency_ms)
+            .then(b.tops.total_cmp(&a.tops))
     });
     front.dedup_by(|a, b| a.latency_ms == b.latency_ms && a.tops == b.tops);
     front
@@ -50,9 +52,8 @@ pub fn pareto_indices(points: &[Point]) -> Vec<usize> {
     idx.sort_by(|&a, &b| {
         points[a]
             .latency_ms
-            .partial_cmp(&points[b].latency_ms)
-            .unwrap()
-            .then(points[b].tops.partial_cmp(&points[a].tops).unwrap())
+            .total_cmp(&points[b].latency_ms)
+            .then(points[b].tops.total_cmp(&points[a].tops))
     });
     idx.dedup_by(|&mut a, &mut b| {
         points[a].latency_ms == points[b].latency_ms && points[a].tops == points[b].tops
@@ -62,10 +63,12 @@ pub fn pareto_indices(points: &[Point]) -> Vec<usize> {
 
 /// Best throughput meeting a latency constraint (Table 6 cells); None = "x".
 pub fn best_under(points: &[Point], lat_cons_ms: f64) -> Option<Point> {
+    // NaN tops is excluded outright: total_cmp orders NaN above +inf, so a
+    // bare max_by would crown a degenerate point "best".
     points
         .iter()
-        .filter(|p| p.latency_ms <= lat_cons_ms)
-        .max_by(|a, b| a.tops.partial_cmp(&b.tops).unwrap())
+        .filter(|p| p.latency_ms <= lat_cons_ms && !p.tops.is_nan())
+        .max_by(|a, b| a.tops.total_cmp(&b.tops))
         .copied()
 }
 
@@ -129,6 +132,28 @@ mod tests {
         let via_idx: Vec<Point> = idx.iter().map(|&i| pts[i]).collect();
         assert_eq!(via_idx, pareto_front(&pts));
         assert_eq!(idx, vec![2, 0, 3]); // sorted by latency, (2.0, 5) dominated
+    }
+
+    #[test]
+    fn nan_points_do_not_panic_the_pruning() {
+        // A degenerate eval can leak NaN latency/tops; pruning and sorting
+        // must survive it (NaN compares false to everything, so it neither
+        // dominates nor is dominated, and total_cmp sorts it last).
+        let pts = [
+            pt(1.0, 10.0),
+            pt(f64::NAN, 5.0),
+            pt(2.0, f64::NAN),
+            pt(0.5, 3.0),
+        ];
+        let f = pareto_front(&pts);
+        let idx = pareto_indices(&pts);
+        assert_eq!(f.len(), idx.len());
+        // the finite non-dominated points are still present and ordered
+        let finite: Vec<&Point> =
+            f.iter().filter(|p| p.latency_ms.is_finite() && p.tops.is_finite()).collect();
+        assert_eq!(finite.len(), 2);
+        assert!(finite[0].latency_ms <= finite[1].latency_ms);
+        assert_eq!(best_under(&pts, 3.0).unwrap().tops, 10.0);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   ExecutionPlan IR tying search, simulation, and serving to one mapping
 //!   representation ([`plan`]), comparison
 //!   baselines ([`baselines`]), a PJRT serving runtime ([`runtime`] +
-//!   [`coordinator`]), and report generators for every paper table/figure
-//!   ([`report`]).
+//!   [`coordinator`]), a heterogeneous multi-device fleet layer — specs,
+//!   routing, fleet simulation, provisioning — ([`cluster`]), and report
+//!   generators for every paper table/figure ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
 //!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
 //!   runtime serves.
@@ -24,6 +25,7 @@ pub mod analytical;
 pub mod arch;
 pub mod baselines;
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod dse;
 pub mod graph;

@@ -10,12 +10,18 @@
 //!   serve             serve DeiT-T on the PJRT runtime (sequential/spatial/hybrid,
 //!                     any 8-class DSE design via --assign c0,..,c7, or the whole
 //!                     front adaptively via --front)
+//!   cluster           fleet layer: `provision` a platform mix for a traffic
+//!                     forecast, `simulate` a fleet deterministically, `serve`
+//!                     it live (one adaptive server per device + router)
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use std::path::Path;
 
 use ssr::analytical::{Calib, Features};
 use ssr::arch;
+use ssr::cluster::fleet::{parse_mix, synth_fleet};
+use ssr::cluster::router::FleetServer;
+use ssr::cluster::{simulate_fleet, FleetSpec, PlatformOption, RoutePolicy, TrafficMix};
 use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
 use ssr::coordinator::scheduler::{AdaptiveServer, RampSpec, SchedulerCfg};
 use ssr::coordinator::StageAssign;
@@ -51,10 +57,11 @@ fn main() {
         "dse" => cmd_dse(&rest),
         "simulate" => cmd_simulate(&rest),
         "serve" => cmd_serve(&rest),
+        "cluster" => cmd_cluster(&rest),
         "calibrate" => cmd_calibrate(&rest),
         _ => {
             eprintln!(
-                "usage: ssr <report|dse|simulate|serve|calibrate> [flags]\n\
+                "usage: ssr <report|dse|simulate|serve|cluster|calibrate> [flags]\n\
                  run `ssr <subcommand> --help` for flags"
             );
             if sub == "help" {
@@ -563,6 +570,231 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     println!("{}", report.summary_line());
+    0
+}
+
+// ---------------------------------------------------------------------------
+// `ssr cluster` — fleet provisioning / simulation / live serving.
+// ---------------------------------------------------------------------------
+
+fn cmd_cluster(args: &[String]) -> i32 {
+    let verb = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    match verb {
+        "provision" => cluster_provision(&rest),
+        "simulate" => cluster_simulate(&rest),
+        "serve" => cluster_serve(&rest),
+        _ => {
+            eprintln!(
+                "usage: ssr cluster <provision|simulate|serve> [flags]\n\
+                 run `ssr cluster <verb> --help` for flags"
+            );
+            if verb == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    }
+}
+
+/// Flags shared by the three cluster verbs (load shape + scheduler knobs).
+fn cluster_flags(cmd: Command) -> Command {
+    cmd.flag("model", Some("deit_t"), "model of the traffic (and of --synth fronts)")
+        .flag("slo-ms", Some("2.0"), "per-request latency SLO (ms)")
+        .flag("ramp", Some("4000:12000:4000"), "offered/forecast req/s per phase (a:b:c)")
+        .flag("phase-s", Some("0.5"), "seconds per ramp phase")
+        .flag("window-ms", Some("50"), "scheduler decision window (ms)")
+        .flag("patience", Some("2"), "hysteresis: windows before a switch commits")
+        .flag("load-seed", Some("7"), "base seed (split per class/device/router)")
+        .flag("policy", Some("p2c"), "routing policy: rr|jsq|p2c")
+        .flag("batches", Some("1,3,6"), "batch sizes for synthesized fronts")
+}
+
+/// `--fleet fleet.json` when given, else synthesize from `--synth`.
+fn load_fleet(m: &Matches) -> Result<FleetSpec, String> {
+    let path = m.str("fleet");
+    if !path.is_empty() {
+        FleetSpec::load(Path::new(&path))
+    } else {
+        let mix = parse_mix(&m.str("synth"))?;
+        synth_fleet("synthetic", &m.str("model"), &mix, &m.usize_list("batches"))
+    }
+}
+
+fn cluster_provision(args: &[String]) -> i32 {
+    let cmd = cluster_flags(Command::new(
+        "ssr cluster provision",
+        "size a platform mix + per-device plans for a traffic forecast",
+    ))
+    .flag("headroom", Some("0.8"), "target utilization devices are sized at")
+    .flag(
+        "platforms",
+        Some("vck190,stratix10nx,zcu102,u250"),
+        "candidate platforms (csv of arch names)",
+    )
+    .flag("out", Some(""), "write the provisioned FleetSpec JSON here");
+    let m = parse_or_exit(cmd, args);
+    let ramp = parse_ramp_or_exit(&m);
+    let batches = m.usize_list("batches");
+    let model = m.str("model");
+    let mut options = Vec::new();
+    for p in m.str("platforms").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match PlatformOption::synth(p, &model, &batches) {
+            Ok(o) => options.push(o),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
+    match ssr::cluster::provision("provisioned", &options, &ramp, m.f64("slo-ms"), m.f64("headroom"))
+    {
+        Ok(r) => {
+            print!("{}", r.describe());
+            print!("{}", r.fleet.describe());
+            let out = m.str("out");
+            if !out.is_empty() {
+                if let Err(e) = r.fleet.save(Path::new(&out)) {
+                    eprintln!("writing {out}: {e}");
+                    return 1;
+                }
+                println!("wrote {out}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("provisioning failed: {e}");
+            1
+        }
+    }
+}
+
+fn cluster_simulate(args: &[String]) -> i32 {
+    let cmd = cluster_flags(Command::new(
+        "ssr cluster simulate",
+        "deterministic discrete-event replay of fleet serving",
+    ))
+    .flag("fleet", Some(""), "FleetSpec JSON (from `ssr cluster provision --out`)")
+    .flag("synth", Some("vck190:2,u250:1"), "fleet to synthesize when --fleet is absent");
+    let m = parse_or_exit(cmd, args);
+    let fleet = match load_fleet(&m) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let policy = match RoutePolicy::parse(&m.str("policy")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ramp = parse_ramp_or_exit(&m);
+    let cfg = scheduler_cfg(&m);
+    let mix = TrafficMix::single(&m.str("model"), ramp);
+    print!("{}", fleet.describe());
+    println!(
+        "policy {}, slo {} ms, window {} ms, ramp {:?} req/s x {} s",
+        policy.name(),
+        cfg.slo_ms,
+        cfg.window_s * 1e3,
+        mix.classes[0].ramp.rates_rps,
+        mix.classes[0].ramp.phase_s
+    );
+    let r = match simulate_fleet(&fleet, &mix, &cfg, policy, m.usize("load-seed") as u64) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let mut t = ssr::bench::Table::new(&[
+        "device", "platform", "routed", "served", "shed", "p50 (ms)", "p99 (ms)",
+        "max queue", "switches",
+    ]);
+    for d in &r.devices {
+        t.row(&[
+            d.id.clone(),
+            d.platform.clone(),
+            d.routed.to_string(),
+            d.served.to_string(),
+            d.shed.to_string(),
+            format!("{:.3}", d.p50_ms),
+            format!("{:.3}", d.p99_ms),
+            d.max_queue_depth.to_string(),
+            d.switches.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", r.summary_line());
+    0
+}
+
+fn cluster_serve(args: &[String]) -> i32 {
+    let cmd = cluster_flags(Command::new(
+        "ssr cluster serve",
+        "live fleet serving on the PJRT runtime (one adaptive server per device)",
+    ))
+    .flag("artifacts", None, "artifacts dir (default ./artifacts)")
+    .flag("fleet", Some(""), "FleetSpec JSON (from `ssr cluster provision --out`)")
+    .flag("synth", Some("vck190:2"), "fleet to synthesize when --fleet is absent");
+    let m = parse_or_exit(cmd, args);
+    let fleet = match load_fleet(&m) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let policy = match RoutePolicy::parse(&m.str("policy")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ramp = parse_ramp_or_exit(&m);
+    let cfg = scheduler_cfg(&m);
+    let seed = m.usize("load-seed") as u64;
+    let dir = ssr::runtime::artifacts_dir(m.get("artifacts"));
+    let engine = Engine::load(&dir).expect("load artifacts (run `make artifacts`)");
+    print!("{}", fleet.describe());
+    let mut server = match FleetServer::new(engine, &fleet, cfg, policy, seed) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fleet server: {e}");
+            return 1;
+        }
+    };
+    let mix = TrafficMix::single(&m.str("model"), ramp);
+    let outcome = match server.serve_mix(&mix, seed) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("fleet serve: {e}");
+            return 1;
+        }
+    };
+    let (mut served, mut shed) = (0usize, 0usize);
+    for (id, rep) in &outcome.per_device {
+        println!(
+            "{id}: {} served, {} shed, {} plan switches over {} windows",
+            rep.total_images,
+            rep.total_shed,
+            rep.switches.len(),
+            rep.windows.len()
+        );
+        served += rep.total_images;
+        shed += rep.total_shed;
+    }
+    println!(
+        "fleet: {served} served, {shed} shed, {} unroutable ({} devices, policy {})",
+        outcome.unroutable,
+        outcome.per_device.len(),
+        policy.name()
+    );
     0
 }
 

@@ -151,7 +151,7 @@ impl PlanFront {
             .iter()
             .enumerate()
             .filter(|(_, e)| e.latency_ms <= slo_ms)
-            .max_by(|(_, a), (_, b)| a.rps.partial_cmp(&b.rps).unwrap())
+            .max_by(|(_, a), (_, b)| a.rps.total_cmp(&b.rps))
             .map(|(i, _)| i)
     }
 

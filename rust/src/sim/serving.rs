@@ -73,14 +73,15 @@ impl ServeSimReport {
     }
 
     pub fn summary_line(&self) -> String {
+        let pct = self.latency.percentiles(&[0.50, 0.99]);
         format!(
             "{} arrivals | {} served, {} shed | p50 {:.2} ms p99 {:.2} ms | SLO attainment \
              {:.1}% | {} plan switches | max queue {}",
             self.arrivals,
             self.served,
             self.shed,
-            self.p50_ms(),
-            self.p99_ms(),
+            pct[0] * 1e3,
+            pct[1] * 1e3,
             self.slo_attainment() * 100.0,
             self.switches.len(),
             self.max_queue_depth

@@ -52,19 +52,31 @@ impl Summary {
 
     /// Percentile via linear interpolation between closest ranks (`q` in 0..=1).
     pub fn percentile(&self, q: f64) -> f64 {
+        self.percentiles(&[q])[0]
+    }
+
+    /// All requested percentiles from a single sort. The serving loops ask
+    /// for p50+p99 per window/report; `percentile` clones and re-sorts the
+    /// sample vector on every call, which doubles the sort cost for every
+    /// such pair — batch the quantiles instead.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
-            return f64::NAN;
+            return vec![f64::NAN; qs.len()];
         }
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        if lo == hi {
-            v[lo]
-        } else {
-            v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
-        }
+        v.sort_by(f64::total_cmp);
+        qs.iter()
+            .map(|&q| {
+                let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                if lo == hi {
+                    v[lo]
+                } else {
+                    v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+                }
+            })
+            .collect()
     }
 
     /// Number of samples at or below `x` (SLO-attainment accounting).
@@ -128,6 +140,23 @@ mod tests {
         assert_eq!(s.mean(), 3.25);
         assert_eq!(s.p50(), 3.25);
         assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_calls() {
+        let mut s = Summary::new();
+        for x in [5.0, 1.0, 4.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        let batch = s.percentiles(&[0.0, 0.5, 0.99, 1.0]);
+        assert_eq!(batch, vec![
+            s.percentile(0.0),
+            s.percentile(0.5),
+            s.percentile(0.99),
+            s.percentile(1.0),
+        ]);
+        assert!(Summary::new().percentiles(&[0.5, 0.99]).iter().all(|x| x.is_nan()));
+        assert!(s.percentiles(&[]).is_empty());
     }
 
     #[test]

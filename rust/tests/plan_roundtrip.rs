@@ -17,6 +17,7 @@ use ssr::coordinator::StageAssign;
 use ssr::dse::eval::build_design;
 use ssr::dse::Assignment;
 use ssr::graph::{vit_graph, DEIT_T};
+use ssr::plan::front::{FrontEntry, PlanFront};
 use ssr::plan::{project_stage4, ExecutionPlan, Granularity};
 use ssr::runtime::exec::Engine;
 
@@ -104,6 +105,83 @@ fn hybrid5_plan_roundtrips_through_live_server_with_correct_logits() {
         assert_eq!(got.shape, vec![1, 1000]);
         close(&got.data, &want.data, 2e-3);
     }
+}
+
+// ---------------------------------------------------------------------------
+// PlanFront edge cases (serialization + selection boundaries): the front is
+// the DSE→serving interchange artifact, so its JSON and its SLO selection
+// must be exact at the extremes.
+// ---------------------------------------------------------------------------
+
+fn front_entry(label: &str, assign: Vec<usize>, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+    let nacc = assign.iter().copied().max().unwrap() + 1;
+    FrontEntry {
+        assign,
+        batch,
+        latency_ms: lat_ms,
+        tops: rps * 2.5e-3,
+        rps,
+        nacc,
+        label: label.to_string(),
+    }
+}
+
+#[test]
+fn front_save_load_survives_non_finite_adjacent_floats() {
+    // Denormal-scale latency, a magnitude just under f64::MAX, and a value
+    // needing all 17 significant digits (0.1 + 0.2): save/load must
+    // round-trip them bit-exactly (PartialEq on f64 fields).
+    let mut tiny = front_entry("tiny", vec![0; 8], 1, 4.9e-308, 1e-3);
+    tiny.tops = 0.1 + 0.2; // 0.30000000000000004
+    let mut big = front_entry("big", (0..8).collect(), 6, 0.1 + 0.2, 1e4);
+    big.tops = 8.5e307;
+    let f = PlanFront::new("deit_t", 12, vec![tiny, big]).unwrap();
+    assert_eq!(f.len(), 2, "tradeoff pair must both survive pruning");
+    let path = std::env::temp_dir().join("ssr_front_edge_roundtrip.json");
+    f.save(&path).unwrap();
+    let back = PlanFront::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back, f);
+}
+
+#[test]
+fn best_under_exact_boundary_slo_is_inclusive() {
+    let f = PlanFront::new(
+        "deit_t",
+        12,
+        vec![
+            front_entry("fast", vec![0; 8], 1, 0.25, 4000.0),
+            front_entry("big", (0..8).collect(), 6, 2.0, 10000.0),
+        ],
+    )
+    .unwrap();
+    // an SLO exactly equal to an entry's latency admits that entry
+    assert_eq!(f.best_under(2.0), Some(1));
+    assert_eq!(f.best_under(0.25), Some(0));
+    // one ulp-scale step below the boundary excludes it again
+    assert_eq!(f.best_under(2.0 - 1e-12), Some(0));
+    assert_eq!(f.best_under(0.25 - 1e-12), None);
+    assert_eq!(f.best_under(f64::NEG_INFINITY), None);
+}
+
+#[test]
+fn duplicate_metric_entries_dedup_with_provenance_intact() {
+    // Two distinct designs land on identical (latency, rate) metrics:
+    // pareto_indices dedups them to one survivor, and that survivor's
+    // genome/label/batch come through untouched (provenance, not a merge).
+    let a = front_entry("ea-0", vec![0, 1, 1, 1, 0, 2, 2, 0], 6, 1.0, 6000.0);
+    let b = front_entry("ea-1", vec![0, 1, 2, 2, 1, 3, 4, 0], 6, 1.0, 6000.0);
+    let tail = front_entry("spatial", (0..8).collect(), 6, 2.0, 12000.0);
+    let f = PlanFront::new("deit_t", 12, vec![a.clone(), b, tail]).unwrap();
+    assert_eq!(f.len(), 2, "duplicate-metric entry must dedup");
+    let kept = &f.entries[0];
+    assert_eq!(kept.label, "ea-0");
+    assert_eq!(kept.assign, a.assign);
+    assert_eq!(kept.batch, a.batch);
+    // the survivor still materializes its own executable plan
+    let plan = kept.plan("deit_t", 12);
+    assert_eq!(plan.nacc, 3);
+    plan.validate().unwrap();
 }
 
 #[test]
