@@ -13,7 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cluster::fleet::FleetSpec;
 use crate::coordinator::scheduler::{
-    AdaptiveServeReport, AdaptiveServer, RampSpec, SchedulerCfg, WindowReport,
+    AdaptiveServeReport, AdaptiveServer, SchedulerCfg, WindowReport,
 };
 use crate::runtime::exec::Engine;
 use crate::util::rng::Rng;
@@ -82,25 +82,41 @@ impl DeviceView {
 /// the same arrival sequence over the same views reproduces every pick.
 pub struct Router {
     pub policy: RoutePolicy,
-    rr_next: usize,
+    /// Round-robin cursor per traffic class. One global cursor indexed
+    /// into per-class eligible sets of different sizes skews the cycle
+    /// under a multi-model mix (e.g. classes with 2- and 3-device sets
+    /// interleaved 1:1 pin each class to a single device forever) — each
+    /// class cycles its own set independently instead.
+    rr_next: Vec<usize>,
     rng: Rng,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy, rng: Rng) -> Router {
-        Router { policy, rr_next: 0, rng }
+        Router { policy, rr_next: Vec::new(), rng }
     }
 
     /// Pick a device among `eligible` (indices into `views`, i.e. the
-    /// devices serving the request's model). `None` = unroutable.
-    pub fn pick(&mut self, views: &[DeviceView], eligible: &[usize], slo_ms: f64) -> Option<usize> {
+    /// devices serving the request's model) for a request of traffic
+    /// class `class`. `None` = unroutable.
+    pub fn pick(
+        &mut self,
+        views: &[DeviceView],
+        class: usize,
+        eligible: &[usize],
+        slo_ms: f64,
+    ) -> Option<usize> {
         match eligible.len() {
             0 => None,
             1 => Some(eligible[0]),
             n => Some(match self.policy {
                 RoutePolicy::RoundRobin => {
-                    let d = eligible[self.rr_next % n];
-                    self.rr_next = (self.rr_next + 1) % n;
+                    if class >= self.rr_next.len() {
+                        self.rr_next.resize(class + 1, 0);
+                    }
+                    let cursor = &mut self.rr_next[class];
+                    let d = eligible[*cursor % n];
+                    *cursor = (*cursor + 1) % n;
                     d
                 }
                 RoutePolicy::ShortestQueue => eligible
@@ -142,43 +158,11 @@ fn better_of(views: &[DeviceView], a: usize, b: usize, slo_ms: f64) -> usize {
 // Multi-model traffic
 // ---------------------------------------------------------------------------
 
-/// One model's offered load.
-#[derive(Clone, Debug)]
-pub struct TrafficClass {
-    pub model: String,
-    pub ramp: RampSpec,
-}
-
-/// A multi-model traffic mix: each class generates Poisson arrivals from
-/// its own ramp on an independent split RNG stream, so adding a class
-/// never perturbs another class's arrival times.
-#[derive(Clone, Debug)]
-pub struct TrafficMix {
-    pub classes: Vec<TrafficClass>,
-}
-
-impl TrafficMix {
-    pub fn single(model: &str, ramp: RampSpec) -> TrafficMix {
-        TrafficMix { classes: vec![TrafficClass { model: model.to_string(), ramp }] }
-    }
-
-    pub fn duration_s(&self) -> f64 {
-        self.classes.iter().map(|c| c.ramp.duration_s()).fold(0.0, f64::max)
-    }
-
-    /// Merged `(arrival time, class index)` timeline, sorted by time with
-    /// ties broken by class order — fully deterministic per seed.
-    pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
-        let base = Rng::new(seed);
-        let mut out = Vec::new();
-        for (ci, c) in self.classes.iter().enumerate() {
-            let class_seed = base.split(ci as u64).next_u64();
-            out.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
-        }
-        out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-        out
-    }
-}
+// The traffic generator lives beside `RampSpec` in the coordinator (the
+// single-device sim replays a single-class mix through the same shared
+// per-device core); re-exported here so fleet-facing code keeps importing
+// it from the cluster.
+pub use crate::coordinator::scheduler::{TrafficClass, TrafficMix};
 
 // ---------------------------------------------------------------------------
 // Live fleet serving (PJRT runtime)
@@ -284,7 +268,7 @@ impl FleetServer {
                         }
                     })
                     .collect();
-                match self.router.pick(&views, &eligible[class], self.cfg.slo_ms) {
+                match self.router.pick(&views, class, &eligible[class], self.cfg.slo_ms) {
                     Some(d) => buckets[d].push(t),
                     None => unroutable += 1,
                 }
@@ -318,6 +302,7 @@ impl FleetServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::scheduler::RampSpec;
 
     fn views(depths: &[usize]) -> Vec<DeviceView> {
         depths
@@ -331,18 +316,42 @@ mod tests {
         let mut r = Router::new(RoutePolicy::RoundRobin, Rng::new(1));
         let v = views(&[0, 0, 0, 0]);
         let picks: Vec<usize> =
-            (0..6).map(|_| r.pick(&v, &[1, 3], 2.0).unwrap()).collect();
+            (0..6).map(|_| r.pick(&v, 0, &[1, 3], 2.0).unwrap()).collect();
         assert_eq!(picks, vec![1, 3, 1, 3, 1, 3]);
-        assert_eq!(r.pick(&v, &[], 2.0), None);
-        assert_eq!(r.pick(&v, &[2], 2.0), Some(2));
+        assert_eq!(r.pick(&v, 0, &[], 2.0), None);
+        assert_eq!(r.pick(&v, 0, &[2], 2.0), Some(2));
+    }
+
+    #[test]
+    fn round_robin_cursor_is_per_class() {
+        // Regression: a single global cursor indexed into per-class
+        // eligible sets of different sizes skews the cycle. With class 0
+        // on {0,1} and class 1 on {2,3,4} interleaved 1:1, the old global
+        // cursor pinned class 0 to device 0 and class 1 to device 3
+        // forever (cursor 0 -> pick e[0], cursor 1 -> pick e[1], cursor
+        // wraps to 0/1 alternately for each set size) — starving devices
+        // 1, 2, and 4 within their classes. Per-class cursors keep every
+        // split exactly even.
+        let mut r = Router::new(RoutePolicy::RoundRobin, Rng::new(1));
+        let v = views(&[0, 0, 0, 0, 0]);
+        let mut hit = [0usize; 5];
+        for _ in 0..30 {
+            hit[r.pick(&v, 0, &[0, 1], 2.0).unwrap()] += 1;
+            hit[r.pick(&v, 1, &[2, 3, 4], 2.0).unwrap()] += 1;
+        }
+        assert_eq!(hit[0], 15, "class-0 split skewed: {hit:?}");
+        assert_eq!(hit[1], 15, "class-0 split skewed: {hit:?}");
+        assert_eq!(hit[2], 10, "class-1 split skewed: {hit:?}");
+        assert_eq!(hit[3], 10, "class-1 split skewed: {hit:?}");
+        assert_eq!(hit[4], 10, "class-1 split skewed: {hit:?}");
     }
 
     #[test]
     fn shortest_queue_picks_min_depth_ties_low_index() {
         let mut r = Router::new(RoutePolicy::ShortestQueue, Rng::new(1));
-        assert_eq!(r.pick(&views(&[5, 2, 9]), &[0, 1, 2], 2.0), Some(1));
-        assert_eq!(r.pick(&views(&[4, 4, 4]), &[0, 1, 2], 2.0), Some(0));
-        assert_eq!(r.pick(&views(&[4, 4, 0]), &[0, 1], 2.0), Some(0));
+        assert_eq!(r.pick(&views(&[5, 2, 9]), 0, &[0, 1, 2], 2.0), Some(1));
+        assert_eq!(r.pick(&views(&[4, 4, 4]), 0, &[0, 1, 2], 2.0), Some(0));
+        assert_eq!(r.pick(&views(&[4, 4, 0]), 0, &[0, 1], 2.0), Some(0));
     }
 
     #[test]
@@ -356,9 +365,9 @@ mod tests {
         let mut a = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(42).split(0));
         let mut b = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(42).split(0));
         for _ in 0..100 {
-            let pa = a.pick(&v, &[0, 1], 5.0).unwrap();
+            let pa = a.pick(&v, 0, &[0, 1], 5.0).unwrap();
             assert_eq!(pa, 1, "p2c routed into the SLO-violating queue");
-            assert_eq!(pa, b.pick(&v, &[0, 1], 5.0).unwrap());
+            assert_eq!(pa, b.pick(&v, 0, &[0, 1], 5.0).unwrap());
         }
     }
 
@@ -371,7 +380,7 @@ mod tests {
         let mut r = Router::new(RoutePolicy::PowerOfTwoSlo, Rng::new(7));
         let mut hit = [0usize; 4];
         for _ in 0..600 {
-            hit[r.pick(&v, &[0, 1, 2, 3], 1000.0).unwrap()] += 1;
+            hit[r.pick(&v, 0, &[0, 1, 2, 3], 1000.0).unwrap()] += 1;
         }
         assert_eq!(hit[0], 0, "deepest device still picked: {hit:?}");
         assert!(hit[1] > hit[3] && hit[3] > hit[2], "not load-ordered: {hit:?}");

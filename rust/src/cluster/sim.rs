@@ -1,73 +1,30 @@
 //! Deterministic discrete-event replay of a whole fleet — the N-device
-//! extension of [`crate::sim::serving::serve_ramp`].
+//! face of the shared per-device core in [`crate::sim::device`].
 //!
-//! Every device runs the *same* per-device machinery as the single-device
-//! sim (its own [`AdaptiveScheduler`] with hysteresis + admission control,
-//! its own queue, exact drain-and-swap at launch completion); the router
-//! sits in front, dispatching each arrival of the multi-model mix against
-//! the devices' observable state. Event order is deterministic — on time
-//! ties: completion (lowest device index first), then the window tick,
-//! then the arrival — so a seed fully determines every tally, fleet-wide
-//! and per device. The only ways a request is not served are explicit:
-//! per-device admission shedding, or no device serving its model at all
-//! (`unroutable`). `served + shed == arrivals` holds per device and
-//! fleet-wide, pinned by `tests/cluster_serving.rs`.
-
-use std::collections::VecDeque;
+//! Every device is a [`DeviceSim`] — the *same* struct (and therefore the
+//! same [`AdaptiveScheduler`] wiring, queue, exact drain-and-swap at
+//! launch completion, admission control, and per-window [`WindowStat`]
+//! recording) that the single-device [`crate::sim::serving::serve_ramp`]
+//! drives; the router sits in front, dispatching each arrival of the
+//! multi-model mix against the devices' observable state. The event loop
+//! and its deterministic tie order — on time ties: completion (lowest
+//! device index first), then the window tick, then the arrival — live in
+//! [`run_timeline`], shared with the single-device sim, so a seed fully
+//! determines every tally, fleet-wide and per device, and the two sims
+//! cannot diverge (`rust/tests/sim_unification.rs` pins `serve_ramp`
+//! bit-identical to a 1-device fleet). The only ways a request is not
+//! served are explicit: per-device admission shedding, or no device
+//! serving its model at all (`unroutable`). `served + shed == arrivals`
+//! holds per device and fleet-wide, pinned by `tests/cluster_serving.rs`.
+//!
+//! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
 use crate::cluster::fleet::FleetSpec;
 use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
-use crate::coordinator::scheduler::{
-    AdaptiveScheduler, LoadEstimator, SchedulerCfg, SwitchRecord,
-};
+use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
+use crate::sim::device::{run_timeline, DeviceSim, WindowStat};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-
-/// One in-flight launch: the arrival times it serves and its completion.
-struct Launch {
-    done_s: f64,
-    arrivals: Vec<f64>,
-}
-
-/// Per-device simulation state.
-struct Dev {
-    sched: AdaptiveScheduler,
-    est: LoadEstimator,
-    queue: VecDeque<f64>,
-    in_flight: Option<Launch>,
-    /// Plan executing the current launch (lags `sched.active()` while a
-    /// committed switch drains).
-    serving: usize,
-    pending_switch: Option<usize>,
-    routed: usize,
-    served: usize,
-    shed: usize,
-    latency: Summary,
-    max_queue_depth: usize,
-}
-
-impl Dev {
-    /// Requests queued or in flight — the router-visible depth.
-    fn depth(&self) -> usize {
-        self.queue.len() + self.in_flight.as_ref().map_or(0, |l| l.arrivals.len())
-    }
-
-    fn view(&self) -> DeviceView {
-        let e = &self.sched.front.entries[self.serving];
-        DeviceView { depth: self.depth(), latency_ms: e.latency_ms, rps: e.rps }
-    }
-
-    /// Start the next launch from the queue if the device is idle.
-    fn start_launch(&mut self, t: f64) {
-        if self.queue.is_empty() || self.in_flight.is_some() {
-            return;
-        }
-        let e = &self.sched.front.entries[self.serving];
-        let take = e.batch.min(self.queue.len());
-        let batch: Vec<f64> = self.queue.drain(..take).collect();
-        self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
-    }
-}
 
 /// Per-device outcome of a fleet simulation.
 #[derive(Clone, Debug)]
@@ -82,7 +39,13 @@ pub struct DeviceStat {
     pub p99_ms: f64,
     pub max_queue_depth: usize,
     pub switches: Vec<SwitchRecord>,
-    pub final_active: usize,
+    /// Per-window snapshots — same shape the single-device sim reports.
+    pub windows: Vec<WindowStat>,
+    /// Plan executing when the run ended.
+    pub final_committed: usize,
+    /// Switch target still draining at the end (`None` after a clean
+    /// drain; the event loop always completes in-flight launches).
+    pub final_draining: Option<usize>,
 }
 
 /// Outcome of a simulated fleet run.
@@ -144,7 +107,10 @@ impl FleetSimReport {
 /// Simulate serving `mix` on `fleet` with per-device adaptive scheduling
 /// under `cfg` and the given routing policy. Fully deterministic for a
 /// given seed: per-class arrival streams and the router's sampling stream
-/// are all [`Rng::split`] off the one base seed.
+/// are all [`Rng::split`] off the one base seed. All queueing semantics
+/// live in the shared per-device core ([`crate::sim::device`]); this
+/// function only assembles devices, routes arrivals, and rolls up the
+/// report.
 pub fn simulate_fleet(
     fleet: &FleetSpec,
     mix: &TrafficMix,
@@ -177,145 +143,63 @@ pub fn simulate_fleet(
         })
         .collect();
 
-    let mut devs: Vec<Dev> = fleet
-        .devices
-        .iter()
-        .map(|d| {
-            let sched = AdaptiveScheduler::new(d.front.clone(), *cfg);
-            let serving = sched.active();
-            Dev {
-                sched,
-                est: LoadEstimator::new(cfg.horizon_s()),
-                queue: VecDeque::new(),
-                in_flight: None,
-                serving,
-                pending_switch: None,
-                routed: 0,
-                served: 0,
-                shed: 0,
-                latency: Summary::new(),
-                max_queue_depth: 0,
-            }
-        })
-        .collect();
+    let mut devs: Vec<DeviceSim> =
+        fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
 
-    // round(): same float-truncation guard as the single-device sim.
-    let n_windows = (mix.duration_s() / cfg.window_s).round() as usize;
-    let slo_s = cfg.slo_ms * 1e-3;
+    let outcome = run_timeline(
+        &mut devs,
+        &arrivals,
+        mix.duration_s(),
+        cfg.window_s,
+        |devs, class, _t| {
+            // The router sees only observable state: each device's standing
+            // depth and the service curve of the plan it is *executing*.
+            let views: Vec<DeviceView> = devs
+                .iter()
+                .map(|d| {
+                    let e = d.committed_entry();
+                    DeviceView { depth: d.depth(), latency_ms: e.latency_ms, rps: e.rps }
+                })
+                .collect();
+            router.pick(&views, class, &eligible[class], cfg.slo_ms)
+        },
+    );
 
-    let mut fleet_latency = Summary::new();
-    let mut unroutable = 0usize;
-    let mut makespan_s = 0.0f64;
-    let mut ai = 0usize; // next arrival index
-    let mut w = 0usize; // next window index
-
-    loop {
-        let t_arr = arrivals.get(ai).map(|&(t, _)| t).unwrap_or(f64::INFINITY);
-        // Earliest completion across devices (tie: lowest device index).
-        let mut t_done = f64::INFINITY;
-        let mut done_dev = 0usize;
-        for (i, d) in devs.iter().enumerate() {
-            if let Some(l) = &d.in_flight {
-                if l.done_s < t_done {
-                    t_done = l.done_s;
-                    done_dev = i;
-                }
-            }
-        }
-        let t_win = if w < n_windows { (w + 1) as f64 * cfg.window_s } else { f64::INFINITY };
-        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
-            break;
-        }
-
-        // Same deterministic tie order as the single-device sim:
-        // completion, then window tick, then arrival.
-        if t_done <= t_win && t_done <= t_arr {
-            // -- launch completion (and switch drain point) --------------
-            let d = &mut devs[done_dev];
-            let launch = d.in_flight.take().unwrap();
-            for &a in &launch.arrivals {
-                let sojourn = launch.done_s - a;
-                d.latency.push(sojourn);
-                fleet_latency.push(sojourn);
-                d.est.record_completion(launch.done_s, sojourn);
-                d.served += 1;
-            }
-            makespan_s = makespan_s.max(launch.done_s);
-            if let Some(to) = d.pending_switch.take() {
-                d.serving = to; // drain complete: swap now
-            }
-            d.start_launch(launch.done_s);
-        } else if t_win <= t_arr {
-            // -- decision window boundary (all devices) ------------------
-            for d in devs.iter_mut() {
-                let queue_depth = d.queue.len();
-                let snapshot = d.est.estimate(t_win, queue_depth);
-                if d.pending_switch.is_none() {
-                    if let Some(to) = d.sched.on_window(w, t_win, &snapshot) {
-                        if d.in_flight.is_some() {
-                            d.pending_switch = Some(to); // drain-and-swap
-                        } else {
-                            d.serving = to;
-                        }
-                    }
-                }
-            }
-            w += 1;
-        } else {
-            // -- arrival: route, then per-device admission ---------------
-            let (t, class) = arrivals[ai];
-            let views: Vec<DeviceView> = devs.iter().map(Dev::view).collect();
-            match router.pick(&views, &eligible[class], cfg.slo_ms) {
-                None => unroutable += 1,
-                Some(di) => {
-                    let d = &mut devs[di];
-                    d.routed += 1;
-                    d.est.record_arrival(t);
-                    if d.sched.admit(d.queue.len()) {
-                        d.queue.push_back(t);
-                        d.max_queue_depth = d.max_queue_depth.max(d.queue.len());
-                        d.start_launch(t);
-                    } else {
-                        d.shed += 1;
-                    }
-                }
-            }
-            ai += 1;
-        }
-    }
-
-    let served: usize = devs.iter().map(|d| d.served).sum();
-    let dev_shed: usize = devs.iter().map(|d| d.shed).sum();
-    let slo_violations = served - fleet_latency.count_leq(slo_s);
     let devices: Vec<DeviceStat> = fleet
         .devices
         .iter()
         .zip(devs)
         .map(|(spec, d)| {
-            let p = d.latency.percentiles(&[0.50, 0.99]);
+            let r = d.into_report();
+            let p = r.latency.percentiles(&[0.50, 0.99]);
             DeviceStat {
                 id: spec.id.clone(),
                 platform: spec.platform.clone(),
-                routed: d.routed,
-                served: d.served,
-                shed: d.shed,
+                routed: r.routed,
+                served: r.served,
+                shed: r.shed,
                 p50_ms: p[0] * 1e3,
                 p99_ms: p[1] * 1e3,
-                max_queue_depth: d.max_queue_depth,
-                switches: d.sched.switches.clone(),
-                final_active: d.sched.active(),
+                max_queue_depth: r.max_queue_depth,
+                switches: r.switches,
+                windows: r.windows,
+                final_committed: r.final_committed,
+                final_draining: r.final_draining,
             }
         })
         .collect();
+    let served: usize = devices.iter().map(|d| d.served).sum();
+    let dev_shed: usize = devices.iter().map(|d| d.shed).sum();
+    let slo_violations = served - outcome.latency.count_leq(cfg.slo_ms * 1e-3);
 
     Ok(FleetSimReport {
         arrivals: arrivals.len(),
         served,
-        shed: dev_shed + unroutable,
-        unroutable,
-        latency: fleet_latency,
+        shed: dev_shed + outcome.unroutable,
+        unroutable: outcome.unroutable,
+        latency: outcome.latency,
         slo_violations,
-        makespan_s,
+        makespan_s: outcome.makespan_s,
         devices,
     })
 }
@@ -406,12 +290,30 @@ mod tests {
             assert_eq!(da.served, db.served);
             assert_eq!(da.shed, db.shed);
             assert_eq!(da.switches, db.switches);
+            assert_eq!(da.windows, db.windows);
         }
         let c = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 6).unwrap();
         assert_ne!(
             a.devices.iter().map(|d| d.routed).collect::<Vec<_>>(),
             c.devices.iter().map(|d| d.routed).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn every_device_records_every_window() {
+        // Divergence fixed by the unification: the fleet sim used to
+        // record no per-window stats at all. Now each device reports the
+        // same WindowStat trace shape as the single-device sim.
+        let mix = TrafficMix::single("m", RampSpec::parse("2000:6000", 0.25).unwrap());
+        let r = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::RoundRobin, 9).unwrap();
+        let n_windows = (0.5 / cfg().window_s).round() as usize;
+        for d in &r.devices {
+            assert_eq!(d.windows.len(), n_windows, "device {} missing windows", d.id);
+            for (i, ws) in d.windows.iter().enumerate() {
+                assert_eq!(ws.window, i);
+            }
+            assert_eq!(d.final_draining, None, "launches must drain before the run ends");
+        }
     }
 
     #[test]

@@ -36,7 +36,9 @@ pub mod scheduler;
 pub use batcher::{BatchPolicy, BatchingServer};
 pub use metrics::ServeReport;
 pub use pipeline::{PipelineServer, SequentialServer};
-pub use scheduler::{AdaptiveScheduler, AdaptiveServer, RampSpec, SchedulerCfg};
+pub use scheduler::{
+    AdaptiveScheduler, AdaptiveServer, RampSpec, SchedulerCfg, TrafficClass, TrafficMix,
+};
 
 use crate::dse::Assignment;
 use crate::plan::{expand_stage4, project_stage4, CoarsenReport, ExecutionPlan};

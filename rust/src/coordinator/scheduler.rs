@@ -114,6 +114,46 @@ impl RampSpec {
     }
 }
 
+/// One model's offered load.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    pub model: String,
+    pub ramp: RampSpec,
+}
+
+/// A multi-model traffic mix: each class generates Poisson arrivals from
+/// its own ramp on an independent split RNG stream, so adding a class
+/// never perturbs another class's arrival times. The single-device sim
+/// serves a single-class mix; the cluster router dispatches the general
+/// case — both replay the same merged timeline format.
+#[derive(Clone, Debug)]
+pub struct TrafficMix {
+    pub classes: Vec<TrafficClass>,
+}
+
+impl TrafficMix {
+    pub fn single(model: &str, ramp: RampSpec) -> TrafficMix {
+        TrafficMix { classes: vec![TrafficClass { model: model.to_string(), ramp }] }
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.classes.iter().map(|c| c.ramp.duration_s()).fold(0.0, f64::max)
+    }
+
+    /// Merged `(arrival time, class index)` timeline, sorted by time with
+    /// ties broken by class order — fully deterministic per seed.
+    pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
+        let base = Rng::new(seed);
+        let mut out = Vec::new();
+        for (ci, c) in self.classes.iter().enumerate() {
+            let class_seed = base.split(ci as u64).next_u64();
+            out.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
+        }
+        out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        out
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Policy configuration
 // ---------------------------------------------------------------------------

@@ -308,18 +308,25 @@ fn emit_front(
 }
 
 /// Print a simulated adaptive run: per-window trace, switches, summary.
+/// "committed plan" is the plan actually executing at the window boundary;
+/// while a switch drains the target shows up as `-> [i]` until the
+/// in-flight launch completes.
 fn print_sim_report(front: &PlanFront, r: &ssr::sim::serving::ServeSimReport) {
     let mut t = ssr::bench::Table::new(&[
-        "window", "t (s)", "rate (req/s)", "queue", "p99 (ms)", "active plan",
+        "window", "t (s)", "rate (req/s)", "queue", "p99 (ms)", "committed plan",
     ]);
     for ws in &r.windows {
+        let draining = match ws.draining {
+            Some(d) => format!(" -> [{d}] draining"),
+            None => String::new(),
+        };
         t.row(&[
             ws.window.to_string(),
             format!("{:.2}", ws.end_s),
             format!("{:.0}", ws.rate_rps),
             ws.queue_depth.to_string(),
             format!("{:.2}", ws.p99_s * 1e3),
-            format!("[{}] {}", ws.active, front.entries[ws.active].label),
+            format!("[{}] {}{draining}", ws.committed, front.entries[ws.committed].label),
         ]);
     }
     println!("{}", t.render());
@@ -713,9 +720,16 @@ fn cluster_simulate(args: &[String]) -> i32 {
     };
     let mut t = ssr::bench::Table::new(&[
         "device", "platform", "routed", "served", "shed", "p50 (ms)", "p99 (ms)",
-        "max queue", "switches",
+        "max queue", "switches", "final plan",
     ]);
     for d in &r.devices {
+        // committed = plan executing at end of run; a still-draining
+        // switch target would show as `-> [i]` (cannot survive a clean
+        // drain, but the report distinguishes the two notions).
+        let final_plan = match d.final_draining {
+            Some(to) => format!("[{}] -> [{to}] draining", d.final_committed),
+            None => format!("[{}]", d.final_committed),
+        };
         t.row(&[
             d.id.clone(),
             d.platform.clone(),
@@ -726,6 +740,7 @@ fn cluster_simulate(args: &[String]) -> i32 {
             format!("{:.3}", d.p99_ms),
             d.max_queue_depth.to_string(),
             d.switches.len().to_string(),
+            final_plan,
         ]);
     }
     println!("{}", t.render());

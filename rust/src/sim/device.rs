@@ -1,0 +1,435 @@
+//! The one queueing truth: the per-device discrete-event serving core.
+//!
+//! Both deterministic serving replays — the single-device
+//! [`crate::sim::serving::serve_ramp`] and the fleet-level
+//! [`crate::cluster::sim::simulate_fleet`] — used to carry hand-duplicated
+//! copies of the same ~80 lines of launch/drain-and-swap/admission
+//! machinery, so any semantic drift between them was a silent correctness
+//! bug in every off-hardware latency-throughput claim. This module is the
+//! merge: one [`DeviceSim`] holds a device's queue, in-flight launch,
+//! [`LoadEstimator`] + [`AdaptiveScheduler`] wiring, admission control,
+//! per-window [`WindowStat`] snapshots, and tallies; one [`run_timeline`]
+//! event loop owns the tie order. The two public sims are thin adapters
+//! over these and can no longer fork.
+//!
+//! ## The contract
+//!
+//! * **Event tie order** (deterministic): launch **completion** (lowest
+//!   device index first on exact time ties), then the decision **window**
+//!   tick, then the **arrival**.
+//! * **Drain-and-swap**: a switch committed by the scheduler while a
+//!   launch is in flight becomes `draining` and is applied to `committed`
+//!   at that launch's completion; queued requests carry over to the new
+//!   plan and are never dropped. With no launch in flight the switch
+//!   applies immediately.
+//! * **Admission before queueing**: every routed arrival is recorded with
+//!   the estimator (shed ones included — the estimator sees offered load),
+//!   then either queued or explicitly shed. `served + shed == routed` per
+//!   device, always.
+//! * **Admission is judged against the scheduler's active plan** (the
+//!   switch target while draining), not the plan still executing — the
+//!   queue being admitted will drain on the new plan.
+//!
+//! ## Divergences the unification fixed
+//!
+//! Extracting the core surfaced (and removed) two reporting divergences
+//! between the forked copies:
+//!
+//! 1. the single-device sim recorded per-window [`WindowStat`]s while the
+//!    fleet sim recorded none — now every device records them;
+//! 2. the per-window "active" plan was the lagging executing index while
+//!    the end-of-run `active_final`/`final_active` was the scheduler's
+//!    committed choice — two different notions of "current plan" mid-drain
+//!    under one name. Both reports now expose `{committed, draining}`
+//!    explicitly, per window and at end of run.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::scheduler::{
+    AdaptiveScheduler, LoadEstimator, SchedulerCfg, SwitchRecord,
+};
+use crate::plan::front::{FrontEntry, PlanFront};
+use crate::util::stats::Summary;
+
+/// Per-window snapshot of one device's simulated state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStat {
+    pub window: usize,
+    pub end_s: f64,
+    /// Estimated arrival rate at the window boundary (req/s).
+    pub rate_rps: f64,
+    pub queue_depth: usize,
+    /// p99 completion latency over the estimator horizon (seconds).
+    pub p99_s: f64,
+    /// Plan executing at the window boundary (lags the scheduler's choice
+    /// while a committed switch drains).
+    pub committed: usize,
+    /// Switch target still draining at the boundary, when one is pending.
+    pub draining: Option<usize>,
+}
+
+/// One in-flight launch: the arrival times it serves and its completion.
+struct Launch {
+    done_s: f64,
+    arrivals: Vec<f64>,
+}
+
+/// Outcome of one launch completion, for fleet-level rollups.
+pub struct Completed {
+    /// Completion time (the launch's `done_s`).
+    pub done_s: f64,
+    /// Per-request sojourn times of the requests this launch served.
+    pub sojourns: Vec<f64>,
+}
+
+/// End-of-run tally of one device — the single source both public report
+/// shapes ([`crate::sim::serving::ServeSimReport`] and
+/// [`crate::cluster::sim::DeviceStat`]) are assembled from.
+#[derive(Clone, Debug)]
+pub struct DeviceSimReport {
+    /// Requests routed to this device (`served + shed`).
+    pub routed: usize,
+    pub served: usize,
+    pub shed: usize,
+    /// Per-request sojourn time (queue wait + service), served requests.
+    pub latency: Summary,
+    pub max_queue_depth: usize,
+    pub switches: Vec<SwitchRecord>,
+    pub windows: Vec<WindowStat>,
+    /// Plan executing when the run ended.
+    pub final_committed: usize,
+    /// Switch target still draining when the run ended (`None` after a
+    /// clean drain: the event loop always completes in-flight launches).
+    pub final_draining: Option<usize>,
+}
+
+/// One device's complete simulation state: queue, in-flight launch, the
+/// exact drain-and-swap point, scheduler + estimator wiring, admission,
+/// window snapshots, and tallies. Drive it only through [`run_timeline`]
+/// (or mirror its tie order exactly).
+pub struct DeviceSim {
+    sched: AdaptiveScheduler,
+    est: LoadEstimator,
+    queue: VecDeque<f64>,
+    in_flight: Option<Launch>,
+    /// Plan executing the current launch — lags `sched.active()` while a
+    /// committed switch drains.
+    committed: usize,
+    /// Committed switch target waiting for the in-flight launch to drain.
+    draining: Option<usize>,
+    routed: usize,
+    served: usize,
+    shed: usize,
+    latency: Summary,
+    max_queue_depth: usize,
+    windows: Vec<WindowStat>,
+}
+
+impl DeviceSim {
+    pub fn new(front: PlanFront, cfg: SchedulerCfg) -> DeviceSim {
+        let sched = AdaptiveScheduler::new(front, cfg);
+        let committed = sched.active();
+        DeviceSim {
+            est: LoadEstimator::new(cfg.horizon_s()),
+            sched,
+            queue: VecDeque::new(),
+            in_flight: None,
+            committed,
+            draining: None,
+            routed: 0,
+            served: 0,
+            shed: 0,
+            latency: Summary::new(),
+            max_queue_depth: 0,
+            windows: Vec::new(),
+        }
+    }
+
+    /// Front entry of the plan currently *executing* (the router-visible
+    /// service curve; lags the scheduler's choice while a switch drains).
+    pub fn committed_entry(&self) -> &FrontEntry {
+        &self.sched.front.entries[self.committed]
+    }
+
+    /// Requests queued or in flight — the router-visible depth.
+    pub fn depth(&self) -> usize {
+        self.queue.len() + self.in_flight.as_ref().map_or(0, |l| l.arrivals.len())
+    }
+
+    /// Completion time of the in-flight launch (`INFINITY` when idle).
+    pub fn next_completion_s(&self) -> f64 {
+        self.in_flight.as_ref().map_or(f64::INFINITY, |l| l.done_s)
+    }
+
+    /// Start the next launch from the queue if the device is idle: take up
+    /// to `batch` queued requests onto the committed plan.
+    fn start_launch(&mut self, t: f64) {
+        if self.queue.is_empty() || self.in_flight.is_some() {
+            return;
+        }
+        let e = &self.sched.front.entries[self.committed];
+        let take = e.batch.min(self.queue.len());
+        let batch: Vec<f64> = self.queue.drain(..take).collect();
+        self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
+    }
+
+    /// Handle the in-flight launch's completion — the drain point: tally
+    /// each request's sojourn, apply a draining switch, start the next
+    /// launch on the (possibly new) committed plan.
+    pub fn on_completion(&mut self) -> Completed {
+        let launch = self.in_flight.take().expect("on_completion with no launch in flight");
+        let done_s = launch.done_s;
+        let mut sojourns = launch.arrivals;
+        for a in sojourns.iter_mut() {
+            let sojourn = done_s - *a;
+            self.latency.push(sojourn);
+            self.est.record_completion(done_s, sojourn);
+            self.served += 1;
+            *a = sojourn;
+        }
+        if let Some(to) = self.draining.take() {
+            self.committed = to; // drain complete: swap now
+        }
+        self.start_launch(done_s);
+        Completed { done_s, sojourns }
+    }
+
+    /// Run one decision window: estimate the load, let the scheduler
+    /// decide (drain-and-swap when a launch is in flight, immediate swap
+    /// when idle), and record the [`WindowStat`].
+    pub fn on_window(&mut self, window: usize, end_s: f64) {
+        let snapshot = self.est.estimate(end_s, self.queue.len());
+        if self.draining.is_none() {
+            if let Some(to) = self.sched.on_window(window, end_s, &snapshot) {
+                if self.in_flight.is_some() {
+                    self.draining = Some(to); // drain-and-swap
+                } else {
+                    self.committed = to;
+                }
+            }
+        }
+        self.windows.push(WindowStat {
+            window,
+            end_s,
+            rate_rps: snapshot.rate_rps,
+            queue_depth: snapshot.queue_depth,
+            p99_s: snapshot.p99_s,
+            committed: self.committed,
+            draining: self.draining,
+        });
+    }
+
+    /// Handle one routed arrival: record it with the estimator (offered
+    /// load includes what admission sheds), then admit into the queue or
+    /// shed explicitly. Returns whether the request was admitted.
+    pub fn on_arrival(&mut self, t: f64) -> bool {
+        self.routed += 1;
+        self.est.record_arrival(t);
+        if self.sched.admit(self.queue.len()) {
+            self.queue.push_back(t);
+            self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+            self.start_launch(t);
+            true
+        } else {
+            self.shed += 1;
+            false
+        }
+    }
+
+    /// Consume the device into its end-of-run tally.
+    pub fn into_report(self) -> DeviceSimReport {
+        DeviceSimReport {
+            routed: self.routed,
+            served: self.served,
+            shed: self.shed,
+            latency: self.latency,
+            max_queue_depth: self.max_queue_depth,
+            switches: self.sched.switches,
+            windows: self.windows,
+            final_committed: self.committed,
+            final_draining: self.draining,
+        }
+    }
+}
+
+/// Fleet-level rollup of one [`run_timeline`] run.
+pub struct TimelineOutcome {
+    /// Sojourn times across every device, in completion order.
+    pub latency: Summary,
+    /// Arrivals the `route` callback declined (no eligible device).
+    pub unroutable: usize,
+    /// Completion time of the last served request (0 when nothing served).
+    pub makespan_s: f64,
+    /// Decision windows ticked (`round(duration_s / window_s)` — rounded,
+    /// not truncated, so a `3 * 0.6 / 0.05 = 35.999…` ramp keeps its
+    /// final window).
+    pub n_windows: usize,
+}
+
+/// The shared discrete-event loop: replay a merged `(arrival time, class)`
+/// timeline against `devs`, dispatching each arrival through `route`
+/// (`route(devs, class, t)` returns the device index, or `None` for an
+/// unroutable class). Every tie-order decision lives here and only here:
+/// completion (lowest device index first), then window tick, then arrival.
+pub fn run_timeline(
+    devs: &mut [DeviceSim],
+    timeline: &[(f64, usize)],
+    duration_s: f64,
+    window_s: f64,
+    mut route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+) -> TimelineOutcome {
+    let n_windows = (duration_s / window_s).round() as usize;
+    let mut latency = Summary::new();
+    let mut unroutable = 0usize;
+    let mut makespan_s = 0.0f64;
+    let mut ai = 0usize; // next arrival index
+    let mut w = 0usize; // next window index
+
+    loop {
+        let t_arr = timeline.get(ai).map(|&(t, _)| t).unwrap_or(f64::INFINITY);
+        // Earliest completion across devices (tie: lowest device index).
+        let mut t_done = f64::INFINITY;
+        let mut done_dev = 0usize;
+        for (i, d) in devs.iter().enumerate() {
+            let td = d.next_completion_s();
+            if td < t_done {
+                t_done = td;
+                done_dev = i;
+            }
+        }
+        let t_win = if w < n_windows { (w + 1) as f64 * window_s } else { f64::INFINITY };
+        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
+            break;
+        }
+
+        if t_done <= t_win && t_done <= t_arr {
+            // -- launch completion (and switch drain point) --------------
+            let done = devs[done_dev].on_completion();
+            for &s in &done.sojourns {
+                latency.push(s);
+            }
+            makespan_s = makespan_s.max(done.done_s);
+        } else if t_win <= t_arr {
+            // -- decision window boundary (all devices) ------------------
+            for d in devs.iter_mut() {
+                d.on_window(w, t_win);
+            }
+            w += 1;
+        } else {
+            // -- arrival: route, then per-device admission ---------------
+            let (t, class) = timeline[ai];
+            match route(devs, class, t) {
+                None => unroutable += 1,
+                Some(di) => {
+                    devs[di].on_arrival(t);
+                }
+            }
+            ai += 1;
+        }
+    }
+
+    TimelineOutcome { latency, unroutable, makespan_s, n_windows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::front::FrontEntry;
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    fn front() -> PlanFront {
+        PlanFront::new(
+            "m",
+            12,
+            vec![entry("seq", 1, 0.2, 5000.0), entry("spatial", 24, 2.0, 12000.0)],
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> SchedulerCfg {
+        SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+    }
+
+    #[test]
+    fn launch_batches_and_completes_in_fifo_order() {
+        let mut d = DeviceSim::new(front(), cfg());
+        assert_eq!(d.next_completion_s(), f64::INFINITY);
+        assert!(d.on_arrival(0.0)); // starts a batch-1 launch immediately
+        assert!(d.on_arrival(0.00005));
+        assert_eq!(d.depth(), 2);
+        let done = d.on_completion();
+        assert_eq!(done.sojourns.len(), 1);
+        assert!((done.done_s - 0.2e-3).abs() < 1e-12);
+        // the queued request started its own launch at the completion
+        assert_eq!(d.depth(), 1);
+        let r = {
+            d.on_completion();
+            d.into_report()
+        };
+        assert_eq!(r.served, 2);
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.routed, 2);
+        assert_eq!(r.final_draining, None);
+    }
+
+    #[test]
+    fn drain_and_swap_applies_at_completion_not_at_the_window() {
+        // Force a switch decision while a launch is in flight: the window
+        // must record {committed: old, draining: Some(new)} and the swap
+        // must land exactly at the completion.
+        let mut d = DeviceSim::new(front(), cfg());
+        // saturate the estimator with arrivals so the scheduler wants the
+        // throughput point (demand >> seq capacity)
+        for i in 0..600 {
+            d.on_arrival(i as f64 * 1e-4); // 10k req/s offered
+        }
+        let c = cfg();
+        // patience windows of sustained overload commit the switch
+        let mut committed_window = None;
+        for w in 0..4 {
+            d.on_window(w, (w + 1) as f64 * c.window_s);
+            let ws = *d.windows.last().unwrap();
+            if ws.draining.is_some() {
+                committed_window = Some(w);
+                break;
+            }
+        }
+        let ws = *d.windows.last().unwrap();
+        assert!(
+            committed_window.is_some(),
+            "sustained overload never committed a switch: {:?}",
+            d.windows
+        );
+        assert_eq!(ws.committed, 0, "swap applied before the drain completed");
+        assert_eq!(ws.draining, Some(1));
+        d.on_completion();
+        assert_eq!(d.committed, 1, "drain completion must apply the pending switch");
+        assert_eq!(d.draining, None);
+    }
+
+    #[test]
+    fn run_timeline_counts_unroutable_and_windows() {
+        let mut devs = vec![DeviceSim::new(front(), cfg())];
+        let timeline = vec![(0.01, 0), (0.02, 1), (0.03, 0)];
+        let out = run_timeline(&mut devs, &timeline, 0.5, 0.05, |_, class, _| {
+            (class == 0).then_some(0)
+        });
+        assert_eq!(out.unroutable, 1);
+        assert_eq!(out.n_windows, 10);
+        let r = devs.pop().unwrap().into_report();
+        assert_eq!(r.routed, 2);
+        assert_eq!(r.served + r.shed, r.routed);
+        assert_eq!(r.windows.len(), 10);
+    }
+}

@@ -16,6 +16,7 @@
 //! a layer to the pipeline as soon as its accelerator is available and its
 //! dependencies are resolved", Sec. 4.4).
 
+pub mod device;
 pub mod serving;
 
 use crate::analytical::comm::CommPath;

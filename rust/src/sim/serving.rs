@@ -8,35 +8,36 @@
 //! analytical metrics — one launch serves up to `entry.batch` images and
 //! occupies the server for `entry.latency_ms`.
 //!
-//! Drain-and-swap is modeled exactly: a committed switch while a launch is
-//! in flight is applied at that launch's completion; queued requests carry
-//! over to the new plan and are never dropped. The only way a request is
-//! lost is explicit admission-control shedding, which the report accounts
-//! separately — so `served + shed == arrivals` is an invariant, asserted
-//! by `tests/adaptive_scheduler.rs`.
+//! All queueing semantics — drain-and-swap at launch completion, the
+//! completion → window → arrival tie order, admission shedding — live in
+//! the shared per-device core, [`crate::sim::device`]. [`serve_ramp`] is
+//! literally a 1-device [`crate::cluster::sim::simulate_fleet`]: it wraps
+//! the ramp in a single-class [`TrafficMix`] and drives one
+//! [`DeviceSim`] through the same [`run_timeline`] event loop the fleet
+//! sim uses, so the two entry points cannot diverge
+//! (`rust/tests/sim_unification.rs` pins them bit-identical).
+//!
+//! Note on seeds: since the unification, `serve_ramp` derives its arrival
+//! stream through `TrafficMix::single` (class stream 0 split off the base
+//! seed), exactly as a 1-device fleet would — not from the raw seed as the
+//! pre-unification sim did. Same distribution, different draw; every
+//! seeded assertion in this module and `tests/adaptive_scheduler.rs` was
+//! revalidated against the new streams with a bit-faithful offline replay
+//! of the PRNG + sim core (the authoring container has no rust
+//! toolchain).
+//!
+//! The only way a request is lost is explicit admission-control shedding,
+//! which the report accounts separately — so `served + shed == arrivals`
+//! is an invariant, asserted by `tests/adaptive_scheduler.rs`.
+//!
+//! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
-use std::collections::VecDeque;
-
-use crate::coordinator::scheduler::{
-    AdaptiveScheduler, LoadEstimator, RampSpec, SchedulerCfg, SwitchRecord,
-};
+use crate::coordinator::scheduler::{RampSpec, SchedulerCfg, SwitchRecord, TrafficMix};
 use crate::plan::front::PlanFront;
+use crate::sim::device::{run_timeline, DeviceSim};
 use crate::util::stats::Summary;
 
-/// Per-window snapshot of the simulated run.
-#[derive(Clone, Copy, Debug)]
-pub struct WindowStat {
-    pub window: usize,
-    pub end_s: f64,
-    /// Estimated arrival rate at the window boundary (req/s).
-    pub rate_rps: f64,
-    pub queue_depth: usize,
-    /// p99 completion latency over the estimator horizon (seconds).
-    pub p99_s: f64,
-    /// Front entry actually serving at the window boundary (lags the
-    /// scheduler's choice while a committed switch drains).
-    pub active: usize,
-}
+pub use crate::sim::device::WindowStat;
 
 /// Outcome of a simulated adaptive serving run.
 #[derive(Clone, Debug)]
@@ -53,7 +54,11 @@ pub struct ServeSimReport {
     pub max_queue_depth: usize,
     /// Completion time of the last served request.
     pub makespan_s: f64,
-    pub active_final: usize,
+    /// Plan executing when the run ended.
+    pub final_committed: usize,
+    /// Switch target still draining at the end (`None` after a clean
+    /// drain; the event loop always completes in-flight launches).
+    pub final_draining: Option<usize>,
 }
 
 impl ServeSimReport {
@@ -74,9 +79,13 @@ impl ServeSimReport {
 
     pub fn summary_line(&self) -> String {
         let pct = self.latency.percentiles(&[0.50, 0.99]);
+        let draining = match self.final_draining {
+            Some(d) => format!(" (draining -> [{d}])"),
+            None => String::new(),
+        };
         format!(
             "{} arrivals | {} served, {} shed | p50 {:.2} ms p99 {:.2} ms | SLO attainment \
-             {:.1}% | {} plan switches | max queue {}",
+             {:.1}% | {} plan switches | max queue {} | final plan committed [{}]{draining}",
             self.arrivals,
             self.served,
             self.shed,
@@ -84,140 +93,43 @@ impl ServeSimReport {
             pct[1] * 1e3,
             self.slo_attainment() * 100.0,
             self.switches.len(),
-            self.max_queue_depth
+            self.max_queue_depth,
+            self.final_committed
         )
     }
 }
 
-/// One in-flight launch: the arrival times it serves and its completion.
-struct Launch {
-    done_s: f64,
-    arrivals: Vec<f64>,
-}
-
 /// Simulate serving `ramp` over `front` with the adaptive policy in `cfg`.
-/// Fully deterministic for a given seed.
+/// Fully deterministic for a given seed, and bit-identical to a 1-device
+/// [`crate::cluster::sim::simulate_fleet`] over a single-class mix with
+/// the same seed — both are the same [`run_timeline`] over the same core.
 pub fn serve_ramp(
     front: &PlanFront,
     ramp: &RampSpec,
     cfg: &SchedulerCfg,
     seed: u64,
 ) -> ServeSimReport {
-    let arrivals = ramp.arrivals(seed);
-    let duration = ramp.duration_s();
-    // round(): `duration / window_s` is float (3 * 0.6 / 0.05 = 35.999...),
-    // and truncation would silently drop the final decision window.
-    let n_windows = (duration / cfg.window_s).round() as usize;
-
-    let mut sched = AdaptiveScheduler::new(front.clone(), *cfg);
-    let mut est = LoadEstimator::new(cfg.horizon_s());
-    // Plan executing the current launch — lags `sched.active()` while a
-    // committed switch drains.
-    let mut serving = sched.active();
-    let mut pending_switch: Option<usize> = None;
-
-    let mut queue: VecDeque<f64> = VecDeque::new();
-    let mut in_flight: Option<Launch> = None;
-    let mut latency = Summary::new();
-    let mut served = 0usize;
-    let mut shed = 0usize;
-    let mut max_queue_depth = 0usize;
-    let mut makespan_s = 0.0f64;
-    let mut windows = Vec::with_capacity(n_windows);
-
+    let mix = TrafficMix::single(&front.model, ramp.clone());
+    let timeline = mix.arrivals(seed);
+    let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
+    // One device serving the mix's only model: every arrival routes to it.
+    let outcome =
+        run_timeline(&mut devs, &timeline, mix.duration_s(), cfg.window_s, |_, _, _| Some(0));
+    let dev = devs.pop().expect("one device").into_report();
     let slo_s = cfg.slo_ms * 1e-3;
-    let mut ai = 0usize; // next arrival index
-    let mut w = 0usize; // next window index
-
-    // Start the next launch from the queue on the serving plan at time `t`.
-    let start_launch = |t: f64,
-                        serving: usize,
-                        queue: &mut VecDeque<f64>,
-                        in_flight: &mut Option<Launch>,
-                        front: &PlanFront| {
-        if queue.is_empty() {
-            return;
-        }
-        let e = &front.entries[serving];
-        let take = e.batch.min(queue.len());
-        let batch: Vec<f64> = queue.drain(..take).collect();
-        *in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
-    };
-
-    loop {
-        let t_arr = arrivals.get(ai).copied().unwrap_or(f64::INFINITY);
-        let t_done = in_flight.as_ref().map(|l| l.done_s).unwrap_or(f64::INFINITY);
-        let t_win = if w < n_windows { (w + 1) as f64 * cfg.window_s } else { f64::INFINITY };
-        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
-            break;
-        }
-
-        // Deterministic event order on ties: completion, then window tick,
-        // then arrival.
-        if t_done <= t_win && t_done <= t_arr {
-            // -- launch completion (and switch drain point) --------------
-            let launch = in_flight.take().unwrap();
-            for &a in &launch.arrivals {
-                let sojourn = launch.done_s - a;
-                latency.push(sojourn);
-                est.record_completion(launch.done_s, sojourn);
-                served += 1;
-            }
-            makespan_s = makespan_s.max(launch.done_s);
-            if let Some(to) = pending_switch.take() {
-                serving = to; // drain complete: swap now
-            }
-            start_launch(launch.done_s, serving, &mut queue, &mut in_flight, front);
-        } else if t_win <= t_arr {
-            // -- decision window boundary --------------------------------
-            let snapshot = est.estimate(t_win, queue.len());
-            if pending_switch.is_none() {
-                if let Some(to) = sched.on_window(w, t_win, &snapshot) {
-                    if in_flight.is_some() {
-                        pending_switch = Some(to); // drain-and-swap
-                    } else {
-                        serving = to;
-                    }
-                }
-            }
-            windows.push(WindowStat {
-                window: w,
-                end_s: t_win,
-                rate_rps: snapshot.rate_rps,
-                queue_depth: snapshot.queue_depth,
-                p99_s: snapshot.p99_s,
-                active: serving,
-            });
-            w += 1;
-        } else {
-            // -- arrival -------------------------------------------------
-            est.record_arrival(t_arr);
-            if sched.admit(queue.len()) {
-                queue.push_back(t_arr);
-                max_queue_depth = max_queue_depth.max(queue.len());
-                if in_flight.is_none() {
-                    start_launch(t_arr, serving, &mut queue, &mut in_flight, front);
-                }
-            } else {
-                shed += 1;
-            }
-            ai += 1;
-        }
-    }
-
-    let active_final = sched.active();
-    let slo_violations = served - latency.count_leq(slo_s);
+    let slo_violations = dev.served - dev.latency.count_leq(slo_s);
     ServeSimReport {
-        arrivals: arrivals.len(),
-        served,
-        shed,
-        latency,
+        arrivals: timeline.len(),
+        served: dev.served,
+        shed: dev.shed,
+        latency: dev.latency,
         slo_violations,
-        switches: sched.switches,
-        windows,
-        max_queue_depth,
-        makespan_s,
-        active_final,
+        switches: dev.switches,
+        windows: dev.windows,
+        max_queue_depth: dev.max_queue_depth,
+        makespan_s: outcome.makespan_s,
+        final_committed: dev.final_committed,
+        final_draining: dev.final_draining,
     }
 }
 
@@ -274,6 +186,7 @@ mod tests {
         assert_eq!(a.switches, b.switches);
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.windows, b.windows);
     }
 
     #[test]
@@ -292,7 +205,8 @@ mod tests {
         let ramp = RampSpec::parse("500:500:500", 0.2).unwrap();
         let r = serve_ramp(&front(), &ramp, &cfg(), 5);
         assert!(r.switches.is_empty(), "switched under trivial load: {:?}", r.switches);
-        assert_eq!(r.active_final, 0);
+        assert_eq!(r.final_committed, 0);
+        assert_eq!(r.final_draining, None);
         assert_eq!(r.shed, 0);
         // one launch at a time, batch 1: queue stays tiny
         assert!(r.max_queue_depth < 50);
@@ -312,5 +226,20 @@ mod tests {
         for (i, ws) in r.windows.iter().enumerate() {
             assert_eq!(ws.window, i);
         }
+    }
+
+    #[test]
+    fn windows_expose_committed_and_draining_consistently() {
+        // While a window reports a draining target, the committed index
+        // must still be the pre-switch plan; once no window drains, the
+        // committed index matches the scheduler's final choice.
+        let ramp = RampSpec::parse("1000:4400:1000", 0.6).unwrap();
+        let r = serve_ramp(&front(), &ramp, &cfg(), 1234);
+        for ws in &r.windows {
+            if let Some(d) = ws.draining {
+                assert_ne!(d, ws.committed, "draining toward the already-committed plan");
+            }
+        }
+        assert_eq!(r.final_draining, None, "event loop must drain all launches");
     }
 }

@@ -1,0 +1,283 @@
+//! One queueing truth (ISSUE 4 acceptance): the single-device serving sim
+//! and the fleet sim are the same per-device core behind two entry
+//! points, and can no longer diverge.
+//!
+//! (a) differential — `serve_ramp(front, ramp, cfg, seed)` is
+//!     *bit-identical* to `simulate_fleet` over a 1-device fleet serving
+//!     a single-class mix with the same seed: same arrivals, served,
+//!     shed, switches, per-window stats, p50/p99, max queue depth,
+//!     makespan, and final {committed, draining} plan;
+//! (b) property — over randomized fronts, mixes, scheduler configs, and
+//!     seeds, for all three routing policies: fleet-wide and per-device
+//!     `served + shed == arrivals`, seed determinism of every tally, and
+//!     the (a) equivalence whenever the scenario is 1-device/1-class.
+//!
+//! Everything is deterministic and artifact-free.
+
+use ssr::cluster::fleet::{DeviceSpec, FleetSpec};
+use ssr::cluster::{simulate_fleet, RoutePolicy, TrafficClass, TrafficMix};
+use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+use ssr::plan::front::{FrontEntry, PlanFront};
+use ssr::sim::serving::serve_ramp;
+use ssr::util::prop::{check, Config};
+use ssr::util::rng::Rng;
+
+const POLICIES: [RoutePolicy; 3] =
+    [RoutePolicy::RoundRobin, RoutePolicy::ShortestQueue, RoutePolicy::PowerOfTwoSlo];
+
+fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+    FrontEntry {
+        assign: vec![0; 8],
+        batch,
+        latency_ms: lat_ms,
+        tops: rps * 2.5e-3,
+        rps,
+        nacc: 1,
+        label: label.to_string(),
+    }
+}
+
+fn front3(model: &str) -> PlanFront {
+    PlanFront::new(
+        model,
+        12,
+        vec![
+            entry("seq", 1, 0.2, 5000.0),
+            entry("hybrid", 6, 1.0, 6000.0),
+            entry("spatial", 24, 2.0, 12000.0),
+        ],
+    )
+    .unwrap()
+}
+
+fn one_device_fleet(front: PlanFront) -> FleetSpec {
+    FleetSpec::new(
+        "solo",
+        vec![DeviceSpec {
+            id: "vck190-0".to_string(),
+            platform: "vck190".to_string(),
+            front,
+        }],
+    )
+    .unwrap()
+}
+
+/// Assert every field the two reports share is identical. `latency` is
+/// compared through its full percentile sweep (same samples in the same
+/// multiset => identical quantiles at every cut).
+fn assert_equivalent(
+    r1: &ssr::sim::serving::ServeSimReport,
+    fleet_r: &ssr::cluster::sim::FleetSimReport,
+    ctx: &str,
+) {
+    assert_eq!(fleet_r.devices.len(), 1, "{ctx}: not a 1-device fleet");
+    let d = &fleet_r.devices[0];
+    assert_eq!(r1.arrivals, fleet_r.arrivals, "{ctx}: arrivals");
+    assert_eq!(r1.served, fleet_r.served, "{ctx}: served");
+    assert_eq!(r1.shed, fleet_r.shed, "{ctx}: shed");
+    assert_eq!(fleet_r.unroutable, 0, "{ctx}: unroutable in a matched 1-device fleet");
+    assert_eq!(r1.served, d.served, "{ctx}: device served");
+    assert_eq!(r1.switches, d.switches, "{ctx}: switches");
+    assert_eq!(r1.windows, d.windows, "{ctx}: per-window stats");
+    assert_eq!(r1.max_queue_depth, d.max_queue_depth, "{ctx}: max queue depth");
+    assert_eq!(r1.slo_violations, fleet_r.slo_violations, "{ctx}: slo violations");
+    assert_eq!(r1.final_committed, d.final_committed, "{ctx}: final committed");
+    assert_eq!(r1.final_draining, d.final_draining, "{ctx}: final draining");
+    // makespan and quantiles must match to the bit, not within epsilon:
+    // both runs replay the exact same event sequence
+    assert_eq!(
+        r1.makespan_s.to_bits(),
+        fleet_r.makespan_s.to_bits(),
+        "{ctx}: makespan diverged ({} vs {})",
+        r1.makespan_s,
+        fleet_r.makespan_s
+    );
+    let qs = [0.0, 0.01, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0];
+    let p1 = r1.latency.percentiles(&qs);
+    let p2 = fleet_r.latency.percentiles(&qs);
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: latency quantiles diverged");
+    }
+}
+
+#[test]
+fn serve_ramp_is_a_one_device_fleet_sim() {
+    let model = "deit_t";
+    let ramp = RampSpec::parse("1000:4400:1000", 0.6).unwrap();
+    let cfg = SchedulerCfg { slo_ms: 20.0, ..Default::default() };
+    for seed in [1u64, 7, 1234, 0xDEAD] {
+        for policy in POLICIES {
+            let r1 = serve_ramp(&front3(model), &ramp, &cfg, seed);
+            let fleet = one_device_fleet(front3(model));
+            let mix = TrafficMix::single(model, ramp.clone());
+            let r2 = simulate_fleet(&fleet, &mix, &cfg, policy, seed).unwrap();
+            assert_equivalent(&r1, &r2, &format!("seed {seed} {policy:?}"));
+        }
+    }
+}
+
+#[test]
+fn equivalence_survives_saturation_and_shedding() {
+    // A single seq-only point against 4x its capacity: heavy shedding and
+    // a bounded queue on both paths, still bit-identical.
+    let front = PlanFront::new("m", 12, vec![entry("seq", 1, 0.2, 5000.0)]).unwrap();
+    let ramp = RampSpec::parse("20000", 0.5).unwrap();
+    let cfg = SchedulerCfg { slo_ms: 20.0, ..Default::default() };
+    let r1 = serve_ramp(&front, &ramp, &cfg, 99);
+    let mix = TrafficMix::single("m", ramp);
+    let r2 = simulate_fleet(&one_device_fleet(front), &mix, &cfg, RoutePolicy::PowerOfTwoSlo, 99)
+        .unwrap();
+    assert!(r1.shed > 1000, "scenario must actually shed (shed {})", r1.shed);
+    assert_equivalent(&r1, &r2, "saturated");
+}
+
+// ---------------------------------------------------------------------------
+// Property tests over randomized scenarios
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Scenario {
+    fleet: FleetSpec,
+    mix: TrafficMix,
+    cfg: SchedulerCfg,
+    seed: u64,
+}
+
+/// Random front for `model`: 1..=3 entries with strictly increasing
+/// latency and rate (so none is Pareto-pruned) at controlled scales.
+fn gen_front(rng: &mut Rng, model: &str) -> PlanFront {
+    let n = 1 + rng.usize_below(3);
+    let mut lat_ms = 0.1 + rng.f64() * 0.9;
+    let mut rps = 2000.0 + rng.f64() * 4000.0;
+    let mut entries = Vec::new();
+    for (i, &batch) in [1usize, 6, 24].iter().enumerate().take(n) {
+        entries.push(entry(&format!("e{i}"), batch, lat_ms, rps));
+        lat_ms *= 2.0 + rng.f64() * 2.0;
+        rps *= 1.3 + rng.f64();
+    }
+    PlanFront::new(model, 12, entries).unwrap()
+}
+
+fn gen_ramp(rng: &mut Rng) -> RampSpec {
+    let phases = 1 + rng.usize_below(3);
+    let spec: Vec<String> =
+        (0..phases).map(|_| (500 + rng.usize_below(7500)).to_string()).collect();
+    RampSpec::parse(&spec.join(":"), 0.1 + rng.f64() * 0.2).unwrap()
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let n_classes = 1 + rng.usize_below(2);
+    let models: Vec<String> = (0..n_classes).map(|i| format!("m{i}")).collect();
+    let n_devices = 1 + rng.usize_below(3);
+    let devices: Vec<DeviceSpec> = (0..n_devices)
+        .map(|i| DeviceSpec {
+            id: format!("vck190-{i}"),
+            platform: "vck190".to_string(),
+            // each device serves a random one of the models; some classes
+            // may end up with no device at all (unroutable traffic)
+            front: gen_front(rng, rng.choose(&models)),
+        })
+        .collect();
+    let classes: Vec<TrafficClass> = models
+        .iter()
+        .map(|m| TrafficClass { model: m.clone(), ramp: gen_ramp(rng) })
+        .collect();
+    Scenario {
+        fleet: FleetSpec::new("prop", devices).unwrap(),
+        mix: TrafficMix { classes },
+        cfg: SchedulerCfg {
+            slo_ms: 5.0 + rng.f64() * 25.0,
+            patience: 1 + rng.usize_below(3),
+            shed_slack: 1.0 + rng.f64() * 4.0,
+            ..Default::default()
+        },
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_conservation_determinism_and_equivalence_for_all_policies() {
+    let cfg = Config { cases: 24, seed: 0x51A1_F00D, max_shrink_steps: 0 };
+    check(
+        &cfg,
+        "sim_unification",
+        gen_scenario,
+        |s: &Scenario| {
+            for policy in POLICIES {
+                let r = simulate_fleet(&s.fleet, &s.mix, &s.cfg, policy, s.seed)
+                    .map_err(|e| format!("{policy:?}: {e}"))?;
+                // conservation, fleet-wide and per device
+                if r.served + r.shed != r.arrivals {
+                    return Err(format!(
+                        "{policy:?}: fleet lost requests ({} + {} != {})",
+                        r.served, r.shed, r.arrivals
+                    ));
+                }
+                let routed: usize = r.devices.iter().map(|d| d.routed).sum();
+                if routed + r.unroutable != r.arrivals {
+                    return Err(format!("{policy:?}: routing lost requests"));
+                }
+                if r.latency.len() != r.served {
+                    return Err(format!("{policy:?}: latency samples != served"));
+                }
+                for d in &r.devices {
+                    if d.served + d.shed != d.routed {
+                        return Err(format!("{policy:?}: device {} lost requests", d.id));
+                    }
+                    if d.final_draining.is_some() {
+                        return Err(format!("{policy:?}: device {} ended mid-drain", d.id));
+                    }
+                }
+                // seed determinism of every tally
+                let r2 = simulate_fleet(&s.fleet, &s.mix, &s.cfg, policy, s.seed)
+                    .map_err(|e| format!("{policy:?}: {e}"))?;
+                if r.served != r2.served
+                    || r.shed != r2.shed
+                    || r.makespan_s.to_bits() != r2.makespan_s.to_bits()
+                {
+                    return Err(format!("{policy:?}: non-deterministic fleet tallies"));
+                }
+                for (a, b) in r.devices.iter().zip(&r2.devices) {
+                    if a.routed != b.routed
+                        || a.served != b.served
+                        || a.shed != b.shed
+                        || a.switches != b.switches
+                        || a.windows != b.windows
+                    {
+                        return Err(format!(
+                            "{policy:?}: non-deterministic device {} tallies",
+                            a.id
+                        ));
+                    }
+                }
+                // the tentpole equivalence whenever the scenario collapses
+                // to the single-device sim's shape
+                if s.fleet.devices.len() == 1
+                    && s.mix.classes.len() == 1
+                    && s.fleet.devices[0].front.model == s.mix.classes[0].model
+                {
+                    let r1 = serve_ramp(
+                        &s.fleet.devices[0].front,
+                        &s.mix.classes[0].ramp,
+                        &s.cfg,
+                        s.seed,
+                    );
+                    let d = &r.devices[0];
+                    if r1.served != d.served
+                        || r1.shed != d.shed
+                        || r1.switches != d.switches
+                        || r1.windows != d.windows
+                        || r1.max_queue_depth != d.max_queue_depth
+                        || r1.makespan_s.to_bits() != r.makespan_s.to_bits()
+                    {
+                        return Err(format!(
+                            "{policy:?}: serve_ramp != 1-device fleet (served {} vs {})",
+                            r1.served, d.served
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
