@@ -1,0 +1,138 @@
+//! Bench: static peak provisioning vs closed-loop autoscaling on the same
+//! bursty trace. The static fleet buys the forecast peak for the whole
+//! run; the autoscaled fleet starts at the baseline provision and lets
+//! the controller ride the burst (scale out from the pool, drain back in
+//! after it). The claim under test: same trace, SLO held on the feasible
+//! phases, strictly fewer device-seconds.
+//!
+//! Sim-backed (analytical fronts + deterministic replay), so it runs
+//! without artifacts — CI uses `--quick --json BENCH_autoscale.json`.
+
+use ssr::bench::{bench, json_path_from_args, write_json, BenchResult, Table};
+use ssr::cluster::{
+    provision, simulate_autoscale, simulate_fleet, AutoscaleCfg, AutoscaleReport,
+    AutoscaleSpec, FaultSpec, FleetSimReport, PlatformOption, RoutePolicy, TrafficMix,
+};
+use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+
+const SLO_MS: f64 = 25.0;
+const HEADROOM: f64 = 0.8;
+const BATCHES: [usize; 3] = [1, 3, 6];
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
+    let phase_s = if quick { 0.2 } else { 0.4 };
+    let seed = 2024;
+    // Baseline 3k req/s with a 12k burst in the middle — the burst needs
+    // two VCK190-class devices, the shoulders one.
+    let trace = RampSpec::parse("3000:12000:12000:3000:3000", phase_s).unwrap();
+    let cfg = SchedulerCfg { slo_ms: SLO_MS, ..Default::default() };
+    let ctl = AutoscaleCfg { high_water: 0.85, low_water: 0.40, ..Default::default() };
+    let options = [PlatformOption::synth("vck190", "deit_t", &BATCHES).expect("front")];
+
+    // Static: size for the peak, pay for it the whole run.
+    let peak = provision("static-peak", &options, &trace, SLO_MS, HEADROOM).expect("peak");
+    // Autoscaled: size for the baseline, keep the peak delta in the pool.
+    let baseline_fc = RampSpec::parse("3000", phase_s).unwrap();
+    let base = provision("autoscaled", &options, &baseline_fc, SLO_MS, HEADROOM).expect("base");
+    let pool = base.scale_pool(peak.devices.saturating_sub(base.devices).max(1));
+    let spec = AutoscaleSpec {
+        fleet: base.fleet.clone(),
+        pool,
+        faults: FaultSpec::none(),
+        swap: None,
+    };
+
+    let mix = TrafficMix::single("deit_t", trace);
+    let duration_s = mix.duration_s();
+    let iters = if quick { 1 } else { 3 };
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    let mut static_run: Option<FleetSimReport> = None;
+    let r = bench("fleet_autoscale: static-peak", 0, iters, 60.0, || {
+        static_run = Some(
+            simulate_fleet(&peak.fleet, &mix, &cfg, RoutePolicy::PowerOfTwoSlo, seed)
+                .expect("static fleet sim"),
+        );
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let static_run = static_run.unwrap();
+
+    let mut auto_run: Option<AutoscaleReport> = None;
+    let r = bench("fleet_autoscale: autoscaled", 0, iters, 60.0, || {
+        auto_run = Some(
+            simulate_autoscale(&spec, &mix, &cfg, &ctl, RoutePolicy::PowerOfTwoSlo, seed)
+                .expect("autoscale sim"),
+        );
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let auto_run = auto_run.unwrap();
+    println!();
+
+    for e in &auto_run.events {
+        println!("{}", e.describe());
+    }
+    let static_device_s = peak.devices as f64 * duration_s;
+    let (sp50, sp99) = static_run.latency_ms();
+    let (ap50, ap99) = auto_run.latency_ms();
+    let mut t = Table::new(&[
+        "fleet", "peak devs", "device-s", "arrivals", "served", "shed", "p50 (ms)",
+        "p99 (ms)", "SLO %",
+    ]);
+    t.row(&[
+        "static-peak".to_string(),
+        peak.devices.to_string(),
+        format!("{static_device_s:.2}"),
+        static_run.arrivals.to_string(),
+        static_run.served.to_string(),
+        static_run.shed.to_string(),
+        format!("{sp50:.3}"),
+        format!("{sp99:.3}"),
+        format!("{:.1}", static_run.slo_attainment() * 100.0),
+    ]);
+    t.row(&[
+        "autoscaled".to_string(),
+        auto_run.peak_live_devices().to_string(),
+        format!("{:.2}", auto_run.device_seconds()),
+        auto_run.arrivals.to_string(),
+        auto_run.served.to_string(),
+        auto_run.shed.to_string(),
+        format!("{ap50:.3}"),
+        format!("{ap99:.3}"),
+        format!("{:.1}", auto_run.slo_attainment() * 100.0),
+    ]);
+    println!("{}", t.render());
+
+    // Structural claims: conservation on both paths, and the autoscaled
+    // fleet strictly undercuts static peak provisioning on device-time
+    // without ever holding more devices than the static fleet bought.
+    assert_eq!(
+        static_run.served + static_run.shed,
+        static_run.arrivals,
+        "static fleet lost requests"
+    );
+    assert_eq!(
+        auto_run.served + auto_run.shed,
+        auto_run.arrivals,
+        "autoscaled fleet lost requests"
+    );
+    assert!(
+        auto_run.device_seconds() < static_device_s,
+        "autoscaling spent {:.2} device-s, static peak {:.2}",
+        auto_run.device_seconds(),
+        static_device_s
+    );
+    assert!(auto_run.peak_live_devices() <= peak.devices);
+    println!(
+        "structural checks passed: conservation on both fleets; autoscaled {:.2} device-s < \
+         static {static_device_s:.2}",
+        auto_run.device_seconds()
+    );
+
+    if let Some(path) = json_path_from_args() {
+        write_json(&path, &results).expect("write bench JSON");
+        println!("wrote {}", path.display());
+    }
+}

@@ -1,0 +1,1053 @@
+//! Closed-loop fleet autoscaling: the online counterpart of the offline
+//! provisioner.
+//!
+//! [`crate::cluster::provision`] sizes a fleet *once* against a forecast
+//! — the fleet-scale analog of the paper's Table 6 picking one design per
+//! latency constraint offline. Real load diverges from forecasts and real
+//! devices die, so this module closes the loop: a controller rides the
+//! shared event loop ([`run_timeline_controlled`]) and, each decision
+//! window, reads every device's [`LoadEstimator`] output (through
+//! [`DeviceSim::load_estimate`]) and acts:
+//!
+//! * **scale out** — fleet utilization (or backlog) above
+//!   [`AutoscaleCfg::high_water`] for [`AutoscaleCfg::patience`] control
+//!   intervals adds the next device from the provisioner-supplied
+//!   candidate pool;
+//! * **scale in** — utilization below [`AutoscaleCfg::low_water`] for
+//!   `patience` intervals drains the least-utilized device: the router
+//!   stops sending it traffic, its queued requests requeue onto peers,
+//!   and it retires when its in-flight launch lands — hitless
+//!   decommission;
+//! * **fail over** — a deterministic [`FaultSpec`] schedule (seeded via
+//!   [`Rng::split`], stream [`FAULT_STREAM`]) kills a device mid-run; its
+//!   in-flight and queued work requeues onto survivors with original
+//!   arrival times preserved, so the retry cost shows up honestly in the
+//!   latency tally;
+//! * **hitless front swap** — a fleet-level plan-front update
+//!   ([`FrontSwap`], e.g. after a model update) rolls through the fleet
+//!   one device at a time: drain onto peers, retire, bring up the
+//!   replacement on the new front — never a fleet-wide restart, never two
+//!   devices down at once.
+//!
+//! Requeues are *internal re-dispatches*, not terminal outcomes: every
+//! arrival still ends as exactly one of served / shed (admission, no
+//! eligible device, or a requeue no survivor could take). Conservation,
+//! determinism under a fixed seed, and "autoscaling beats static peak
+//! provisioning on device-hours while meeting the SLO on feasible
+//! phases" are pinned in `rust/tests/fleet_autoscale.rs`.
+//!
+//! [`LoadEstimator`]: crate::coordinator::scheduler::LoadEstimator
+//! [`Rng::split`]: crate::util::rng::Rng::split
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::fleet::{DeviceSpec, FleetSpec};
+use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
+use crate::coordinator::scheduler::SchedulerCfg;
+use crate::plan::front::PlanFront;
+use crate::sim::device::{
+    run_timeline_controlled, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Stream id the fault-injection RNG splits off the base seed (disjoint
+/// from the router's `u64::MAX`, the per-class `0..n_classes`, and the
+/// live per-device `u64::MAX - 1 - dev` streams).
+pub const FAULT_STREAM: u64 = u64::MAX / 2;
+
+// ---------------------------------------------------------------------------
+// Control inputs
+// ---------------------------------------------------------------------------
+
+/// Knobs of the autoscaling controller (the scheduler-level knobs stay in
+/// [`SchedulerCfg`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleCfg {
+    /// Fleet utilization (observed rate / committed capacity) above which
+    /// the scale-out signal arms.
+    pub high_water: f64,
+    /// Utilization below which the scale-in signal arms.
+    pub low_water: f64,
+    /// Consecutive control intervals a breach must persist before the
+    /// controller acts (the controller's own hysteresis, distinct from
+    /// the per-device scheduler's [`SchedulerCfg::patience`]).
+    pub patience: usize,
+    /// Control interval, in decision windows: the controller evaluates
+    /// the fleet every `control_windows`-th window.
+    pub control_windows: usize,
+    /// Never scale in below this many serving devices.
+    pub min_devices: usize,
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        AutoscaleCfg {
+            high_water: 0.85,
+            low_water: 0.30,
+            patience: 2,
+            control_windows: 2,
+            min_devices: 1,
+        }
+    }
+}
+
+impl AutoscaleCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.low_water > 0.0 && self.high_water > self.low_water) {
+            return Err(format!(
+                "water marks must satisfy 0 < low ({}) < high ({})",
+                self.low_water, self.high_water
+            ));
+        }
+        if self.patience == 0 || self.control_windows == 0 {
+            return Err("patience and control_windows must be >= 1".into());
+        }
+        if self.min_devices == 0 {
+            return Err("min_devices must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One scheduled device kill.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Fleet-clock time of the kill (applied at the first decision-window
+    /// boundary at or after it; events past the run's last window never
+    /// fire).
+    pub at_s: f64,
+    /// Device id to kill; `None` picks uniformly among live devices via
+    /// the [`FAULT_STREAM`] RNG. A named device that is no longer live is
+    /// skipped.
+    pub device: Option<String>,
+}
+
+/// Deterministic failure-injection schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSpec {
+    pub fn none() -> FaultSpec {
+        FaultSpec { events: Vec::new() }
+    }
+
+    /// Kills at the given times, victims drawn from the fault RNG stream.
+    pub fn at(times: &[f64]) -> FaultSpec {
+        FaultSpec {
+            events: times.iter().map(|&t| FaultEvent { at_s: t, device: None }).collect(),
+        }
+    }
+
+    /// Parse a CLI schedule like `"0.8,1.2"` (seconds, random victims).
+    pub fn parse(csv: &str) -> Result<FaultSpec, String> {
+        let mut times = Vec::new();
+        for part in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let t: f64 = part.parse().map_err(|e| format!("bad fault time '{part}': {e}"))?;
+            if !(t.is_finite() && t >= 0.0) {
+                return Err(format!("fault time {t} must be finite and >= 0"));
+            }
+            times.push(t);
+        }
+        Ok(FaultSpec::at(&times))
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for e in &self.events {
+            if !(e.at_s.is_finite() && e.at_s >= 0.0) {
+                return Err(format!("fault time {} must be finite and >= 0", e.at_s));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A fleet-level plan-front update, rolled out one device at a time
+/// (cross-device drain-and-swap): every serving device of `model` is
+/// drained onto its peers, retired, and replaced by a fresh device
+/// carrying its platform's entry from `fronts`. When the device up next
+/// is the model's *last* serving one, its replacement is surged up before
+/// the drain so there is never a routing gap. Pool candidates of the same
+/// model are updated too, so later scale-outs come up on the new front.
+/// Devices of a platform with no entry in `fronts` keep serving the old
+/// front.
+#[derive(Clone, Debug)]
+pub struct FrontSwap {
+    /// Fleet-clock time the rollout starts.
+    pub at_s: f64,
+    /// Model whose fronts are being replaced.
+    pub model: String,
+    /// Replacement front per platform name.
+    pub fronts: BTreeMap<String, PlanFront>,
+}
+
+impl FrontSwap {
+    fn validate(&self) -> Result<(), String> {
+        if !(self.at_s.is_finite() && self.at_s >= 0.0) {
+            return Err(format!("swap time {} must be finite and >= 0", self.at_s));
+        }
+        for (p, f) in &self.fronts {
+            if f.model != self.model {
+                return Err(format!(
+                    "swap front for platform '{p}' serves model '{}', want '{}'",
+                    f.model, self.model
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything an autoscaled run needs beyond the traffic itself.
+#[derive(Clone, Debug)]
+pub struct AutoscaleSpec {
+    /// Devices serving at t = 0.
+    pub fleet: FleetSpec,
+    /// Scale-out candidates, consumed front to back (typically from
+    /// [`crate::cluster::provision::ProvisionResult::scale_pool`]).
+    pub pool: Vec<DeviceSpec>,
+    pub faults: FaultSpec,
+    pub swap: Option<FrontSwap>,
+}
+
+// ---------------------------------------------------------------------------
+// Control events (the audit log of the run)
+// ---------------------------------------------------------------------------
+
+/// Why a device was put into lifecycle drain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainReason {
+    ScaleIn,
+    Swap,
+}
+
+/// One controller action, in commit order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetEvent {
+    ScaleOut { at_s: f64, window: usize, id: String },
+    DrainStart { at_s: f64, window: usize, id: String, reason: DrainReason },
+    /// Hitless decommission finished (billed to the window boundary that
+    /// observed it; the actual drain landed at a completion inside the
+    /// preceding window).
+    Retired { at_s: f64, window: usize, id: String },
+    Failed { at_s: f64, window: usize, id: String, requeued: usize },
+    /// Rolling front swap brought up `new` to replace `old` (normally
+    /// after `old` retired; *before* its drain when `old` was the model's
+    /// last serving device — the surge path).
+    SwapReplace { at_s: f64, window: usize, old: String, new: String },
+}
+
+impl FleetEvent {
+    /// One CLI log line.
+    pub fn describe(&self) -> String {
+        match self {
+            FleetEvent::ScaleOut { at_s, window, id } => {
+                format!("{at_s:.2} s (window {window}): scale-out  + {id}")
+            }
+            FleetEvent::DrainStart { at_s, window, id, reason } => {
+                let r = match reason {
+                    DrainReason::ScaleIn => "scale-in",
+                    DrainReason::Swap => "front-swap",
+                };
+                format!("{at_s:.2} s (window {window}): drain      - {id} ({r})")
+            }
+            FleetEvent::Retired { at_s, window, id } => {
+                format!("{at_s:.2} s (window {window}): retired    - {id}")
+            }
+            FleetEvent::Failed { at_s, window, id, requeued } => {
+                format!(
+                    "{at_s:.2} s (window {window}): FAILED     x {id} ({requeued} requeued)"
+                )
+            }
+            FleetEvent::SwapReplace { at_s, window, old, new } => {
+                format!("{at_s:.2} s (window {window}): swapped    {old} -> {new}")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The controller
+// ---------------------------------------------------------------------------
+
+struct DevMeta {
+    spec: DeviceSpec,
+    added_s: f64,
+    /// When the device stopped being live (retired or failed); billed at
+    /// window granularity.
+    ended_s: Option<f64>,
+}
+
+/// The [`FleetControl`] implementation behind [`simulate_autoscale`]:
+/// holds the scale-decision hysteresis, the candidate pool, the fault
+/// schedule, and the rolling-swap state machine.
+struct Controller {
+    ctl: AutoscaleCfg,
+    sched_cfg: SchedulerCfg,
+    /// Distinct models the traffic mix offers — what recovery must keep
+    /// covered.
+    models: Vec<String>,
+    meta: Vec<DevMeta>,
+    pool: Vec<DeviceSpec>,
+    faults: Vec<FaultEvent>,
+    next_fault: usize,
+    fault_rng: Rng,
+    swap: Option<FrontSwap>,
+    /// `None` until the swap triggers; then the captured rollout queue.
+    swap_queue: Option<VecDeque<usize>>,
+    /// Device currently lifecycle-draining for the swap.
+    swap_active: Option<usize>,
+    /// The draining device's replacement was surged up *before* the drain
+    /// (it was the model's last serving device), so its retirement must
+    /// not spawn a second one.
+    swap_surged: bool,
+    hi_streak: usize,
+    lo_streak: usize,
+    events: Vec<FleetEvent>,
+}
+
+impl Controller {
+    fn new(
+        spec: &AutoscaleSpec,
+        models: Vec<String>,
+        ctl: AutoscaleCfg,
+        sched_cfg: SchedulerCfg,
+        fault_rng: Rng,
+    ) -> Controller {
+        let meta = spec
+            .fleet
+            .devices
+            .iter()
+            .map(|d| DevMeta { spec: d.clone(), added_s: 0.0, ended_s: None })
+            .collect();
+        let mut faults = spec.faults.events.clone();
+        faults.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Controller {
+            ctl,
+            sched_cfg,
+            models,
+            meta,
+            pool: spec.pool.clone(),
+            faults,
+            next_fault: 0,
+            fault_rng,
+            swap: spec.swap.clone(),
+            swap_queue: None,
+            swap_active: None,
+            swap_surged: false,
+            hi_streak: 0,
+            lo_streak: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Bring `spec` up as a fresh serving device — the one bring-up path
+    /// shared by scale-out, disaster recovery, and swap replacements (the
+    /// caller logs its own event).
+    fn add_device(&mut self, devs: &mut Vec<DeviceSim>, spec: DeviceSpec, end_s: f64) {
+        devs.push(DeviceSim::new(spec.front.clone(), self.sched_cfg));
+        self.meta.push(DevMeta { spec, added_s: end_s, ended_s: None });
+    }
+
+    /// Bring up `old`'s swap replacement (`{id}+swap`) on `front`.
+    fn spawn_replacement(
+        &mut self,
+        devs: &mut Vec<DeviceSim>,
+        old: &DeviceSpec,
+        front: &PlanFront,
+        w: usize,
+        end_s: f64,
+    ) {
+        let new_id = format!("{}+swap", old.id);
+        self.events.push(FleetEvent::SwapReplace {
+            at_s: end_s,
+            window: w,
+            old: old.id.clone(),
+            new: new_id.clone(),
+        });
+        let spec =
+            DeviceSpec { id: new_id, platform: old.platform.clone(), front: front.clone() };
+        self.add_device(devs, spec, end_s);
+    }
+
+    /// Drain device `i` and log it (and its immediate retirement, when it
+    /// was idle and the drain completes on the spot).
+    fn do_drain(
+        &mut self,
+        devs: &mut [DeviceSim],
+        i: usize,
+        reason: DrainReason,
+        w: usize,
+        end_s: f64,
+        moved: &mut Vec<Req>,
+    ) {
+        moved.extend(devs[i].begin_drain());
+        let id = self.meta[i].spec.id.clone();
+        self.events.push(FleetEvent::DrainStart { at_s: end_s, window: w, id: id.clone(), reason });
+        if devs[i].state() == DeviceState::Retired {
+            self.meta[i].ended_s = Some(end_s);
+            self.events.push(FleetEvent::Retired { at_s: end_s, window: w, id });
+        }
+    }
+
+    /// Apply every fault event due by `end_s`.
+    fn apply_faults(
+        &mut self,
+        devs: &mut [DeviceSim],
+        w: usize,
+        end_s: f64,
+        moved: &mut Vec<Req>,
+    ) {
+        while self.next_fault < self.faults.len() && self.faults[self.next_fault].at_s <= end_s {
+            let ev = self.faults[self.next_fault].clone();
+            self.next_fault += 1;
+            let victim = match &ev.device {
+                Some(id) => (0..devs.len())
+                    .find(|&i| self.meta[i].spec.id == *id && devs[i].is_live()),
+                None => {
+                    let live: Vec<usize> =
+                        (0..devs.len()).filter(|&i| devs[i].is_live()).collect();
+                    if live.is_empty() {
+                        None
+                    } else {
+                        Some(live[self.fault_rng.usize_below(live.len())])
+                    }
+                }
+            };
+            let Some(v) = victim else { continue };
+            let reqs = devs[v].fail();
+            self.meta[v].ended_s = Some(end_s);
+            self.events.push(FleetEvent::Failed {
+                at_s: end_s,
+                window: w,
+                id: self.meta[v].spec.id.clone(),
+                requeued: reqs.len(),
+            });
+            moved.extend(reqs);
+            if self.swap_active == Some(v) {
+                // the hardware died mid-swap-drain: no replacement appears
+                self.swap_active = None;
+            }
+        }
+    }
+
+    /// Log drains that completed at a launch inside the last window.
+    fn sweep_retired(&mut self, devs: &[DeviceSim], w: usize, end_s: f64) {
+        for i in 0..devs.len() {
+            if devs[i].state() == DeviceState::Retired && self.meta[i].ended_s.is_none() {
+                self.meta[i].ended_s = Some(end_s);
+                self.events.push(FleetEvent::Retired {
+                    at_s: end_s,
+                    window: w,
+                    id: self.meta[i].spec.id.clone(),
+                });
+            }
+        }
+    }
+
+    /// Advance the rolling front swap by at most one step: replace a
+    /// finished drain, then start the next device's drain. Strictly one
+    /// device down at a time.
+    fn step_swap(
+        &mut self,
+        devs: &mut Vec<DeviceSim>,
+        w: usize,
+        end_s: f64,
+        moved: &mut Vec<Req>,
+    ) {
+        let Some(swap) = self.swap.take() else { return };
+        if self.swap_queue.is_none() {
+            if swap.at_s > end_s {
+                self.swap = Some(swap);
+                return;
+            }
+            // Trigger: capture the serving devices of the model (rollout
+            // order = device order), and refresh matching pool candidates
+            // so later scale-outs come up on the new front.
+            self.swap_queue = Some(
+                (0..devs.len())
+                    .filter(|&i| devs[i].is_serving() && devs[i].model() == swap.model)
+                    .collect(),
+            );
+            for p in &mut self.pool {
+                if p.front.model == swap.model {
+                    if let Some(f) = swap.fronts.get(&p.platform) {
+                        p.front = f.clone();
+                    }
+                }
+            }
+        }
+        // A finished drain brings up its replacement on the new front
+        // (unless the replacement was already surged up before the drain).
+        if let Some(slot) = self.swap_active {
+            match devs[slot].state() {
+                DeviceState::Retired => {
+                    if !self.swap_surged {
+                        let old = self.meta[slot].spec.clone();
+                        if let Some(front) = swap.fronts.get(&old.platform) {
+                            self.spawn_replacement(devs, &old, front, w, end_s);
+                        }
+                    }
+                    self.swap_active = None;
+                    self.swap_surged = false;
+                }
+                DeviceState::Failed => {
+                    // dead hardware: no replacement (a surged one stays)
+                    self.swap_active = None;
+                    self.swap_surged = false;
+                }
+                _ => {
+                    self.swap = Some(swap);
+                    return; // still draining: one at a time
+                }
+            }
+        }
+        // Start the next drain of the rollout.
+        while self.swap_active.is_none() {
+            let Some(i) = self.swap_queue.as_mut().and_then(VecDeque::pop_front) else {
+                break;
+            };
+            if !devs[i].is_serving() {
+                continue; // drained or failed since the capture
+            }
+            let old = self.meta[i].spec.clone();
+            let Some(front) = swap.fronts.get(&old.platform) else {
+                continue; // no replacement front: keep it on the old plan
+            };
+            // Hitless even when `i` is the model's last serving device:
+            // surge the replacement up *before* draining, so the drain's
+            // requeues and subsequent arrivals always have a serving peer.
+            let alone = !devs
+                .iter()
+                .enumerate()
+                .any(|(j, d)| j != i && d.is_serving() && d.model() == swap.model);
+            if alone {
+                self.spawn_replacement(devs, &old, front, w, end_s);
+                self.swap_surged = true;
+            }
+            self.do_drain(devs, i, DrainReason::Swap, w, end_s, moved);
+            self.swap_active = Some(i);
+        }
+        self.swap = Some(swap);
+    }
+
+    /// The scale-out / scale-in decision, once per control interval.
+    ///
+    /// Signals are fleet-aggregate across models: adequate for the
+    /// single-model mixes the CLI drives, and per-model *coverage* is
+    /// guaranteed separately by [`Controller::recover`] — but one model's
+    /// partial overload can be averaged away by another's idle capacity.
+    /// Per-model control loops are a ROADMAP follow-on ("Per-model
+    /// fleets / placement").
+    fn scale(&mut self, devs: &mut Vec<DeviceSim>, w: usize, end_s: f64, moved: &mut Vec<Req>) {
+        let active: Vec<usize> = (0..devs.len()).filter(|&i| devs[i].is_serving()).collect();
+        if active.is_empty() {
+            return; // handled by recover() in after_window
+        }
+        let cap: f64 = active.iter().map(|&i| devs[i].committed_entry().rps).sum();
+        let rate: f64 =
+            active.iter().map(|&i| devs[i].load_estimate(end_s).rate_rps).sum();
+        let depth: usize = active.iter().map(|&i| devs[i].depth()).sum();
+        let util = rate / cap.max(1e-9);
+        // Backlog signal: time to drain the standing queue at the fleet's
+        // committed capacity. More than one SLO of backlog is overload no
+        // matter what the utilization average says.
+        let backlog_s = depth as f64 / cap.max(1e-9);
+        let slo_s = self.sched_cfg.slo_ms * 1e-3;
+        let draining_now = devs.iter().any(|d| d.state() == DeviceState::Draining);
+
+        if util > self.ctl.high_water || backlog_s > slo_s {
+            self.hi_streak += 1;
+            self.lo_streak = 0;
+            if self.hi_streak >= self.ctl.patience && !self.pool.is_empty() {
+                let spec = self.pool.remove(0);
+                self.events.push(FleetEvent::ScaleOut {
+                    at_s: end_s,
+                    window: w,
+                    id: spec.id.clone(),
+                });
+                self.add_device(devs, spec, end_s);
+                self.hi_streak = 0;
+            }
+        } else if util < self.ctl.low_water && backlog_s <= slo_s {
+            self.lo_streak += 1;
+            self.hi_streak = 0;
+            if self.lo_streak >= self.ctl.patience
+                && active.len() > self.ctl.min_devices
+                && !draining_now
+            {
+                // Least-utilized device leaves; ties prefer the highest
+                // index (the most recently added device).
+                let victim = active
+                    .iter()
+                    .copied()
+                    .map(|i| {
+                        let cap_i = devs[i].committed_entry().rps.max(1e-9);
+                        (devs[i].load_estimate(end_s).rate_rps / cap_i, i)
+                    })
+                    .min_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)))
+                    .map(|(_, i)| i)
+                    .expect("non-empty active set");
+                self.do_drain(devs, victim, DrainReason::ScaleIn, w, end_s, moved);
+                self.lo_streak = 0;
+            }
+        } else {
+            self.hi_streak = 0;
+            self.lo_streak = 0;
+        }
+    }
+
+    /// Disaster recovery, per traffic model: a model with zero serving
+    /// devices must not wait out the patience — bring up a pool device
+    /// *of that model* in the same window (this runs every window, not
+    /// just control ticks, and before requeues are re-dispatched, so a
+    /// lone device's failover work still finds a survivor; and the
+    /// fleet-aggregate utilization signal in [`Controller::scale`] can
+    /// never average a fully-dead model away).
+    fn recover(&mut self, devs: &mut Vec<DeviceSim>, w: usize, end_s: f64) {
+        for mi in 0..self.models.len() {
+            let covered = devs
+                .iter()
+                .any(|d| d.is_serving() && d.model() == self.models[mi]);
+            if covered {
+                continue;
+            }
+            let Some(pi) =
+                self.pool.iter().position(|p| p.front.model == self.models[mi])
+            else {
+                continue;
+            };
+            let spec = self.pool.remove(pi);
+            self.events.push(FleetEvent::ScaleOut { at_s: end_s, window: w, id: spec.id.clone() });
+            self.add_device(devs, spec, end_s);
+            self.hi_streak = 0;
+            self.lo_streak = 0;
+        }
+    }
+}
+
+impl FleetControl for Controller {
+    fn after_window(
+        &mut self,
+        devs: &mut Vec<DeviceSim>,
+        window: usize,
+        end_s: f64,
+    ) -> Vec<Req> {
+        let mut moved = Vec::new();
+        self.apply_faults(devs, window, end_s, &mut moved);
+        self.sweep_retired(devs, window, end_s);
+        self.step_swap(devs, window, end_s, &mut moved);
+        self.recover(devs, window, end_s); // no-op while every model is covered
+        if (window + 1) % self.ctl.control_windows == 0 {
+            self.scale(devs, window, end_s, &mut moved);
+        }
+        moved
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// Per-device outcome of an autoscaled run, lifecycle included.
+#[derive(Clone, Debug)]
+pub struct AutoscaleDevice {
+    pub id: String,
+    pub platform: String,
+    /// When the device joined the fleet (0 for the initial devices).
+    pub added_s: f64,
+    /// When it stopped being live (retired/failed); `None` = ran to the
+    /// end. Billed at decision-window granularity.
+    pub ended_s: Option<f64>,
+    pub final_state: DeviceState,
+    pub routed: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub requeued_away: usize,
+    pub requeued_in: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_queue_depth: usize,
+    pub switches: usize,
+    pub windows: Vec<WindowStat>,
+    pub final_committed: usize,
+}
+
+/// Outcome of [`simulate_autoscale`].
+#[derive(Clone, Debug)]
+pub struct AutoscaleReport {
+    pub arrivals: usize,
+    pub served: usize,
+    /// Everything not served: per-device admission shedding + unroutable
+    /// arrivals + requeues no survivor could take.
+    pub shed: usize,
+    /// Arrivals whose model no serving device carried at dispatch time.
+    pub unroutable: usize,
+    /// Requests displaced by drains and failures (internal re-dispatches;
+    /// each still terminates as served or shed exactly once).
+    pub requeued: usize,
+    /// Displaced requests with no eligible survivor (subset of `shed`).
+    pub requeue_lost: usize,
+    /// Fleet-wide per-request sojourn times (served requests).
+    pub latency: Summary,
+    /// `(completion time, sojourn)` per served request, completion order —
+    /// use [`AutoscaleReport::latency_for_arrivals_in`] to slice by phase.
+    pub completions: Vec<(f64, f64)>,
+    pub slo_violations: usize,
+    pub makespan_s: f64,
+    /// Offered-traffic duration the run was billed over.
+    pub duration_s: f64,
+    /// Controller actions in commit order.
+    pub events: Vec<FleetEvent>,
+    /// Every device that ever existed, initial fleet first, then
+    /// scale-outs and swap replacements in creation order.
+    pub devices: Vec<AutoscaleDevice>,
+}
+
+impl AutoscaleReport {
+    /// `(p50, p99)` sojourn in ms, from one sort.
+    pub fn latency_ms(&self) -> (f64, f64) {
+        let p = self.latency.percentiles(&[0.50, 0.99]);
+        (p[0] * 1e3, p[1] * 1e3)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_ms().1
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            return 1.0;
+        }
+        1.0 - self.slo_violations as f64 / self.served as f64
+    }
+
+    /// Total device-seconds billed: the sum of every device's live span
+    /// (serving + draining — a draining board is still powered).
+    pub fn device_seconds(&self) -> f64 {
+        self.devices
+            .iter()
+            .map(|d| (d.ended_s.unwrap_or(self.duration_s) - d.added_s).max(0.0))
+            .sum()
+    }
+
+    pub fn device_hours(&self) -> f64 {
+        self.device_seconds() / 3600.0
+    }
+
+    /// Most devices live at any instant (what static provisioning would
+    /// have to buy for the whole run).
+    pub fn peak_live_devices(&self) -> usize {
+        let mut deltas: Vec<(f64, i32)> = Vec::new();
+        for d in &self.devices {
+            deltas.push((d.added_s, 1));
+            deltas.push((d.ended_s.unwrap_or(self.duration_s), -1));
+        }
+        // ends sort before starts on ties: a swap's retire + replace at
+        // the same boundary counts as one device, not two
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let (mut live, mut peak) = (0i32, 0i32);
+        for (_, d) in deltas {
+            live += d;
+            peak = peak.max(live);
+        }
+        peak.max(0) as usize
+    }
+
+    /// Sojourn summary of the served requests that *arrived* within
+    /// `[t0, t1)` — per-phase SLO accounting (a request's arrival time is
+    /// its completion minus its sojourn).
+    pub fn latency_for_arrivals_in(&self, t0: f64, t1: f64) -> Summary {
+        let mut s = Summary::new();
+        for &(done, sojourn) in &self.completions {
+            let arrived = done - sojourn;
+            if arrived >= t0 && arrived < t1 {
+                s.push(sojourn);
+            }
+        }
+        s
+    }
+
+    pub fn summary_line(&self) -> String {
+        let (p50, p99) = self.latency_ms();
+        format!(
+            "{} arrivals | {} served, {} shed ({} unroutable, {} requeue-lost) | {} requeued \
+             | p50 {p50:.2} ms p99 {p99:.2} ms | SLO attainment {:.1}% | {} control events | \
+             {:.2} device-s (peak {} live)",
+            self.arrivals,
+            self.served,
+            self.shed,
+            self.unroutable,
+            self.requeue_lost,
+            self.requeued,
+            self.slo_attainment() * 100.0,
+            self.events.len(),
+            self.device_seconds(),
+            self.peak_live_devices()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The autoscaled fleet simulation
+// ---------------------------------------------------------------------------
+
+/// Simulate serving `mix` on an autoscaled fleet: the same deterministic
+/// per-device core and event loop as [`crate::cluster::sim::simulate_fleet`],
+/// plus the [`Controller`] acting at window boundaries. Fully
+/// deterministic for a given seed (arrival streams, router sampling, and
+/// fault victims all derive from it via [`Rng::split`]).
+///
+/// ```
+/// use ssr::cluster::controller::{simulate_autoscale, AutoscaleCfg, AutoscaleSpec, FaultSpec};
+/// use ssr::cluster::fleet::{parse_mix, synth_fleet};
+/// use ssr::cluster::{RoutePolicy, TrafficMix};
+/// use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+///
+/// let fleet = synth_fleet("f", "deit_t", &parse_mix("vck190:1").unwrap(), &[1, 6]).unwrap();
+/// let pool = synth_fleet("p", "deit_t", &parse_mix("vck190:1").unwrap(), &[1, 6]).unwrap();
+/// let spec = AutoscaleSpec {
+///     fleet,
+///     pool: pool.devices.into_iter().map(|mut d| { d.id = "vck190-pool0".into(); d }).collect(),
+///     faults: FaultSpec::none(),
+///     swap: None,
+/// };
+/// let mix = TrafficMix::single("deit_t", RampSpec::parse("2000:4000:2000", 0.2).unwrap());
+/// let cfg = SchedulerCfg { slo_ms: 25.0, ..Default::default() };
+/// let r = simulate_autoscale(&spec, &mix, &cfg, &AutoscaleCfg::default(),
+///                            RoutePolicy::PowerOfTwoSlo, 7).unwrap();
+/// assert_eq!(r.served + r.shed, r.arrivals); // nothing is ever lost
+/// ```
+pub fn simulate_autoscale(
+    spec: &AutoscaleSpec,
+    mix: &TrafficMix,
+    cfg: &SchedulerCfg,
+    ctl_cfg: &AutoscaleCfg,
+    policy: RoutePolicy,
+    seed: u64,
+) -> Result<AutoscaleReport, String> {
+    if mix.classes.is_empty() {
+        return Err("traffic mix has no classes".into());
+    }
+    ctl_cfg.validate()?;
+    spec.faults.validate()?;
+    if let Some(swap) = &spec.swap {
+        swap.validate()?;
+    }
+    // One validation pass over initial fleet + pool together: at least one
+    // device, globally unique ids, known platforms.
+    let mut all = spec.fleet.devices.clone();
+    all.extend(spec.pool.iter().cloned());
+    FleetSpec::new(&spec.fleet.name, all)?;
+
+    let arrivals = mix.arrivals(seed);
+    let base = Rng::new(seed);
+    let mut router = Router::new(policy, base.split(ROUTER_STREAM));
+    let mut model_set: Vec<String> = mix.classes.iter().map(|c| c.model.clone()).collect();
+    model_set.sort();
+    model_set.dedup();
+    let mut ctl = Controller::new(spec, model_set, *ctl_cfg, *cfg, base.split(FAULT_STREAM));
+    let mut devs: Vec<DeviceSim> =
+        spec.fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
+    let models: Vec<&str> = mix.classes.iter().map(|c| c.model.as_str()).collect();
+    let duration_s = mix.duration_s();
+
+    let outcome = run_timeline_controlled(
+        &mut devs,
+        &arrivals,
+        duration_s,
+        cfg.window_s,
+        |devs, class, _t| {
+            // Eligibility is dynamic: only *serving* devices of the
+            // class's model — a draining device takes no new traffic, and
+            // scale-outs become routable the window they appear.
+            let eligible: Vec<usize> = devs
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.is_serving() && d.model() == models[class])
+                .map(|(i, _)| i)
+                .collect();
+            let views: Vec<DeviceView> = devs
+                .iter()
+                .map(|d| {
+                    let e = d.committed_entry();
+                    DeviceView { depth: d.depth(), latency_ms: e.latency_ms, rps: e.rps }
+                })
+                .collect();
+            router.pick(&views, class, &eligible, cfg.slo_ms)
+        },
+        &mut ctl,
+    );
+
+    let devices: Vec<AutoscaleDevice> = ctl
+        .meta
+        .iter()
+        .zip(devs)
+        .map(|(m, d)| {
+            let r = d.into_report();
+            let p = r.latency.percentiles(&[0.50, 0.99]);
+            AutoscaleDevice {
+                id: m.spec.id.clone(),
+                platform: m.spec.platform.clone(),
+                added_s: m.added_s,
+                ended_s: m.ended_s,
+                final_state: r.lifecycle,
+                routed: r.routed,
+                served: r.served,
+                shed: r.shed,
+                requeued_away: r.requeued_away,
+                requeued_in: r.requeued_in,
+                p50_ms: p[0] * 1e3,
+                p99_ms: p[1] * 1e3,
+                max_queue_depth: r.max_queue_depth,
+                switches: r.switches.len(),
+                windows: r.windows,
+                final_committed: r.final_committed,
+            }
+        })
+        .collect();
+    let served: usize = devices.iter().map(|d| d.served).sum();
+    let dev_shed: usize = devices.iter().map(|d| d.shed).sum();
+    let slo_violations = served - outcome.latency.count_leq(cfg.slo_ms * 1e-3);
+
+    Ok(AutoscaleReport {
+        arrivals: arrivals.len(),
+        served,
+        shed: dev_shed + outcome.unroutable + outcome.requeue_lost,
+        unroutable: outcome.unroutable,
+        requeued: outcome.requeued,
+        requeue_lost: outcome.requeue_lost,
+        latency: outcome.latency,
+        completions: outcome.completions,
+        slo_violations,
+        makespan_s: outcome.makespan_s,
+        duration_s,
+        events: ctl.events,
+        devices,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::TrafficClass;
+    use crate::coordinator::scheduler::RampSpec;
+    use crate::plan::front::FrontEntry;
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    fn front(model: &str) -> PlanFront {
+        PlanFront::new(
+            model,
+            12,
+            vec![entry("seq", 1, 0.2, 5000.0), entry("spatial", 24, 2.0, 12000.0)],
+        )
+        .unwrap()
+    }
+
+    fn dev(id: &str, model: &str) -> DeviceSpec {
+        DeviceSpec {
+            id: id.to_string(),
+            platform: "vck190".to_string(),
+            front: front(model),
+        }
+    }
+
+    fn cfg() -> SchedulerCfg {
+        SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+    }
+
+    fn spec_n(n: usize, pool: usize) -> AutoscaleSpec {
+        AutoscaleSpec {
+            fleet: FleetSpec::new(
+                "t",
+                (0..n).map(|i| dev(&format!("d{i}"), "m")).collect(),
+            )
+            .unwrap(),
+            pool: (0..pool).map(|i| dev(&format!("p{i}"), "m")).collect(),
+            faults: FaultSpec::none(),
+            swap: None,
+        }
+    }
+
+    #[test]
+    fn cfg_and_spec_validation() {
+        assert!(AutoscaleCfg::default().validate().is_ok());
+        assert!(AutoscaleCfg { low_water: 0.9, ..Default::default() }.validate().is_err());
+        assert!(AutoscaleCfg { patience: 0, ..Default::default() }.validate().is_err());
+        assert!(AutoscaleCfg { min_devices: 0, ..Default::default() }.validate().is_err());
+        let mix = TrafficMix::single("m", RampSpec::parse("1000", 0.2).unwrap());
+        // duplicate id across fleet + pool is rejected
+        let mut s = spec_n(1, 1);
+        s.pool[0].id = "d0".to_string();
+        assert!(simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                   RoutePolicy::RoundRobin, 1).is_err());
+        // bad fault time
+        let mut s = spec_n(1, 0);
+        s.faults = FaultSpec { events: vec![FaultEvent { at_s: -1.0, device: None }] };
+        assert!(simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                   RoutePolicy::RoundRobin, 1).is_err());
+        // swap front for a different model is rejected
+        let mut s = spec_n(1, 0);
+        s.swap = Some(FrontSwap {
+            at_s: 0.1,
+            model: "m".to_string(),
+            fronts: [("vck190".to_string(), front("other"))].into_iter().collect(),
+        });
+        assert!(simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                   RoutePolicy::RoundRobin, 1).is_err());
+    }
+
+    #[test]
+    fn fault_spec_parse() {
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::none());
+        let f = FaultSpec::parse("0.8, 1.2").unwrap();
+        assert_eq!(f.events.len(), 2);
+        assert_eq!(f.events[0], FaultEvent { at_s: 0.8, device: None });
+        assert!(FaultSpec::parse("x").is_err());
+        assert!(FaultSpec::parse("-1").is_err());
+    }
+
+    #[test]
+    fn steady_feasible_load_takes_no_control_actions() {
+        // 3000 req/s on one device whose seq point serves 5000: util 0.6
+        // sits between the water marks; the controller must stay quiet.
+        let s = spec_n(1, 2);
+        let mix = TrafficMix::single("m", RampSpec::parse("3000:3000:3000", 0.3).unwrap());
+        let r = simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                   RoutePolicy::PowerOfTwoSlo, 11).unwrap();
+        assert!(r.events.is_empty(), "spurious control events: {:?}", r.events);
+        assert_eq!(r.devices.len(), 1);
+        assert_eq!(r.requeued, 0);
+        assert_eq!(r.served + r.shed, r.arrivals);
+        assert!((r.device_seconds() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unroutable_class_is_counted_not_lost() {
+        let s = spec_n(1, 0);
+        let ramp = RampSpec::parse("1000", 0.2).unwrap();
+        let mix = TrafficMix {
+            classes: vec![
+                TrafficClass { model: "m".to_string(), ramp: ramp.clone() },
+                TrafficClass { model: "ghost".to_string(), ramp },
+            ],
+        };
+        let r = simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                   RoutePolicy::RoundRobin, 5).unwrap();
+        assert!(r.unroutable > 0);
+        assert_eq!(r.served + r.shed, r.arrivals);
+    }
+}

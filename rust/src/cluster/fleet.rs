@@ -255,6 +255,19 @@ pub fn restrict_front(front: &PlanFront, label: &str) -> Result<PlanFront, Strin
 /// Synthesize a heterogeneous fleet from `(platform, count)` pairs, each
 /// device carrying that platform's analytical front for `model`. Device
 /// ids are `{platform}-{k}`.
+///
+/// ```
+/// use ssr::cluster::fleet::{parse_mix, synth_fleet};
+///
+/// let mix = parse_mix("vck190:2,u250:1").unwrap();
+/// let fleet = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap();
+/// assert_eq!(fleet.len(), 3);
+/// assert_eq!(fleet.devices[0].id, "vck190-0");
+/// assert_eq!(fleet.models(), vec!["deit_t".to_string()]);
+/// // round-trips through JSON unchanged — the provision -> serve artifact
+/// let back = ssr::cluster::FleetSpec::from_json(&fleet.to_json()).unwrap();
+/// assert_eq!(back, fleet);
+/// ```
 pub fn synth_fleet(
     name: &str,
     model: &str,

@@ -21,16 +21,26 @@
 //! * [`provision`] — given a traffic forecast and an SLO, search the
 //!   platform mix + per-device plan selection that minimizes device count
 //!   then power, emitting a ready-to-serve `FleetSpec`.
+//! * [`controller`] — the online closed loop over all of the above:
+//!   watches per-device load estimates and scales the fleet out/in,
+//!   fails devices over (deterministic [`controller::FaultSpec`]
+//!   injection), and rolls out fleet-level front updates one hitless
+//!   drain-and-swap at a time.
 //!
-//! CLI: `ssr cluster provision|simulate|serve`. Invariants (conservation,
-//! determinism, heterogeneous-vs-homogeneous provisioning) are pinned in
-//! `rust/tests/cluster_serving.rs`.
+//! CLI: `ssr cluster provision|simulate|serve|autoscale`. Invariants
+//! (conservation, determinism, heterogeneous-vs-homogeneous
+//! provisioning, autoscale-vs-static device-hours) are pinned in
+//! `rust/tests/cluster_serving.rs` and `rust/tests/fleet_autoscale.rs`.
 
+pub mod controller;
 pub mod fleet;
 pub mod provision;
 pub mod router;
 pub mod sim;
 
+pub use controller::{
+    simulate_autoscale, AutoscaleCfg, AutoscaleReport, AutoscaleSpec, FaultSpec, FrontSwap,
+};
 pub use fleet::{DeviceSpec, FleetSpec};
 pub use provision::{provision, PlatformOption, ProvisionResult};
 pub use router::{DeviceView, RoutePolicy, Router, TrafficClass, TrafficMix};

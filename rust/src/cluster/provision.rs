@@ -80,6 +80,24 @@ pub struct ProvisionResult {
 }
 
 impl ProvisionResult {
+    /// Scale-out candidate pool for the online controller
+    /// ([`crate::cluster::controller`]): `extra` more devices cycling
+    /// through the provisioned platform mix, with ids
+    /// (`{platform}-scale{k}`) disjoint from the fleet's own
+    /// (`{platform}-{k}`).
+    pub fn scale_pool(&self, extra: usize) -> Vec<DeviceSpec> {
+        (0..extra)
+            .map(|k| {
+                let d = &self.fleet.devices[k % self.fleet.len()];
+                DeviceSpec {
+                    id: format!("{}-scale{k}", d.platform),
+                    platform: d.platform.clone(),
+                    front: d.front.clone(),
+                }
+            })
+            .collect()
+    }
+
     pub fn describe(&self) -> String {
         let mut out = format!(
             "provisioned {} devices for {:.0} req/s peak under {} ms SLO \
@@ -352,6 +370,47 @@ mod tests {
         let r = provision("f", &opts, &ramp(9_000.0), 2.0, 1.0).unwrap();
         assert_eq!(r.choices[0].platform, "vck190");
         assert!(provision("f", &opts, &ramp(9_000.0), 0.5, 1.0).is_err());
+    }
+
+    #[test]
+    fn headroom_derates_the_best_under_serving_point() {
+        let opts = [option("vck190", 10_000.0, 20.0, 1.0)];
+        // the Table 6 cell serves 10k req/s; sized at 60% utilization a
+        // device only counts for 6k, so a 9k peak needs two of them
+        let r = provision("f", &opts, &ramp(9_000.0), 5.0, 0.6).unwrap();
+        assert_eq!(r.devices, 2);
+        assert!((r.choices[0].capacity_rps - 6_000.0).abs() < 1e-9);
+        // power is evaluated at the derated operating point, so it sits
+        // strictly below the same entry's full-tilt power
+        let full = provision("f", &opts, &ramp(9_000.0), 5.0, 1.0).unwrap();
+        assert!(
+            r.choices[0].device_w < full.choices[0].device_w,
+            "derated {} W !< full {} W",
+            r.choices[0].device_w,
+            full.choices[0].device_w
+        );
+        // out-of-range headroom clamps instead of corrupting capacity
+        let hi = provision("f", &opts, &ramp(9_000.0), 5.0, 7.0).unwrap();
+        assert!((hi.choices[0].capacity_rps - 10_000.0).abs() < 1e-9);
+        let lo = provision("f", &opts, &ramp(900.0), 5.0, 0.0).unwrap();
+        assert!((lo.choices[0].capacity_rps - 500.0).abs() < 1e-9, "clamps to 0.05");
+    }
+
+    #[test]
+    fn scale_pool_ids_disjoint_and_fronts_match_the_fleet() {
+        let opts = [option("vck190", 10_000.0, 20.0, 1.0)];
+        let r = provision("f", &opts, &ramp(24_000.0), 5.0, 1.0).unwrap();
+        assert_eq!(r.devices, 3);
+        let pool = r.scale_pool(2);
+        assert_eq!(pool.len(), 2);
+        let mut ids: Vec<String> = r.fleet.devices.iter().map(|d| d.id.clone()).collect();
+        ids.extend(pool.iter().map(|d| d.id.clone()));
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "pool ids collide with the fleet");
+        assert_eq!(pool[0].front, r.fleet.devices[0].front);
+        assert!(r.scale_pool(0).is_empty());
     }
 
     #[test]

@@ -86,7 +86,10 @@ pub struct Router {
     /// into per-class eligible sets of different sizes skews the cycle
     /// under a multi-model mix (e.g. classes with 2- and 3-device sets
     /// interleaved 1:1 pin each class to a single device forever) — each
-    /// class cycles its own set independently instead.
+    /// class cycles its own set independently instead. The cursor is
+    /// reduced mod the *current* set size at every pick, so an eligible
+    /// set that grows or shrinks mid-run (autoscaling, drains, failures)
+    /// re-normalizes instead of indexing out of range.
     rr_next: Vec<usize>,
     rng: Rng,
 }
@@ -344,6 +347,30 @@ mod tests {
         assert_eq!(hit[2], 10, "class-1 split skewed: {hit:?}");
         assert_eq!(hit[3], 10, "class-1 split skewed: {hit:?}");
         assert_eq!(hit[4], 10, "class-1 split skewed: {hit:?}");
+    }
+
+    #[test]
+    fn round_robin_cursor_renormalizes_when_the_eligible_set_changes() {
+        // Autoscaling regression: a device added or removed mid-run
+        // changes the eligible set's size between picks. The per-class
+        // cursor must reduce mod the *new* size — never index out of
+        // range — and keep cycling the devices that remain.
+        let mut r = Router::new(RoutePolicy::RoundRobin, Rng::new(1));
+        let v = views(&[0, 0, 0, 0]);
+        // three devices: cursor walks 0, 1 and now sits at 2
+        assert_eq!(r.pick(&v, 0, &[0, 1, 2], 2.0), Some(0));
+        assert_eq!(r.pick(&v, 0, &[0, 1, 2], 2.0), Some(1));
+        // the set shrinks to two (device 2 drained): cursor 2 % 2 = 0
+        assert_eq!(r.pick(&v, 0, &[0, 1], 2.0), Some(0));
+        assert_eq!(r.pick(&v, 0, &[0, 1], 2.0), Some(1));
+        // the set grows to four (scale-out): cycling resumes evenly over
+        // the new membership
+        let picks: Vec<usize> =
+            (0..8).map(|_| r.pick(&v, 0, &[0, 1, 2, 3], 2.0).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        // a different class keeps its own independent cursor throughout
+        assert_eq!(r.pick(&v, 1, &[1, 3], 2.0), Some(1));
+        assert_eq!(r.pick(&v, 1, &[1, 3], 2.0), Some(3));
     }
 
     #[test]

@@ -111,6 +111,19 @@ impl FleetSimReport {
 /// live in the shared per-device core ([`crate::sim::device`]); this
 /// function only assembles devices, routes arrivals, and rolls up the
 /// report.
+///
+/// ```
+/// use ssr::cluster::fleet::{parse_mix, synth_fleet};
+/// use ssr::cluster::{simulate_fleet, RoutePolicy, TrafficMix};
+/// use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+///
+/// let fleet = synth_fleet("demo", "deit_t", &parse_mix("vck190:2").unwrap(), &[1, 6]).unwrap();
+/// let mix = TrafficMix::single("deit_t", RampSpec::parse("2000:4000", 0.2).unwrap());
+/// let cfg = SchedulerCfg { slo_ms: 25.0, ..Default::default() };
+/// let r = simulate_fleet(&fleet, &mix, &cfg, RoutePolicy::PowerOfTwoSlo, 7).unwrap();
+/// assert_eq!(r.served + r.shed, r.arrivals); // conservation, always
+/// assert_eq!(r.devices.len(), 2);
+/// ```
 pub fn simulate_fleet(
     fleet: &FleetSpec,
     mix: &TrafficMix,

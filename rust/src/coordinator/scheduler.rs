@@ -230,6 +230,38 @@ impl LoadEstimator {
         LoadEstimator { horizon_s, arrivals: VecDeque::new(), completions: VecDeque::new() }
     }
 
+    /// The sliding-window span this estimator averages over (seconds).
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    /// Estimate the load at `now_s` without mutating the estimator: the
+    /// read-only twin of [`LoadEstimator::estimate`] (same numbers —
+    /// pruning only discards events the estimate ignores anyway). This is
+    /// what a fleet controller polls when making scale decisions between
+    /// the device's own decision windows.
+    pub fn peek(&self, now_s: f64, queue_depth: usize) -> LoadEstimate {
+        let cut = now_s - self.horizon_s;
+        // Early in the run the horizon has not filled yet: divide by the
+        // elapsed span, not the full horizon, or rates read low.
+        let span = self.horizon_s.min(now_s).max(1e-9);
+        let n_arrivals = self.arrivals.iter().filter(|&&t| t >= cut).count();
+        let mut lat = Summary::new();
+        let mut completed = 0usize;
+        for &(t, l) in &self.completions {
+            if t >= cut {
+                lat.push(l);
+                completed += 1;
+            }
+        }
+        LoadEstimate {
+            rate_rps: n_arrivals as f64 / span,
+            queue_depth,
+            p99_s: if lat.is_empty() { 0.0 } else { lat.p99() },
+            completed,
+        }
+    }
+
     pub fn record_arrival(&mut self, t_s: f64) {
         self.arrivals.push_back(t_s);
     }
@@ -238,7 +270,9 @@ impl LoadEstimator {
         self.completions.push_back((t_s, latency_s));
     }
 
-    /// Estimate the load at `now_s`. Prunes events older than the horizon.
+    /// Estimate the load at `now_s`. Prunes events older than the
+    /// horizon, then computes through [`LoadEstimator::peek`] — one body
+    /// for the math, so the mutating and read-only faces cannot drift.
     pub fn estimate(&mut self, now_s: f64, queue_depth: usize) -> LoadEstimate {
         let cut = now_s - self.horizon_s;
         while self.arrivals.front().is_some_and(|&t| t < cut) {
@@ -247,19 +281,7 @@ impl LoadEstimator {
         while self.completions.front().is_some_and(|&(t, _)| t < cut) {
             self.completions.pop_front();
         }
-        // Early in the run the horizon has not filled yet: divide by the
-        // elapsed span, not the full horizon, or rates read low.
-        let span = self.horizon_s.min(now_s).max(1e-9);
-        let mut lat = Summary::new();
-        for &(_, l) in &self.completions {
-            lat.push(l);
-        }
-        LoadEstimate {
-            rate_rps: self.arrivals.len() as f64 / span,
-            queue_depth,
-            p99_s: if lat.is_empty() { 0.0 } else { lat.p99() },
-            completed: self.completions.len(),
-        }
+        self.peek(now_s, queue_depth)
     }
 }
 
@@ -758,6 +780,26 @@ mod tests {
         assert_eq!(est.rate_rps, 0.0);
         assert_eq!(est.completed, 0);
         assert_eq!(est.p99_s, 0.0);
+    }
+
+    #[test]
+    fn peek_matches_estimate_and_does_not_mutate() {
+        let mut e = LoadEstimator::new(0.2);
+        for i in 0..50 {
+            e.record_arrival(i as f64 * 2e-3);
+        }
+        e.record_completion(0.09, 1e-3);
+        let peeked = e.peek(0.1, 2);
+        let estimated = e.estimate(0.1, 2);
+        assert_eq!(peeked.rate_rps, estimated.rate_rps);
+        assert_eq!(peeked.completed, estimated.completed);
+        assert_eq!(peeked.p99_s, estimated.p99_s);
+        assert_eq!(peeked.queue_depth, 2);
+        // peek after estimate's pruning still agrees (pruned events were
+        // outside the horizon either way)
+        let again = e.peek(0.1, 2);
+        assert_eq!(again.rate_rps, estimated.rate_rps);
+        assert!((e.horizon_s() - 0.2).abs() < 1e-12);
     }
 
     #[test]

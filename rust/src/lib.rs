@@ -12,14 +12,17 @@
 //!   representation ([`plan`]), comparison
 //!   baselines ([`baselines`]), a PJRT serving runtime ([`runtime`] +
 //!   [`coordinator`]), a heterogeneous multi-device fleet layer — specs,
-//!   routing, fleet simulation, provisioning — ([`cluster`]), and report
-//!   generators for every paper table/figure ([`report`]).
+//!   routing, fleet simulation, provisioning, and a closed-loop
+//!   autoscaling controller with failure injection and hitless rolling
+//!   front swaps — ([`cluster`]), and report generators for every paper
+//!   table/figure ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
 //!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
 //!   runtime serves.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! See ARCHITECTURE.md for the module map and the conventions the
+//! subsystems share (event-loop tie order, `{committed, draining}` plan
+//! state, device lifecycle), and README.md for the CLI reference.
 
 pub mod analytical;
 pub mod arch;

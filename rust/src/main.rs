@@ -12,7 +12,10 @@
 //!                     front adaptively via --front)
 //!   cluster           fleet layer: `provision` a platform mix for a traffic
 //!                     forecast, `simulate` a fleet deterministically, `serve`
-//!                     it live (one adaptive server per device + router)
+//!                     it live (one adaptive server per device + router), or
+//!                     `autoscale` it closed-loop (scale out/in against the
+//!                     observed load, deterministic failure injection via
+//!                     --fail, hitless rolling front swaps via --swap-at)
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use std::path::Path;
@@ -21,7 +24,11 @@ use ssr::analytical::{Calib, Features};
 use ssr::arch;
 use ssr::cluster::fleet::{parse_mix, synth_fleet};
 use ssr::cluster::router::FleetServer;
-use ssr::cluster::{simulate_fleet, FleetSpec, PlatformOption, RoutePolicy, TrafficMix};
+use ssr::cluster::{
+    simulate_fleet, AutoscaleCfg, AutoscaleSpec, FaultSpec, FleetSpec, FrontSwap,
+    PlatformOption, RoutePolicy, TrafficMix,
+};
+use ssr::sim::device::DeviceState;
 use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
 use ssr::coordinator::scheduler::{AdaptiveServer, RampSpec, SchedulerCfg};
 use ssr::coordinator::StageAssign;
@@ -591,9 +598,10 @@ fn cmd_cluster(args: &[String]) -> i32 {
         "provision" => cluster_provision(&rest),
         "simulate" => cluster_simulate(&rest),
         "serve" => cluster_serve(&rest),
+        "autoscale" => cluster_autoscale(&rest),
         _ => {
             eprintln!(
-                "usage: ssr cluster <provision|simulate|serve> [flags]\n\
+                "usage: ssr cluster <provision|simulate|serve|autoscale> [flags]\n\
                  run `ssr cluster <verb> --help` for flags"
             );
             if verb == "help" {
@@ -809,6 +817,188 @@ fn cluster_serve(args: &[String]) -> i32 {
         outcome.unroutable,
         outcome.per_device.len(),
         policy.name()
+    );
+    0
+}
+
+fn cluster_autoscale(args: &[String]) -> i32 {
+    let cmd = cluster_flags(Command::new(
+        "ssr cluster autoscale",
+        "closed-loop fleet autoscaling: scale out/in, fail over, hitless front swaps",
+    ))
+    .flag("fleet", Some(""), "initial FleetSpec JSON (from `ssr cluster provision --out`)")
+    .flag("synth", Some("vck190:1"), "initial fleet to synthesize when --fleet is absent")
+    .flag("pool", Some("vck190:2"), "scale-out candidate pool (platform:count,...; \"\" = none)")
+    .flag("high-water", Some("0.85"), "fleet utilization that arms scale-out")
+    .flag("low-water", Some("0.30"), "fleet utilization that arms scale-in")
+    .flag("ctl-patience", Some("2"), "control intervals a breach persists before acting")
+    .flag("ctl-every", Some("2"), "control interval, in decision windows")
+    .flag("min-devices", Some("1"), "never scale in below this many serving devices")
+    .flag("fail", Some(""), "fault injection: kill times in seconds (t1,t2,...)")
+    .flag("swap-at", Some(""), "roll out new fronts at this time (hitless, one device at a time)")
+    .flag("swap-batches", Some("1,2,3,6"), "batch grid of the swapped-in fronts");
+    let m = parse_or_exit(cmd, args);
+    let fleet = match load_fleet(&m) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let policy = match RoutePolicy::parse(&m.str("policy")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ramp = parse_ramp_or_exit(&m);
+    let cfg = scheduler_cfg(&m);
+    let model = m.str("model");
+    let ctl_cfg = AutoscaleCfg {
+        high_water: m.f64("high-water"),
+        low_water: m.f64("low-water"),
+        patience: m.usize("ctl-patience"),
+        control_windows: m.usize("ctl-every"),
+        min_devices: m.usize("min-devices"),
+    };
+    // Scale-out candidates: synthesized like the fleet, ids prefixed so
+    // they can never collide with the initial devices'. An empty --pool
+    // means no pool (failover/scale-in-only runs).
+    let pool: Vec<ssr::cluster::DeviceSpec> = if m.str("pool").trim().is_empty() {
+        Vec::new()
+    } else {
+        match parse_mix(&m.str("pool"))
+            .and_then(|mix| synth_fleet("pool", &model, &mix, &m.usize_list("batches")))
+        {
+            Ok(p) => p
+                .devices
+                .into_iter()
+                .map(|mut d| {
+                    d.id = format!("pool-{}", d.id);
+                    d
+                })
+                .collect(),
+            Err(e) => {
+                eprintln!("bad --pool: {e}");
+                return 2;
+            }
+        }
+    };
+    let faults = match FaultSpec::parse(&m.str("fail")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let swap_at = m.str("swap-at");
+    let swap = if swap_at.is_empty() {
+        None
+    } else {
+        let at_s: f64 = match swap_at.parse() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bad --swap-at '{swap_at}': {e}");
+                return 2;
+            }
+        };
+        // One replacement front per platform present in fleet + pool,
+        // re-synthesized on the --swap-batches grid.
+        let mut platforms: Vec<String> =
+            fleet.devices.iter().map(|d| d.platform.clone()).collect();
+        platforms.extend(pool.iter().map(|d: &ssr::cluster::DeviceSpec| d.platform.clone()));
+        platforms.sort();
+        platforms.dedup();
+        let mut fronts = std::collections::BTreeMap::new();
+        for p in &platforms {
+            match ssr::cluster::fleet::device_front(p, &model, &m.usize_list("swap-batches")) {
+                Ok(f) => {
+                    fronts.insert(p.clone(), f);
+                }
+                Err(e) => {
+                    eprintln!("swap front for {p}: {e}");
+                    return 2;
+                }
+            }
+        }
+        Some(FrontSwap { at_s, model: model.clone(), fronts })
+    };
+    let spec = AutoscaleSpec { fleet, pool, faults, swap };
+    let mix = TrafficMix::single(&model, ramp);
+    print!("{}", spec.fleet.describe());
+    println!(
+        "policy {}, slo {} ms, window {} ms, water {:.2}/{:.2}, control every {} windows \
+         (patience {}), pool of {}, ramp {:?} req/s x {} s",
+        policy.name(),
+        cfg.slo_ms,
+        cfg.window_s * 1e3,
+        ctl_cfg.low_water,
+        ctl_cfg.high_water,
+        ctl_cfg.control_windows,
+        ctl_cfg.patience,
+        spec.pool.len(),
+        mix.classes[0].ramp.rates_rps,
+        mix.classes[0].ramp.phase_s
+    );
+    let r = match ssr::cluster::simulate_autoscale(
+        &spec,
+        &mix,
+        &cfg,
+        &ctl_cfg,
+        policy,
+        m.usize("load-seed") as u64,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    if r.events.is_empty() {
+        println!("no control events (load stayed between the water marks)");
+    }
+    for e in &r.events {
+        println!("{}", e.describe());
+    }
+    let mut t = ssr::bench::Table::new(&[
+        "device", "platform", "live (s)", "state", "routed", "served", "shed", "req out",
+        "req in", "p99 (ms)", "switches", "final plan",
+    ]);
+    for d in &r.devices {
+        let ended = d.ended_s.unwrap_or(r.duration_s);
+        let state = match d.final_state {
+            DeviceState::Active => "active",
+            DeviceState::Draining => "draining",
+            DeviceState::Retired => "retired",
+            DeviceState::Failed => "FAILED",
+        };
+        t.row(&[
+            d.id.clone(),
+            d.platform.clone(),
+            format!("{:.2}-{:.2}", d.added_s, ended),
+            state.to_string(),
+            d.routed.to_string(),
+            d.served.to_string(),
+            d.shed.to_string(),
+            d.requeued_away.to_string(),
+            d.requeued_in.to_string(),
+            // a device that never served has no latency samples (NaN)
+            if d.served > 0 { format!("{:.3}", d.p99_ms) } else { "-".to_string() },
+            d.switches.to_string(),
+            format!("[{}]", d.final_committed),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", r.summary_line());
+    let peak = r.peak_live_devices();
+    println!(
+        "device-time: {:.2} device-s autoscaled vs {:.2} device-s at static peak \
+         ({} devices x {:.2} s)",
+        r.device_seconds(),
+        peak as f64 * r.duration_s,
+        peak,
+        r.duration_s
     );
     0
 }

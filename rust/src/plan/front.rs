@@ -146,6 +146,23 @@ impl PlanFront {
 
     /// Highest-rate entry meeting the latency SLO (Table 6 semantics on
     /// the serve-time front); None when nothing fits.
+    ///
+    /// ```
+    /// use ssr::plan::front::{FrontEntry, PlanFront};
+    ///
+    /// let entry = |assign: Vec<usize>, lat_ms: f64, rps: f64, label: &str| FrontEntry {
+    ///     nacc: assign.iter().max().unwrap() + 1,
+    ///     assign, batch: 1, latency_ms: lat_ms, tops: 0.0, rps,
+    ///     label: label.to_string(),
+    /// };
+    /// let front = PlanFront::new("deit_t", 12, vec![
+    ///     entry(vec![0; 8], 0.22, 4545.0, "sequential"),
+    ///     entry((0..8).collect(), 0.58, 10344.0, "spatial"),
+    /// ]).unwrap();
+    /// assert_eq!(front.best_under(2.0), Some(1)); // throughput point fits
+    /// assert_eq!(front.best_under(0.3), Some(0)); // only the latency point
+    /// assert_eq!(front.best_under(0.1), None);    // the Table 6 "x" cell
+    /// ```
     pub fn best_under(&self, slo_ms: f64) -> Option<usize> {
         self.entries
             .iter()

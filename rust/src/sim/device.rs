@@ -10,25 +10,43 @@
 //! [`LoadEstimator`] + [`AdaptiveScheduler`] wiring, admission control,
 //! per-window [`WindowStat`] snapshots, and tallies; one [`run_timeline`]
 //! event loop owns the tie order. The two public sims are thin adapters
-//! over these and can no longer fork.
+//! over these and can no longer fork. The fleet autoscaler
+//! ([`crate::cluster::controller`]) drives the same core through
+//! [`run_timeline_controlled`], adding device lifecycle transitions
+//! without forking the queueing semantics either.
 //!
 //! ## The contract
 //!
 //! * **Event tie order** (deterministic): launch **completion** (lowest
 //!   device index first on exact time ties), then the decision **window**
-//!   tick, then the **arrival**.
-//! * **Drain-and-swap**: a switch committed by the scheduler while a
-//!   launch is in flight becomes `draining` and is applied to `committed`
-//!   at that launch's completion; queued requests carry over to the new
-//!   plan and are never dropped. With no launch in flight the switch
-//!   applies immediately.
+//!   tick (all devices, index order, then the fleet-control hook), then
+//!   the **arrival**.
+//! * **Drain-and-swap** (plan level): a switch committed by the scheduler
+//!   while a launch is in flight becomes `draining` and is applied to
+//!   `committed` at that launch's completion; queued requests carry over
+//!   to the new plan and are never dropped. With no launch in flight the
+//!   switch applies immediately.
 //! * **Admission before queueing**: every routed arrival is recorded with
 //!   the estimator (shed ones included — the estimator sees offered load),
-//!   then either queued or explicitly shed. `served + shed == routed` per
-//!   device, always.
+//!   then either queued or explicitly shed. `served + shed +
+//!   requeued_away == routed` per device, always (`requeued_away` is zero
+//!   unless a fleet controller drains or fails the device).
 //! * **Admission is judged against the scheduler's active plan** (the
 //!   switch target while draining), not the plan still executing — the
 //!   queue being admitted will drain on the new plan.
+//!
+//! ## Two kinds of "draining"
+//!
+//! The word shows up at two different levels; the code keeps them apart:
+//!
+//! * **plan drain** — `DeviceSim::draining: Option<usize>`: a committed
+//!   *plan switch* waiting for the in-flight launch to finish. The device
+//!   keeps serving throughout.
+//! * **lifecycle drain** — [`DeviceState::Draining`]: the *device itself*
+//!   is leaving the fleet (scale-in or a rolling front swap). The router
+//!   stops sending it traffic, its queued requests are requeued onto
+//!   peers, and the in-flight launch finishes before the device retires —
+//!   hitless decommission.
 //!
 //! ## Divergences the unification fixed
 //!
@@ -46,10 +64,35 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::scheduler::{
-    AdaptiveScheduler, LoadEstimator, SchedulerCfg, SwitchRecord,
+    AdaptiveScheduler, LoadEstimate, LoadEstimator, SchedulerCfg, SwitchRecord,
 };
 use crate::plan::front::{FrontEntry, PlanFront};
 use crate::util::stats::Summary;
+
+/// Lifecycle of one simulated device (distinct from the *plan*-level
+/// drain-and-swap; see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Serving: the router may send it traffic.
+    Active,
+    /// Leaving the fleet: no new traffic, queue already requeued onto
+    /// peers, in-flight launch still completing.
+    Draining,
+    /// Decommissioned cleanly (drain finished). Terminal.
+    Retired,
+    /// Killed by fault injection; its queue and in-flight work were
+    /// requeued onto survivors. Terminal.
+    Failed,
+}
+
+/// One request in the system: when it arrived (fleet clock) and which
+/// traffic class it belongs to. The class travels with the request so a
+/// drain or failover can re-route it to an eligible peer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Req {
+    pub arrived_s: f64,
+    pub class: usize,
+}
 
 /// Per-window snapshot of one device's simulated state.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -68,10 +111,10 @@ pub struct WindowStat {
     pub draining: Option<usize>,
 }
 
-/// One in-flight launch: the arrival times it serves and its completion.
+/// One in-flight launch: the requests it serves and its completion time.
 struct Launch {
     done_s: f64,
-    arrivals: Vec<f64>,
+    arrivals: Vec<Req>,
 }
 
 /// Outcome of one launch completion, for fleet-level rollups.
@@ -87,10 +130,15 @@ pub struct Completed {
 /// [`crate::cluster::sim::DeviceStat`]) are assembled from.
 #[derive(Clone, Debug)]
 pub struct DeviceSimReport {
-    /// Requests routed to this device (`served + shed`).
+    /// Requests routed to this device (`served + shed + requeued_away`),
+    /// including requeues that landed here from a drained/failed peer.
     pub routed: usize,
     pub served: usize,
     pub shed: usize,
+    /// Requests handed off to peers when this device drained or failed.
+    pub requeued_away: usize,
+    /// Requests that landed here after a peer drained or failed.
+    pub requeued_in: usize,
     /// Per-request sojourn time (queue wait + service), served requests.
     pub latency: Summary,
     pub max_queue_depth: usize,
@@ -101,25 +149,32 @@ pub struct DeviceSimReport {
     /// Switch target still draining when the run ended (`None` after a
     /// clean drain: the event loop always completes in-flight launches).
     pub final_draining: Option<usize>,
+    /// Lifecycle state when the run ended ([`DeviceState::Active`] for
+    /// every device of a static, uncontrolled fleet).
+    pub lifecycle: DeviceState,
 }
 
 /// One device's complete simulation state: queue, in-flight launch, the
 /// exact drain-and-swap point, scheduler + estimator wiring, admission,
-/// window snapshots, and tallies. Drive it only through [`run_timeline`]
-/// (or mirror its tie order exactly).
+/// window snapshots, lifecycle, and tallies. Drive it only through
+/// [`run_timeline`] / [`run_timeline_controlled`] (or mirror their tie
+/// order exactly).
 pub struct DeviceSim {
     sched: AdaptiveScheduler,
     est: LoadEstimator,
-    queue: VecDeque<f64>,
+    queue: VecDeque<Req>,
     in_flight: Option<Launch>,
     /// Plan executing the current launch — lags `sched.active()` while a
     /// committed switch drains.
     committed: usize,
     /// Committed switch target waiting for the in-flight launch to drain.
     draining: Option<usize>,
+    lifecycle: DeviceState,
     routed: usize,
     served: usize,
     shed: usize,
+    requeued_away: usize,
+    requeued_in: usize,
     latency: Summary,
     max_queue_depth: usize,
     windows: Vec<WindowStat>,
@@ -136,9 +191,12 @@ impl DeviceSim {
             in_flight: None,
             committed,
             draining: None,
+            lifecycle: DeviceState::Active,
             routed: 0,
             served: 0,
             shed: 0,
+            requeued_away: 0,
+            requeued_in: 0,
             latency: Summary::new(),
             max_queue_depth: 0,
             windows: Vec::new(),
@@ -149,6 +207,42 @@ impl DeviceSim {
     /// service curve; lags the scheduler's choice while a switch drains).
     pub fn committed_entry(&self) -> &FrontEntry {
         &self.sched.front.entries[self.committed]
+    }
+
+    /// Model this device serves (its front's model).
+    pub fn model(&self) -> &str {
+        &self.sched.front.model
+    }
+
+    pub fn state(&self) -> DeviceState {
+        self.lifecycle
+    }
+
+    /// Routable: the dispatcher may send this device new traffic.
+    pub fn is_serving(&self) -> bool {
+        self.lifecycle == DeviceState::Active
+    }
+
+    /// Powered: the board is still occupied (serving or finishing its
+    /// drain) — what device-hour accounting bills for.
+    pub fn is_live(&self) -> bool {
+        matches!(self.lifecycle, DeviceState::Active | DeviceState::Draining)
+    }
+
+    /// Per-window snapshots recorded so far.
+    pub fn window_stats(&self) -> &[WindowStat] {
+        &self.windows
+    }
+
+    pub fn last_window(&self) -> Option<&WindowStat> {
+        self.windows.last()
+    }
+
+    /// Current load estimate without mutating the estimator — what a
+    /// fleet controller polls between decision windows (see
+    /// [`LoadEstimator::peek`]).
+    pub fn load_estimate(&self, now_s: f64) -> LoadEstimate {
+        self.est.peek(now_s, self.queue.len())
     }
 
     /// Requests queued or in flight — the router-visible depth.
@@ -169,37 +263,48 @@ impl DeviceSim {
         }
         let e = &self.sched.front.entries[self.committed];
         let take = e.batch.min(self.queue.len());
-        let batch: Vec<f64> = self.queue.drain(..take).collect();
+        let batch: Vec<Req> = self.queue.drain(..take).collect();
         self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
     }
 
     /// Handle the in-flight launch's completion — the drain point: tally
     /// each request's sojourn, apply a draining switch, start the next
-    /// launch on the (possibly new) committed plan.
+    /// launch on the (possibly new) committed plan, and retire the device
+    /// if it was lifecycle-draining and is now empty.
     pub fn on_completion(&mut self) -> Completed {
         let launch = self.in_flight.take().expect("on_completion with no launch in flight");
         let done_s = launch.done_s;
-        let mut sojourns = launch.arrivals;
-        for a in sojourns.iter_mut() {
-            let sojourn = done_s - *a;
+        let mut sojourns = Vec::with_capacity(launch.arrivals.len());
+        for req in &launch.arrivals {
+            let sojourn = done_s - req.arrived_s;
             self.latency.push(sojourn);
             self.est.record_completion(done_s, sojourn);
             self.served += 1;
-            *a = sojourn;
+            sojourns.push(sojourn);
         }
         if let Some(to) = self.draining.take() {
             self.committed = to; // drain complete: swap now
         }
         self.start_launch(done_s);
+        if self.lifecycle == DeviceState::Draining && self.in_flight.is_none() {
+            // queue was requeued at begin_drain, the last launch just
+            // landed: hitless decommission complete
+            self.lifecycle = DeviceState::Retired;
+        }
         Completed { done_s, sojourns }
     }
 
     /// Run one decision window: estimate the load, let the scheduler
     /// decide (drain-and-swap when a launch is in flight, immediate swap
-    /// when idle), and record the [`WindowStat`].
+    /// when idle), and record the [`WindowStat`]. Retired/failed devices
+    /// are inert; lifecycle-draining devices record stats but make no
+    /// plan decisions (no new work will arrive).
     pub fn on_window(&mut self, window: usize, end_s: f64) {
+        if !self.is_live() {
+            return;
+        }
         let snapshot = self.est.estimate(end_s, self.queue.len());
-        if self.draining.is_none() {
+        if self.lifecycle == DeviceState::Active && self.draining.is_none() {
             if let Some(to) = self.sched.on_window(window, end_s, &snapshot) {
                 if self.in_flight.is_some() {
                     self.draining = Some(to); // drain-and-swap
@@ -222,11 +327,11 @@ impl DeviceSim {
     /// Handle one routed arrival: record it with the estimator (offered
     /// load includes what admission sheds), then admit into the queue or
     /// shed explicitly. Returns whether the request was admitted.
-    pub fn on_arrival(&mut self, t: f64) -> bool {
+    pub fn on_arrival(&mut self, t: f64, class: usize) -> bool {
         self.routed += 1;
         self.est.record_arrival(t);
         if self.sched.admit(self.queue.len()) {
-            self.queue.push_back(t);
+            self.queue.push_back(Req { arrived_s: t, class });
             self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
             self.start_launch(t);
             true
@@ -236,18 +341,80 @@ impl DeviceSim {
         }
     }
 
+    /// Accept a request requeued from a drained/failed peer at `now_s`.
+    /// The request keeps its original arrival time (its sojourn honestly
+    /// includes the time lost on the old device), but the estimator and
+    /// any fresh launch run on the fleet clock — a launch can never start
+    /// in the past. Requeues pass the same admission control as fresh
+    /// arrivals: a saturated survivor sheds rather than queueing
+    /// unboundedly.
+    pub fn on_requeue(&mut self, req: Req, now_s: f64) -> bool {
+        self.routed += 1;
+        self.requeued_in += 1;
+        self.est.record_arrival(now_s);
+        if self.sched.admit(self.queue.len()) {
+            self.queue.push_back(req);
+            self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+            self.start_launch(now_s);
+            true
+        } else {
+            self.shed += 1;
+            false
+        }
+    }
+
+    /// Begin hitless decommission (scale-in, or one step of a rolling
+    /// front swap): stop being routable, hand the queued requests back for
+    /// re-dispatch onto peers, and keep only the in-flight launch, which
+    /// retires the device at its completion. A device with nothing in
+    /// flight retires immediately. No-op (empty) unless currently active.
+    pub fn begin_drain(&mut self) -> Vec<Req> {
+        if self.lifecycle != DeviceState::Active {
+            return Vec::new();
+        }
+        let moved: Vec<Req> = self.queue.drain(..).collect();
+        self.requeued_away += moved.len();
+        self.lifecycle = if self.in_flight.is_some() {
+            DeviceState::Draining
+        } else {
+            DeviceState::Retired
+        };
+        moved
+    }
+
+    /// Kill the device (fault injection): the in-flight launch dies
+    /// mid-service and both it and the queue are handed back for
+    /// re-dispatch onto survivors, original arrival times preserved.
+    /// No-op (empty) unless the device is live.
+    pub fn fail(&mut self) -> Vec<Req> {
+        if !self.is_live() {
+            return Vec::new();
+        }
+        // FIFO by arrival: the killed launch's requests precede the queue.
+        let mut moved: Vec<Req> =
+            self.in_flight.take().map(|l| l.arrivals).unwrap_or_default();
+        moved.extend(self.queue.drain(..));
+        self.requeued_away += moved.len();
+        self.draining = None;
+        self.lifecycle = DeviceState::Failed;
+        moved
+    }
+
     /// Consume the device into its end-of-run tally.
     pub fn into_report(self) -> DeviceSimReport {
         DeviceSimReport {
             routed: self.routed,
             served: self.served,
             shed: self.shed,
+            requeued_away: self.requeued_away,
+            requeued_in: self.requeued_in,
             latency: self.latency,
             max_queue_depth: self.max_queue_depth,
             switches: self.sched.switches,
             windows: self.windows,
             final_committed: self.committed,
             final_draining: self.draining,
+            lifecycle: self.lifecycle,
         }
     }
 }
@@ -256,8 +423,17 @@ impl DeviceSim {
 pub struct TimelineOutcome {
     /// Sojourn times across every device, in completion order.
     pub latency: Summary,
+    /// `(completion time, sojourn)` per served request, in completion
+    /// order — lets a caller attribute latency back to arrival time
+    /// (`arrived = done - sojourn`), e.g. per ramp phase.
+    pub completions: Vec<(f64, f64)>,
     /// Arrivals the `route` callback declined (no eligible device).
     pub unroutable: usize,
+    /// Requests handed back by the control hook (drains + failures).
+    pub requeued: usize,
+    /// Requeued requests no eligible device could take — terminally lost
+    /// to the caller's accounting (a fleet report counts them as shed).
+    pub requeue_lost: usize,
     /// Completion time of the last served request (0 when nothing served).
     pub makespan_s: f64,
     /// Decision windows ticked (`round(duration_s / window_s)` — rounded,
@@ -266,21 +442,62 @@ pub struct TimelineOutcome {
     pub n_windows: usize,
 }
 
-/// The shared discrete-event loop: replay a merged `(arrival time, class)`
-/// timeline against `devs`, dispatching each arrival through `route`
-/// (`route(devs, class, t)` returns the device index, or `None` for an
-/// unroutable class). Every tie-order decision lives here and only here:
-/// completion (lowest device index first), then window tick, then arrival.
+/// Fleet-level control consulted once per decision window, after every
+/// device ticked. The hook may mutate the fleet — push scale-out devices,
+/// [`DeviceSim::begin_drain`] one, [`DeviceSim::fail`] one — and returns
+/// the requests those transitions displaced; the event loop re-dispatches
+/// them through the router at the window boundary. [`NoControl`] is the
+/// static-fleet no-op.
+pub trait FleetControl {
+    fn after_window(&mut self, devs: &mut Vec<DeviceSim>, window: usize, end_s: f64)
+        -> Vec<Req>;
+}
+
+/// The do-nothing control: a static fleet.
+pub struct NoControl;
+
+impl FleetControl for NoControl {
+    fn after_window(&mut self, _: &mut Vec<DeviceSim>, _: usize, _: f64) -> Vec<Req> {
+        Vec::new()
+    }
+}
+
+/// The shared discrete-event loop for a static fleet: replay a merged
+/// `(arrival time, class)` timeline against `devs`, dispatching each
+/// arrival through `route` (`route(devs, class, t)` returns the device
+/// index, or `None` for an unroutable class). Every tie-order decision
+/// lives in [`run_timeline_controlled`] and only there: completion
+/// (lowest device index first), then window tick, then arrival.
 pub fn run_timeline(
-    devs: &mut [DeviceSim],
+    devs: &mut Vec<DeviceSim>,
+    timeline: &[(f64, usize)],
+    duration_s: f64,
+    window_s: f64,
+    route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+) -> TimelineOutcome {
+    run_timeline_controlled(devs, timeline, duration_s, window_s, route, &mut NoControl)
+}
+
+/// [`run_timeline`] plus a [`FleetControl`] hook: the autoscaling /
+/// failover / rolling-swap face of the same event loop. With
+/// [`NoControl`] the behavior is bit-identical to the static loop — the
+/// hook runs after all devices ticked a window and its displaced requests
+/// are re-dispatched through `route` at the window boundary, in the order
+/// the hook returned them.
+pub fn run_timeline_controlled(
+    devs: &mut Vec<DeviceSim>,
     timeline: &[(f64, usize)],
     duration_s: f64,
     window_s: f64,
     mut route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
 ) -> TimelineOutcome {
     let n_windows = (duration_s / window_s).round() as usize;
     let mut latency = Summary::new();
+    let mut completions = Vec::new();
     let mut unroutable = 0usize;
+    let mut requeued = 0usize;
+    let mut requeue_lost = 0usize;
     let mut makespan_s = 0.0f64;
     let mut ai = 0usize; // next arrival index
     let mut w = 0usize; // next window index
@@ -307,12 +524,23 @@ pub fn run_timeline(
             let done = devs[done_dev].on_completion();
             for &s in &done.sojourns {
                 latency.push(s);
+                completions.push((done.done_s, s));
             }
             makespan_s = makespan_s.max(done.done_s);
         } else if t_win <= t_arr {
-            // -- decision window boundary (all devices) ------------------
+            // -- decision window boundary (all devices, then control) ----
             for d in devs.iter_mut() {
                 d.on_window(w, t_win);
+            }
+            let moved = ctl.after_window(devs, w, t_win);
+            requeued += moved.len();
+            for req in moved {
+                match route(devs, req.class, t_win) {
+                    Some(di) => {
+                        devs[di].on_requeue(req, t_win);
+                    }
+                    None => requeue_lost += 1,
+                }
             }
             w += 1;
         } else {
@@ -321,14 +549,22 @@ pub fn run_timeline(
             match route(devs, class, t) {
                 None => unroutable += 1,
                 Some(di) => {
-                    devs[di].on_arrival(t);
+                    devs[di].on_arrival(t, class);
                 }
             }
             ai += 1;
         }
     }
 
-    TimelineOutcome { latency, unroutable, makespan_s, n_windows }
+    TimelineOutcome {
+        latency,
+        completions,
+        unroutable,
+        requeued,
+        requeue_lost,
+        makespan_s,
+        n_windows,
+    }
 }
 
 #[cfg(test)]
@@ -365,8 +601,8 @@ mod tests {
     fn launch_batches_and_completes_in_fifo_order() {
         let mut d = DeviceSim::new(front(), cfg());
         assert_eq!(d.next_completion_s(), f64::INFINITY);
-        assert!(d.on_arrival(0.0)); // starts a batch-1 launch immediately
-        assert!(d.on_arrival(0.00005));
+        assert!(d.on_arrival(0.0, 0)); // starts a batch-1 launch immediately
+        assert!(d.on_arrival(0.00005, 0));
         assert_eq!(d.depth(), 2);
         let done = d.on_completion();
         assert_eq!(done.sojourns.len(), 1);
@@ -381,6 +617,7 @@ mod tests {
         assert_eq!(r.shed, 0);
         assert_eq!(r.routed, 2);
         assert_eq!(r.final_draining, None);
+        assert_eq!(r.lifecycle, DeviceState::Active);
     }
 
     #[test]
@@ -392,7 +629,7 @@ mod tests {
         // saturate the estimator with arrivals so the scheduler wants the
         // throughput point (demand >> seq capacity)
         for i in 0..600 {
-            d.on_arrival(i as f64 * 1e-4); // 10k req/s offered
+            d.on_arrival(i as f64 * 1e-4, 0); // 10k req/s offered
         }
         let c = cfg();
         // patience windows of sustained overload commit the switch
@@ -426,10 +663,133 @@ mod tests {
             (class == 0).then_some(0)
         });
         assert_eq!(out.unroutable, 1);
+        assert_eq!(out.requeued, 0);
+        assert_eq!(out.requeue_lost, 0);
         assert_eq!(out.n_windows, 10);
+        assert_eq!(out.completions.len(), out.latency.len());
         let r = devs.pop().unwrap().into_report();
         assert_eq!(r.routed, 2);
         assert_eq!(r.served + r.shed, r.routed);
         assert_eq!(r.windows.len(), 10);
+    }
+
+    #[test]
+    fn begin_drain_requeues_queue_and_retires_at_completion() {
+        let mut d = DeviceSim::new(front(), cfg());
+        for i in 0..5 {
+            d.on_arrival(i as f64 * 1e-5, 0); // 1 in flight + 4 queued
+        }
+        assert_eq!(d.depth(), 5);
+        let moved = d.begin_drain();
+        assert_eq!(moved.len(), 4, "queued requests move to peers");
+        assert_eq!(d.state(), DeviceState::Draining);
+        assert!(d.is_live() && !d.is_serving());
+        assert_eq!(d.depth(), 1, "in-flight launch keeps draining");
+        d.on_completion();
+        assert_eq!(d.state(), DeviceState::Retired);
+        // idempotent: draining/retired devices hand back nothing more
+        assert!(d.begin_drain().is_empty());
+        let r = d.into_report();
+        assert_eq!(r.requeued_away, 4);
+        assert_eq!(r.served + r.shed + r.requeued_away, r.routed);
+        assert_eq!(r.lifecycle, DeviceState::Retired);
+    }
+
+    #[test]
+    fn drain_with_idle_device_retires_immediately() {
+        let mut d = DeviceSim::new(front(), cfg());
+        assert!(d.begin_drain().is_empty());
+        assert_eq!(d.state(), DeviceState::Retired);
+    }
+
+    #[test]
+    fn fail_requeues_in_flight_and_queue_fifo() {
+        let mut d = DeviceSim::new(front(), cfg());
+        for i in 0..3 {
+            d.on_arrival(i as f64 * 1e-5, 7);
+        }
+        let moved = d.fail();
+        assert_eq!(moved.len(), 3, "in-flight + queued all move");
+        // FIFO by arrival: the killed launch's request first
+        assert!(moved.windows(2).all(|w| w[0].arrived_s <= w[1].arrived_s));
+        assert!(moved.iter().all(|r| r.class == 7), "class travels with the request");
+        assert_eq!(d.state(), DeviceState::Failed);
+        assert_eq!(d.next_completion_s(), f64::INFINITY, "killed launch never completes");
+        assert!(d.fail().is_empty(), "failing a dead device is a no-op");
+        let r = d.into_report();
+        assert_eq!(r.served, 0);
+        assert_eq!(r.requeued_away, 3);
+        assert_eq!(r.served + r.shed + r.requeued_away, r.routed);
+    }
+
+    #[test]
+    fn requeue_keeps_original_arrival_time_but_launches_on_the_fleet_clock() {
+        let mut d = DeviceSim::new(front(), cfg());
+        // request arrived at t=0.01 elsewhere, requeued here at t=0.05
+        assert!(d.on_requeue(Req { arrived_s: 0.01, class: 0 }, 0.05));
+        let done = d.on_completion();
+        // launch started at 0.05 (not in the past), sojourn spans from 0.01
+        assert!((done.done_s - (0.05 + 0.2e-3)).abs() < 1e-12);
+        assert!((done.sojourns[0] - (0.04 + 0.2e-3)).abs() < 1e-12);
+        let r = d.into_report();
+        assert_eq!(r.requeued_in, 1);
+        assert_eq!(r.served, 1);
+    }
+
+    #[test]
+    fn retired_and_failed_devices_record_no_further_windows() {
+        let mut d = DeviceSim::new(front(), cfg());
+        d.on_window(0, 0.05);
+        assert_eq!(d.window_stats().len(), 1);
+        d.fail();
+        d.on_window(1, 0.10);
+        assert_eq!(d.window_stats().len(), 1, "failed device must be inert");
+    }
+
+    #[test]
+    fn controlled_timeline_redispatches_a_failed_devices_work() {
+        // Two devices; a control hook kills device 0 at the first window.
+        // Its queued work must land on device 1 and be served — nothing
+        // lost, conservation across the handoff.
+        struct KillAtWindow(usize, bool);
+        impl FleetControl for KillAtWindow {
+            fn after_window(
+                &mut self,
+                devs: &mut Vec<DeviceSim>,
+                w: usize,
+                _end_s: f64,
+            ) -> Vec<Req> {
+                if w == self.0 && !self.1 {
+                    self.1 = true;
+                    return devs[0].fail();
+                }
+                Vec::new()
+            }
+        }
+        let mut devs = vec![DeviceSim::new(front(), cfg()), DeviceSim::new(front(), cfg())];
+        // 10k req/s against device 0's 5k req/s seq point: a standing
+        // queue is guaranteed at the kill (window 1, t = 0.1 s), and after
+        // the kill only serving devices are eligible
+        let timeline: Vec<(f64, usize)> = (0..5000).map(|i| (i as f64 * 1e-4, 0)).collect();
+        let out = run_timeline_controlled(
+            &mut devs,
+            &timeline,
+            0.5,
+            0.05,
+            |devs, _class, _t| devs.iter().position(|d| d.is_serving()),
+            &mut KillAtWindow(1, false),
+        );
+        assert!(out.requeued > 0, "the kill must displace queued work");
+        assert_eq!(out.requeue_lost, 0, "device 1 takes the requeues");
+        let r0 = devs.remove(0).into_report();
+        let r1 = devs.remove(0).into_report();
+        assert_eq!(r0.lifecycle, DeviceState::Failed);
+        assert_eq!(r1.lifecycle, DeviceState::Active);
+        assert_eq!(r1.requeued_in, out.requeued);
+        assert_eq!(r0.served + r0.shed + r0.requeued_away, r0.routed);
+        assert_eq!(r1.served + r1.shed + r1.requeued_away, r1.routed);
+        // every arrival is terminally served or shed across the fleet
+        assert_eq!(r0.served + r1.served + r0.shed + r1.shed, timeline.len());
+        assert_eq!(out.latency.len(), r0.served + r1.served);
     }
 }
