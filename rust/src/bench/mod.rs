@@ -86,11 +86,27 @@ impl BenchResult {
 /// uploads these so the perf trajectory is tracked per commit instead of
 /// scrolling away in logs.
 pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    write_json_with_metrics(path, results, &[])
+}
+
+/// [`write_json`] plus a flat `"metrics"` object of named scalars —
+/// throughput counters, allocation tallies, and other numbers a timing
+/// row can't carry (`{"results": [...], "metrics": {...}}`). An empty
+/// `metrics` slice omits the object, so plain callers keep the old shape.
+pub fn write_json_with_metrics(
+    path: &Path,
+    results: &[BenchResult],
+    metrics: &[(String, f64)],
+) -> std::io::Result<()> {
     let mut m = std::collections::BTreeMap::new();
     m.insert(
         "results".to_string(),
         Json::Arr(results.iter().map(BenchResult::to_json).collect()),
     );
+    if !metrics.is_empty() {
+        let mm = metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        m.insert("metrics".to_string(), Json::Obj(mm));
+    }
     std::fs::write(path, Json::Obj(m).to_string() + "\n")
 }
 
@@ -229,6 +245,23 @@ mod tests {
         assert_eq!(results[0].get("name").unwrap().as_str(), Some("json-case"));
         assert_eq!(results[0].get("iters").unwrap().as_usize(), Some(2));
         assert!(results[0].get("p99_s").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn json_metrics_round_trip_and_plain_shape_is_unchanged() {
+        let r = bench("metrics-case", 0, 1, 100.0, || {});
+        let path = std::env::temp_dir().join("ssr_bench_json_metrics_test.json");
+        let metrics = vec![("events_per_s".to_string(), 1.25e7), ("peak_bytes".to_string(), 4096.0)];
+        write_json_with_metrics(&path, std::slice::from_ref(&r), &metrics).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("metrics").unwrap().get("events_per_s").unwrap().as_f64(), Some(1.25e7));
+        assert_eq!(j.get("metrics").unwrap().get("peak_bytes").unwrap().as_f64(), Some(4096.0));
+        // Empty metrics keeps the legacy single-key shape.
+        write_json_with_metrics(&path, std::slice::from_ref(&r), &[]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(j.get("metrics").is_none());
+        assert!(j.get("results").is_some());
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::fleet::{DeviceSpec, FleetSpec};
 use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
-use crate::coordinator::scheduler::SchedulerCfg;
+use crate::coordinator::scheduler::{ArrivalStream, SchedulerCfg};
 use crate::plan::front::PlanFront;
 use crate::sim::device::{
     run_timeline_controlled, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
@@ -842,7 +842,9 @@ pub fn simulate_autoscale(
     all.extend(spec.pool.iter().cloned());
     FleetSpec::new(&spec.fleet.name, all)?;
 
-    let arrivals = mix.arrivals(seed);
+    // Arrivals stream lazily from per-class split RNGs — same merged
+    // order the materialized timeline had, O(classes) memory.
+    let mut arrivals = ArrivalStream::new(mix, seed);
     let base = Rng::new(seed);
     let mut router = Router::new(policy, base.split(ROUTER_STREAM));
     let mut model_set: Vec<String> = mix.classes.iter().map(|c| c.model.clone()).collect();
@@ -856,7 +858,7 @@ pub fn simulate_autoscale(
 
     let outcome = run_timeline_controlled(
         &mut devs,
-        &arrivals,
+        &mut arrivals,
         duration_s,
         cfg.window_s,
         |devs, class, _t| {
@@ -913,7 +915,7 @@ pub fn simulate_autoscale(
     let slo_violations = served - outcome.latency.count_leq(cfg.slo_ms * 1e-3);
 
     Ok(AutoscaleReport {
-        arrivals: arrivals.len(),
+        arrivals: outcome.arrivals,
         served,
         shed: dev_shed + outcome.unroutable + outcome.requeue_lost,
         unroutable: outcome.unroutable,

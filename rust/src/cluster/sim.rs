@@ -9,7 +9,9 @@
 //! multi-model mix against the devices' observable state. The event loop
 //! and its deterministic tie order — on time ties: completion (lowest
 //! device index first), then the window tick, then the arrival — live in
-//! [`run_timeline`], shared with the single-device sim, so a seed fully
+//! [`run_timeline_controlled`], shared with the single-device sim (with
+//! arrivals streamed lazily via
+//! [`crate::coordinator::scheduler::ArrivalStream`]), so a seed fully
 //! determines every tally, fleet-wide and per device, and the two sims
 //! cannot diverge (`rust/tests/sim_unification.rs` pins `serve_ramp`
 //! bit-identical to a 1-device fleet). The only ways a request is not
@@ -21,8 +23,8 @@
 
 use crate::cluster::fleet::FleetSpec;
 use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
-use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
-use crate::sim::device::{run_timeline, DeviceSim, WindowStat};
+use crate::coordinator::scheduler::{ArrivalStream, SchedulerCfg, SwitchRecord};
+use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl, WindowStat};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -137,7 +139,9 @@ pub fn simulate_fleet(
     if mix.classes.is_empty() {
         return Err("traffic mix has no classes".into());
     }
-    let arrivals = mix.arrivals(seed);
+    // Arrivals stream lazily from per-class split RNGs — same merged
+    // order the materialized timeline had, O(classes) memory.
+    let mut arrivals = ArrivalStream::new(mix, seed);
     let base = Rng::new(seed);
     let mut router = Router::new(policy, base.split(ROUTER_STREAM));
 
@@ -159,9 +163,9 @@ pub fn simulate_fleet(
     let mut devs: Vec<DeviceSim> =
         fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
 
-    let outcome = run_timeline(
+    let outcome = run_timeline_controlled(
         &mut devs,
-        &arrivals,
+        &mut arrivals,
         mix.duration_s(),
         cfg.window_s,
         |devs, class, _t| {
@@ -176,6 +180,7 @@ pub fn simulate_fleet(
                 .collect();
             router.pick(&views, class, &eligible[class], cfg.slo_ms)
         },
+        &mut NoControl,
     );
 
     let devices: Vec<DeviceStat> = fleet
@@ -206,7 +211,7 @@ pub fn simulate_fleet(
     let slo_violations = served - outcome.latency.count_leq(cfg.slo_ms * 1e-3);
 
     Ok(FleetSimReport {
-        arrivals: arrivals.len(),
+        arrivals: outcome.arrivals,
         served,
         shed: dev_shed + outcome.unroutable,
         unroutable: outcome.unroutable,

@@ -31,7 +31,8 @@
 //! backlog, shedding) lives in [`crate::sim::serving`], which drives this
 //! same scheduler without artifacts.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -41,6 +42,7 @@ use super::metrics::ServeReport;
 use super::pipeline::{synth_images, PipelineServer};
 use crate::plan::front::{FrontEntry, PlanFront};
 use crate::runtime::exec::{Engine, Tensor};
+use crate::sim::device::ArrivalSource;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -92,25 +94,74 @@ impl RampSpec {
     /// Deterministic Poisson arrival times over the ramp (sorted). Each
     /// phase draws exponential gaps at its own rate; restarting at phase
     /// boundaries is exact for a Poisson process (memorylessness).
+    ///
+    /// Materializes the [`ClassArrivals`] stream — sims should consume
+    /// the stream itself (via [`ArrivalStream`]) and never hold the full
+    /// timeline; this remains for callers that genuinely want the Vec.
     pub fn arrivals(&self, seed: u64) -> Vec<f64> {
-        let mut rng = Rng::new(seed);
+        let mut stream = ClassArrivals::new(self, Rng::new(seed));
         let mut out = Vec::new();
-        for (i, &rate) in self.rates_rps.iter().enumerate() {
-            if rate <= 0.0 {
-                continue;
-            }
-            let t0 = i as f64 * self.phase_s;
-            let t1 = t0 + self.phase_s;
-            let mut t = t0;
-            loop {
-                t += -(1.0 - rng.f64()).ln() / rate;
-                if t >= t1 {
-                    break;
-                }
-                out.push(t);
-            }
+        while let Some(t) = stream.next_arrival() {
+            out.push(t);
         }
         out
+    }
+}
+
+/// Lazy per-class Poisson arrival generator: the streaming form of
+/// [`RampSpec::arrivals`], drawing one exponential gap per `next_arrival`
+/// call from the same RNG in the same order — the two produce bit-equal
+/// times (pinned by `class_arrivals_match_the_materializing_generator`).
+/// O(1) memory regardless of how many arrivals the ramp offers.
+#[derive(Clone, Debug)]
+pub struct ClassArrivals {
+    rng: Rng,
+    rates_rps: Vec<f64>,
+    phase_s: f64,
+    phase: usize,
+    t: f64,
+}
+
+impl ClassArrivals {
+    pub fn new(ramp: &RampSpec, rng: Rng) -> ClassArrivals {
+        ClassArrivals {
+            rng,
+            rates_rps: ramp.rates_rps.clone(),
+            phase_s: ramp.phase_s,
+            phase: 0,
+            t: 0.0,
+        }
+    }
+
+    /// Next arrival time, `None` once the ramp is exhausted. Zero-rate
+    /// phases draw nothing (exactly like the materializing loop's
+    /// `continue`), and the draw that overshoots a phase boundary is
+    /// consumed, not reused — both invariants are what keep the stream
+    /// bit-identical to the pre-streaming generator.
+    pub fn next_arrival(&mut self) -> Option<f64> {
+        while self.phase < self.rates_rps.len() {
+            let rate = self.rates_rps[self.phase];
+            if rate <= 0.0 {
+                self.enter_phase(self.phase + 1);
+                continue;
+            }
+            // t0 + phase_s, NOT (phase+1)*phase_s: the materializing
+            // generator computed the boundary this way and the two can
+            // differ by an ulp — which would shift an arrival across it.
+            let t1 = self.phase as f64 * self.phase_s + self.phase_s;
+            self.t += -(1.0 - self.rng.f64()).ln() / rate;
+            if self.t >= t1 {
+                self.enter_phase(self.phase + 1);
+                continue;
+            }
+            return Some(self.t);
+        }
+        None
+    }
+
+    fn enter_phase(&mut self, p: usize) {
+        self.phase = p;
+        self.t = p as f64 * self.phase_s; // each phase restarts at its t0
     }
 }
 
@@ -142,15 +193,79 @@ impl TrafficMix {
 
     /// Merged `(arrival time, class index)` timeline, sorted by time with
     /// ties broken by class order — fully deterministic per seed.
+    ///
+    /// Materializes [`ArrivalStream`] — sims consume the stream directly
+    /// and keep memory O(classes); this remains for callers (and the
+    /// differential tests) that want the whole Vec.
     pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
-        let base = Rng::new(seed);
+        let mut stream = ArrivalStream::new(self, seed);
         let mut out = Vec::new();
-        for (ci, c) in self.classes.iter().enumerate() {
-            let class_seed = base.split(ci as u64).next_u64();
-            out.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
+        while let Some(a) = stream.pop() {
+            out.push(a);
         }
-        out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         out
+    }
+}
+
+/// Pending head of one class's arrival stream. Keys order by time then
+/// class index; times are non-negative finite f64s, whose `to_bits`
+/// order equals their numeric order, so a derived lexicographic `Ord`
+/// reproduces the materialized sort's
+/// `t.total_cmp(..).then(class.cmp(..))` comparator exactly.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct PendingArrival {
+    t_bits: u64,
+    class: usize,
+}
+
+/// Streaming k-way merge of per-class [`ClassArrivals`] generators: the
+/// lazy form of [`TrafficMix::arrivals`], holding one pending arrival per
+/// class in a min-heap instead of the materialized, sorted timeline —
+/// O(classes) memory for any run length. Each class draws from the same
+/// `Rng::split(class_index)` stream as before, so adding a class never
+/// perturbs another's times, and the merged order is bit-identical to
+/// sorting the materialized timeline (same-class ties keep generation
+/// order because at most one entry per class is in the heap).
+pub struct ArrivalStream {
+    classes: Vec<ClassArrivals>,
+    heap: BinaryHeap<Reverse<PendingArrival>>,
+}
+
+impl ArrivalStream {
+    pub fn new(mix: &TrafficMix, seed: u64) -> ArrivalStream {
+        let base = Rng::new(seed);
+        let mut classes: Vec<ClassArrivals> = mix
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let class_seed = base.split(ci as u64).next_u64();
+                ClassArrivals::new(&c.ramp, Rng::new(class_seed))
+            })
+            .collect();
+        let mut heap = BinaryHeap::with_capacity(classes.len());
+        for (ci, c) in classes.iter_mut().enumerate() {
+            if let Some(t) = c.next_arrival() {
+                heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: ci }));
+            }
+        }
+        ArrivalStream { classes, heap }
+    }
+}
+
+impl ArrivalSource for ArrivalStream {
+    fn peek_s(&self) -> f64 {
+        self.heap.peek().map_or(f64::INFINITY, |&Reverse(p)| f64::from_bits(p.t_bits))
+    }
+
+    fn pop(&mut self) -> Option<(f64, usize)> {
+        let Reverse(p) = self.heap.pop()?;
+        // refill from the popped class so the heap again holds every
+        // non-exhausted class's head
+        if let Some(t) = self.classes[p.class].next_arrival() {
+            self.heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: p.class }));
+        }
+        Some((f64::from_bits(p.t_bits), p.class))
     }
 }
 
@@ -245,14 +360,18 @@ impl LoadEstimator {
         // Early in the run the horizon has not filled yet: divide by the
         // elapsed span, not the full horizon, or rates read low.
         let span = self.horizon_s.min(now_s).max(1e-9);
-        let n_arrivals = self.arrivals.iter().filter(|&&t| t >= cut).count();
+        // Events are recorded in nondecreasing time order (asserted in
+        // record_*), so both deques are sorted: binary-search the stale
+        // prefix instead of re-scanning the whole window per call. With
+        // `estimate`'s pruning, per-window cost is O(evictions + live
+        // completions), not O(everything ever recorded).
+        let stale = self.arrivals.partition_point(|&t| t < cut);
+        let n_arrivals = self.arrivals.len() - stale;
+        let first_live = self.completions.partition_point(|&(t, _)| t < cut);
+        let completed = self.completions.len() - first_live;
         let mut lat = Summary::new();
-        let mut completed = 0usize;
-        for &(t, l) in &self.completions {
-            if t >= cut {
-                lat.push(l);
-                completed += 1;
-            }
+        for &(_, l) in self.completions.range(first_live..) {
+            lat.push(l);
         }
         LoadEstimate {
             rate_rps: n_arrivals as f64 / span,
@@ -263,10 +382,21 @@ impl LoadEstimator {
     }
 
     pub fn record_arrival(&mut self, t_s: f64) {
+        // Sortedness is what lets peek binary-search: the event loop
+        // feeds each device's estimator in fleet-clock order (requeues
+        // record the window time, and later arrivals are past the window).
+        debug_assert!(
+            self.arrivals.back().is_none_or(|&last| t_s >= last),
+            "arrivals must be recorded in nondecreasing time order"
+        );
         self.arrivals.push_back(t_s);
     }
 
     pub fn record_completion(&mut self, t_s: f64, latency_s: f64) {
+        debug_assert!(
+            self.completions.back().is_none_or(|&(last, _)| t_s >= last),
+            "completions must be recorded in nondecreasing time order"
+        );
         self.completions.push_back((t_s, latency_s));
     }
 
@@ -837,5 +967,148 @@ mod tests {
         // exist here; with SLO below every entry we still serve best effort
         let s = AdaptiveScheduler::new(front3(), SchedulerCfg { slo_ms: 0.05, ..Default::default() });
         assert_eq!(s.active(), 0);
+    }
+
+    #[test]
+    fn class_arrivals_match_the_materializing_generator() {
+        // The pre-streaming RampSpec::arrivals body, verbatim: one RNG
+        // across phases, zero-rate phases skipped without a draw, each
+        // phase restarting at t0, the boundary-overshooting draw consumed.
+        fn reference(ramp: &RampSpec, seed: u64) -> Vec<f64> {
+            let mut rng = Rng::new(seed);
+            let mut out = Vec::new();
+            for (i, &rate) in ramp.rates_rps.iter().enumerate() {
+                if rate <= 0.0 {
+                    continue;
+                }
+                let t0 = i as f64 * ramp.phase_s;
+                let t1 = t0 + ramp.phase_s;
+                let mut t = t0;
+                loop {
+                    t += -(1.0 - rng.f64()).ln() / rate;
+                    if t >= t1 {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            out
+        }
+        for (spec, phase) in [("2000:500", 0.5), ("0:3000:0:800", 0.2), ("1000", 1.0)] {
+            let r = RampSpec::parse(spec, phase).unwrap();
+            for seed in [1u64, 42, 0xC0FFEE] {
+                let want = reference(&r, seed);
+                let got = r.arrivals(seed);
+                assert_eq!(got.len(), want.len(), "{spec} seed {seed}: count");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{spec} seed {seed}: time bits");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_merge_matches_materialize_and_sort() {
+        // The pre-streaming TrafficMix::arrivals: materialize every class
+        // then stable-sort by (time, class). The k-way heap merge must
+        // reproduce it bit for bit, ties included.
+        let mix = TrafficMix {
+            classes: vec![
+                TrafficClass {
+                    model: "a".to_string(),
+                    ramp: RampSpec::parse("2000:0:1500", 0.3).unwrap(),
+                },
+                TrafficClass {
+                    model: "b".to_string(),
+                    ramp: RampSpec::parse("900", 0.7).unwrap(),
+                },
+                TrafficClass {
+                    model: "c".to_string(),
+                    ramp: RampSpec::parse("0:4000", 0.25).unwrap(),
+                },
+            ],
+        };
+        for seed in [3u64, 99, 0xABCDE] {
+            let base = Rng::new(seed);
+            let mut want: Vec<(f64, usize)> = Vec::new();
+            for (ci, c) in mix.classes.iter().enumerate() {
+                let class_seed = base.split(ci as u64).next_u64();
+                want.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
+            }
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let got = mix.arrivals(seed);
+            assert_eq!(got.len(), want.len(), "seed {seed}: count");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0.to_bits(), w.0.to_bits(), "seed {seed}: time bits");
+                assert_eq!(g.1, w.1, "seed {seed}: class");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_stream_peek_agrees_with_pop_and_exhausts_to_infinity() {
+        let mix = TrafficMix::single("m", RampSpec::parse("1500:800", 0.3).unwrap());
+        let mut s = ArrivalStream::new(&mix, 7);
+        let mut n = 0usize;
+        let mut last = 0.0f64;
+        loop {
+            let peeked = s.peek_s();
+            match s.pop() {
+                Some((t, class)) => {
+                    assert_eq!(peeked.to_bits(), t.to_bits(), "peek must match pop");
+                    assert!(t >= last, "stream went backwards");
+                    assert_eq!(class, 0);
+                    last = t;
+                    n += 1;
+                }
+                None => {
+                    assert_eq!(peeked, f64::INFINITY, "exhausted stream must peek INFINITY");
+                    break;
+                }
+            }
+        }
+        assert_eq!(n, mix.arrivals(7).len());
+    }
+
+    #[test]
+    fn peek_binary_search_matches_naive_filter_scan() {
+        // The satellite pin: the partition_point suffix counts must equal
+        // the old full-window filter re-scan on randomized (sorted) event
+        // sequences — including p99 over exactly the live completions.
+        let mut g = Rng::new(0x0E57);
+        for case in 0..20 {
+            let mut e = LoadEstimator::new(0.05 + g.f64() * 0.3);
+            let mut t = 0.0f64;
+            for _ in 0..(50 + g.usize_below(200)) {
+                t += g.f64() * 0.01;
+                if g.bool(0.7) {
+                    e.record_arrival(t);
+                } else {
+                    e.record_completion(t, g.f64() * 5e-3);
+                }
+            }
+            let now = t + g.f64() * 0.05;
+            let cut = now - e.horizon_s();
+            let naive_arrivals = e.arrivals.iter().filter(|&&x| x >= cut).count();
+            let mut naive_lat = Summary::new();
+            let mut naive_completed = 0usize;
+            for &(ct, l) in &e.completions {
+                if ct >= cut {
+                    naive_lat.push(l);
+                    naive_completed += 1;
+                }
+            }
+            let naive_p99 = if naive_lat.is_empty() { 0.0 } else { naive_lat.p99() };
+            let span = e.horizon_s().min(now).max(1e-9);
+            let got = e.peek(now, case);
+            assert_eq!(
+                got.rate_rps.to_bits(),
+                (naive_arrivals as f64 / span).to_bits(),
+                "case {case}: rate"
+            );
+            assert_eq!(got.completed, naive_completed, "case {case}: completed");
+            assert_eq!(got.p99_s.to_bits(), naive_p99.to_bits(), "case {case}: p99");
+            assert_eq!(got.queue_depth, case);
+        }
     }
 }

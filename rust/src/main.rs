@@ -358,7 +358,12 @@ fn cmd_simulate(args: &[String]) -> i32 {
             .flag("model", Some("deit_t"), "model name")
             .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
             .flag("assign", Some(""), "8-class genome c0,..,c7 (overrides --strategy)")
-            .flag("batch", Some("6"), "batch size"),
+            .flag("batch", Some("6"), "batch size")
+            .switch("sweep", "sharded parallel replay over the front (seeds x shards grid)")
+            .flag("sweep-seeds", Some("4"), "sweep: independent arrival-process replications")
+            .flag("sweep-shards", Some("8"), "sweep: traffic shards per seed (rate splits evenly)")
+            .flag("threads", Some("0"), "sweep: worker threads (0 = all cores)")
+            .switch("exact", "sweep: exact full-sample stats instead of the sketched fast path"),
     );
     let m = parse_or_exit(cmd, args);
     let frontp = m.str("front");
@@ -379,6 +384,45 @@ fn cmd_simulate(args: &[String]) -> i32 {
             "slo {} ms, window {} ms, patience {}, ramp {:?} req/s x {} s",
             cfg.slo_ms, cfg.window_s * 1e3, cfg.patience, ramp.rates_rps, ramp.phase_s
         );
+        if m.bool("sweep") {
+            let sweep = ssr::sim::sweep::SweepCfg {
+                seeds: m.usize("sweep-seeds"),
+                shards: m.usize("sweep-shards"),
+                threads: m.usize("threads"),
+                exact: m.bool("exact"),
+            };
+            let t0 = std::time::Instant::now();
+            let r = ssr::sim::sweep::run_sweep(
+                &front,
+                &ramp,
+                &cfg,
+                &sweep,
+                m.usize("load-seed") as u64,
+            );
+            let wall = t0.elapsed().as_secs_f64();
+            let mut t = ssr::bench::Table::new(&[
+                "seed", "shard", "arrivals", "served", "shed", "makespan (s)",
+            ]);
+            for c in &r.cells {
+                t.row(&[
+                    c.seed_idx.to_string(),
+                    c.shard_idx.to_string(),
+                    c.arrivals.to_string(),
+                    c.served.to_string(),
+                    c.shed.to_string(),
+                    format!("{:.3}", c.makespan_s),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("{}", r.summary_line());
+            println!(
+                "wall {:.3} s | {:.2} M events/s | {:.2} M req/s replayed",
+                wall,
+                r.events as f64 / wall / 1e6,
+                r.arrivals as f64 / wall / 1e6
+            );
+            return 0;
+        }
         let r = ssr::sim::serving::serve_ramp(&front, &ramp, &cfg, m.usize("load-seed") as u64);
         print_sim_report(&front, &r);
         return 0;

@@ -35,6 +35,44 @@
 //!   switch target while draining), not the plan still executing — the
 //!   queue being admitted will drain on the new plan.
 //!
+//! ## The event calendar
+//!
+//! Earliest-completion selection runs on an indexed calendar: a min-heap
+//! of `(completion time, device index)` keys with *lazy invalidation*,
+//! not a per-event O(D) scan over the fleet. The rules that keep it
+//! bit-identical to the scan it replaced (the scan survives as a
+//! `#[cfg(test)]` reference implementation, pinned by a differential
+//! test):
+//!
+//! * Keys order by time then device index. For the non-negative finite
+//!   times a sim produces, IEEE-754 bit patterns order exactly like the
+//!   values, so keys store `f64::to_bits` and derive plain integer
+//!   ordering — ties pop the lowest device index, matching the old
+//!   first-minimum scan.
+//! * A key is *valid* iff its time still bit-equals the device's
+//!   `next_completion_s()`. Anything can invalidate a device's key
+//!   (completion, failure) without touching the heap; stale tops are
+//!   discarded on peek. Duplicate valid keys are harmless — "device `d`
+//!   completes at `t`" is true however many copies exist.
+//! * Every state change that can *create* a finite completion pushes a
+//!   key: device init, a completion starting the next launch, an
+//!   admitted arrival/requeue starting a launch on an idle device. A
+//!   [`FleetControl`] hook that reports `mutates_fleet()` additionally
+//!   triggers a full O(D) resync after it runs — belt and braces for
+//!   controllers that mutate devices in ways the loop can't see.
+//! * Device indices are stable: controllers only ever push onto `devs`
+//!   (retired/failed devices stay in place), so a key's index never
+//!   dangles.
+//!
+//! Arrivals stream through the [`ArrivalSource`] trait — a slice-backed
+//! adapter ([`SliceArrivals`]) for tests and pre-materialized timelines,
+//! and the lazily-generated
+//! [`crate::coordinator::scheduler::ArrivalStream`] for O(1)-memory
+//! replay. Latency lands in either an exact [`Summary`]+completions pair
+//! ([`run_timeline_controlled`]) or an O(1)-memory [`LatencySketch`]
+//! ([`run_timeline_sketched`]); the event sequence is identical either
+//! way.
+//!
 //! ## Two kinds of "draining"
 //!
 //! The word shows up at two different levels; the code keeps them apart:
@@ -61,13 +99,14 @@
 //!    under one name. Both reports now expose `{committed, draining}`
 //!    explicitly, per window and at end of run.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::scheduler::{
     AdaptiveScheduler, LoadEstimate, LoadEstimator, SchedulerCfg, SwitchRecord,
 };
 use crate::plan::front::{FrontEntry, PlanFront};
-use crate::util::stats::Summary;
+use crate::util::stats::{LatencySketch, Summary};
 
 /// Lifecycle of one simulated device (distinct from the *plan*-level
 /// drain-and-swap; see the module docs).
@@ -140,6 +179,8 @@ pub struct DeviceSimReport {
     /// Requests that landed here after a peer drained or failed.
     pub requeued_in: usize,
     /// Per-request sojourn time (queue wait + service), served requests.
+    /// Empty when the device was built
+    /// [`DeviceSim::without_latency_samples`].
     pub latency: Summary,
     pub max_queue_depth: usize,
     pub switches: Vec<SwitchRecord>,
@@ -170,6 +211,13 @@ pub struct DeviceSim {
     /// Committed switch target waiting for the in-flight launch to drain.
     draining: Option<usize>,
     lifecycle: DeviceState,
+    /// Recycled launch buffer: the request Vec of the last completed
+    /// launch, cleared, waiting to carry the next one — the steady-state
+    /// serve loop allocates nothing per event.
+    spare: Vec<Req>,
+    /// Record per-request sojourns into `latency` (exact reports need
+    /// them; the O(1)-memory sweep path turns them off).
+    keep_samples: bool,
     routed: usize,
     served: usize,
     shed: usize,
@@ -192,6 +240,8 @@ impl DeviceSim {
             committed,
             draining: None,
             lifecycle: DeviceState::Active,
+            spare: Vec::new(),
+            keep_samples: true,
             routed: 0,
             served: 0,
             shed: 0,
@@ -201,6 +251,15 @@ impl DeviceSim {
             max_queue_depth: 0,
             windows: Vec::new(),
         }
+    }
+
+    /// Drop per-request latency samples: tallies, windows, and switches
+    /// are still recorded, but `latency` stays empty so memory is O(1) in
+    /// requests served. The sweep/bench replay path uses this and reads
+    /// latency from the event loop's [`LatencySketch`] sink instead.
+    pub fn without_latency_samples(mut self) -> DeviceSim {
+        self.keep_samples = false;
+        self
     }
 
     /// Front entry of the plan currently *executing* (the router-visible
@@ -256,14 +315,16 @@ impl DeviceSim {
     }
 
     /// Start the next launch from the queue if the device is idle: take up
-    /// to `batch` queued requests onto the committed plan.
+    /// to `batch` queued requests onto the committed plan. Reuses the
+    /// recycled `spare` buffer — no allocation once the sim is warm.
     fn start_launch(&mut self, t: f64) {
         if self.queue.is_empty() || self.in_flight.is_some() {
             return;
         }
         let e = &self.sched.front.entries[self.committed];
         let take = e.batch.min(self.queue.len());
-        let batch: Vec<Req> = self.queue.drain(..take).collect();
+        let mut batch = std::mem::take(&mut self.spare);
+        batch.extend(self.queue.drain(..take));
         self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
     }
 
@@ -272,12 +333,24 @@ impl DeviceSim {
     /// launch on the (possibly new) committed plan, and retire the device
     /// if it was lifecycle-draining and is now empty.
     pub fn on_completion(&mut self) -> Completed {
+        let mut sojourns = Vec::new();
+        let done_s = self.on_completion_into(&mut sojourns);
+        Completed { done_s, sojourns }
+    }
+
+    /// Allocation-free [`DeviceSim::on_completion`]: sojourns land in the
+    /// caller's buffer (cleared first), and the completed launch's request
+    /// Vec is recycled for the next launch. Returns the completion time.
+    pub fn on_completion_into(&mut self, sojourns: &mut Vec<f64>) -> f64 {
         let launch = self.in_flight.take().expect("on_completion with no launch in flight");
         let done_s = launch.done_s;
-        let mut sojourns = Vec::with_capacity(launch.arrivals.len());
+        sojourns.clear();
+        sojourns.reserve(launch.arrivals.len());
         for req in &launch.arrivals {
             let sojourn = done_s - req.arrived_s;
-            self.latency.push(sojourn);
+            if self.keep_samples {
+                self.latency.push(sojourn);
+            }
             self.est.record_completion(done_s, sojourn);
             self.served += 1;
             sojourns.push(sojourn);
@@ -285,13 +358,16 @@ impl DeviceSim {
         if let Some(to) = self.draining.take() {
             self.committed = to; // drain complete: swap now
         }
+        let mut spare = launch.arrivals;
+        spare.clear();
+        self.spare = spare;
         self.start_launch(done_s);
         if self.lifecycle == DeviceState::Draining && self.in_flight.is_none() {
             // queue was requeued at begin_drain, the last launch just
             // landed: hitless decommission complete
             self.lifecycle = DeviceState::Retired;
         }
-        Completed { done_s, sojourns }
+        done_s
     }
 
     /// Run one decision window: estimate the load, let the scheduler
@@ -419,7 +495,53 @@ impl DeviceSim {
     }
 }
 
-/// Fleet-level rollup of one [`run_timeline`] run.
+// ---------------------------------------------------------------------------
+// Arrival sources
+// ---------------------------------------------------------------------------
+
+/// A nondecreasing stream of `(arrival time, class)` events. The event
+/// loop peeks the head to arbitrate against completions and windows, and
+/// pops exactly the events it consumes — a lazy source generates each
+/// arrival on demand and never materializes the timeline.
+pub trait ArrivalSource {
+    /// Time of the next arrival, `INFINITY` when exhausted.
+    fn peek_s(&self) -> f64;
+    /// Consume and return the next arrival.
+    fn pop(&mut self) -> Option<(f64, usize)>;
+}
+
+/// [`ArrivalSource`] over a pre-materialized, sorted timeline slice.
+pub struct SliceArrivals<'a> {
+    timeline: &'a [(f64, usize)],
+    next: usize,
+}
+
+impl<'a> SliceArrivals<'a> {
+    pub fn new(timeline: &'a [(f64, usize)]) -> SliceArrivals<'a> {
+        SliceArrivals { timeline, next: 0 }
+    }
+}
+
+impl ArrivalSource for SliceArrivals<'_> {
+    fn peek_s(&self) -> f64 {
+        self.timeline.get(self.next).map_or(f64::INFINITY, |&(t, _)| t)
+    }
+
+    fn pop(&mut self) -> Option<(f64, usize)> {
+        let item = self.timeline.get(self.next).copied();
+        if item.is_some() {
+            self.next += 1;
+        }
+        item
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outcomes and control
+// ---------------------------------------------------------------------------
+
+/// Fleet-level rollup of one [`run_timeline`] run (exact-stats mode:
+/// every sojourn sample retained).
 pub struct TimelineOutcome {
     /// Sojourn times across every device, in completion order.
     pub latency: Summary,
@@ -427,6 +549,8 @@ pub struct TimelineOutcome {
     /// order — lets a caller attribute latency back to arrival time
     /// (`arrived = done - sojourn`), e.g. per ramp phase.
     pub completions: Vec<(f64, f64)>,
+    /// Arrivals consumed from the source (the loop always drains it).
+    pub arrivals: usize,
     /// Arrivals the `route` callback declined (no eligible device).
     pub unroutable: usize,
     /// Requests handed back by the control hook (drains + failures).
@@ -440,6 +564,27 @@ pub struct TimelineOutcome {
     /// not truncated, so a `3 * 0.6 / 0.05 = 35.999…` ramp keeps its
     /// final window).
     pub n_windows: usize,
+    /// Discrete events processed (completions + window ticks + arrivals)
+    /// — the denominator of the events/sec bench metric.
+    pub events: u64,
+}
+
+/// [`TimelineOutcome`]'s O(1)-memory sibling ([`run_timeline_sketched`]):
+/// latency lives in a fixed-size [`LatencySketch`] instead of full
+/// samples + completions, so replay memory does not grow with request
+/// count. Same event sequence, same tallies.
+pub struct SketchOutcome {
+    /// Streaming sojourn rollup across every device.
+    pub latency: LatencySketch,
+    /// Arrivals consumed from the source.
+    pub arrivals: usize,
+    pub unroutable: usize,
+    pub requeued: usize,
+    pub requeue_lost: usize,
+    pub makespan_s: f64,
+    pub n_windows: usize,
+    /// Discrete events processed (completions + window ticks + arrivals).
+    pub events: u64,
 }
 
 /// Fleet-level control consulted once per decision window, after every
@@ -451,6 +596,14 @@ pub struct TimelineOutcome {
 pub trait FleetControl {
     fn after_window(&mut self, devs: &mut Vec<DeviceSim>, window: usize, end_s: f64)
         -> Vec<Req>;
+
+    /// Whether `after_window` may change device state at all. When true
+    /// (the conservative default), the event loop resyncs its completion
+    /// calendar after every hook call; [`NoControl`] opts out so the
+    /// static-fleet path pays nothing.
+    fn mutates_fleet(&self) -> bool {
+        true
+    }
 }
 
 /// The do-nothing control: a static fleet.
@@ -460,14 +613,199 @@ impl FleetControl for NoControl {
     fn after_window(&mut self, _: &mut Vec<DeviceSim>, _: usize, _: f64) -> Vec<Req> {
         Vec::new()
     }
+
+    fn mutates_fleet(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+/// Where a served request's sojourn goes: the exact path keeps every
+/// sample (and its completion time), the sketch path streams it into
+/// fixed bins. Monomorphized per loop, so the exact path pays nothing
+/// for the abstraction.
+trait LatencySink {
+    fn on_sojourn(&mut self, done_s: f64, sojourn_s: f64);
+}
+
+/// Exact sink: full samples + completion times (the pinned-test mode).
+#[derive(Default)]
+struct ExactSink {
+    latency: Summary,
+    completions: Vec<(f64, f64)>,
+}
+
+impl LatencySink for ExactSink {
+    fn on_sojourn(&mut self, done_s: f64, sojourn_s: f64) {
+        self.latency.push(sojourn_s);
+        self.completions.push((done_s, sojourn_s));
+    }
+}
+
+impl LatencySink for LatencySketch {
+    fn on_sojourn(&mut self, _done_s: f64, sojourn_s: f64) {
+        self.record(sojourn_s);
+    }
+}
+
+/// Calendar key: completion time (as raw bits) then device index. For
+/// non-negative finite f64s — the only times a sim produces — `to_bits`
+/// ordering equals numeric ordering, so a derived lexicographic `Ord`
+/// reproduces `total_cmp(t).then(dev.cmp)` exactly and ties break toward
+/// the lowest device index, like the linear scan's first-minimum rule.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct CalKey {
+    t_bits: u64,
+    dev: usize,
+}
+
+/// Push a calendar key for device `dev` completing at `t` (no-op when
+/// idle: `INFINITY` never enters the heap).
+fn push_key(cal: &mut BinaryHeap<Reverse<CalKey>>, dev: usize, t: f64) {
+    if t.is_finite() {
+        debug_assert!(t >= 0.0, "negative completion time {t}");
+        cal.push(Reverse(CalKey { t_bits: t.to_bits(), dev }));
+    }
+}
+
+/// Re-key every device's current completion (init, and the post-control
+/// resync). Duplicates of still-valid keys are harmless by construction.
+fn resync_calendar(cal: &mut BinaryHeap<Reverse<CalKey>>, devs: &[DeviceSim]) {
+    for (i, d) in devs.iter().enumerate() {
+        push_key(cal, i, d.next_completion_s());
+    }
+}
+
+/// Tallies shared by both outcome shapes.
+struct CoreTallies {
+    arrivals: usize,
+    unroutable: usize,
+    requeued: usize,
+    requeue_lost: usize,
+    makespan_s: f64,
+    n_windows: usize,
+    events: u64,
+}
+
+/// The shared event loop, generic over where latency samples go. Event
+/// selection runs on the indexed calendar (see the module docs); the
+/// branch structure and tie order are verbatim from the linear-scan loop
+/// it replaced, pinned by `calendar_matches_linear_reference` below.
+fn run_core<S: LatencySink>(
+    devs: &mut Vec<DeviceSim>,
+    arrivals: &mut impl ArrivalSource,
+    duration_s: f64,
+    window_s: f64,
+    mut route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
+    sink: &mut S,
+) -> CoreTallies {
+    let n_windows = (duration_s / window_s).round() as usize;
+    let mut tallies = CoreTallies {
+        arrivals: 0,
+        unroutable: 0,
+        requeued: 0,
+        requeue_lost: 0,
+        makespan_s: 0.0,
+        n_windows,
+        events: 0,
+    };
+    let mut cal: BinaryHeap<Reverse<CalKey>> = BinaryHeap::new();
+    resync_calendar(&mut cal, devs);
+    let mut sojourns: Vec<f64> = Vec::new(); // recycled per completion
+    let mut w = 0usize; // next window index
+
+    loop {
+        let t_arr = arrivals.peek_s();
+        // Earliest valid completion: discard stale tops (device no longer
+        // completes at that exact time), keep the valid top in the heap —
+        // it only pops if the completion branch wins this iteration.
+        let (t_done, done_dev) = loop {
+            match cal.peek() {
+                None => break (f64::INFINITY, usize::MAX),
+                Some(&Reverse(CalKey { t_bits, dev })) => {
+                    if devs[dev].next_completion_s().to_bits() == t_bits {
+                        break (f64::from_bits(t_bits), dev);
+                    }
+                    cal.pop();
+                }
+            }
+        };
+        let t_win = if w < n_windows { (w + 1) as f64 * window_s } else { f64::INFINITY };
+        if t_arr == f64::INFINITY && t_done == f64::INFINITY && t_win == f64::INFINITY {
+            break;
+        }
+
+        if t_done <= t_win && t_done <= t_arr {
+            // -- launch completion (and switch drain point) --------------
+            cal.pop(); // the valid top we just selected
+            let done_s = devs[done_dev].on_completion_into(&mut sojourns);
+            for &s in &sojourns {
+                sink.on_sojourn(done_s, s);
+            }
+            tallies.makespan_s = tallies.makespan_s.max(done_s);
+            // completing may have started the next launch from the queue
+            push_key(&mut cal, done_dev, devs[done_dev].next_completion_s());
+        } else if t_win <= t_arr {
+            // -- decision window boundary (all devices, then control) ----
+            // on_window never starts or finishes launches, so no re-keying.
+            for d in devs.iter_mut() {
+                d.on_window(w, t_win);
+            }
+            let moved = ctl.after_window(devs, w, t_win);
+            if ctl.mutates_fleet() {
+                // The hook may have failed devices (stale keys — handled
+                // lazily) or mutated them in ways that create completions;
+                // re-key everything finite so the calendar invariant holds
+                // for any controller, not just the ones written today.
+                resync_calendar(&mut cal, devs);
+            }
+            tallies.requeued += moved.len();
+            for req in moved {
+                match route(devs, req.class, t_win) {
+                    Some(di) => {
+                        let before = devs[di].next_completion_s().to_bits();
+                        devs[di].on_requeue(req, t_win);
+                        let after = devs[di].next_completion_s();
+                        if after.to_bits() != before {
+                            push_key(&mut cal, di, after); // idle device launched
+                        }
+                    }
+                    None => tallies.requeue_lost += 1,
+                }
+            }
+            w += 1;
+        } else {
+            // -- arrival: route, then per-device admission ---------------
+            let (t, class) = arrivals.pop().expect("peeked arrival vanished");
+            match route(devs, class, t) {
+                None => tallies.unroutable += 1,
+                Some(di) => {
+                    let before = devs[di].next_completion_s().to_bits();
+                    devs[di].on_arrival(t, class);
+                    let after = devs[di].next_completion_s();
+                    if after.to_bits() != before {
+                        push_key(&mut cal, di, after); // idle device launched
+                    }
+                }
+            }
+            tallies.arrivals += 1;
+        }
+        tallies.events += 1;
+    }
+
+    tallies
 }
 
 /// The shared discrete-event loop for a static fleet: replay a merged
 /// `(arrival time, class)` timeline against `devs`, dispatching each
 /// arrival through `route` (`route(devs, class, t)` returns the device
 /// index, or `None` for an unroutable class). Every tie-order decision
-/// lives in [`run_timeline_controlled`] and only there: completion
-/// (lowest device index first), then window tick, then arrival.
+/// lives in [`run_core`] and only there: completion (lowest device index
+/// first), then window tick, then arrival.
 pub fn run_timeline(
     devs: &mut Vec<DeviceSim>,
     timeline: &[(f64, usize)],
@@ -475,16 +813,79 @@ pub fn run_timeline(
     window_s: f64,
     route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
 ) -> TimelineOutcome {
-    run_timeline_controlled(devs, timeline, duration_s, window_s, route, &mut NoControl)
+    run_timeline_controlled(
+        devs,
+        &mut SliceArrivals::new(timeline),
+        duration_s,
+        window_s,
+        route,
+        &mut NoControl,
+    )
 }
 
-/// [`run_timeline`] plus a [`FleetControl`] hook: the autoscaling /
-/// failover / rolling-swap face of the same event loop. With
-/// [`NoControl`] the behavior is bit-identical to the static loop — the
-/// hook runs after all devices ticked a window and its displaced requests
-/// are re-dispatched through `route` at the window boundary, in the order
-/// the hook returned them.
+/// [`run_timeline`] plus a lazy [`ArrivalSource`] and a [`FleetControl`]
+/// hook: the autoscaling / failover / rolling-swap face of the same event
+/// loop. With [`NoControl`] the behavior is bit-identical to the static
+/// loop — the hook runs after all devices ticked a window and its
+/// displaced requests are re-dispatched through `route` at the window
+/// boundary, in the order the hook returned them. Exact-stats mode:
+/// every sojourn sample and completion time is retained.
 pub fn run_timeline_controlled(
+    devs: &mut Vec<DeviceSim>,
+    arrivals: &mut impl ArrivalSource,
+    duration_s: f64,
+    window_s: f64,
+    route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
+) -> TimelineOutcome {
+    let mut sink = ExactSink::default();
+    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink);
+    TimelineOutcome {
+        latency: sink.latency,
+        completions: sink.completions,
+        arrivals: t.arrivals,
+        unroutable: t.unroutable,
+        requeued: t.requeued,
+        requeue_lost: t.requeue_lost,
+        makespan_s: t.makespan_s,
+        n_windows: t.n_windows,
+        events: t.events,
+    }
+}
+
+/// [`run_timeline_controlled`] with an O(1)-memory [`LatencySketch`] sink
+/// instead of full samples: the default for sweeps and benches, where
+/// replay memory must not grow with request count. Pair with
+/// [`DeviceSim::without_latency_samples`] on each device — the event
+/// sequence and every tally stay identical to the exact path.
+pub fn run_timeline_sketched(
+    devs: &mut Vec<DeviceSim>,
+    arrivals: &mut impl ArrivalSource,
+    duration_s: f64,
+    window_s: f64,
+    route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
+) -> SketchOutcome {
+    let mut sink = LatencySketch::new();
+    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink);
+    SketchOutcome {
+        latency: sink,
+        arrivals: t.arrivals,
+        unroutable: t.unroutable,
+        requeued: t.requeued,
+        requeue_lost: t.requeue_lost,
+        makespan_s: t.makespan_s,
+        n_windows: t.n_windows,
+        events: t.events,
+    }
+}
+
+/// The pre-calendar event loop, kept verbatim as the differential
+/// reference: earliest completion by O(D) linear scan, first minimum
+/// wins. `calendar_matches_linear_reference` pins the heap loop to this
+/// bit for bit.
+#[cfg(test)]
+pub fn run_timeline_linear_reference(
     devs: &mut Vec<DeviceSim>,
     timeline: &[(f64, usize)],
     duration_s: f64,
@@ -499,6 +900,7 @@ pub fn run_timeline_controlled(
     let mut requeued = 0usize;
     let mut requeue_lost = 0usize;
     let mut makespan_s = 0.0f64;
+    let mut events = 0u64;
     let mut ai = 0usize; // next arrival index
     let mut w = 0usize; // next window index
 
@@ -520,7 +922,6 @@ pub fn run_timeline_controlled(
         }
 
         if t_done <= t_win && t_done <= t_arr {
-            // -- launch completion (and switch drain point) --------------
             let done = devs[done_dev].on_completion();
             for &s in &done.sojourns {
                 latency.push(s);
@@ -528,7 +929,6 @@ pub fn run_timeline_controlled(
             }
             makespan_s = makespan_s.max(done.done_s);
         } else if t_win <= t_arr {
-            // -- decision window boundary (all devices, then control) ----
             for d in devs.iter_mut() {
                 d.on_window(w, t_win);
             }
@@ -544,7 +944,6 @@ pub fn run_timeline_controlled(
             }
             w += 1;
         } else {
-            // -- arrival: route, then per-device admission ---------------
             let (t, class) = timeline[ai];
             match route(devs, class, t) {
                 None => unroutable += 1,
@@ -554,16 +953,19 @@ pub fn run_timeline_controlled(
             }
             ai += 1;
         }
+        events += 1;
     }
 
     TimelineOutcome {
         latency,
         completions,
+        arrivals: ai,
         unroutable,
         requeued,
         requeue_lost,
         makespan_s,
         n_windows,
+        events,
     }
 }
 
@@ -571,6 +973,7 @@ pub fn run_timeline_controlled(
 mod tests {
     use super::*;
     use crate::plan::front::FrontEntry;
+    use crate::util::rng::Rng;
 
     fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
         FrontEntry {
@@ -662,11 +1065,15 @@ mod tests {
         let out = run_timeline(&mut devs, &timeline, 0.5, 0.05, |_, class, _| {
             (class == 0).then_some(0)
         });
+        assert_eq!(out.arrivals, 3);
         assert_eq!(out.unroutable, 1);
         assert_eq!(out.requeued, 0);
         assert_eq!(out.requeue_lost, 0);
         assert_eq!(out.n_windows, 10);
         assert_eq!(out.completions.len(), out.latency.len());
+        // events = arrivals + windows + completions (one launch per served
+        // request here: batch-1 seq plan, 2 routable arrivals)
+        assert_eq!(out.events, 3 + 10 + 2);
         let r = devs.pop().unwrap().into_report();
         assert_eq!(r.routed, 2);
         assert_eq!(r.served + r.shed, r.routed);
@@ -773,7 +1180,7 @@ mod tests {
         let timeline: Vec<(f64, usize)> = (0..5000).map(|i| (i as f64 * 1e-4, 0)).collect();
         let out = run_timeline_controlled(
             &mut devs,
-            &timeline,
+            &mut SliceArrivals::new(&timeline),
             0.5,
             0.05,
             |devs, _class, _t| devs.iter().position(|d| d.is_serving()),
@@ -781,6 +1188,7 @@ mod tests {
         );
         assert!(out.requeued > 0, "the kill must displace queued work");
         assert_eq!(out.requeue_lost, 0, "device 1 takes the requeues");
+        assert_eq!(out.arrivals, timeline.len());
         let r0 = devs.remove(0).into_report();
         let r1 = devs.remove(0).into_report();
         assert_eq!(r0.lifecycle, DeviceState::Failed);
@@ -791,5 +1199,178 @@ mod tests {
         // every arrival is terminally served or shed across the fleet
         assert_eq!(r0.served + r1.served + r0.shed + r1.shed, timeline.len());
         assert_eq!(out.latency.len(), r0.served + r1.served);
+    }
+
+    // -- differential: heap calendar vs the linear-scan reference --------
+
+    /// Deterministic chaos controller: per window, a seeded draw may fail
+    /// a live device, drain an active one, or add a fresh device (capped).
+    /// Two instances with the same seed make identical decisions, so the
+    /// heap loop and the reference loop see the same control sequence.
+    struct ChaosControl {
+        rng: Rng,
+        spawned: usize,
+    }
+
+    impl ChaosControl {
+        fn new(seed: u64) -> ChaosControl {
+            ChaosControl { rng: Rng::new(seed), spawned: 0 }
+        }
+    }
+
+    impl FleetControl for ChaosControl {
+        fn after_window(
+            &mut self,
+            devs: &mut Vec<DeviceSim>,
+            _w: usize,
+            _end_s: f64,
+        ) -> Vec<Req> {
+            let roll = self.rng.f64();
+            if roll < 0.15 {
+                let live: Vec<usize> = (0..devs.len())
+                    .filter(|&i| devs[i].is_live())
+                    .collect();
+                if let Some(&i) = (!live.is_empty()).then(|| self.rng.choose(&live)) {
+                    return devs[i].fail();
+                }
+            } else if roll < 0.30 {
+                let active: Vec<usize> = (0..devs.len())
+                    .filter(|&i| devs[i].is_serving())
+                    .collect();
+                // keep at least one serving device so work stays routable
+                if active.len() > 1 {
+                    let i = *self.rng.choose(&active);
+                    return devs[i].begin_drain();
+                }
+            } else if roll < 0.45 && self.spawned < 3 {
+                self.spawned += 1;
+                devs.push(DeviceSim::new(front(), cfg()));
+            }
+            Vec::new()
+        }
+    }
+
+    /// Poisson-ish sorted single-class timeline at roughly `rate` req/s.
+    fn chaos_timeline(rng: &mut Rng, rate: f64, duration_s: f64) -> Vec<(f64, usize)> {
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        loop {
+            t += -(1.0 - rng.f64()).ln() / rate;
+            if t >= duration_s {
+                break out;
+            }
+            out.push((t, 0));
+        }
+    }
+
+    #[test]
+    fn calendar_matches_linear_reference() {
+        // The tentpole pin: over randomized fleets, loads, and a chaos
+        // controller (failures, drains, scale-out — every calendar
+        // invalidation path), the indexed-calendar loop must reproduce the
+        // linear-scan loop bit for bit: same tallies, same makespan and
+        // quantile bits, same per-device reports.
+        let qs = [0.0, 0.01, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0];
+        for seed in [1u64, 42, 0xBEEF, 7777] {
+            let mut g = Rng::new(seed);
+            let n_devs = 1 + g.usize_below(3);
+            let rate = 3000.0 + g.f64() * 9000.0;
+            let timeline = chaos_timeline(&mut g, rate, 0.6);
+            let ctl_seed = g.next_u64();
+            let route = |devs: &[DeviceSim], _class: usize, _t: f64| {
+                devs.iter().position(|d| d.is_serving())
+            };
+
+            let mut devs_a: Vec<DeviceSim> =
+                (0..n_devs).map(|_| DeviceSim::new(front(), cfg())).collect();
+            let a = run_timeline_controlled(
+                &mut devs_a,
+                &mut SliceArrivals::new(&timeline),
+                0.6,
+                0.05,
+                route,
+                &mut ChaosControl::new(ctl_seed),
+            );
+
+            let mut devs_b: Vec<DeviceSim> =
+                (0..n_devs).map(|_| DeviceSim::new(front(), cfg())).collect();
+            let b = run_timeline_linear_reference(
+                &mut devs_b,
+                &timeline,
+                0.6,
+                0.05,
+                route,
+                &mut ChaosControl::new(ctl_seed),
+            );
+
+            let ctx = format!("seed {seed}");
+            assert_eq!(a.arrivals, b.arrivals, "{ctx}: arrivals");
+            assert_eq!(a.unroutable, b.unroutable, "{ctx}: unroutable");
+            assert_eq!(a.requeued, b.requeued, "{ctx}: requeued");
+            assert_eq!(a.requeue_lost, b.requeue_lost, "{ctx}: requeue_lost");
+            assert_eq!(a.n_windows, b.n_windows, "{ctx}: n_windows");
+            assert_eq!(a.events, b.events, "{ctx}: events");
+            assert_eq!(
+                a.makespan_s.to_bits(),
+                b.makespan_s.to_bits(),
+                "{ctx}: makespan"
+            );
+            assert_eq!(a.completions, b.completions, "{ctx}: completion sequence");
+            let (pa, pb) = (a.latency.percentiles(&qs), b.latency.percentiles(&qs));
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: quantiles");
+            }
+            assert_eq!(devs_a.len(), devs_b.len(), "{ctx}: fleet size");
+            for (da, db) in devs_a.into_iter().zip(devs_b) {
+                let (ra, rb) = (da.into_report(), db.into_report());
+                assert_eq!(ra.routed, rb.routed, "{ctx}: routed");
+                assert_eq!(ra.served, rb.served, "{ctx}: served");
+                assert_eq!(ra.shed, rb.shed, "{ctx}: shed");
+                assert_eq!(ra.requeued_away, rb.requeued_away, "{ctx}: requeued_away");
+                assert_eq!(ra.requeued_in, rb.requeued_in, "{ctx}: requeued_in");
+                assert_eq!(ra.switches, rb.switches, "{ctx}: switches");
+                assert_eq!(ra.windows, rb.windows, "{ctx}: windows");
+                assert_eq!(ra.lifecycle, rb.lifecycle, "{ctx}: lifecycle");
+                assert_eq!(ra.max_queue_depth, rb.max_queue_depth, "{ctx}: depth");
+            }
+        }
+    }
+
+    #[test]
+    fn sketched_run_matches_exact_tallies_and_event_sequence() {
+        // The sketch sink changes where sojourns land, not what happens:
+        // identical tallies, makespan bits, event count, and sample count.
+        let mut g = Rng::new(0xFEED);
+        let timeline = chaos_timeline(&mut g, 8000.0, 0.5);
+        let route =
+            |_: &[DeviceSim], _: usize, _: f64| -> Option<usize> { Some(0) };
+
+        let mut exact_devs = vec![DeviceSim::new(front(), cfg())];
+        let exact = run_timeline_controlled(
+            &mut exact_devs,
+            &mut SliceArrivals::new(&timeline),
+            0.5,
+            0.05,
+            route,
+            &mut NoControl,
+        );
+        let mut sk_devs = vec![DeviceSim::new(front(), cfg()).without_latency_samples()];
+        let sk = run_timeline_sketched(
+            &mut sk_devs,
+            &mut SliceArrivals::new(&timeline),
+            0.5,
+            0.05,
+            route,
+            &mut NoControl,
+        );
+        assert_eq!(sk.arrivals, exact.arrivals);
+        assert_eq!(sk.unroutable, exact.unroutable);
+        assert_eq!(sk.events, exact.events);
+        assert_eq!(sk.makespan_s.to_bits(), exact.makespan_s.to_bits());
+        assert_eq!(sk.latency.count() as usize, exact.latency.len());
+        assert_eq!(sk.latency.max_s().to_bits(), exact.latency.max().to_bits());
+        let r = sk_devs.pop().unwrap().into_report();
+        assert!(r.latency.is_empty(), "sketch mode keeps no per-device samples");
+        assert_eq!(r.served, exact_devs.pop().unwrap().into_report().served);
     }
 }

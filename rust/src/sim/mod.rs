@@ -18,6 +18,7 @@
 
 pub mod device;
 pub mod serving;
+pub mod sweep;
 
 use crate::analytical::comm::CommPath;
 use crate::arch::Platform;

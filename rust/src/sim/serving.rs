@@ -12,9 +12,10 @@
 //! completion → window → arrival tie order, admission shedding — live in
 //! the shared per-device core, [`crate::sim::device`]. [`serve_ramp`] is
 //! literally a 1-device [`crate::cluster::sim::simulate_fleet`]: it wraps
-//! the ramp in a single-class [`TrafficMix`] and drives one
-//! [`DeviceSim`] through the same [`run_timeline`] event loop the fleet
-//! sim uses, so the two entry points cannot diverge
+//! the ramp in a single-class [`TrafficMix`], streams its arrivals
+//! lazily through an [`ArrivalStream`], and drives one [`DeviceSim`]
+//! through the same [`run_timeline_controlled`] event loop the fleet sim
+//! uses, so the two entry points cannot diverge
 //! (`rust/tests/sim_unification.rs` pins them bit-identical).
 //!
 //! Note on seeds: since the unification, `serve_ramp` derives its arrival
@@ -32,9 +33,11 @@
 //!
 //! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
-use crate::coordinator::scheduler::{RampSpec, SchedulerCfg, SwitchRecord, TrafficMix};
+use crate::coordinator::scheduler::{
+    ArrivalStream, RampSpec, SchedulerCfg, SwitchRecord, TrafficMix,
+};
 use crate::plan::front::PlanFront;
-use crate::sim::device::{run_timeline, DeviceSim};
+use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl};
 use crate::util::stats::Summary;
 
 pub use crate::sim::device::WindowStat;
@@ -102,7 +105,8 @@ impl ServeSimReport {
 /// Simulate serving `ramp` over `front` with the adaptive policy in `cfg`.
 /// Fully deterministic for a given seed, and bit-identical to a 1-device
 /// [`crate::cluster::sim::simulate_fleet`] over a single-class mix with
-/// the same seed — both are the same [`run_timeline`] over the same core.
+/// the same seed — both are the same [`run_timeline_controlled`] over the
+/// same core.
 pub fn serve_ramp(
     front: &PlanFront,
     ramp: &RampSpec,
@@ -110,16 +114,24 @@ pub fn serve_ramp(
     seed: u64,
 ) -> ServeSimReport {
     let mix = TrafficMix::single(&front.model, ramp.clone());
-    let timeline = mix.arrivals(seed);
+    // Arrivals stream lazily (same split-seeded draws the materialized
+    // timeline produced), so the replay never holds the whole timeline.
+    let mut stream = ArrivalStream::new(&mix, seed);
     let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
     // One device serving the mix's only model: every arrival routes to it.
-    let outcome =
-        run_timeline(&mut devs, &timeline, mix.duration_s(), cfg.window_s, |_, _, _| Some(0));
+    let outcome = run_timeline_controlled(
+        &mut devs,
+        &mut stream,
+        mix.duration_s(),
+        cfg.window_s,
+        |_, _, _| Some(0),
+        &mut NoControl,
+    );
     let dev = devs.pop().expect("one device").into_report();
     let slo_s = cfg.slo_ms * 1e-3;
     let slo_violations = dev.served - dev.latency.count_leq(slo_s);
     ServeSimReport {
-        arrivals: timeline.len(),
+        arrivals: outcome.arrivals,
         served: dev.served,
         shed: dev.shed,
         latency: dev.latency,

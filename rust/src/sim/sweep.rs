@@ -1,0 +1,383 @@
+//! Sharded parallel replay: fan a (seeds × traffic-shards) grid of
+//! independent single-device sims across the thread pool and merge the
+//! results into one roll-up.
+//!
+//! The grid answers "what does this plan front do under this ramp?" with
+//! statistical weight a single seeded replay cannot give: `seeds`
+//! independent arrival processes, each split into `shards` traffic slices
+//! (every shard offers `rate / shards`, so the *aggregate* offered load per
+//! seed equals the original ramp while each cell stays a cheap 1-device
+//! replay). Cells are embarrassingly parallel — every cell derives its own
+//! RNG stream from the base seed via [`Rng::split`], so the grid is
+//! bit-deterministic regardless of thread count.
+//!
+//! **Merge order is fixed**: cells merge in cell-index order
+//! (`seed_idx * shards + shard_idx`), never in thread-completion order.
+//! [`scope_map`] preserves input order, so `run_sweep` with 1 thread and
+//! with 16 threads produce byte-identical reports
+//! (`rust/tests/simcore_fastpath.rs` pins this).
+//!
+//! By default each cell runs the O(1)-memory fast path
+//! ([`run_timeline_sketched`] over a device built
+//! [`DeviceSim::without_latency_samples`]): per-request sojourns go into a
+//! [`LatencySketch`] (log-spaced bins, γ = [`SKETCH_GAMMA`]) instead of a
+//! `Vec`, so replay memory is bounded by the bin count, not the request
+//! count. `SweepCfg::exact` switches every cell to the exact
+//! [`run_timeline_controlled`] path (full sample vectors, interpolated
+//! percentiles) for calibration runs and the fastpath differential tests.
+//!
+//! [`Rng::split`]: crate::util::rng::Rng::split
+//! [`scope_map`]: crate::util::threadpool::scope_map
+//! [`SKETCH_GAMMA`]: crate::util::stats::SKETCH_GAMMA
+
+use crate::coordinator::scheduler::{ArrivalStream, RampSpec, SchedulerCfg, TrafficMix};
+use crate::plan::front::PlanFront;
+use crate::sim::device::{
+    run_timeline_controlled, run_timeline_sketched, DeviceSim, NoControl,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::{LatencySketch, Summary};
+use crate::util::threadpool::{default_threads, scope_map};
+
+/// Grid shape and execution mode for [`run_sweep`].
+#[derive(Clone, Copy, Debug)]
+pub struct SweepCfg {
+    /// Independent arrival-process replications (outer grid axis).
+    pub seeds: usize,
+    /// Traffic slices per seed; each shard offers `rate / shards`.
+    pub shards: usize,
+    /// Worker threads (`0` = [`default_threads`]).
+    pub threads: usize,
+    /// Run the exact full-sample path instead of the sketched fast path.
+    pub exact: bool,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg { seeds: 4, shards: 8, threads: 0, exact: false }
+    }
+}
+
+/// Per-cell tallies, reported in cell-index order.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub seed_idx: usize,
+    pub shard_idx: usize,
+    /// The cell's derived RNG seed (`base.split(cell_index)`).
+    pub seed: u64,
+    pub arrivals: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub makespan_s: f64,
+    /// Discrete events the cell's replay processed.
+    pub events: u64,
+}
+
+/// Merged outcome of a sharded sweep.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// Per-cell tallies in cell-index order (the merge order).
+    pub cells: Vec<SweepCell>,
+    pub arrivals: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub unroutable: usize,
+    /// Total discrete events across all cells (the bench's events/sec
+    /// numerator).
+    pub events: u64,
+    /// Max cell makespan (cells replay the same wall-clock span).
+    pub makespan_s: f64,
+    /// Decision windows per cell (identical across cells by construction).
+    pub n_windows: usize,
+    /// Bounded-error latency roll-up, always populated (in exact mode it
+    /// is rebuilt from the exact samples, so the two stay comparable).
+    pub latency: LatencySketch,
+    /// Full per-request sojourns, only in [`SweepCfg::exact`] mode.
+    pub exact_latency: Option<Summary>,
+    /// Served requests whose sojourn exceeded the SLO. Exact in exact
+    /// mode; bin-granular (error bounded by the sketch γ) otherwise.
+    pub slo_violations: usize,
+}
+
+impl SweepReport {
+    pub fn slo_attainment(&self) -> f64 {
+        if self.served == 0 {
+            return 1.0;
+        }
+        1.0 - self.slo_violations as f64 / self.served as f64
+    }
+
+    pub fn summary_line(&self) -> String {
+        let (p50, p99) = match &self.exact_latency {
+            Some(s) => {
+                let pct = s.percentiles(&[0.50, 0.99]);
+                (pct[0], pct[1])
+            }
+            None => (self.latency.p50(), self.latency.p99()),
+        };
+        format!(
+            "{} cells | {} arrivals | {} served, {} shed | p50 {:.2} ms p99 {:.2} ms ({}) | \
+             SLO attainment {:.1}% | {} events",
+            self.cells.len(),
+            self.arrivals,
+            self.served,
+            self.shed,
+            p50 * 1e3,
+            p99 * 1e3,
+            if self.exact_latency.is_some() { "exact" } else { "sketch" },
+            self.slo_attainment() * 100.0,
+            self.events,
+        )
+    }
+}
+
+/// Outcome of one grid cell, merged in cell-index order by [`run_sweep`].
+struct CellOutcome {
+    cell: SweepCell,
+    unroutable: usize,
+    n_windows: usize,
+    sketch: LatencySketch,
+    exact: Option<Summary>,
+}
+
+/// Replay the `(seeds × shards)` grid of single-device sims over `front`
+/// and merge in cell-index order. Bit-deterministic for a given
+/// `base_seed` and grid shape, independent of `sweep.threads`.
+pub fn run_sweep(
+    front: &PlanFront,
+    ramp: &RampSpec,
+    cfg: &SchedulerCfg,
+    sweep: &SweepCfg,
+    base_seed: u64,
+) -> SweepReport {
+    assert!(sweep.seeds >= 1, "sweep needs at least one seed");
+    assert!(sweep.shards >= 1, "sweep needs at least one shard");
+    // Each shard carries an equal slice of the offered load, so one seed
+    // row in aggregate offers the original ramp.
+    let shard_ramp = RampSpec {
+        rates_rps: ramp.rates_rps.iter().map(|r| r / sweep.shards as f64).collect(),
+        phase_s: ramp.phase_s,
+    };
+    let base = Rng::new(base_seed);
+    let n_cells = sweep.seeds * sweep.shards;
+    // Cell seeds derive by keyed split, not by advancing a shared stream:
+    // cell i's arrivals are a pure function of (base_seed, i), so a wider
+    // grid never perturbs existing cells.
+    let cells: Vec<(usize, u64)> =
+        (0..n_cells).map(|i| (i, base.split(i as u64).next_u64())).collect();
+    let threads = if sweep.threads == 0 { default_threads() } else { sweep.threads };
+    let slo_s = cfg.slo_ms * 1e-3;
+
+    let outcomes = scope_map(&cells, threads, |&(idx, seed)| {
+        run_cell(front, &shard_ramp, cfg, sweep, idx / sweep.shards, idx % sweep.shards, seed)
+    });
+
+    // Merge strictly in cell-index order (scope_map preserves input
+    // order), never thread-completion order — thread count must not be
+    // observable in the report.
+    let mut report = SweepReport {
+        cells: Vec::with_capacity(n_cells),
+        arrivals: 0,
+        served: 0,
+        shed: 0,
+        unroutable: 0,
+        events: 0,
+        makespan_s: 0.0,
+        n_windows: 0,
+        latency: LatencySketch::new(),
+        exact_latency: sweep.exact.then(Summary::new),
+        slo_violations: 0,
+    };
+    for out in outcomes {
+        report.arrivals += out.cell.arrivals;
+        report.served += out.cell.served;
+        report.shed += out.cell.shed;
+        report.unroutable += out.unroutable;
+        report.events += out.cell.events;
+        report.makespan_s = report.makespan_s.max(out.cell.makespan_s);
+        report.n_windows = out.n_windows;
+        report.latency.merge(&out.sketch);
+        if let (Some(total), Some(cell)) = (report.exact_latency.as_mut(), out.exact.as_ref()) {
+            total.extend_from(cell);
+        }
+        report.cells.push(out.cell);
+    }
+    report.slo_violations = match &report.exact_latency {
+        Some(s) => report.served - s.count_leq(slo_s),
+        None => report.served - report.latency.count_leq(slo_s) as usize,
+    };
+    report
+}
+
+/// One grid cell: a single-device replay of the shard's traffic slice.
+fn run_cell(
+    front: &PlanFront,
+    shard_ramp: &RampSpec,
+    cfg: &SchedulerCfg,
+    sweep: &SweepCfg,
+    seed_idx: usize,
+    shard_idx: usize,
+    seed: u64,
+) -> CellOutcome {
+    let mix = TrafficMix::single(&front.model, shard_ramp.clone());
+    let mut stream = ArrivalStream::new(&mix, seed);
+    let duration_s = mix.duration_s();
+    if sweep.exact {
+        let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
+        let outcome = run_timeline_controlled(
+            &mut devs,
+            &mut stream,
+            duration_s,
+            cfg.window_s,
+            |_, _, _| Some(0),
+            &mut NoControl,
+        );
+        let dev = devs.pop().expect("one device").into_report();
+        // Rebuild the sketch from the exact samples so exact and default
+        // sweeps expose the same roll-up shape.
+        let mut sketch = LatencySketch::new();
+        for &s in outcome.latency.samples() {
+            sketch.record(s);
+        }
+        CellOutcome {
+            cell: SweepCell {
+                seed_idx,
+                shard_idx,
+                seed,
+                arrivals: outcome.arrivals,
+                served: dev.served,
+                shed: dev.shed,
+                makespan_s: outcome.makespan_s,
+                events: outcome.events,
+            },
+            unroutable: outcome.unroutable,
+            n_windows: outcome.n_windows,
+            sketch,
+            exact: Some(outcome.latency),
+        }
+    } else {
+        // Fast path: no per-request Vec anywhere — the device drops its
+        // sample log and the sink is the fixed-size sketch.
+        let mut devs = vec![DeviceSim::new(front.clone(), *cfg).without_latency_samples()];
+        let outcome = run_timeline_sketched(
+            &mut devs,
+            &mut stream,
+            duration_s,
+            cfg.window_s,
+            |_, _, _| Some(0),
+            &mut NoControl,
+        );
+        let dev = devs.pop().expect("one device").into_report();
+        CellOutcome {
+            cell: SweepCell {
+                seed_idx,
+                shard_idx,
+                seed,
+                arrivals: outcome.arrivals,
+                served: dev.served,
+                shed: dev.shed,
+                makespan_s: outcome.makespan_s,
+                events: outcome.events,
+            },
+            unroutable: outcome.unroutable,
+            n_windows: outcome.n_windows,
+            sketch: outcome.latency,
+            exact: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::front::FrontEntry;
+
+    fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+        FrontEntry {
+            assign: vec![0; 8],
+            batch,
+            latency_ms: lat_ms,
+            tops: rps * 2.5e-3,
+            rps,
+            nacc: 1,
+            label: label.to_string(),
+        }
+    }
+
+    fn front() -> PlanFront {
+        PlanFront::new(
+            "synthetic",
+            12,
+            vec![
+                entry("seq", 1, 0.2, 5000.0),
+                entry("hybrid", 6, 1.0, 6000.0),
+                entry("spatial", 24, 2.0, 12000.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> SchedulerCfg {
+        SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_conserves_requests_per_cell_and_in_total() {
+        let ramp = RampSpec::parse("2000:6000:2000", 0.3).unwrap();
+        let sweep = SweepCfg { seeds: 2, shards: 3, threads: 2, exact: false };
+        let r = run_sweep(&front(), &ramp, &cfg(), &sweep, 42);
+        assert_eq!(r.cells.len(), 6);
+        assert_eq!(r.served + r.shed, r.arrivals);
+        for c in &r.cells {
+            assert_eq!(c.served + c.shed, c.arrivals, "cell {}/{}", c.seed_idx, c.shard_idx);
+        }
+        assert_eq!(r.latency.count(), r.served as u64);
+        assert!(r.events >= r.arrivals as u64, "events must count every arrival");
+    }
+
+    #[test]
+    fn cells_enumerate_the_grid_in_merge_order() {
+        let ramp = RampSpec::parse("1000", 0.2).unwrap();
+        let sweep = SweepCfg { seeds: 3, shards: 2, threads: 1, exact: false };
+        let r = run_sweep(&front(), &ramp, &cfg(), &sweep, 7);
+        let coords: Vec<(usize, usize)> =
+            r.cells.iter().map(|c| (c.seed_idx, c.shard_idx)).collect();
+        assert_eq!(coords, vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)]);
+        // Keyed derivation: cell seeds are distinct and reproducible.
+        let base = Rng::new(7);
+        for (i, c) in r.cells.iter().enumerate() {
+            assert_eq!(c.seed, base.split(i as u64).next_u64());
+        }
+    }
+
+    #[test]
+    fn exact_mode_populates_both_rollups_consistently() {
+        let ramp = RampSpec::parse("3000:3000", 0.25).unwrap();
+        let sweep = SweepCfg { seeds: 2, shards: 2, threads: 1, exact: true };
+        let r = run_sweep(&front(), &ramp, &cfg(), &sweep, 11);
+        let exact = r.exact_latency.as_ref().expect("exact mode keeps samples");
+        assert_eq!(exact.len(), r.served);
+        assert_eq!(r.latency.count(), r.served as u64);
+        // The rebuilt sketch quantile must bracket the exact percentile
+        // within the sketch's relative-error bound.
+        let p99 = exact.percentile(0.99);
+        let sk99 = r.latency.quantile(0.99);
+        assert!(
+            sk99 / p99 < crate::util::stats::SKETCH_GAMMA * 1.001
+                && p99 / sk99 < crate::util::stats::SKETCH_GAMMA * 1.001,
+            "sketch p99 {sk99} vs exact {p99}"
+        );
+    }
+
+    #[test]
+    fn a_sharded_row_offers_the_full_ramp_in_aggregate() {
+        let ramp = RampSpec::parse("4000:4000", 0.5).unwrap();
+        let one = SweepCfg { seeds: 1, shards: 1, threads: 1, exact: false };
+        let eight = SweepCfg { seeds: 1, shards: 8, threads: 1, exact: false };
+        let r1 = run_sweep(&front(), &ramp, &cfg(), &one, 3);
+        let r8 = run_sweep(&front(), &ramp, &cfg(), &eight, 3);
+        // Different draws, same offered load: totals agree statistically.
+        let (a, b) = (r1.arrivals as f64, r8.arrivals as f64);
+        assert!((a - b).abs() / a < 0.15, "1-shard {a} vs 8-shard {b}");
+    }
+}

@@ -1,19 +1,46 @@
 //! Summary statistics for benches and coordinator metrics.
+//!
+//! Two latency rollups live here, with one convention shared by every sim
+//! and report path:
+//!
+//! * [`Summary`] — exact, full-sample: keeps every sample, so quantiles
+//!   are bit-reproducible and memory is O(samples). All pinned reports
+//!   and bit-identity tests use this.
+//! * [`LatencySketch`] — streaming, O(1) memory: a fixed grid of
+//!   log-spaced bins with exact count/sum/min/max and bounded-relative-
+//!   error quantiles. The sweep/bench replay path uses this by default so
+//!   memory stays flat no matter how many requests a replay serves.
+
+use std::sync::OnceLock;
 
 /// Collects samples and reports mean / percentiles / min / max.
+///
+/// Percentile queries sort a cached copy of the samples exactly once: the
+/// first call after any `push` pays the O(n log n) sort, repeated calls
+/// (p50 then p99 then a full sweep) are O(1) in sorting cost.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     samples: Vec<f64>,
+    /// Lazily built sorted copy of `samples`; invalidated by `push`.
+    sorted: OnceLock<Vec<f64>>,
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { samples: Vec::new() }
+        Summary { samples: Vec::new(), sorted: OnceLock::new() }
     }
 
     pub fn push(&mut self, x: f64) {
         debug_assert!(x.is_finite(), "non-finite sample {x}");
         self.samples.push(x);
+        self.sorted.take(); // cached order is stale now
+    }
+
+    /// Append every sample of `other` (shard-merge path; keeps the same
+    /// "multiset of samples" semantics as pushing them one by one).
+    pub fn extend_from(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted.take();
     }
 
     pub fn len(&self) -> usize {
@@ -22,6 +49,11 @@ impl Summary {
 
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
+    }
+
+    /// Raw samples in insertion order (not sorted).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 
     pub fn mean(&self) -> f64 {
@@ -50,21 +82,29 @@ impl Summary {
         var.sqrt()
     }
 
+    /// The sorted sample buffer, built on first use after a `push`.
+    fn sorted_samples(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut v = self.samples.clone();
+            v.sort_by(f64::total_cmp);
+            v
+        })
+    }
+
     /// Percentile via linear interpolation between closest ranks (`q` in 0..=1).
     pub fn percentile(&self, q: f64) -> f64 {
         self.percentiles(&[q])[0]
     }
 
-    /// All requested percentiles from a single sort. The serving loops ask
-    /// for p50+p99 per window/report; `percentile` clones and re-sorts the
-    /// sample vector on every call, which doubles the sort cost for every
-    /// such pair — batch the quantiles instead.
+    /// All requested percentiles from the (cached) single sort. The
+    /// serving loops ask for p50+p99 per window/report; batching the
+    /// quantiles — or any repeated call after the first — costs one sort
+    /// total, not one per quantile.
     pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
             return vec![f64::NAN; qs.len()];
         }
-        let mut v = self.samples.clone();
-        v.sort_by(f64::total_cmp);
+        let v = self.sorted_samples();
         qs.iter()
             .map(|&q| {
                 let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
@@ -81,7 +121,13 @@ impl Summary {
 
     /// Number of samples at or below `x` (SLO-attainment accounting).
     pub fn count_leq(&self, x: f64) -> usize {
-        self.samples.iter().filter(|&&s| s <= x).count()
+        // Binary search when the sorted cache already exists (a report
+        // computing percentiles first gets this for free); a linear scan
+        // otherwise, so a lone count never forces a sort.
+        match self.sorted.get() {
+            Some(v) => v.partition_point(|&s| s <= x),
+            None => self.samples.iter().filter(|&&s| s <= x).count(),
+        }
     }
 
     pub fn p50(&self) -> f64 {
@@ -90,6 +136,164 @@ impl Summary {
 
     pub fn p99(&self) -> f64 {
         self.percentile(0.99)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming quantile sketch
+// ---------------------------------------------------------------------------
+
+/// Log-spaced bin ratio: adjacent bin edges differ by this factor, so any
+/// sample and its bin's representative differ by at most `GAMMA` (~2%).
+pub const SKETCH_GAMMA: f64 = 1.02;
+/// ln(SKETCH_GAMMA), precomputed (no const `ln` in stable rust).
+const LN_GAMMA: f64 = 0.019_802_627_296_179_712;
+/// Smallest resolvable sample (seconds); everything below lands in bin 0.
+const SKETCH_FLOOR: f64 = 1e-7;
+/// Bin count: covers `SKETCH_FLOOR * GAMMA^i` up to ~10^3 s (ten decades,
+/// ceil(ln(1e10)/ln(1.02)) = 1163 bins); larger samples clamp to the top
+/// bin. Sojourn times in every sim here are micro- to low-seconds, far
+/// inside the grid.
+const SKETCH_BINS: usize = 1164;
+
+/// Fixed-memory streaming latency sketch: log-spaced bin counts with
+/// exact count/sum/min/max. Quantiles carry a bounded relative error —
+/// the returned representative lies in the *same bin* as the
+/// nearest-rank sample, so it is within a factor of [`SKETCH_GAMMA`] of
+/// it (pinned by a property test in `tests/simcore_fastpath.rs`).
+/// Sketches merge by bin-wise addition, which is associative and
+/// commutative — but shard merges still run in fixed shard-index order
+/// (see `sim::sweep`) so float `sum`/`min`/`max` folds are reproducible
+/// across thread counts.
+#[derive(Clone, Debug)]
+pub struct LatencySketch {
+    bins: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencySketch {
+    fn default() -> Self {
+        LatencySketch {
+            bins: vec![0; SKETCH_BINS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bin index of sample `x` (clamped into the grid).
+fn sketch_bin(x: f64) -> usize {
+    if x < SKETCH_FLOOR {
+        return 0;
+    }
+    (((x / SKETCH_FLOOR).ln() / LN_GAMMA) as usize).min(SKETCH_BINS - 1)
+}
+
+/// Midpoint representative of bin `i` (geometric center).
+fn sketch_rep(i: usize) -> f64 {
+    SKETCH_FLOOR * ((i as f64 + 0.5) * LN_GAMMA).exp()
+}
+
+impl LatencySketch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite sample {x}");
+        self.bins[sketch_bin(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (the running sum is exact, not binned).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Exact minimum sample.
+    pub fn min_s(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum sample.
+    pub fn max_s(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile with bounded relative error: the
+    /// representative of the bin holding the rank-`round(q*(n-1))`
+    /// sample, clamped into the exact `[min, max]` envelope.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return sketch_rep(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Approximate count of samples ≤ `x`, at bin granularity: full bins
+    /// strictly below `x`'s bin, plus `x`'s own bin once `x` reaches its
+    /// representative. Exact SLO accounting stays on the [`Summary`]
+    /// path; this is for sweep-scale reporting where ±one bin (±2%)
+    /// around the threshold is acceptable.
+    pub fn count_leq(&self, x: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if x >= self.max {
+            return self.count;
+        }
+        let xb = sketch_bin(x);
+        let mut n: u64 = self.bins[..xb].iter().sum();
+        if x >= sketch_rep(xb) {
+            n += self.bins[xb];
+        }
+        n
+    }
+
+    /// Bin-wise merge (same fixed grid on both sides by construction).
+    pub fn merge(&mut self, other: &LatencySketch) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 }
 
@@ -160,6 +364,43 @@ mod tests {
     }
 
     #[test]
+    fn sorted_cache_invalidated_by_push() {
+        // The cache must never serve a stale order: query, push a new
+        // extreme, query again — the new sample must be visible.
+        let mut s = Summary::new();
+        for x in [2.0, 1.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(1.0), 3.0);
+        assert_eq!(s.count_leq(2.5), 2); // sorted cache path
+        s.push(10.0);
+        assert_eq!(s.percentile(1.0), 10.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.count_leq(2.5), 2); // linear path (cache invalidated)
+        // cloning carries the (valid) cache along
+        let _ = s.percentiles(&[0.5]);
+        let c = s.clone();
+        assert_eq!(c.percentile(1.0), 10.0);
+    }
+
+    #[test]
+    fn extend_from_matches_individual_pushes() {
+        let (mut a, mut b, mut both) = (Summary::new(), Summary::new(), Summary::new());
+        for x in [4.0, 1.0, 3.0] {
+            a.push(x);
+            both.push(x);
+        }
+        for x in [2.0, 5.0] {
+            b.push(x);
+            both.push(x);
+        }
+        a.extend_from(&b);
+        let qs = [0.0, 0.25, 0.5, 0.75, 1.0];
+        assert_eq!(a.percentiles(&qs), both.percentiles(&qs));
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
     fn count_leq_boundaries() {
         let mut s = Summary::new();
         for x in [1.0, 2.0, 3.0] {
@@ -169,6 +410,76 @@ mod tests {
         assert_eq!(s.count_leq(2.0), 2);
         assert_eq!(s.count_leq(10.0), 3);
         assert_eq!(Summary::new().count_leq(1.0), 0);
+        // sorted-cache path gives the same answers
+        let _ = s.p50();
+        assert_eq!(s.count_leq(0.5), 0);
+        assert_eq!(s.count_leq(2.0), 2);
+        assert_eq!(s.count_leq(10.0), 3);
+    }
+
+    #[test]
+    fn sketch_exact_moments_and_bounded_quantiles() {
+        let mut sk = LatencySketch::new();
+        let mut exact = Summary::new();
+        // deterministic log-uniform-ish spread over realistic sojourns
+        for i in 0..5000u64 {
+            let x = 1e-4 * (1.0 + (i as f64 * 0.7).sin().abs()) * (1 + i % 37) as f64;
+            sk.record(x);
+            exact.push(x);
+        }
+        assert_eq!(sk.count() as usize, exact.len());
+        assert!((sk.mean() - exact.mean()).abs() < 1e-15);
+        assert_eq!(sk.min_s(), exact.min());
+        assert_eq!(sk.max_s(), exact.max());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let got = sk.quantile(q);
+            let want = exact.percentile(q);
+            // same-bin guarantee => within one GAMMA factor
+            assert!(
+                got / want <= SKETCH_GAMMA && want / got <= SKETCH_GAMMA,
+                "q{q}: sketch {got} vs exact {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_single_stream() {
+        let (mut a, mut b, mut one) = (LatencySketch::new(), LatencySketch::new(), LatencySketch::new());
+        for i in 0..300 {
+            let x = 1e-3 * (1 + i % 23) as f64;
+            if i % 2 == 0 { a.record(x) } else { b.record(x) }
+            one.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), one.count());
+        assert_eq!(a.bins, one.bins);
+        assert_eq!(a.min_s(), one.min_s());
+        assert_eq!(a.max_s(), one.max_s());
+        for q in [0.1, 0.5, 0.99] {
+            assert_eq!(a.quantile(q).to_bits(), one.quantile(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn sketch_edges_and_count_leq() {
+        let mut sk = LatencySketch::new();
+        assert!(sk.quantile(0.5).is_nan());
+        assert_eq!(sk.count_leq(1.0), 0);
+        sk.record(5e-8); // below the floor: bin 0
+        sk.record(1e9); // beyond the grid: clamps to the top bin
+        assert_eq!(sk.count(), 2);
+        assert_eq!(sk.min_s(), 5e-8);
+        assert_eq!(sk.max_s(), 1e9);
+        // quantiles stay inside the exact [min, max] envelope despite the clamped bins
+        assert!(sk.quantile(0.0) >= 5e-8 && sk.quantile(1.0) <= 1e9);
+        assert_eq!(sk.count_leq(1e10), 2);
+        let mut m = LatencySketch::new();
+        for x in [1e-3, 2e-3, 3e-3] {
+            m.record(x);
+        }
+        // bin-granular: everything below 2.5e-3's bin, i.e. the first two samples
+        assert_eq!(m.count_leq(2.5e-3), 2);
+        assert_eq!(m.count_leq(1e-5), 0);
     }
 
     #[test]

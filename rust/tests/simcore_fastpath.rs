@@ -1,0 +1,264 @@
+//! Fast-path pins for the sim core rework: the streaming arrival source,
+//! the sketched O(1)-memory stats path, and the sharded parallel sweep
+//! must all be observationally equivalent to the exact materializing
+//! paths they replace — bit-identical where the contract is exactness,
+//! inside the advertised error bound where it is the sketch.
+
+use ssr::coordinator::scheduler::{
+    ArrivalStream, RampSpec, SchedulerCfg, TrafficClass, TrafficMix,
+};
+use ssr::plan::front::{FrontEntry, PlanFront};
+use ssr::sim::device::{
+    run_timeline, run_timeline_controlled, run_timeline_sketched, DeviceSim, NoControl,
+    TimelineOutcome,
+};
+use ssr::sim::serving::serve_ramp;
+use ssr::sim::sweep::{run_sweep, SweepCfg, SweepReport};
+use ssr::util::rng::Rng;
+use ssr::util::stats::SKETCH_GAMMA;
+
+fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+    FrontEntry {
+        assign: vec![0; 8],
+        batch,
+        latency_ms: lat_ms,
+        tops: rps * 2.5e-3,
+        rps,
+        nacc: 1,
+        label: label.to_string(),
+    }
+}
+
+fn front() -> PlanFront {
+    PlanFront::new(
+        "synthetic",
+        12,
+        vec![
+            entry("seq", 1, 0.2, 5000.0),
+            entry("hybrid", 6, 1.0, 6000.0),
+            entry("spatial", 24, 2.0, 12000.0),
+        ],
+    )
+    .unwrap()
+}
+
+fn cfg() -> SchedulerCfg {
+    SchedulerCfg { slo_ms: 20.0, ..Default::default() }
+}
+
+/// Three-class mix with staggered phases, a zero-rate opening phase, and
+/// unequal durations — the shapes that stress the k-way merge.
+fn mixed() -> TrafficMix {
+    TrafficMix {
+        classes: vec![
+            TrafficClass {
+                model: "a".to_string(),
+                ramp: RampSpec::parse("4000:1000", 0.3).unwrap(),
+            },
+            TrafficClass {
+                model: "b".to_string(),
+                ramp: RampSpec::parse("0:6000:2000", 0.2).unwrap(),
+            },
+            TrafficClass {
+                model: "c".to_string(),
+                ramp: RampSpec::parse("2500", 0.55).unwrap(),
+            },
+        ],
+    }
+}
+
+fn assert_outcomes_identical(a: &TimelineOutcome, b: &TimelineOutcome, tag: &str) {
+    assert_eq!(a.arrivals, b.arrivals, "{tag}: arrivals");
+    assert_eq!(a.unroutable, b.unroutable, "{tag}: unroutable");
+    assert_eq!(a.requeued, b.requeued, "{tag}: requeued");
+    assert_eq!(a.requeue_lost, b.requeue_lost, "{tag}: requeue_lost");
+    assert_eq!(a.n_windows, b.n_windows, "{tag}: n_windows");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+    assert_eq!(a.completions, b.completions, "{tag}: completion sequence");
+    for q in [0.0, 0.25, 0.50, 0.90, 0.99, 1.0] {
+        assert_eq!(
+            a.latency.percentile(q).to_bits(),
+            b.latency.percentile(q).to_bits(),
+            "{tag}: p{q}"
+        );
+    }
+}
+
+#[test]
+fn streaming_arrivals_replay_bit_identical_to_the_materialized_timeline() {
+    for seed in [1u64, 42, 0xDEAD_BEEF] {
+        let mix = mixed();
+        let timeline = mix.arrivals(seed);
+        assert!(timeline.len() > 1000, "thin timeline ({})", timeline.len());
+
+        let mut devs_a = vec![
+            DeviceSim::new(front(), cfg()),
+            DeviceSim::new(front(), cfg()),
+        ];
+        let a = run_timeline(
+            &mut devs_a,
+            &timeline,
+            mix.duration_s(),
+            cfg().window_s,
+            |devs, class, _| Some(class % devs.len()),
+        );
+
+        let mut stream = ArrivalStream::new(&mix, seed);
+        let mut devs_b = vec![
+            DeviceSim::new(front(), cfg()),
+            DeviceSim::new(front(), cfg()),
+        ];
+        let b = run_timeline_controlled(
+            &mut devs_b,
+            &mut stream,
+            mix.duration_s(),
+            cfg().window_s,
+            |devs, class, _| Some(class % devs.len()),
+            &mut NoControl,
+        );
+
+        assert_outcomes_identical(&a, &b, &format!("seed {seed}"));
+        for (da, db) in devs_a.into_iter().zip(devs_b) {
+            let (ra, rb) = (da.into_report(), db.into_report());
+            assert_eq!(ra.routed, rb.routed, "seed {seed}: routed");
+            assert_eq!(ra.served, rb.served, "seed {seed}: served");
+            assert_eq!(ra.shed, rb.shed, "seed {seed}: shed");
+            assert_eq!(ra.windows, rb.windows, "seed {seed}: window trace");
+        }
+    }
+}
+
+#[test]
+fn sketched_path_matches_exact_tallies_and_bounds_every_quantile() {
+    for seed in [7u64, 0xFEED, 3141] {
+        let mix = mixed();
+        let run_exact = || {
+            let mut stream = ArrivalStream::new(&mix, seed);
+            let mut devs = vec![
+                DeviceSim::new(front(), cfg()),
+                DeviceSim::new(front(), cfg()),
+            ];
+            run_timeline_controlled(
+                &mut devs,
+                &mut stream,
+                mix.duration_s(),
+                cfg().window_s,
+                |devs, class, _| Some(class % devs.len()),
+                &mut NoControl,
+            )
+        };
+        let exact = run_exact();
+
+        let mut stream = ArrivalStream::new(&mix, seed);
+        let mut devs = vec![
+            DeviceSim::new(front(), cfg()).without_latency_samples(),
+            DeviceSim::new(front(), cfg()).without_latency_samples(),
+        ];
+        let sk = run_timeline_sketched(
+            &mut devs,
+            &mut stream,
+            mix.duration_s(),
+            cfg().window_s,
+            |devs, class, _| Some(class % devs.len()),
+            &mut NoControl,
+        );
+
+        // Same event sequence: every integer tally and the makespan agree
+        // exactly; the sketch sum is unbinned, so the mean is bit-equal.
+        assert_eq!(sk.arrivals, exact.arrivals);
+        assert_eq!(sk.unroutable, exact.unroutable);
+        assert_eq!(sk.events, exact.events);
+        assert_eq!(sk.n_windows, exact.n_windows);
+        assert_eq!(sk.makespan_s.to_bits(), exact.makespan_s.to_bits());
+        assert_eq!(sk.latency.count(), exact.latency.len() as u64);
+        assert_eq!(sk.latency.mean().to_bits(), exact.latency.mean().to_bits());
+        assert_eq!(sk.latency.max_s().to_bits(), exact.latency.max().to_bits());
+
+        // Bounded error: against the nearest-rank exact sample (the rank
+        // the sketch targets), every quantile is within a factor gamma.
+        let mut sorted: Vec<f64> = exact.latency.samples().to_vec();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.0, 0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999, 1.0] {
+            let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+            let want = sorted[rank];
+            let got = sk.latency.quantile(q);
+            let tol = SKETCH_GAMMA * 1.000_001;
+            assert!(
+                got / want < tol && want / got < tol,
+                "seed {seed} q{q}: sketch {got} vs exact rank sample {want}"
+            );
+        }
+        // No sample vectors anywhere on this path.
+        for d in devs {
+            assert!(d.into_report().latency.is_empty());
+        }
+    }
+}
+
+fn assert_sweeps_identical(a: &SweepReport, b: &SweepReport, tag: &str) {
+    assert_eq!(a.arrivals, b.arrivals, "{tag}: arrivals");
+    assert_eq!(a.served, b.served, "{tag}: served");
+    assert_eq!(a.shed, b.shed, "{tag}: shed");
+    assert_eq!(a.unroutable, b.unroutable, "{tag}: unroutable");
+    assert_eq!(a.events, b.events, "{tag}: events");
+    assert_eq!(a.slo_violations, b.slo_violations, "{tag}: slo_violations");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{tag}: makespan");
+    assert_eq!(a.latency.count(), b.latency.count(), "{tag}: sketch count");
+    assert_eq!(a.cells.len(), b.cells.len(), "{tag}: cell count");
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.seed, cb.seed, "{tag}: cell seed");
+        assert_eq!(ca.arrivals, cb.arrivals, "{tag}: cell arrivals");
+        assert_eq!(ca.served, cb.served, "{tag}: cell served");
+        assert_eq!(ca.shed, cb.shed, "{tag}: cell shed");
+        assert_eq!(ca.events, cb.events, "{tag}: cell events");
+        assert_eq!(ca.makespan_s.to_bits(), cb.makespan_s.to_bits(), "{tag}: cell makespan");
+    }
+    for q in [0.01, 0.50, 0.99] {
+        assert_eq!(
+            a.latency.quantile(q).to_bits(),
+            b.latency.quantile(q).to_bits(),
+            "{tag}: sketch q{q}"
+        );
+    }
+}
+
+#[test]
+fn sweep_report_is_invariant_under_thread_count() {
+    let ramp = RampSpec::parse("3000:9000:3000", 0.25).unwrap();
+    let grid = |threads| SweepCfg { seeds: 3, shards: 4, threads, exact: false };
+    let r1 = run_sweep(&front(), &ramp, &cfg(), &grid(1), 99);
+    let r3 = run_sweep(&front(), &ramp, &cfg(), &grid(3), 99);
+    let r4 = run_sweep(&front(), &ramp, &cfg(), &grid(4), 99);
+    assert_sweeps_identical(&r1, &r3, "1 vs 3 threads");
+    assert_sweeps_identical(&r1, &r4, "1 vs 4 threads");
+    assert_eq!(r1.served + r1.shed, r1.arrivals);
+}
+
+#[test]
+fn degenerate_exact_sweep_is_a_seeded_serve_ramp() {
+    // A 1x1 exact-mode grid is literally serve_ramp under the cell's
+    // derived seed: the sweep's value-add is the grid, not a new sim.
+    let ramp = RampSpec::parse("2000:5000:2000", 0.3).unwrap();
+    let base_seed = 4242u64;
+    let sweep = SweepCfg { seeds: 1, shards: 1, threads: 1, exact: true };
+    let r = run_sweep(&front(), &ramp, &cfg(), &sweep, base_seed);
+    let cell_seed = Rng::new(base_seed).split(0).next_u64();
+    let s = serve_ramp(&front(), &ramp, &cfg(), cell_seed);
+
+    assert_eq!(r.cells.len(), 1);
+    assert_eq!(r.cells[0].seed, cell_seed);
+    assert_eq!(r.arrivals, s.arrivals);
+    assert_eq!(r.served, s.served);
+    assert_eq!(r.shed, s.shed);
+    assert_eq!(r.slo_violations, s.slo_violations);
+    assert_eq!(r.makespan_s.to_bits(), s.makespan_s.to_bits());
+    let exact = r.exact_latency.as_ref().expect("exact mode");
+    for q in [0.0, 0.25, 0.50, 0.99, 1.0] {
+        assert_eq!(
+            exact.percentile(q).to_bits(),
+            s.latency.percentile(q).to_bits(),
+            "q{q}"
+        );
+    }
+}
