@@ -13,6 +13,13 @@
 //!   [`AutoscaleCfg::high_water`] for [`AutoscaleCfg::patience`] control
 //!   intervals adds the next device from the provisioner-supplied
 //!   candidate pool;
+//! * **predictive pre-warm** (opt-in, [`simulate_autoscale_predictive`])
+//!   — a Holt double-exponential forecast ([`ForecastCfg`]) over the same
+//!   per-device [`LoadEstimator`] rates projects the fleet rate
+//!   [`ForecastCfg::horizon`] control intervals ahead; a projected
+//!   high-water breach scales out *immediately*, without waiting out the
+//!   patience, so capacity is up before a flash crowd lands rather than
+//!   after it has already shed;
 //! * **scale in** — utilization below [`AutoscaleCfg::low_water`] for
 //!   `patience` intervals drains the least-utilized device: the router
 //!   stops sending it traffic, its queued requests requeue onto peers,
@@ -42,12 +49,13 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::fleet::{DeviceSpec, FleetSpec};
-use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
-use crate::coordinator::scheduler::{ArrivalStream, SchedulerCfg};
+use crate::cluster::router::{DeviceView, RoutePolicy, Router, ROUTER_STREAM};
+use crate::coordinator::scheduler::SchedulerCfg;
 use crate::plan::front::PlanFront;
 use crate::sim::device::{
     run_timeline_controlled, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
 };
+use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -107,6 +115,77 @@ impl AutoscaleCfg {
             return Err("min_devices must be >= 1".into());
         }
         Ok(())
+    }
+}
+
+/// Knobs of the predictive pre-warm path
+/// ([`simulate_autoscale_predictive`]): a Holt double-exponential
+/// (level + trend) filter over the fleet-aggregate observed rate, run
+/// once per control interval. Kept separate from [`AutoscaleCfg`] on
+/// purpose — the reactive controller's config (and therefore its
+/// behavior) is untouched when forecasting is off.
+#[derive(Clone, Copy, Debug)]
+pub struct ForecastCfg {
+    /// Level smoothing in (0, 1]: `level += alpha * (rate - level)`.
+    pub alpha: f64,
+    /// Trend smoothing in [0, 1]: `trend += beta * (Δlevel - trend)`.
+    pub beta: f64,
+    /// Control intervals of lead time the forecast projects ahead:
+    /// `forecast = level + horizon * trend`. This is what buys the
+    /// pre-warm — it should cover at least the reactive path's
+    /// `patience * control_windows` lag.
+    pub horizon: f64,
+}
+
+impl Default for ForecastCfg {
+    fn default() -> Self {
+        ForecastCfg { alpha: 0.5, beta: 0.5, horizon: 3.0 }
+    }
+}
+
+impl ForecastCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(format!("forecast alpha {} must be in (0, 1]", self.alpha));
+        }
+        if !(self.beta >= 0.0 && self.beta <= 1.0) {
+            return Err(format!("forecast beta {} must be in [0, 1]", self.beta));
+        }
+        if !(self.horizon.is_finite() && self.horizon >= 0.0) {
+            return Err(format!("forecast horizon {} must be finite and >= 0", self.horizon));
+        }
+        Ok(())
+    }
+}
+
+/// Holt filter state: primed by the first observation (level = rate,
+/// trend = 0), then smoothed each control interval.
+struct ForecastState {
+    cfg: ForecastCfg,
+    level: f64,
+    trend: f64,
+    primed: bool,
+}
+
+impl ForecastState {
+    fn new(cfg: ForecastCfg) -> ForecastState {
+        ForecastState { cfg, level: 0.0, trend: 0.0, primed: false }
+    }
+
+    /// Fold in one observed fleet rate; return the rate projected
+    /// `horizon` control intervals ahead.
+    fn observe(&mut self, rate: f64) -> f64 {
+        if !self.primed {
+            self.level = rate;
+            self.trend = 0.0;
+            self.primed = true;
+        } else {
+            let prev = self.level;
+            self.level = self.cfg.alpha * rate + (1.0 - self.cfg.alpha) * self.level;
+            self.trend =
+                self.cfg.beta * (self.level - prev) + (1.0 - self.cfg.beta) * self.trend;
+        }
+        self.level + self.cfg.horizon * self.trend
     }
 }
 
@@ -305,6 +384,10 @@ struct Controller {
     swap_surged: bool,
     hi_streak: usize,
     lo_streak: usize,
+    /// `Some` only on the predictive path
+    /// ([`simulate_autoscale_predictive`]); `None` leaves the reactive
+    /// controller byte-identical to the pre-forecast one.
+    forecast: Option<ForecastState>,
     events: Vec<FleetEvent>,
 }
 
@@ -314,6 +397,7 @@ impl Controller {
         models: Vec<String>,
         ctl: AutoscaleCfg,
         sched_cfg: SchedulerCfg,
+        forecast: Option<ForecastCfg>,
         fault_rng: Rng,
     ) -> Controller {
         let meta = spec
@@ -339,6 +423,7 @@ impl Controller {
             swap_surged: false,
             hi_streak: 0,
             lo_streak: 0,
+            forecast: forecast.map(ForecastState::new),
             events: Vec::new(),
         }
     }
@@ -557,6 +642,28 @@ impl Controller {
         let backlog_s = depth as f64 / cap.max(1e-9);
         let slo_s = self.sched_cfg.slo_ms * 1e-3;
         let draining_now = devs.iter().any(|d| d.state() == DeviceState::Draining);
+
+        // Predictive pre-warm: project the fleet rate `horizon` control
+        // intervals ahead; a projected high-water breach scales out *now*
+        // — waiting out the reactive patience would eat exactly the lead
+        // time the forecast bought. Scale-in still goes through the
+        // reactive hysteresis below, so the pre-warmed capacity drains
+        // once the spike has passed.
+        if let Some(f) = self.forecast.as_mut() {
+            let projected = f.observe(rate);
+            if projected / cap.max(1e-9) > self.ctl.high_water && !self.pool.is_empty() {
+                let spec = self.pool.remove(0);
+                self.events.push(FleetEvent::ScaleOut {
+                    at_s: end_s,
+                    window: w,
+                    id: spec.id.clone(),
+                });
+                self.add_device(devs, spec, end_s);
+                self.hi_streak = 0;
+                self.lo_streak = 0;
+                return;
+            }
+        }
 
         if util > self.ctl.high_water || backlog_s > slo_s {
             self.hi_streak += 1;
@@ -794,11 +901,13 @@ impl AutoscaleReport {
 // The autoscaled fleet simulation
 // ---------------------------------------------------------------------------
 
-/// Simulate serving `mix` on an autoscaled fleet: the same deterministic
-/// per-device core and event loop as [`crate::cluster::sim::simulate_fleet`],
-/// plus the [`Controller`] acting at window boundaries. Fully
-/// deterministic for a given seed (arrival streams, router sampling, and
-/// fault victims all derive from it via [`Rng::split`]).
+/// Simulate serving `traffic` (anything `Into<`[`TraceSpec`]`>`: a
+/// [`crate::cluster::TrafficMix`], a bare ramp, or a full workload trace)
+/// on an autoscaled fleet: the same deterministic per-device core and
+/// event loop as [`crate::cluster::sim::simulate_fleet`], plus the
+/// [`Controller`] acting at window boundaries. Fully deterministic for a
+/// given seed (arrival streams, router sampling, and fault victims all
+/// derive from it via [`Rng::split`]).
 ///
 /// ```
 /// use ssr::cluster::controller::{simulate_autoscale, AutoscaleCfg, AutoscaleSpec, FaultSpec};
@@ -822,14 +931,49 @@ impl AutoscaleReport {
 /// ```
 pub fn simulate_autoscale(
     spec: &AutoscaleSpec,
-    mix: &TrafficMix,
+    traffic: impl Into<TraceSpec>,
     cfg: &SchedulerCfg,
     ctl_cfg: &AutoscaleCfg,
     policy: RoutePolicy,
     seed: u64,
 ) -> Result<AutoscaleReport, String> {
-    if mix.classes.is_empty() {
-        return Err("traffic mix has no classes".into());
+    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, None, policy, seed)
+}
+
+/// [`simulate_autoscale`] with the Holt-forecast pre-warm enabled: the
+/// controller additionally projects the fleet rate
+/// [`ForecastCfg::horizon`] control intervals ahead each control tick and
+/// scales out immediately on a projected high-water breach. Everything
+/// else — reactive hysteresis, scale-in, faults, swaps, recovery, RNG
+/// streams — is byte-identical to the reactive run, so the two reports
+/// are directly comparable at equal seeds
+/// (`benches/trace_serving.rs` pins predictive shedding strictly less on
+/// a flash-crowd trace).
+pub fn simulate_autoscale_predictive(
+    spec: &AutoscaleSpec,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    ctl_cfg: &AutoscaleCfg,
+    forecast: &ForecastCfg,
+    policy: RoutePolicy,
+    seed: u64,
+) -> Result<AutoscaleReport, String> {
+    forecast.validate()?;
+    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, Some(*forecast), policy, seed)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simulate_autoscale_inner(
+    spec: &AutoscaleSpec,
+    trace: TraceSpec,
+    cfg: &SchedulerCfg,
+    ctl_cfg: &AutoscaleCfg,
+    forecast: Option<ForecastCfg>,
+    policy: RoutePolicy,
+    seed: u64,
+) -> Result<AutoscaleReport, String> {
+    if trace.classes.is_empty() {
+        return Err("traffic trace has no classes".into());
     }
     ctl_cfg.validate()?;
     spec.faults.validate()?;
@@ -844,17 +988,18 @@ pub fn simulate_autoscale(
 
     // Arrivals stream lazily from per-class split RNGs — same merged
     // order the materialized timeline had, O(classes) memory.
-    let mut arrivals = ArrivalStream::new(mix, seed);
+    let mut arrivals = ArrivalStream::from_trace(&trace, seed);
     let base = Rng::new(seed);
     let mut router = Router::new(policy, base.split(ROUTER_STREAM));
-    let mut model_set: Vec<String> = mix.classes.iter().map(|c| c.model.clone()).collect();
+    let mut model_set: Vec<String> = trace.classes.iter().map(|c| c.model.clone()).collect();
     model_set.sort();
     model_set.dedup();
-    let mut ctl = Controller::new(spec, model_set, *ctl_cfg, *cfg, base.split(FAULT_STREAM));
+    let mut ctl =
+        Controller::new(spec, model_set, *ctl_cfg, *cfg, forecast, base.split(FAULT_STREAM));
     let mut devs: Vec<DeviceSim> =
         spec.fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
-    let models: Vec<&str> = mix.classes.iter().map(|c| c.model.as_str()).collect();
-    let duration_s = mix.duration_s();
+    let models: Vec<&str> = trace.classes.iter().map(|c| c.model.as_str()).collect();
+    let duration_s = trace.duration_s();
 
     let outcome = run_timeline_controlled(
         &mut devs,
@@ -934,7 +1079,7 @@ pub fn simulate_autoscale(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::router::TrafficClass;
+    use crate::cluster::router::{TrafficClass, TrafficMix};
     use crate::coordinator::scheduler::RampSpec;
     use crate::plan::front::FrontEntry;
 
@@ -1035,6 +1180,55 @@ mod tests {
         assert_eq!(r.requeued, 0);
         assert_eq!(r.served + r.shed, r.arrivals);
         assert!((r.device_seconds() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forecast_cfg_validation() {
+        assert!(ForecastCfg::default().validate().is_ok());
+        assert!(ForecastCfg { alpha: 0.0, ..Default::default() }.validate().is_err());
+        assert!(ForecastCfg { alpha: 1.5, ..Default::default() }.validate().is_err());
+        assert!(ForecastCfg { beta: -0.1, ..Default::default() }.validate().is_err());
+        assert!(ForecastCfg { beta: 1.1, ..Default::default() }.validate().is_err());
+        assert!(ForecastCfg { horizon: -1.0, ..Default::default() }.validate().is_err());
+        assert!(ForecastCfg { horizon: 0.0, ..Default::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn holt_filter_tracks_level_and_extrapolates_trend() {
+        // alpha = beta = 1 degenerates to level = rate, trend = Δrate, so
+        // the projection is exactly linear extrapolation.
+        let mut f = ForecastState::new(ForecastCfg { alpha: 1.0, beta: 1.0, horizon: 2.0 });
+        assert_eq!(f.observe(100.0), 100.0); // primed: trend 0
+        assert_eq!(f.observe(200.0), 400.0); // 200 + 2 * 100
+        assert_eq!(f.observe(300.0), 500.0); // 300 + 2 * 100
+        // a flat series forecasts itself regardless of smoothing
+        let mut f = ForecastState::new(ForecastCfg { alpha: 0.3, beta: 0.2, horizon: 5.0 });
+        for _ in 0..50 {
+            f.observe(800.0);
+        }
+        assert!((f.observe(800.0) - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predictive_on_steady_feasible_load_takes_no_control_actions() {
+        // Flat 3000 req/s on a 5000-capacity device: the forecast settles
+        // on the observed rate, projects no breach, and the predictive run
+        // stays as quiet (and as cheap) as the reactive one.
+        let s = spec_n(1, 2);
+        let mix = TrafficMix::single("m", RampSpec::parse("3000:3000:3000", 0.3).unwrap());
+        let r = simulate_autoscale_predictive(
+            &s, &mix, &cfg(), &AutoscaleCfg::default(), &ForecastCfg::default(),
+            RoutePolicy::PowerOfTwoSlo, 11,
+        )
+        .unwrap();
+        assert!(r.events.is_empty(), "spurious control events: {:?}", r.events);
+        assert_eq!(r.devices.len(), 1);
+        assert_eq!(r.served + r.shed, r.arrivals);
+        let reactive = simulate_autoscale(&s, &mix, &cfg(), &AutoscaleCfg::default(),
+                                          RoutePolicy::PowerOfTwoSlo, 11).unwrap();
+        assert_eq!(r.served, reactive.served);
+        assert_eq!(r.makespan_s, reactive.makespan_s);
+        assert_eq!(r.device_seconds(), reactive.device_seconds());
     }
 
     #[test]

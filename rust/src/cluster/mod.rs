@@ -22,10 +22,15 @@
 //!   platform mix + per-device plan selection that minimizes device count
 //!   then power, emitting a ready-to-serve `FleetSpec`.
 //! * [`controller`] — the online closed loop over all of the above:
-//!   watches per-device load estimates and scales the fleet out/in,
-//!   fails devices over (deterministic [`controller::FaultSpec`]
-//!   injection), and rolls out fleet-level front updates one hitless
-//!   drain-and-swap at a time.
+//!   watches per-device load estimates and scales the fleet out/in
+//!   (reactively, or pre-warmed by a Holt forecast via
+//!   [`controller::simulate_autoscale_predictive`]), fails devices over
+//!   (deterministic [`controller::FaultSpec`] injection), and rolls out
+//!   fleet-level front updates one hitless drain-and-swap at a time.
+//!
+//! Every simulation entry point here takes its workload as
+//! `impl Into<`[`crate::traffic::TraceSpec`]`>` — a [`TrafficMix`], a
+//! bare ramp, or a full diurnal/flash-crowd/heavy-tail trace.
 //!
 //! CLI: `ssr cluster provision|simulate|serve|autoscale`. Invariants
 //! (conservation, determinism, heterogeneous-vs-homogeneous
@@ -39,9 +44,12 @@ pub mod router;
 pub mod sim;
 
 pub use controller::{
-    simulate_autoscale, AutoscaleCfg, AutoscaleReport, AutoscaleSpec, FaultSpec, FrontSwap,
+    simulate_autoscale, simulate_autoscale_predictive, AutoscaleCfg, AutoscaleReport,
+    AutoscaleSpec, FaultSpec, ForecastCfg, FrontSwap,
 };
 pub use fleet::{DeviceSpec, FleetSpec};
 pub use provision::{provision, PlatformOption, ProvisionResult};
 pub use router::{DeviceView, RoutePolicy, Router, TrafficClass, TrafficMix};
 pub use sim::{simulate_fleet, DeviceStat, FleetSimReport};
+
+pub use crate::traffic::TraceSpec;

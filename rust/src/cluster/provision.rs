@@ -1,9 +1,12 @@
 //! Provisioning optimizer: turn a traffic forecast + SLO into a fleet.
 //!
 //! Given the platform options (each a board name plus the plan front one
-//! device of it can serve), a [`RampSpec`] forecast, and a latency SLO,
-//! pick the platform mix and per-device serving point that covers the
-//! forecast peak with the fewest devices, breaking ties by total power:
+//! device of it can serve), a workload forecast (anything
+//! `Into<`[`TraceSpec`]`>` — a bare [`RampSpec`](crate::traffic::RampSpec)
+//! ramp, a multi-class mix, a diurnal or flash-crowd trace), and a latency
+//! SLO, pick the platform mix and per-device serving point that covers the
+//! forecast peak ([`TraceSpec::peak_rps`]) with the fewest devices,
+//! breaking ties by total power:
 //!
 //! 1. per platform, the serving point is the Table 6 cell
 //!    ([`PlanFront::best_under`]) derated by the scheduler's target
@@ -24,8 +27,8 @@
 use crate::analytical::energy::power_w_generic;
 use crate::arch;
 use crate::cluster::fleet::{DeviceSpec, FleetSpec};
-use crate::coordinator::scheduler::RampSpec;
 use crate::dse::pareto::{pareto_indices, Point};
+use crate::traffic::TraceSpec;
 use crate::plan::front::PlanFront;
 
 /// One platform the provisioner may buy devices of.
@@ -172,14 +175,16 @@ fn search(
     }
 }
 
-/// Provision a fleet for the forecast `ramp` under `slo_ms`: minimum
+/// Provision a fleet for the `forecast` workload under `slo_ms`: minimum
 /// device count first, minimum power among count-minimal mixes second.
+/// The sizing peak is [`TraceSpec::peak_rps`] — for a ramp forecast the
+/// exact max-fold over phase rates this function always used.
 /// `headroom` is the target utilization the devices are sized at
 /// (matching [`crate::coordinator::scheduler::SchedulerCfg::headroom`]).
 pub fn provision(
     name: &str,
     options: &[PlatformOption],
-    ramp: &RampSpec,
+    forecast: impl Into<TraceSpec>,
     slo_ms: f64,
     headroom: f64,
 ) -> Result<ProvisionResult, String> {
@@ -194,7 +199,7 @@ pub fn provision(
             return Err("duplicate platform in provisioning options".into());
         }
     }
-    let peak = ramp.rates_rps.iter().copied().fold(0.0, f64::max);
+    let peak = forecast.into().peak_rps();
     if peak <= 0.0 {
         return Err("forecast offers no load".into());
     }
@@ -294,6 +299,7 @@ pub fn provision(
 mod tests {
     use super::*;
     use crate::plan::front::FrontEntry;
+    use crate::traffic::RampSpec;
 
     /// Synthetic single-entry option with controlled capacity/tops (the
     /// platform name only feeds the power constants).

@@ -11,7 +11,7 @@
 //! device index first), then the window tick, then the arrival — live in
 //! [`run_timeline_controlled`], shared with the single-device sim (with
 //! arrivals streamed lazily via
-//! [`crate::coordinator::scheduler::ArrivalStream`]), so a seed fully
+//! [`crate::traffic::ArrivalStream`]), so a seed fully
 //! determines every tally, fleet-wide and per device, and the two sims
 //! cannot diverge (`rust/tests/sim_unification.rs` pins `serve_ramp`
 //! bit-identical to a 1-device fleet). The only ways a request is not
@@ -22,9 +22,10 @@
 //! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
 use crate::cluster::fleet::FleetSpec;
-use crate::cluster::router::{DeviceView, RoutePolicy, Router, TrafficMix, ROUTER_STREAM};
-use crate::coordinator::scheduler::{ArrivalStream, SchedulerCfg, SwitchRecord};
+use crate::cluster::router::{DeviceView, RoutePolicy, Router, ROUTER_STREAM};
+use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
 use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl, WindowStat};
+use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -106,13 +107,15 @@ impl FleetSimReport {
     }
 }
 
-/// Simulate serving `mix` on `fleet` with per-device adaptive scheduling
-/// under `cfg` and the given routing policy. Fully deterministic for a
-/// given seed: per-class arrival streams and the router's sampling stream
-/// are all [`Rng::split`] off the one base seed. All queueing semantics
-/// live in the shared per-device core ([`crate::sim::device`]); this
-/// function only assembles devices, routes arrivals, and rolls up the
-/// report.
+/// Simulate serving `traffic` (anything `Into<`[`TraceSpec`]`>`: a
+/// [`crate::cluster::TrafficMix`], a bare ramp, or a full workload trace
+/// with diurnal/flash curves and heavy-tail bursts) on `fleet` with
+/// per-device adaptive scheduling under `cfg` and the given routing
+/// policy. Fully deterministic for a given seed: per-class arrival
+/// streams and the router's sampling stream are all [`Rng::split`] off
+/// the one base seed. All queueing semantics live in the shared
+/// per-device core ([`crate::sim::device`]); this function only assembles
+/// devices, routes arrivals, and rolls up the report.
 ///
 /// ```
 /// use ssr::cluster::fleet::{parse_mix, synth_fleet};
@@ -128,25 +131,26 @@ impl FleetSimReport {
 /// ```
 pub fn simulate_fleet(
     fleet: &FleetSpec,
-    mix: &TrafficMix,
+    traffic: impl Into<TraceSpec>,
     cfg: &SchedulerCfg,
     policy: RoutePolicy,
     seed: u64,
 ) -> Result<FleetSimReport, String> {
+    let trace: TraceSpec = traffic.into();
     if fleet.is_empty() {
         return Err("cannot simulate an empty fleet".into());
     }
-    if mix.classes.is_empty() {
-        return Err("traffic mix has no classes".into());
+    if trace.classes.is_empty() {
+        return Err("traffic trace has no classes".into());
     }
     // Arrivals stream lazily from per-class split RNGs — same merged
     // order the materialized timeline had, O(classes) memory.
-    let mut arrivals = ArrivalStream::new(mix, seed);
+    let mut arrivals = ArrivalStream::from_trace(&trace, seed);
     let base = Rng::new(seed);
     let mut router = Router::new(policy, base.split(ROUTER_STREAM));
 
     // Class -> devices serving that model.
-    let eligible: Vec<Vec<usize>> = mix
+    let eligible: Vec<Vec<usize>> = trace
         .classes
         .iter()
         .map(|c| {
@@ -166,7 +170,7 @@ pub fn simulate_fleet(
     let outcome = run_timeline_controlled(
         &mut devs,
         &mut arrivals,
-        mix.duration_s(),
+        trace.duration_s(),
         cfg.window_s,
         |devs, class, _t| {
             // The router sees only observable state: each device's standing
@@ -226,7 +230,7 @@ pub fn simulate_fleet(
 mod tests {
     use super::*;
     use crate::cluster::fleet::{DeviceSpec, FleetSpec};
-    use crate::cluster::router::TrafficClass;
+    use crate::cluster::router::{TrafficClass, TrafficMix};
     use crate::coordinator::scheduler::RampSpec;
     use crate::plan::front::{FrontEntry, PlanFront};
 

@@ -6,9 +6,6 @@
 //! spatial wins throughput at high batch). This module holds the whole
 //! [`PlanFront`] live and selects against the observed load:
 //!
-//! * [`RampSpec`] — open-loop load generator: Poisson arrivals over
-//!   piecewise-constant rate phases (`--ramp a:b:c`), deterministic per
-//!   seed so scheduler behavior is replayable.
 //! * [`LoadEstimator`] — sliding-window estimate over `ServeReport`-style
 //!   metrics: arrival rate, queue depth, completion p99.
 //! * [`AdaptiveScheduler`] — the switch policy. Per window it targets the
@@ -30,9 +27,14 @@
 //! The deterministic queueing counterpart (drain-and-swap mid-batch, real
 //! backlog, shedding) lives in [`crate::sim::serving`], which drives this
 //! same scheduler without artifacts.
+//!
+//! The load-generation half that used to live here — [`RampSpec`] ramps,
+//! [`ClassArrivals`], [`TrafficClass`]/[`TrafficMix`], and the streaming
+//! [`ArrivalStream`] merge — moved verbatim to [`crate::traffic`] when the
+//! traffic API was unified around [`crate::traffic::TraceSpec`]; the
+//! re-exports below keep every pre-move path compiling.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -42,232 +44,11 @@ use super::metrics::ServeReport;
 use super::pipeline::{synth_images, PipelineServer};
 use crate::plan::front::{FrontEntry, PlanFront};
 use crate::runtime::exec::{Engine, Tensor};
-use crate::sim::device::ArrivalSource;
-use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
-// ---------------------------------------------------------------------------
-// Load generation
-// ---------------------------------------------------------------------------
-
-/// Piecewise-constant arrival-rate ramp (the `--ramp a:b:c` flag): phase
-/// `i` offers `rates_rps[i]` requests/s for `phase_s` seconds.
-#[derive(Clone, Debug, PartialEq)]
-pub struct RampSpec {
-    pub rates_rps: Vec<f64>,
-    pub phase_s: f64,
-}
-
-impl RampSpec {
-    /// Parse `"a:b:c"` (also accepts commas) into a ramp.
-    pub fn parse(spec: &str, phase_s: f64) -> Result<RampSpec, String> {
-        let rates: Result<Vec<f64>, _> = spec
-            .split(|c| c == ':' || c == ',')
-            .filter(|s| !s.trim().is_empty())
-            .map(|s| s.trim().parse::<f64>())
-            .collect();
-        let rates = rates.map_err(|e| format!("bad ramp '{spec}': {e}"))?;
-        if rates.is_empty() {
-            return Err(format!("ramp '{spec}' has no phases"));
-        }
-        if rates.iter().any(|r| !r.is_finite() || *r < 0.0) {
-            return Err(format!("ramp '{spec}' has a negative or non-finite rate"));
-        }
-        if !(phase_s > 0.0 && phase_s.is_finite()) {
-            return Err(format!("phase duration {phase_s} must be positive"));
-        }
-        Ok(RampSpec { rates_rps: rates, phase_s })
-    }
-
-    pub fn duration_s(&self) -> f64 {
-        self.rates_rps.len() as f64 * self.phase_s
-    }
-
-    /// Offered rate at time `t` (0 outside the ramp).
-    pub fn rate_at(&self, t: f64) -> f64 {
-        if t < 0.0 {
-            return 0.0;
-        }
-        self.rates_rps.get((t / self.phase_s) as usize).copied().unwrap_or(0.0)
-    }
-
-    /// Deterministic Poisson arrival times over the ramp (sorted). Each
-    /// phase draws exponential gaps at its own rate; restarting at phase
-    /// boundaries is exact for a Poisson process (memorylessness).
-    ///
-    /// Materializes the [`ClassArrivals`] stream — sims should consume
-    /// the stream itself (via [`ArrivalStream`]) and never hold the full
-    /// timeline; this remains for callers that genuinely want the Vec.
-    pub fn arrivals(&self, seed: u64) -> Vec<f64> {
-        let mut stream = ClassArrivals::new(self, Rng::new(seed));
-        let mut out = Vec::new();
-        while let Some(t) = stream.next_arrival() {
-            out.push(t);
-        }
-        out
-    }
-}
-
-/// Lazy per-class Poisson arrival generator: the streaming form of
-/// [`RampSpec::arrivals`], drawing one exponential gap per `next_arrival`
-/// call from the same RNG in the same order — the two produce bit-equal
-/// times (pinned by `class_arrivals_match_the_materializing_generator`).
-/// O(1) memory regardless of how many arrivals the ramp offers.
-#[derive(Clone, Debug)]
-pub struct ClassArrivals {
-    rng: Rng,
-    rates_rps: Vec<f64>,
-    phase_s: f64,
-    phase: usize,
-    t: f64,
-}
-
-impl ClassArrivals {
-    pub fn new(ramp: &RampSpec, rng: Rng) -> ClassArrivals {
-        ClassArrivals {
-            rng,
-            rates_rps: ramp.rates_rps.clone(),
-            phase_s: ramp.phase_s,
-            phase: 0,
-            t: 0.0,
-        }
-    }
-
-    /// Next arrival time, `None` once the ramp is exhausted. Zero-rate
-    /// phases draw nothing (exactly like the materializing loop's
-    /// `continue`), and the draw that overshoots a phase boundary is
-    /// consumed, not reused — both invariants are what keep the stream
-    /// bit-identical to the pre-streaming generator.
-    pub fn next_arrival(&mut self) -> Option<f64> {
-        while self.phase < self.rates_rps.len() {
-            let rate = self.rates_rps[self.phase];
-            if rate <= 0.0 {
-                self.enter_phase(self.phase + 1);
-                continue;
-            }
-            // t0 + phase_s, NOT (phase+1)*phase_s: the materializing
-            // generator computed the boundary this way and the two can
-            // differ by an ulp — which would shift an arrival across it.
-            let t1 = self.phase as f64 * self.phase_s + self.phase_s;
-            self.t += -(1.0 - self.rng.f64()).ln() / rate;
-            if self.t >= t1 {
-                self.enter_phase(self.phase + 1);
-                continue;
-            }
-            return Some(self.t);
-        }
-        None
-    }
-
-    fn enter_phase(&mut self, p: usize) {
-        self.phase = p;
-        self.t = p as f64 * self.phase_s; // each phase restarts at its t0
-    }
-}
-
-/// One model's offered load.
-#[derive(Clone, Debug)]
-pub struct TrafficClass {
-    pub model: String,
-    pub ramp: RampSpec,
-}
-
-/// A multi-model traffic mix: each class generates Poisson arrivals from
-/// its own ramp on an independent split RNG stream, so adding a class
-/// never perturbs another class's arrival times. The single-device sim
-/// serves a single-class mix; the cluster router dispatches the general
-/// case — both replay the same merged timeline format.
-#[derive(Clone, Debug)]
-pub struct TrafficMix {
-    pub classes: Vec<TrafficClass>,
-}
-
-impl TrafficMix {
-    pub fn single(model: &str, ramp: RampSpec) -> TrafficMix {
-        TrafficMix { classes: vec![TrafficClass { model: model.to_string(), ramp }] }
-    }
-
-    pub fn duration_s(&self) -> f64 {
-        self.classes.iter().map(|c| c.ramp.duration_s()).fold(0.0, f64::max)
-    }
-
-    /// Merged `(arrival time, class index)` timeline, sorted by time with
-    /// ties broken by class order — fully deterministic per seed.
-    ///
-    /// Materializes [`ArrivalStream`] — sims consume the stream directly
-    /// and keep memory O(classes); this remains for callers (and the
-    /// differential tests) that want the whole Vec.
-    pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
-        let mut stream = ArrivalStream::new(self, seed);
-        let mut out = Vec::new();
-        while let Some(a) = stream.pop() {
-            out.push(a);
-        }
-        out
-    }
-}
-
-/// Pending head of one class's arrival stream. Keys order by time then
-/// class index; times are non-negative finite f64s, whose `to_bits`
-/// order equals their numeric order, so a derived lexicographic `Ord`
-/// reproduces the materialized sort's
-/// `t.total_cmp(..).then(class.cmp(..))` comparator exactly.
-#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct PendingArrival {
-    t_bits: u64,
-    class: usize,
-}
-
-/// Streaming k-way merge of per-class [`ClassArrivals`] generators: the
-/// lazy form of [`TrafficMix::arrivals`], holding one pending arrival per
-/// class in a min-heap instead of the materialized, sorted timeline —
-/// O(classes) memory for any run length. Each class draws from the same
-/// `Rng::split(class_index)` stream as before, so adding a class never
-/// perturbs another's times, and the merged order is bit-identical to
-/// sorting the materialized timeline (same-class ties keep generation
-/// order because at most one entry per class is in the heap).
-pub struct ArrivalStream {
-    classes: Vec<ClassArrivals>,
-    heap: BinaryHeap<Reverse<PendingArrival>>,
-}
-
-impl ArrivalStream {
-    pub fn new(mix: &TrafficMix, seed: u64) -> ArrivalStream {
-        let base = Rng::new(seed);
-        let mut classes: Vec<ClassArrivals> = mix
-            .classes
-            .iter()
-            .enumerate()
-            .map(|(ci, c)| {
-                let class_seed = base.split(ci as u64).next_u64();
-                ClassArrivals::new(&c.ramp, Rng::new(class_seed))
-            })
-            .collect();
-        let mut heap = BinaryHeap::with_capacity(classes.len());
-        for (ci, c) in classes.iter_mut().enumerate() {
-            if let Some(t) = c.next_arrival() {
-                heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: ci }));
-            }
-        }
-        ArrivalStream { classes, heap }
-    }
-}
-
-impl ArrivalSource for ArrivalStream {
-    fn peek_s(&self) -> f64 {
-        self.heap.peek().map_or(f64::INFINITY, |&Reverse(p)| f64::from_bits(p.t_bits))
-    }
-
-    fn pop(&mut self) -> Option<(f64, usize)> {
-        let Reverse(p) = self.heap.pop()?;
-        // refill from the popped class so the heap again holds every
-        // non-exhausted class's head
-        if let Some(t) = self.classes[p.class].next_arrival() {
-            self.heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: p.class }));
-        }
-        Some((f64::from_bits(p.t_bits), p.class))
-    }
-}
+// Moved to `crate::traffic` (see module docs); re-exported for the
+// pre-move `coordinator::scheduler::*` paths.
+pub use crate::traffic::{ArrivalStream, ClassArrivals, RampSpec, TrafficClass, TrafficMix};
 
 // ---------------------------------------------------------------------------
 // Policy configuration
@@ -800,6 +581,7 @@ impl AdaptiveServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
         FrontEntry {
@@ -933,33 +715,6 @@ mod tests {
     }
 
     #[test]
-    fn ramp_parse_and_rate_lookup() {
-        let r = RampSpec::parse("1000:4000:1000", 0.5).unwrap();
-        assert_eq!(r.rates_rps, vec![1000.0, 4000.0, 1000.0]);
-        assert!((r.duration_s() - 1.5).abs() < 1e-12);
-        assert_eq!(r.rate_at(0.1), 1000.0);
-        assert_eq!(r.rate_at(0.7), 4000.0);
-        assert_eq!(r.rate_at(2.0), 0.0);
-        assert!(RampSpec::parse("", 0.5).is_err());
-        assert!(RampSpec::parse("1:x", 0.5).is_err());
-        assert!(RampSpec::parse("1:-2", 0.5).is_err());
-        assert!(RampSpec::parse("1:2", 0.0).is_err());
-    }
-
-    #[test]
-    fn poisson_arrivals_deterministic_sorted_in_bounds() {
-        let r = RampSpec::parse("2000:500", 0.5).unwrap();
-        let a = r.arrivals(42);
-        let b = r.arrivals(42);
-        assert_eq!(a, b);
-        assert!(a.windows(2).all(|w| w[0] <= w[1]));
-        assert!(a.iter().all(|&t| (0.0..1.0).contains(&t)));
-        // ~1250 expected; allow wide Poisson slack
-        assert!((800..1700).contains(&a.len()), "{} arrivals", a.len());
-        assert_ne!(a, r.arrivals(43));
-    }
-
-    #[test]
     fn scheduler_starts_on_lowest_latency_under_slo() {
         let s = AdaptiveScheduler::new(front3(), SchedulerCfg { slo_ms: 20.0, ..Default::default() });
         assert_eq!(s.active(), 0);
@@ -967,107 +722,6 @@ mod tests {
         // exist here; with SLO below every entry we still serve best effort
         let s = AdaptiveScheduler::new(front3(), SchedulerCfg { slo_ms: 0.05, ..Default::default() });
         assert_eq!(s.active(), 0);
-    }
-
-    #[test]
-    fn class_arrivals_match_the_materializing_generator() {
-        // The pre-streaming RampSpec::arrivals body, verbatim: one RNG
-        // across phases, zero-rate phases skipped without a draw, each
-        // phase restarting at t0, the boundary-overshooting draw consumed.
-        fn reference(ramp: &RampSpec, seed: u64) -> Vec<f64> {
-            let mut rng = Rng::new(seed);
-            let mut out = Vec::new();
-            for (i, &rate) in ramp.rates_rps.iter().enumerate() {
-                if rate <= 0.0 {
-                    continue;
-                }
-                let t0 = i as f64 * ramp.phase_s;
-                let t1 = t0 + ramp.phase_s;
-                let mut t = t0;
-                loop {
-                    t += -(1.0 - rng.f64()).ln() / rate;
-                    if t >= t1 {
-                        break;
-                    }
-                    out.push(t);
-                }
-            }
-            out
-        }
-        for (spec, phase) in [("2000:500", 0.5), ("0:3000:0:800", 0.2), ("1000", 1.0)] {
-            let r = RampSpec::parse(spec, phase).unwrap();
-            for seed in [1u64, 42, 0xC0FFEE] {
-                let want = reference(&r, seed);
-                let got = r.arrivals(seed);
-                assert_eq!(got.len(), want.len(), "{spec} seed {seed}: count");
-                for (g, w) in got.iter().zip(&want) {
-                    assert_eq!(g.to_bits(), w.to_bits(), "{spec} seed {seed}: time bits");
-                }
-            }
-        }
-    }
-
-    #[test]
-    fn streaming_merge_matches_materialize_and_sort() {
-        // The pre-streaming TrafficMix::arrivals: materialize every class
-        // then stable-sort by (time, class). The k-way heap merge must
-        // reproduce it bit for bit, ties included.
-        let mix = TrafficMix {
-            classes: vec![
-                TrafficClass {
-                    model: "a".to_string(),
-                    ramp: RampSpec::parse("2000:0:1500", 0.3).unwrap(),
-                },
-                TrafficClass {
-                    model: "b".to_string(),
-                    ramp: RampSpec::parse("900", 0.7).unwrap(),
-                },
-                TrafficClass {
-                    model: "c".to_string(),
-                    ramp: RampSpec::parse("0:4000", 0.25).unwrap(),
-                },
-            ],
-        };
-        for seed in [3u64, 99, 0xABCDE] {
-            let base = Rng::new(seed);
-            let mut want: Vec<(f64, usize)> = Vec::new();
-            for (ci, c) in mix.classes.iter().enumerate() {
-                let class_seed = base.split(ci as u64).next_u64();
-                want.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
-            }
-            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            let got = mix.arrivals(seed);
-            assert_eq!(got.len(), want.len(), "seed {seed}: count");
-            for (g, w) in got.iter().zip(&want) {
-                assert_eq!(g.0.to_bits(), w.0.to_bits(), "seed {seed}: time bits");
-                assert_eq!(g.1, w.1, "seed {seed}: class");
-            }
-        }
-    }
-
-    #[test]
-    fn arrival_stream_peek_agrees_with_pop_and_exhausts_to_infinity() {
-        let mix = TrafficMix::single("m", RampSpec::parse("1500:800", 0.3).unwrap());
-        let mut s = ArrivalStream::new(&mix, 7);
-        let mut n = 0usize;
-        let mut last = 0.0f64;
-        loop {
-            let peeked = s.peek_s();
-            match s.pop() {
-                Some((t, class)) => {
-                    assert_eq!(peeked.to_bits(), t.to_bits(), "peek must match pop");
-                    assert!(t >= last, "stream went backwards");
-                    assert_eq!(class, 0);
-                    last = t;
-                    n += 1;
-                }
-                None => {
-                    assert_eq!(peeked, f64::INFINITY, "exhausted stream must peek INFINITY");
-                    break;
-                }
-            }
-        }
-        assert_eq!(n, mix.arrivals(7).len());
     }
 
     #[test]

@@ -14,8 +14,9 @@
 //!   [`coordinator`]), a heterogeneous multi-device fleet layer — specs,
 //!   routing, fleet simulation, provisioning, and a closed-loop
 //!   autoscaling controller with failure injection and hitless rolling
-//!   front swaps — ([`cluster`]), and report generators for every paper
-//!   table/figure ([`report`]).
+//!   front swaps — ([`cluster`]), the unified workload-trace API every
+//!   traffic consumer speaks ([`traffic`]), and report generators for
+//!   every paper table/figure ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
 //!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
 //!   runtime serves.
@@ -36,4 +37,5 @@ pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod traffic;
 pub mod util;

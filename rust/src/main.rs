@@ -14,8 +14,13 @@
 //!                     forecast, `simulate` a fleet deterministically, `serve`
 //!                     it live (one adaptive server per device + router), or
 //!                     `autoscale` it closed-loop (scale out/in against the
-//!                     observed load, deterministic failure injection via
+//!                     observed load — optionally forecast-pre-warmed via
+//!                     --predictive — deterministic failure injection via
 //!                     --fail, hitless rolling front swaps via --swap-at)
+//!   trace             workload traces: `synth` a TraceSpec JSON (constant/
+//!                     ramp/diurnal/flash curves, poisson/lognormal/pareto
+//!                     arrivals, optional Zipf model mix), `show` one; every
+//!                     simulation verb accepts it via --trace
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use std::path::Path;
@@ -25,7 +30,7 @@ use ssr::arch;
 use ssr::cluster::fleet::{parse_mix, synth_fleet};
 use ssr::cluster::router::FleetServer;
 use ssr::cluster::{
-    simulate_fleet, AutoscaleCfg, AutoscaleSpec, FaultSpec, FleetSpec, FrontSwap,
+    simulate_fleet, AutoscaleCfg, AutoscaleSpec, FaultSpec, FleetSpec, ForecastCfg, FrontSwap,
     PlatformOption, RoutePolicy, TrafficMix,
 };
 use ssr::sim::device::DeviceState;
@@ -40,6 +45,7 @@ use ssr::plan::front::{analytical_front, PlanFront};
 use ssr::plan::ExecutionPlan;
 use ssr::report::tables::{self, Ctx};
 use ssr::runtime::exec::Engine;
+use ssr::traffic::{ArrivalProcess, RateCurve, TraceSpec};
 use ssr::util::cli::{Command, Matches};
 
 /// Parse an 8-class Layer→Acc genome like `0,1,1,1,0,2,2,0`.
@@ -65,10 +71,11 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "serve" => cmd_serve(&rest),
         "cluster" => cmd_cluster(&rest),
+        "trace" => cmd_trace(&rest),
         "calibrate" => cmd_calibrate(&rest),
         _ => {
             eprintln!(
-                "usage: ssr <report|dse|simulate|serve|cluster|calibrate> [flags]\n\
+                "usage: ssr <report|dse|simulate|serve|cluster|trace|calibrate> [flags]\n\
                  run `ssr <subcommand> --help` for flags"
             );
             if sub == "help" {
@@ -178,9 +185,10 @@ fn scheduler_flags(cmd: Command) -> Command {
         .flag("slo-ms", Some("2.0"), "per-request latency SLO (ms)")
         .flag("ramp", Some("1000:4000:1000"), "arrival-rate ramp, req/s per phase (a:b:c)")
         .flag("phase-s", Some("0.5"), "seconds per ramp phase")
+        .flag("trace", Some(""), "TraceSpec JSON (from `ssr trace synth`); overrides --ramp")
         .flag("window-ms", Some("50"), "scheduler decision window (ms)")
         .flag("patience", Some("2"), "hysteresis: windows before a switch commits")
-        .flag("load-seed", Some("7"), "Poisson load-generator seed")
+        .flag("load-seed", Some("7"), "load-generator seed")
 }
 
 fn scheduler_cfg(m: &Matches) -> SchedulerCfg {
@@ -195,6 +203,23 @@ fn scheduler_cfg(m: &Matches) -> SchedulerCfg {
 fn parse_ramp_or_exit(m: &Matches) -> RampSpec {
     match RampSpec::parse(&m.str("ramp"), m.f64("phase-s")) {
         Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--trace trace.json` when given, else the `--ramp`/`--phase-s` ramp
+/// desugared to a single-class Poisson [`TraceSpec`] for `model`.
+fn load_trace_or_exit(m: &Matches, model: &str) -> TraceSpec {
+    let path = m.str("trace");
+    if path.is_empty() {
+        let ramp = parse_ramp_or_exit(m);
+        return TraceSpec::single(model, RateCurve::from(&ramp), ArrivalProcess::Poisson);
+    }
+    match TraceSpec::load(Path::new(&path)) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
@@ -377,13 +402,16 @@ fn cmd_simulate(args: &[String]) -> i32 {
                 return 2;
             }
         };
-        let ramp = parse_ramp_or_exit(&m);
+        let trace = load_trace_or_exit(&m, &m.str("model"));
         let cfg = scheduler_cfg(&m);
         print!("{}", front.describe());
         println!(
-            "slo {} ms, window {} ms, patience {}, ramp {:?} req/s x {} s",
-            cfg.slo_ms, cfg.window_s * 1e3, cfg.patience, ramp.rates_rps, ramp.phase_s
+            "slo {} ms, window {} ms, patience {}",
+            cfg.slo_ms,
+            cfg.window_s * 1e3,
+            cfg.patience
         );
+        print!("{}", trace.describe());
         if m.bool("sweep") {
             let sweep = ssr::sim::sweep::SweepCfg {
                 seeds: m.usize("sweep-seeds"),
@@ -394,7 +422,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             let t0 = std::time::Instant::now();
             let r = ssr::sim::sweep::run_sweep(
                 &front,
-                &ramp,
+                &trace,
                 &cfg,
                 &sweep,
                 m.usize("load-seed") as u64,
@@ -423,7 +451,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             );
             return 0;
         }
-        let r = ssr::sim::serving::serve_ramp(&front, &ramp, &cfg, m.usize("load-seed") as u64);
+        let r = ssr::sim::serving::serve_ramp(&front, &trace, &cfg, m.usize("load-seed") as u64);
         print_sim_report(&front, &r);
         return 0;
     }
@@ -663,6 +691,7 @@ fn cluster_flags(cmd: Command) -> Command {
         .flag("slo-ms", Some("2.0"), "per-request latency SLO (ms)")
         .flag("ramp", Some("4000:12000:4000"), "offered/forecast req/s per phase (a:b:c)")
         .flag("phase-s", Some("0.5"), "seconds per ramp phase")
+        .flag("trace", Some(""), "TraceSpec JSON (from `ssr trace synth`); overrides --ramp")
         .flag("window-ms", Some("50"), "scheduler decision window (ms)")
         .flag("patience", Some("2"), "hysteresis: windows before a switch commits")
         .flag("load-seed", Some("7"), "base seed (split per class/device/router)")
@@ -694,7 +723,7 @@ fn cluster_provision(args: &[String]) -> i32 {
     )
     .flag("out", Some(""), "write the provisioned FleetSpec JSON here");
     let m = parse_or_exit(cmd, args);
-    let ramp = parse_ramp_or_exit(&m);
+    let forecast = load_trace_or_exit(&m, &m.str("model"));
     let batches = m.usize_list("batches");
     let model = m.str("model");
     let mut options = Vec::new();
@@ -707,8 +736,13 @@ fn cluster_provision(args: &[String]) -> i32 {
             }
         }
     }
-    match ssr::cluster::provision("provisioned", &options, &ramp, m.f64("slo-ms"), m.f64("headroom"))
-    {
+    match ssr::cluster::provision(
+        "provisioned",
+        &options,
+        &forecast,
+        m.f64("slo-ms"),
+        m.f64("headroom"),
+    ) {
         Ok(r) => {
             print!("{}", r.describe());
             print!("{}", r.fleet.describe());
@@ -751,19 +785,17 @@ fn cluster_simulate(args: &[String]) -> i32 {
             return 2;
         }
     };
-    let ramp = parse_ramp_or_exit(&m);
+    let trace = load_trace_or_exit(&m, &m.str("model"));
     let cfg = scheduler_cfg(&m);
-    let mix = TrafficMix::single(&m.str("model"), ramp);
     print!("{}", fleet.describe());
     println!(
-        "policy {}, slo {} ms, window {} ms, ramp {:?} req/s x {} s",
+        "policy {}, slo {} ms, window {} ms",
         policy.name(),
         cfg.slo_ms,
-        cfg.window_s * 1e3,
-        mix.classes[0].ramp.rates_rps,
-        mix.classes[0].ramp.phase_s
+        cfg.window_s * 1e3
     );
-    let r = match simulate_fleet(&fleet, &mix, &cfg, policy, m.usize("load-seed") as u64) {
+    print!("{}", trace.describe());
+    let r = match simulate_fleet(&fleet, &trace, &cfg, policy, m.usize("load-seed") as u64) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -880,7 +912,11 @@ fn cluster_autoscale(args: &[String]) -> i32 {
     .flag("min-devices", Some("1"), "never scale in below this many serving devices")
     .flag("fail", Some(""), "fault injection: kill times in seconds (t1,t2,...)")
     .flag("swap-at", Some(""), "roll out new fronts at this time (hitless, one device at a time)")
-    .flag("swap-batches", Some("1,2,3,6"), "batch grid of the swapped-in fronts");
+    .flag("swap-batches", Some("1,2,3,6"), "batch grid of the swapped-in fronts")
+    .switch("predictive", "pre-warm scale-out from a Holt forecast of the arrival rate")
+    .flag("forecast-alpha", Some("0.5"), "predictive: level smoothing in (0, 1]")
+    .flag("forecast-beta", Some("0.5"), "predictive: trend smoothing in [0, 1]")
+    .flag("forecast-horizon", Some("3"), "predictive: control intervals extrapolated ahead");
     let m = parse_or_exit(cmd, args);
     let fleet = match load_fleet(&m) {
         Ok(f) => f,
@@ -896,7 +932,7 @@ fn cluster_autoscale(args: &[String]) -> i32 {
             return 2;
         }
     };
-    let ramp = parse_ramp_or_exit(&m);
+    let trace = load_trace_or_exit(&m, &m.str("model"));
     let cfg = scheduler_cfg(&m);
     let model = m.str("model");
     let ctl_cfg = AutoscaleCfg {
@@ -969,11 +1005,10 @@ fn cluster_autoscale(args: &[String]) -> i32 {
         Some(FrontSwap { at_s, model: model.clone(), fronts })
     };
     let spec = AutoscaleSpec { fleet, pool, faults, swap };
-    let mix = TrafficMix::single(&model, ramp);
     print!("{}", spec.fleet.describe());
     println!(
         "policy {}, slo {} ms, window {} ms, water {:.2}/{:.2}, control every {} windows \
-         (patience {}), pool of {}, ramp {:?} req/s x {} s",
+         (patience {}), pool of {}{}",
         policy.name(),
         cfg.slo_ms,
         cfg.window_s * 1e3,
@@ -982,17 +1017,23 @@ fn cluster_autoscale(args: &[String]) -> i32 {
         ctl_cfg.control_windows,
         ctl_cfg.patience,
         spec.pool.len(),
-        mix.classes[0].ramp.rates_rps,
-        mix.classes[0].ramp.phase_s
+        if m.bool("predictive") { ", predictive pre-warm" } else { "" }
     );
-    let r = match ssr::cluster::simulate_autoscale(
-        &spec,
-        &mix,
-        &cfg,
-        &ctl_cfg,
-        policy,
-        m.usize("load-seed") as u64,
-    ) {
+    print!("{}", trace.describe());
+    let seed = m.usize("load-seed") as u64;
+    let outcome = if m.bool("predictive") {
+        let forecast = ForecastCfg {
+            alpha: m.f64("forecast-alpha"),
+            beta: m.f64("forecast-beta"),
+            horizon: m.f64("forecast-horizon"),
+        };
+        ssr::cluster::simulate_autoscale_predictive(
+            &spec, &trace, &cfg, &ctl_cfg, &forecast, policy, seed,
+        )
+    } else {
+        ssr::cluster::simulate_autoscale(&spec, &trace, &cfg, &ctl_cfg, policy, seed)
+    };
+    let r = match outcome {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -1045,6 +1086,125 @@ fn cluster_autoscale(args: &[String]) -> i32 {
         r.duration_s
     );
     0
+}
+
+fn cmd_trace(args: &[String]) -> i32 {
+    let verb = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    match verb {
+        "synth" => trace_synth(&rest),
+        "show" => trace_show(&rest),
+        _ => {
+            eprintln!(
+                "usage: ssr trace <synth|show> [flags]\n\
+                 run `ssr trace <verb> --help` for flags"
+            );
+            if verb == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    }
+}
+
+fn trace_synth(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr trace synth", "synthesize a TraceSpec workload JSON")
+        .flag("model", Some("deit_t"), "model the trace targets")
+        .flag("models", Some(""), "csv of models for a Zipf popularity mix (overrides --model)")
+        .flag("zipf-exp", Some("1.0"), "Zipf popularity exponent (0 = uniform split)")
+        .flag("curve", Some("ramp"), "rate shape: constant|ramp|diurnal|flash")
+        .flag("ramp", Some("1000:4000:1000"), "ramp curve: req/s per phase (a:b:c)")
+        .flag("phase-s", Some("0.5"), "ramp curve: seconds per phase")
+        .flag("rate", Some("4000"), "constant rate / diurnal base / flash base (req/s)")
+        .flag("duration", Some("2.0"), "constant|diurnal|flash: trace length (s)")
+        .flag("amplitude", Some("2000"), "diurnal: sinusoid amplitude (req/s)")
+        .flag("period", Some("1.0"), "diurnal: sinusoid period (s)")
+        .flag("peak", Some("12000"), "flash: spike peak (req/s)")
+        .flag("at", Some("0.8"), "flash: spike onset (s)")
+        .flag("rise", Some("0.2"), "flash: linear climb duration (s)")
+        .flag("decay", Some("0.3"), "flash: exponential decay time constant (s)")
+        .flag("process", Some("poisson"), "arrival process: poisson|lognormal|pareto")
+        .flag("sigma", Some("1.0"), "lognormal process: gap sigma")
+        .flag("alpha", Some("2.5"), "pareto process: gap shape (> 1)")
+        .flag("out", Some("trace.json"), "write the TraceSpec JSON here");
+    let m = parse_or_exit(cmd, args);
+    let curve = match m.str("curve").as_str() {
+        "constant" => {
+            RateCurve::Constant { rate_rps: m.f64("rate"), duration_s: m.f64("duration") }
+        }
+        "ramp" => RateCurve::from(&parse_ramp_or_exit(&m)),
+        "diurnal" => RateCurve::Diurnal {
+            base_rps: m.f64("rate"),
+            amplitude_rps: m.f64("amplitude"),
+            period_s: m.f64("period"),
+            duration_s: m.f64("duration"),
+        },
+        "flash" => RateCurve::Flash {
+            base_rps: m.f64("rate"),
+            peak_rps: m.f64("peak"),
+            at_s: m.f64("at"),
+            ramp_s: m.f64("rise"),
+            decay_s: m.f64("decay"),
+            duration_s: m.f64("duration"),
+        },
+        other => {
+            eprintln!("unknown curve '{other}' (constant|ramp|diurnal|flash)");
+            return 2;
+        }
+    };
+    let process = match m.str("process").as_str() {
+        "poisson" => ArrivalProcess::Poisson,
+        "lognormal" => ArrivalProcess::LognormalGaps { sigma: m.f64("sigma") },
+        "pareto" => ArrivalProcess::ParetoGaps { alpha: m.f64("alpha") },
+        other => {
+            eprintln!("unknown process '{other}' (poisson|lognormal|pareto)");
+            return 2;
+        }
+    };
+    let models_csv = m.str("models");
+    let trace = if models_csv.trim().is_empty() {
+        TraceSpec::new(vec![ssr::traffic::TraceClass {
+            model: m.str("model"),
+            curve,
+            process,
+        }])
+    } else {
+        let models: Vec<&str> =
+            models_csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        TraceSpec::zipf_mix(&models, &curve, process, m.f64("zipf-exp"))
+    };
+    let trace = match trace {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let out = m.str("out");
+    if let Err(e) = trace.save(Path::new(&out)) {
+        eprintln!("writing {out}: {e}");
+        return 1;
+    }
+    print!("{}", trace.describe());
+    println!("wrote {out}");
+    0
+}
+
+fn trace_show(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr trace show", "describe a TraceSpec JSON")
+        .flag("trace", Some("trace.json"), "TraceSpec JSON path");
+    let m = parse_or_exit(cmd, args);
+    match TraceSpec::load(Path::new(&m.str("trace"))) {
+        Ok(t) => {
+            print!("{}", t.describe());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }
 
 fn cmd_calibrate(args: &[String]) -> i32 {

@@ -67,7 +67,7 @@
 //! Arrivals stream through the [`ArrivalSource`] trait — a slice-backed
 //! adapter ([`SliceArrivals`]) for tests and pre-materialized timelines,
 //! and the lazily-generated
-//! [`crate::coordinator::scheduler::ArrivalStream`] for O(1)-memory
+//! [`crate::traffic::ArrivalStream`] for O(1)-memory
 //! replay. Latency lands in either an exact [`Summary`]+completions pair
 //! ([`run_timeline_controlled`]) or an O(1)-memory [`LatencySketch`]
 //! ([`run_timeline_sketched`]); the event sequence is identical either

@@ -3,29 +3,31 @@
 //! The artifact-free counterpart of
 //! [`crate::coordinator::scheduler::AdaptiveServer`]: a discrete-event
 //! queueing replay that drives the *same* [`AdaptiveScheduler`] policy
-//! (same hysteresis, same admission control) against Poisson arrivals from
-//! a [`RampSpec`], with the service model taken from each front entry's
-//! analytical metrics — one launch serves up to `entry.batch` images and
-//! occupies the server for `entry.latency_ms`.
+//! (same hysteresis, same admission control) against any
+//! [`crate::traffic::TraceSpec`] workload (a bare
+//! [`crate::traffic::RampSpec`] embeds as the single-class Poisson
+//! case), with the service model taken from each
+//! front entry's analytical metrics — one launch serves up to
+//! `entry.batch` images and occupies the server for `entry.latency_ms`.
 //!
 //! All queueing semantics — drain-and-swap at launch completion, the
 //! completion → window → arrival tie order, admission shedding — live in
 //! the shared per-device core, [`crate::sim::device`]. [`serve_ramp`] is
-//! literally a 1-device [`crate::cluster::sim::simulate_fleet`]: it wraps
-//! the ramp in a single-class [`TrafficMix`], streams its arrivals
-//! lazily through an [`ArrivalStream`], and drives one [`DeviceSim`]
+//! literally a 1-device [`crate::cluster::sim::simulate_fleet`]: it turns
+//! the trace into a lazy [`ArrivalStream`] and drives one [`DeviceSim`]
 //! through the same [`run_timeline_controlled`] event loop the fleet sim
 //! uses, so the two entry points cannot diverge
 //! (`rust/tests/sim_unification.rs` pins them bit-identical).
 //!
 //! Note on seeds: since the unification, `serve_ramp` derives its arrival
-//! stream through `TrafficMix::single` (class stream 0 split off the base
-//! seed), exactly as a 1-device fleet would — not from the raw seed as the
-//! pre-unification sim did. Same distribution, different draw; every
-//! seeded assertion in this module and `tests/adaptive_scheduler.rs` was
-//! revalidated against the new streams with a bit-faithful offline replay
-//! of the PRNG + sim core (the authoring container has no rust
-//! toolchain).
+//! stream from class stream 0 split off the base seed, exactly as a
+//! 1-device fleet would — not from the raw seed as the pre-unification
+//! sim did. Same distribution, different draw; every seeded assertion in
+//! this module and `tests/adaptive_scheduler.rs` was revalidated against
+//! the new streams with a bit-faithful offline replay of the PRNG + sim
+//! core (the authoring container has no rust toolchain). The later
+//! ramp→trace generalization kept that stream bit-identical for
+//! ramp-shaped traffic (`rust/tests/traffic_trace.rs` pins it).
 //!
 //! The only way a request is lost is explicit admission-control shedding,
 //! which the report accounts separately — so `served + shed == arrivals`
@@ -33,11 +35,10 @@
 //!
 //! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
-use crate::coordinator::scheduler::{
-    ArrivalStream, RampSpec, SchedulerCfg, SwitchRecord, TrafficMix,
-};
+use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
 use crate::plan::front::PlanFront;
 use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl};
+use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::stats::Summary;
 
 pub use crate::sim::device::WindowStat;
@@ -102,27 +103,29 @@ impl ServeSimReport {
     }
 }
 
-/// Simulate serving `ramp` over `front` with the adaptive policy in `cfg`.
-/// Fully deterministic for a given seed, and bit-identical to a 1-device
+/// Simulate serving `traffic` (anything `Into<TraceSpec>`: a bare
+/// `&RampSpec`, a `&TrafficMix`, or a full trace) over `front` with the
+/// adaptive policy in `cfg`. Fully deterministic for a given seed, and
+/// bit-identical to a 1-device
 /// [`crate::cluster::sim::simulate_fleet`] over a single-class mix with
 /// the same seed — both are the same [`run_timeline_controlled`] over the
 /// same core.
 pub fn serve_ramp(
     front: &PlanFront,
-    ramp: &RampSpec,
+    traffic: impl Into<TraceSpec>,
     cfg: &SchedulerCfg,
     seed: u64,
 ) -> ServeSimReport {
-    let mix = TrafficMix::single(&front.model, ramp.clone());
+    let trace: TraceSpec = traffic.into();
     // Arrivals stream lazily (same split-seeded draws the materialized
     // timeline produced), so the replay never holds the whole timeline.
-    let mut stream = ArrivalStream::new(&mix, seed);
+    let mut stream = ArrivalStream::from_trace(&trace, seed);
     let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
-    // One device serving the mix's only model: every arrival routes to it.
+    // One device: every arrival routes to it regardless of class/model.
     let outcome = run_timeline_controlled(
         &mut devs,
         &mut stream,
-        mix.duration_s(),
+        trace.duration_s(),
         cfg.window_s,
         |_, _, _| Some(0),
         &mut NoControl,
@@ -149,6 +152,7 @@ pub fn serve_ramp(
 mod tests {
     use super::*;
     use crate::plan::front::FrontEntry;
+    use crate::traffic::RampSpec;
 
     fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
         FrontEntry {

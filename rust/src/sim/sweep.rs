@@ -2,14 +2,17 @@
 //! independent single-device sims across the thread pool and merge the
 //! results into one roll-up.
 //!
-//! The grid answers "what does this plan front do under this ramp?" with
+//! The grid answers "what does this plan front do under this trace?" with
 //! statistical weight a single seeded replay cannot give: `seeds`
 //! independent arrival processes, each split into `shards` traffic slices
-//! (every shard offers `rate / shards`, so the *aggregate* offered load per
-//! seed equals the original ramp while each cell stays a cheap 1-device
-//! replay). Cells are embarrassingly parallel — every cell derives its own
-//! RNG stream from the base seed via [`Rng::split`], so the grid is
-//! bit-deterministic regardless of thread count.
+//! (every shard offers `rate / shards` via [`TraceSpec::shard`], so the
+//! *aggregate* offered load per seed equals the original trace while each
+//! cell stays a cheap 1-device replay). Any `impl Into<TraceSpec>` works —
+//! a bare [`RampSpec`](crate::traffic::RampSpec) ramp, a diurnal or
+//! flash-crowd curve, heavy-tail bursts. Cells are embarrassingly
+//! parallel — every cell derives its own RNG stream from the base seed via
+//! [`Rng::split`], so the grid is bit-deterministic regardless of thread
+//! count.
 //!
 //! **Merge order is fixed**: cells merge in cell-index order
 //! (`seed_idx * shards + shard_idx`), never in thread-completion order.
@@ -30,11 +33,12 @@
 //! [`scope_map`]: crate::util::threadpool::scope_map
 //! [`SKETCH_GAMMA`]: crate::util::stats::SKETCH_GAMMA
 
-use crate::coordinator::scheduler::{ArrivalStream, RampSpec, SchedulerCfg, TrafficMix};
+use crate::coordinator::scheduler::SchedulerCfg;
 use crate::plan::front::PlanFront;
 use crate::sim::device::{
     run_timeline_controlled, run_timeline_sketched, DeviceSim, NoControl,
 };
+use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::{LatencySketch, Summary};
 use crate::util::threadpool::{default_threads, scope_map};
@@ -145,7 +149,7 @@ struct CellOutcome {
 /// `base_seed` and grid shape, independent of `sweep.threads`.
 pub fn run_sweep(
     front: &PlanFront,
-    ramp: &RampSpec,
+    traffic: impl Into<TraceSpec>,
     cfg: &SchedulerCfg,
     sweep: &SweepCfg,
     base_seed: u64,
@@ -153,11 +157,10 @@ pub fn run_sweep(
     assert!(sweep.seeds >= 1, "sweep needs at least one seed");
     assert!(sweep.shards >= 1, "sweep needs at least one shard");
     // Each shard carries an equal slice of the offered load, so one seed
-    // row in aggregate offers the original ramp.
-    let shard_ramp = RampSpec {
-        rates_rps: ramp.rates_rps.iter().map(|r| r / sweep.shards as f64).collect(),
-        phase_s: ramp.phase_s,
-    };
+    // row in aggregate offers the original trace. `TraceSpec::shard`
+    // divides every rate by the shard count exactly as the historical
+    // per-rate `r / shards` did, so ramp sweeps stay bit-identical.
+    let shard_trace = traffic.into().shard(sweep.shards);
     let base = Rng::new(base_seed);
     let n_cells = sweep.seeds * sweep.shards;
     // Cell seeds derive by keyed split, not by advancing a shared stream:
@@ -169,7 +172,7 @@ pub fn run_sweep(
     let slo_s = cfg.slo_ms * 1e-3;
 
     let outcomes = scope_map(&cells, threads, |&(idx, seed)| {
-        run_cell(front, &shard_ramp, cfg, sweep, idx / sweep.shards, idx % sweep.shards, seed)
+        run_cell(front, &shard_trace, cfg, sweep, idx / sweep.shards, idx % sweep.shards, seed)
     });
 
     // Merge strictly in cell-index order (scope_map preserves input
@@ -212,16 +215,17 @@ pub fn run_sweep(
 /// One grid cell: a single-device replay of the shard's traffic slice.
 fn run_cell(
     front: &PlanFront,
-    shard_ramp: &RampSpec,
+    shard_trace: &TraceSpec,
     cfg: &SchedulerCfg,
     sweep: &SweepCfg,
     seed_idx: usize,
     shard_idx: usize,
     seed: u64,
 ) -> CellOutcome {
-    let mix = TrafficMix::single(&front.model, shard_ramp.clone());
-    let mut stream = ArrivalStream::new(&mix, seed);
-    let duration_s = mix.duration_s();
+    // Single device: every arrival routes to it, so the trace's class
+    // models never matter here — only the curves and burst processes.
+    let mut stream = ArrivalStream::from_trace(shard_trace, seed);
+    let duration_s = shard_trace.duration_s();
     if sweep.exact {
         let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
         let outcome = run_timeline_controlled(
@@ -291,6 +295,7 @@ fn run_cell(
 mod tests {
     use super::*;
     use crate::plan::front::FrontEntry;
+    use crate::traffic::RampSpec;
 
     fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
         FrontEntry {

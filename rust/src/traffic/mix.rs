@@ -1,0 +1,244 @@
+//! Piecewise-constant Poisson load generation: [`RampSpec`] ramps,
+//! lazy per-class [`ClassArrivals`] generators, and the multi-model
+//! [`TrafficClass`]/[`TrafficMix`] grouping.
+//!
+//! Moved verbatim from `coordinator::scheduler` when the traffic API was
+//! unified under [`crate::traffic`] (the scheduler re-exports these names,
+//! so old paths keep compiling). [`RampSpec`] survives as the thin
+//! constructor for the piecewise-constant special case of a
+//! [`crate::traffic::RateCurve`]; everything downstream consumes the
+//! general [`crate::traffic::TraceSpec`].
+
+use crate::util::rng::Rng;
+
+/// Piecewise-constant arrival-rate ramp (the `--ramp a:b:c` flag): phase
+/// `i` offers `rates_rps[i]` requests/s for `phase_s` seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RampSpec {
+    pub rates_rps: Vec<f64>,
+    pub phase_s: f64,
+}
+
+impl RampSpec {
+    /// Parse `"a:b:c"` (also accepts commas) into a ramp.
+    pub fn parse(spec: &str, phase_s: f64) -> Result<RampSpec, String> {
+        let rates: Result<Vec<f64>, _> = spec
+            .split(|c| c == ':' || c == ',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<f64>())
+            .collect();
+        let rates = rates.map_err(|e| format!("bad ramp '{spec}': {e}"))?;
+        if rates.is_empty() {
+            return Err(format!("ramp '{spec}' has no phases"));
+        }
+        if rates.iter().any(|r| !r.is_finite() || *r < 0.0) {
+            return Err(format!("ramp '{spec}' has a negative or non-finite rate"));
+        }
+        if !(phase_s > 0.0 && phase_s.is_finite()) {
+            return Err(format!("phase duration {phase_s} must be positive"));
+        }
+        Ok(RampSpec { rates_rps: rates, phase_s })
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.rates_rps.len() as f64 * self.phase_s
+    }
+
+    /// Offered rate at time `t` (0 outside the ramp).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if t < 0.0 {
+            return 0.0;
+        }
+        self.rates_rps.get((t / self.phase_s) as usize).copied().unwrap_or(0.0)
+    }
+
+    /// Deterministic Poisson arrival times over the ramp (sorted). Each
+    /// phase draws exponential gaps at its own rate; restarting at phase
+    /// boundaries is exact for a Poisson process (memorylessness).
+    ///
+    /// Materializes the [`ClassArrivals`] stream — sims should consume
+    /// the stream itself (via [`crate::traffic::ArrivalStream`]) and never
+    /// hold the full timeline; this remains for callers that genuinely
+    /// want the Vec.
+    pub fn arrivals(&self, seed: u64) -> Vec<f64> {
+        let mut stream = ClassArrivals::new(self, Rng::new(seed));
+        let mut out = Vec::new();
+        while let Some(t) = stream.next_arrival() {
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Lazy per-class Poisson arrival generator: the streaming form of
+/// [`RampSpec::arrivals`], drawing one exponential gap per `next_arrival`
+/// call from the same RNG in the same order — the two produce bit-equal
+/// times (pinned by `class_arrivals_match_the_materializing_generator`).
+/// O(1) memory regardless of how many arrivals the ramp offers.
+#[derive(Clone, Debug)]
+pub struct ClassArrivals {
+    rng: Rng,
+    rates_rps: Vec<f64>,
+    phase_s: f64,
+    phase: usize,
+    t: f64,
+}
+
+impl ClassArrivals {
+    pub fn new(ramp: &RampSpec, rng: Rng) -> ClassArrivals {
+        ClassArrivals {
+            rng,
+            rates_rps: ramp.rates_rps.clone(),
+            phase_s: ramp.phase_s,
+            phase: 0,
+            t: 0.0,
+        }
+    }
+
+    /// Next arrival time, `None` once the ramp is exhausted. Zero-rate
+    /// phases draw nothing (exactly like the materializing loop's
+    /// `continue`), and the draw that overshoots a phase boundary is
+    /// consumed, not reused — both invariants are what keep the stream
+    /// bit-identical to the pre-streaming generator.
+    pub fn next_arrival(&mut self) -> Option<f64> {
+        while self.phase < self.rates_rps.len() {
+            let rate = self.rates_rps[self.phase];
+            if rate <= 0.0 {
+                self.enter_phase(self.phase + 1);
+                continue;
+            }
+            // t0 + phase_s, NOT (phase+1)*phase_s: the materializing
+            // generator computed the boundary this way and the two can
+            // differ by an ulp — which would shift an arrival across it.
+            let t1 = self.phase as f64 * self.phase_s + self.phase_s;
+            self.t += -(1.0 - self.rng.f64()).ln() / rate;
+            if self.t >= t1 {
+                self.enter_phase(self.phase + 1);
+                continue;
+            }
+            return Some(self.t);
+        }
+        None
+    }
+
+    fn enter_phase(&mut self, p: usize) {
+        self.phase = p;
+        self.t = p as f64 * self.phase_s; // each phase restarts at its t0
+    }
+}
+
+/// One model's offered load.
+#[derive(Clone, Debug)]
+pub struct TrafficClass {
+    pub model: String,
+    pub ramp: RampSpec,
+}
+
+/// A multi-model traffic mix: each class generates Poisson arrivals from
+/// its own ramp on an independent split RNG stream, so adding a class
+/// never perturbs another class's arrival times. The single-device sim
+/// serves a single-class mix; the cluster router dispatches the general
+/// case — both replay the same merged timeline format.
+///
+/// This is the all-Poisson, all-piecewise special case of a
+/// [`crate::traffic::TraceSpec`] (which adds rate-curve and burst-process
+/// choices per class); `From<&TrafficMix> for TraceSpec` embeds it.
+#[derive(Clone, Debug)]
+pub struct TrafficMix {
+    pub classes: Vec<TrafficClass>,
+}
+
+impl TrafficMix {
+    pub fn single(model: &str, ramp: RampSpec) -> TrafficMix {
+        TrafficMix { classes: vec![TrafficClass { model: model.to_string(), ramp }] }
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.classes.iter().map(|c| c.ramp.duration_s()).fold(0.0, f64::max)
+    }
+
+    /// Merged `(arrival time, class index)` timeline, sorted by time with
+    /// ties broken by class order — fully deterministic per seed.
+    ///
+    /// Materializes [`crate::traffic::ArrivalStream`] — sims consume the
+    /// stream directly and keep memory O(classes); this remains for
+    /// callers (and the differential tests) that want the whole Vec.
+    pub fn arrivals(&self, seed: u64) -> Vec<(f64, usize)> {
+        let mut stream = crate::traffic::ArrivalStream::new(self, seed);
+        let mut out = Vec::new();
+        while let Some(a) = crate::sim::device::ArrivalSource::pop(&mut stream) {
+            out.push(a);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_parse_and_rate_lookup() {
+        let r = RampSpec::parse("1000:4000:1000", 0.5).unwrap();
+        assert_eq!(r.rates_rps, vec![1000.0, 4000.0, 1000.0]);
+        assert!((r.duration_s() - 1.5).abs() < 1e-12);
+        assert_eq!(r.rate_at(0.1), 1000.0);
+        assert_eq!(r.rate_at(0.7), 4000.0);
+        assert_eq!(r.rate_at(2.0), 0.0);
+        assert!(RampSpec::parse("", 0.5).is_err());
+        assert!(RampSpec::parse("1:x", 0.5).is_err());
+        assert!(RampSpec::parse("1:-2", 0.5).is_err());
+        assert!(RampSpec::parse("1:2", 0.0).is_err());
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_sorted_in_bounds() {
+        let r = RampSpec::parse("2000:500", 0.5).unwrap();
+        let a = r.arrivals(42);
+        let b = r.arrivals(42);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.iter().all(|&t| (0.0..1.0).contains(&t)));
+        // ~1250 expected; allow wide Poisson slack
+        assert!((800..1700).contains(&a.len()), "{} arrivals", a.len());
+        assert_ne!(a, r.arrivals(43));
+    }
+
+    #[test]
+    fn class_arrivals_match_the_materializing_generator() {
+        // The pre-streaming RampSpec::arrivals body, verbatim: one RNG
+        // across phases, zero-rate phases skipped without a draw, each
+        // phase restarting at t0, the boundary-overshooting draw consumed.
+        fn reference(ramp: &RampSpec, seed: u64) -> Vec<f64> {
+            let mut rng = Rng::new(seed);
+            let mut out = Vec::new();
+            for (i, &rate) in ramp.rates_rps.iter().enumerate() {
+                if rate <= 0.0 {
+                    continue;
+                }
+                let t0 = i as f64 * ramp.phase_s;
+                let t1 = t0 + ramp.phase_s;
+                let mut t = t0;
+                loop {
+                    t += -(1.0 - rng.f64()).ln() / rate;
+                    if t >= t1 {
+                        break;
+                    }
+                    out.push(t);
+                }
+            }
+            out
+        }
+        for (spec, phase) in [("2000:500", 0.5), ("0:3000:0:800", 0.2), ("1000", 1.0)] {
+            let r = RampSpec::parse(spec, phase).unwrap();
+            for seed in [1u64, 42, 0xC0FFEE] {
+                let want = reference(&r, seed);
+                let got = r.arrivals(seed);
+                assert_eq!(got.len(), want.len(), "{spec} seed {seed}: count");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{spec} seed {seed}: time bits");
+                }
+            }
+        }
+    }
+}

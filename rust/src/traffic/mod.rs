@@ -1,0 +1,36 @@
+//! The one traffic API: every workload a consumer can offer, as data.
+//!
+//! All load in the repo — single-device ramps, multi-model cluster mixes,
+//! diurnal/flash-crowd traces, heavy-tailed bursts — flows through this
+//! module as a [`TraceSpec`] and streams into the event loop as an
+//! [`ArrivalStream`]:
+//!
+//! ```text
+//!   RampSpec ─┐
+//!   TrafficMix ├─ Into<TraceSpec> ──► ArrivalStream::from_trace
+//!   TraceSpec ─┘      (classes:        (k-way merge of lazy per-class
+//!    {model,           model +          generators, O(classes) memory)
+//!     RateCurve,       curve +              │
+//!     ArrivalProcess}) process)             ▼
+//!                                  sim::device::run_timeline*
+//! ```
+//!
+//! Consumers (`sim::serving::serve_ramp`, `sim::sweep::run_sweep`,
+//! `cluster::provision::provision`, `cluster::sim::simulate_fleet`,
+//! `cluster::controller::simulate_autoscale`) all accept
+//! `impl Into<TraceSpec>`; [`RampSpec`] and [`TrafficMix`] survive as
+//! thin constructors for the piecewise-constant Poisson special cases,
+//! and their embedded paths generate **bit-identical** arrivals to the
+//! pre-trace stream (pinned by `rust/tests/traffic_trace.rs`).
+//!
+//! History: `RampSpec`/`ClassArrivals`/`TrafficClass`/`TrafficMix`/
+//! `ArrivalStream` moved here verbatim from `coordinator::scheduler`,
+//! which re-exports them so pre-move paths keep compiling.
+
+pub mod mix;
+pub mod stream;
+pub mod trace;
+
+pub use mix::{ClassArrivals, RampSpec, TrafficClass, TrafficMix};
+pub use stream::ArrivalStream;
+pub use trace::{ArrivalProcess, RateCurve, TraceClass, TraceSpec};

@@ -1,0 +1,416 @@
+//! Lazy k-way merge of per-class arrival generators into the one
+//! `(time, class)` event stream the event loop consumes.
+//!
+//! [`ArrivalStream::new`] (over a [`TrafficMix`]) moved verbatim from
+//! `coordinator::scheduler`; [`ArrivalStream::from_trace`] generalizes it
+//! to any [`TraceSpec`] by picking a per-class generator:
+//!
+//! * ramp-shaped Poisson classes replay on the exact pre-trace
+//!   [`ClassArrivals`] path (bit-identical arrivals — the differential
+//!   test in `rust/tests/traffic_trace.rs` pins it);
+//! * curved Poisson classes (diurnal / flash) use Lewis–Shedler thinning
+//!   at the curve's peak-rate majorant;
+//! * heavy-tailed classes draw renewal gaps (mean-1 draw over the local
+//!   rate), skipping zero-rate spans deterministically.
+//!
+//! Memory stays O(classes) for any run length, as before.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::device::ArrivalSource;
+use crate::traffic::mix::{ClassArrivals, TrafficMix};
+use crate::traffic::trace::{ArrivalProcess, RateCurve, TraceSpec};
+use crate::util::rng::Rng;
+
+/// Pending head of one class's arrival stream. Keys order by time then
+/// class index; times are non-negative finite f64s, whose `to_bits`
+/// order equals their numeric order, so a derived lexicographic `Ord`
+/// reproduces the materialized sort's
+/// `t.total_cmp(..).then(class.cmp(..))` comparator exactly.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct PendingArrival {
+    t_bits: u64,
+    class: usize,
+}
+
+/// One class's lazy arrival generator.
+enum ClassGen {
+    /// Poisson over a piecewise-constant curve: the exact pre-trace
+    /// generator, so ramp traffic is bit-identical to the `TrafficMix`
+    /// path.
+    Exact(ClassArrivals),
+    /// Poisson over a smooth curve via Lewis–Shedler thinning: candidate
+    /// gaps at the constant majorant rate, each kept with probability
+    /// `rate(t) / majorant`. Two uniforms per candidate (gap, then
+    /// accept), in that order.
+    Thinned { rng: Rng, curve: RateCurve, majorant: f64, t: f64 },
+    /// Heavy-tailed renewal: next gap is a mean-1 draw divided by the
+    /// local rate, so the class tracks the curve on average while the
+    /// gap distribution carries the bursts.
+    Renewal { rng: Rng, curve: RateCurve, process: ArrivalProcess, t: f64 },
+}
+
+impl ClassGen {
+    fn new(curve: &RateCurve, process: ArrivalProcess, rng: Rng) -> ClassGen {
+        match process {
+            ArrivalProcess::Poisson => match curve.as_ramp() {
+                Some(ramp) => ClassGen::Exact(ClassArrivals::new(&ramp, rng)),
+                None => {
+                    let majorant = curve.peak_rps();
+                    // A zero-peak curve offers nothing: start exhausted.
+                    let t = if majorant > 0.0 { 0.0 } else { curve.duration_s() };
+                    ClassGen::Thinned { rng, curve: curve.clone(), majorant, t }
+                }
+            },
+            p => ClassGen::Renewal { rng, curve: curve.clone(), process: p, t: 0.0 },
+        }
+    }
+
+    fn next_arrival(&mut self) -> Option<f64> {
+        match self {
+            ClassGen::Exact(c) => c.next_arrival(),
+            ClassGen::Thinned { rng, curve, majorant, t } => {
+                let duration = curve.duration_s();
+                loop {
+                    if *t >= duration {
+                        return None;
+                    }
+                    *t += -(1.0 - rng.f64()).ln() / *majorant;
+                    if *t >= duration {
+                        return None;
+                    }
+                    if rng.f64() * *majorant < curve.rate_at(*t) {
+                        return Some(*t);
+                    }
+                }
+            }
+            ClassGen::Renewal { rng, curve, process, t } => {
+                let duration = curve.duration_s();
+                loop {
+                    if *t >= duration {
+                        return None;
+                    }
+                    let rate = curve.rate_at(*t);
+                    if rate <= 0.0 {
+                        match advance_past_zero(curve, *t) {
+                            Some(t2) => {
+                                *t = t2;
+                                continue;
+                            }
+                            None => {
+                                *t = duration;
+                                return None;
+                            }
+                        }
+                    }
+                    *t += process.mean1_gap(rng) / rate;
+                    if *t >= duration {
+                        return None;
+                    }
+                    if curve.rate_at(*t) <= 0.0 {
+                        continue; // landed in a dead span; skip it above
+                    }
+                    return Some(*t);
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic skip to the next instant where `curve` can offer load
+/// again, from a zero-rate `t`. Piecewise jumps exactly to the next
+/// positive phase; smooth curves step a fixed 1/256 of their natural
+/// scale (period / spike width) — deterministic and cheap, and the
+/// renewal draw re-checks the landing rate anyway. `None` means the
+/// curve stays dead through its end.
+fn advance_past_zero(curve: &RateCurve, t: f64) -> Option<f64> {
+    match curve {
+        RateCurve::Constant { .. } => None, // zero-rate constant is dead forever
+        RateCurve::Piecewise { rates_rps, phase_s } => {
+            let phase = (t / phase_s) as usize;
+            ((phase + 1)..rates_rps.len())
+                .find(|&p| rates_rps[p] > 0.0)
+                .map(|p| p as f64 * phase_s)
+        }
+        RateCurve::Diurnal { period_s, .. } => Some(t + period_s / 256.0),
+        RateCurve::Flash { at_s, ramp_s, decay_s, .. } => {
+            if t < *at_s {
+                Some(*at_s) // dead base before the spike: jump to it
+            } else {
+                Some(t + ramp_s.max(*decay_s) / 256.0)
+            }
+        }
+    }
+}
+
+/// Streaming k-way merge of per-class arrival generators: holds one
+/// pending arrival per class in a min-heap instead of a materialized,
+/// sorted timeline — O(classes) memory for any run length. Each class
+/// draws from the same `Rng::split(class_index)` stream regardless of
+/// how many classes exist, so adding a class never perturbs another's
+/// times, and the merged order is bit-identical to sorting the
+/// materialized timeline (same-class ties keep generation order because
+/// at most one entry per class is in the heap).
+pub struct ArrivalStream {
+    classes: Vec<ClassGen>,
+    heap: BinaryHeap<Reverse<PendingArrival>>,
+}
+
+impl ArrivalStream {
+    /// Stream a [`TrafficMix`]: every class on the exact pre-trace
+    /// Poisson path (this is `from_trace` restricted to ramps, kept as
+    /// the named constructor the pre-trace callers and differential
+    /// tests use).
+    pub fn new(mix: &TrafficMix, seed: u64) -> ArrivalStream {
+        let base = Rng::new(seed);
+        let gens = mix
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let class_seed = base.split(ci as u64).next_u64();
+                ClassGen::Exact(ClassArrivals::new(&c.ramp, Rng::new(class_seed)))
+            })
+            .collect();
+        ArrivalStream::from_gens(gens)
+    }
+
+    /// Stream any [`TraceSpec`]. Class `i` seeds from `split(i)` exactly
+    /// as [`ArrivalStream::new`] does, so a ramp-built trace replays the
+    /// same arrivals bit for bit.
+    pub fn from_trace(trace: &TraceSpec, seed: u64) -> ArrivalStream {
+        let base = Rng::new(seed);
+        let gens = trace
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let class_seed = base.split(ci as u64).next_u64();
+                ClassGen::new(&c.curve, c.process, Rng::new(class_seed))
+            })
+            .collect();
+        ArrivalStream::from_gens(gens)
+    }
+
+    fn from_gens(mut classes: Vec<ClassGen>) -> ArrivalStream {
+        let mut heap = BinaryHeap::with_capacity(classes.len());
+        for (ci, c) in classes.iter_mut().enumerate() {
+            if let Some(t) = c.next_arrival() {
+                heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: ci }));
+            }
+        }
+        ArrivalStream { classes, heap }
+    }
+}
+
+impl ArrivalSource for ArrivalStream {
+    fn peek_s(&self) -> f64 {
+        self.heap.peek().map_or(f64::INFINITY, |&Reverse(p)| f64::from_bits(p.t_bits))
+    }
+
+    fn pop(&mut self) -> Option<(f64, usize)> {
+        let Reverse(p) = self.heap.pop()?;
+        // refill from the popped class so the heap again holds every
+        // non-exhausted class's head
+        if let Some(t) = self.classes[p.class].next_arrival() {
+            self.heap.push(Reverse(PendingArrival { t_bits: t.to_bits(), class: p.class }));
+        }
+        Some((f64::from_bits(p.t_bits), p.class))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::mix::{RampSpec, TrafficClass};
+    use crate::traffic::trace::TraceClass;
+
+    #[test]
+    fn streaming_merge_matches_materialize_and_sort() {
+        // The pre-streaming TrafficMix::arrivals: materialize every class
+        // then stable-sort by (time, class). The k-way heap merge must
+        // reproduce it bit for bit, ties included.
+        let mix = TrafficMix {
+            classes: vec![
+                TrafficClass {
+                    model: "a".to_string(),
+                    ramp: RampSpec::parse("2000:0:1500", 0.3).unwrap(),
+                },
+                TrafficClass {
+                    model: "b".to_string(),
+                    ramp: RampSpec::parse("900", 0.7).unwrap(),
+                },
+                TrafficClass {
+                    model: "c".to_string(),
+                    ramp: RampSpec::parse("0:4000", 0.25).unwrap(),
+                },
+            ],
+        };
+        for seed in [3u64, 99, 0xABCDE] {
+            let base = Rng::new(seed);
+            let mut want: Vec<(f64, usize)> = Vec::new();
+            for (ci, c) in mix.classes.iter().enumerate() {
+                let class_seed = base.split(ci as u64).next_u64();
+                want.extend(c.ramp.arrivals(class_seed).into_iter().map(|t| (t, ci)));
+            }
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let got = mix.arrivals(seed);
+            assert_eq!(got.len(), want.len(), "seed {seed}: count");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0.to_bits(), w.0.to_bits(), "seed {seed}: time bits");
+                assert_eq!(g.1, w.1, "seed {seed}: class");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_stream_peek_agrees_with_pop_and_exhausts_to_infinity() {
+        let mix = TrafficMix::single("m", RampSpec::parse("1500:800", 0.3).unwrap());
+        let mut s = ArrivalStream::new(&mix, 7);
+        let mut n = 0usize;
+        let mut last = 0.0f64;
+        loop {
+            let peeked = s.peek_s();
+            match s.pop() {
+                Some((t, class)) => {
+                    assert_eq!(peeked.to_bits(), t.to_bits(), "peek must match pop");
+                    assert!(t >= last, "stream went backwards");
+                    assert_eq!(class, 0);
+                    last = t;
+                    n += 1;
+                }
+                None => {
+                    assert_eq!(peeked, f64::INFINITY, "exhausted stream must peek INFINITY");
+                    break;
+                }
+            }
+        }
+        assert_eq!(n, mix.arrivals(7).len());
+    }
+
+    fn drain(trace: &TraceSpec, seed: u64) -> Vec<(f64, usize)> {
+        let mut s = ArrivalStream::from_trace(trace, seed);
+        let mut out = Vec::new();
+        while let Some(a) = s.pop() {
+            out.push(a);
+        }
+        out
+    }
+
+    #[test]
+    fn thinned_poisson_tracks_a_flash_curve() {
+        // Thinning at the majorant: arrivals are sorted, in-span,
+        // deterministic per seed, cluster near the spike top, and
+        // approximate the curve's integral count.
+        let curve = RateCurve::Flash {
+            base_rps: 500.0,
+            peak_rps: 8000.0,
+            at_s: 1.0,
+            ramp_s: 0.5,
+            decay_s: 0.25,
+            duration_s: 3.0,
+        };
+        let trace = TraceSpec::single("m", curve.clone(), ArrivalProcess::Poisson);
+        let a = drain(&trace, 11);
+        let b = drain(&trace, 11);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+        }
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "sorted");
+        assert!(a.iter().all(|&(t, _)| (0.0..3.0).contains(&t)), "in span");
+        // integral of the curve: 0.5*3*500 (base-ish) + ramp + decay ≈ 5.1k
+        let expect: f64 = (0..3000).map(|i| curve.rate_at(i as f64 * 1e-3) * 1e-3).sum();
+        let n = a.len() as f64;
+        assert!(
+            (n - expect).abs() < 5.0 * expect.sqrt() + 50.0,
+            "{n} arrivals vs ~{expect:.0} expected"
+        );
+        // the spike second must be the densest
+        let in_spike = a.iter().filter(|&&(t, _)| (1.0..2.0).contains(&t)).count();
+        assert!(in_spike * 2 > a.len(), "spike holds the bulk: {in_spike} of {}", a.len());
+    }
+
+    #[test]
+    fn heavy_tail_renewal_hits_the_average_but_bursts_harder() {
+        // Same constant curve, Poisson vs Pareto gaps: both land near the
+        // offered count, but the heavy tail's max gap is far larger at
+        // equal rate (the bursts the mean-rate view hides).
+        let curve = RateCurve::Constant { rate_rps: 2000.0, duration_s: 4.0 };
+        let poisson = drain(&TraceSpec::single("m", curve.clone(), ArrivalProcess::Poisson), 5);
+        let pareto = drain(
+            &TraceSpec::single("m", curve.clone(), ArrivalProcess::ParetoGaps { alpha: 1.3 }),
+            5,
+        );
+        let logn = drain(
+            &TraceSpec::single("m", curve, ArrivalProcess::LognormalGaps { sigma: 2.0 }),
+            5,
+        );
+        for (name, a) in [("poisson", &poisson), ("pareto", &pareto), ("lognormal", &logn)] {
+            assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "{name} sorted");
+            assert!(a.iter().all(|&(t, _)| (0.0..4.0).contains(&t)), "{name} in span");
+            // 8000 expected; heavy tails wander further from it
+            assert!(
+                (4000..13000).contains(&a.len()),
+                "{name}: {} arrivals far from 8000",
+                a.len()
+            );
+        }
+        let max_gap = |a: &[(f64, usize)]| {
+            a.windows(2).map(|w| w[1].0 - w[0].0).fold(0.0f64, f64::max)
+        };
+        assert!(
+            max_gap(&pareto) > 3.0 * max_gap(&poisson),
+            "pareto max gap {} should dwarf poisson {}",
+            max_gap(&pareto),
+            max_gap(&poisson)
+        );
+    }
+
+    #[test]
+    fn renewal_skips_dead_piecewise_phases() {
+        let curve = RateCurve::Piecewise { rates_rps: vec![0.0, 3000.0, 0.0, 1000.0], phase_s: 0.25 };
+        let trace =
+            TraceSpec::single("m", curve, ArrivalProcess::LognormalGaps { sigma: 1.0 });
+        let a = drain(&trace, 9);
+        assert!(!a.is_empty());
+        for &(t, _) in &a {
+            let phase = (t / 0.25) as usize;
+            assert!(phase == 1 || phase == 3, "arrival {t} in a zero-rate phase");
+        }
+    }
+
+    #[test]
+    fn multi_class_trace_interleaves_and_keeps_class_streams_independent() {
+        let flash = RateCurve::Flash {
+            base_rps: 1000.0,
+            peak_rps: 4000.0,
+            at_s: 0.5,
+            ramp_s: 0.2,
+            decay_s: 0.2,
+            duration_s: 2.0,
+        };
+        let ramp = RateCurve::Piecewise { rates_rps: vec![1500.0, 500.0], phase_s: 1.0 };
+        let two = TraceSpec::new(vec![
+            TraceClass { model: "a".into(), curve: flash.clone(), process: ArrivalProcess::Poisson },
+            TraceClass {
+                model: "b".into(),
+                curve: ramp,
+                process: ArrivalProcess::ParetoGaps { alpha: 2.0 },
+            },
+        ])
+        .unwrap();
+        let merged = drain(&two, 21);
+        assert!(merged.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(merged.iter().any(|&(_, c)| c == 0) && merged.iter().any(|&(_, c)| c == 1));
+        // class 0 alone draws the same times: split streams are independent
+        let solo = drain(&TraceSpec::single("a", flash, ArrivalProcess::Poisson), 21);
+        let class0: Vec<f64> =
+            merged.iter().filter(|&&(_, c)| c == 0).map(|&(t, _)| t).collect();
+        assert_eq!(class0.len(), solo.len());
+        for (g, w) in class0.iter().zip(solo.iter().map(|&(t, _)| t)) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+}

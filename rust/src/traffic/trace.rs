@@ -1,0 +1,820 @@
+//! [`TraceSpec`]: the one serializable workload-trace type every traffic
+//! consumer speaks.
+//!
+//! A trace is a set of traffic classes, each `{model, rate curve, burst
+//! process}`:
+//!
+//! * [`RateCurve`] — the open-loop offered-rate shape: constant,
+//!   piecewise-constant ramp (the [`RampSpec`] special case), diurnal
+//!   sinusoid, or flash-crowd spike.
+//! * [`ArrivalProcess`] — how individual arrivals fill that shape:
+//!   Poisson (exponential gaps, as all pre-trace load was), or
+//!   heavy-tailed renewal gaps (lognormal / Pareto) that burst far
+//!   harder at the same average rate.
+//!
+//! The spec is pure data: [`crate::traffic::ArrivalStream::from_trace`]
+//! turns it into the lazy `(time, class)` event stream the one event loop
+//! consumes, in O(classes) memory. `RampSpec`/`TrafficMix` embed losslessly
+//! (`From` impls below); the embedded path generates **bit-identical**
+//! arrivals to the pre-trace stream, pinned by
+//! `rust/tests/traffic_trace.rs`.
+
+use std::path::Path;
+
+use crate::traffic::mix::{RampSpec, TrafficMix};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Offered-rate shape of one traffic class (requests/s over time).
+/// `rate_at` is 0 outside `[0, duration_s)` for every variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RateCurve {
+    /// Flat `rate_rps` for `duration_s` seconds.
+    Constant { rate_rps: f64, duration_s: f64 },
+    /// Piecewise-constant phases — exactly a [`RampSpec`].
+    Piecewise { rates_rps: Vec<f64>, phase_s: f64 },
+    /// Day/night sinusoid: `base + amplitude * sin(2πt / period)`,
+    /// clamped at 0 (an amplitude above base models dead-of-night lulls).
+    Diurnal { base_rps: f64, amplitude_rps: f64, period_s: f64, duration_s: f64 },
+    /// Flash crowd: `base` until `at_s`, a linear climb to `peak` over
+    /// `ramp_s` (the onset a forecaster can front-run), then exponential
+    /// decay back toward `base` with time constant `decay_s`.
+    Flash { base_rps: f64, peak_rps: f64, at_s: f64, ramp_s: f64, decay_s: f64, duration_s: f64 },
+}
+
+impl RateCurve {
+    pub fn duration_s(&self) -> f64 {
+        match self {
+            RateCurve::Constant { duration_s, .. }
+            | RateCurve::Diurnal { duration_s, .. }
+            | RateCurve::Flash { duration_s, .. } => *duration_s,
+            RateCurve::Piecewise { rates_rps, phase_s } => rates_rps.len() as f64 * *phase_s,
+        }
+    }
+
+    /// Offered rate at time `t` (0 outside the curve's span).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if t < 0.0 || t >= self.duration_s() {
+            return 0.0;
+        }
+        match self {
+            RateCurve::Constant { rate_rps, .. } => *rate_rps,
+            RateCurve::Piecewise { rates_rps, phase_s } => {
+                rates_rps.get((t / phase_s) as usize).copied().unwrap_or(0.0)
+            }
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, .. } => {
+                (base_rps + amplitude_rps * (2.0 * std::f64::consts::PI * t / period_s).sin())
+                    .max(0.0)
+            }
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, .. } => {
+                if t < *at_s {
+                    *base_rps
+                } else if t < at_s + ramp_s {
+                    base_rps + (peak_rps - base_rps) * (t - at_s) / ramp_s
+                } else {
+                    base_rps + (peak_rps - base_rps) * (-(t - at_s - ramp_s) / decay_s).exp()
+                }
+            }
+        }
+    }
+
+    /// Tight upper bound on the offered rate — the provisioner's sizing
+    /// input and the thinning majorant for non-homogeneous Poisson
+    /// generation. Piecewise uses the exact max-fold the provisioner
+    /// always used on ramps, so sizing a `RampSpec` forecast is unchanged
+    /// to the bit.
+    pub fn peak_rps(&self) -> f64 {
+        match self {
+            RateCurve::Constant { rate_rps, .. } => *rate_rps,
+            RateCurve::Piecewise { rates_rps, .. } => {
+                rates_rps.iter().copied().fold(0.0, f64::max)
+            }
+            RateCurve::Diurnal { base_rps, amplitude_rps, .. } => base_rps + amplitude_rps,
+            RateCurve::Flash { base_rps, peak_rps, .. } => base_rps.max(*peak_rps),
+        }
+    }
+
+    /// Rate divided by `n` shards (exact division per rate, matching the
+    /// sweep's historical `r / shards` arithmetic bit for bit).
+    pub fn shard(&self, n: usize) -> RateCurve {
+        let d = n as f64;
+        match self.clone() {
+            RateCurve::Constant { rate_rps, duration_s } => {
+                RateCurve::Constant { rate_rps: rate_rps / d, duration_s }
+            }
+            RateCurve::Piecewise { rates_rps, phase_s } => RateCurve::Piecewise {
+                rates_rps: rates_rps.iter().map(|r| r / d).collect(),
+                phase_s,
+            },
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, duration_s } => {
+                RateCurve::Diurnal {
+                    base_rps: base_rps / d,
+                    amplitude_rps: amplitude_rps / d,
+                    period_s,
+                    duration_s,
+                }
+            }
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, duration_s } => {
+                RateCurve::Flash {
+                    base_rps: base_rps / d,
+                    peak_rps: peak_rps / d,
+                    at_s,
+                    ramp_s,
+                    decay_s,
+                    duration_s,
+                }
+            }
+        }
+    }
+
+    /// Rate multiplied by `f` (Zipf popularity weighting).
+    pub fn scaled(&self, f: f64) -> RateCurve {
+        match self.clone() {
+            RateCurve::Constant { rate_rps, duration_s } => {
+                RateCurve::Constant { rate_rps: rate_rps * f, duration_s }
+            }
+            RateCurve::Piecewise { rates_rps, phase_s } => RateCurve::Piecewise {
+                rates_rps: rates_rps.iter().map(|r| r * f).collect(),
+                phase_s,
+            },
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, duration_s } => {
+                RateCurve::Diurnal {
+                    base_rps: base_rps * f,
+                    amplitude_rps: amplitude_rps * f,
+                    period_s,
+                    duration_s,
+                }
+            }
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, duration_s } => {
+                RateCurve::Flash {
+                    base_rps: base_rps * f,
+                    peak_rps: peak_rps * f,
+                    at_s,
+                    ramp_s,
+                    decay_s,
+                    duration_s,
+                }
+            }
+        }
+    }
+
+    /// The ramp this curve is, when it is one: `Piecewise` verbatim,
+    /// `Constant` as a single phase. The Poisson generator takes this
+    /// road so ramp-shaped traces replay on the exact pre-trace
+    /// [`crate::traffic::ClassArrivals`] path.
+    pub fn as_ramp(&self) -> Option<RampSpec> {
+        match self {
+            RateCurve::Piecewise { rates_rps, phase_s } => {
+                Some(RampSpec { rates_rps: rates_rps.clone(), phase_s: *phase_s })
+            }
+            RateCurve::Constant { rate_rps, duration_s } => {
+                Some(RampSpec { rates_rps: vec![*rate_rps], phase_s: *duration_s })
+            }
+            _ => None,
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        let fin = |v: f64, what: &str| {
+            if v.is_finite() && v >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("curve {what} {v} must be finite and non-negative"))
+            }
+        };
+        let pos = |v: f64, what: &str| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("curve {what} {v} must be positive"))
+            }
+        };
+        match self {
+            RateCurve::Constant { rate_rps, duration_s } => {
+                fin(*rate_rps, "rate_rps")?;
+                pos(*duration_s, "duration_s")
+            }
+            RateCurve::Piecewise { rates_rps, phase_s } => {
+                if rates_rps.is_empty() {
+                    return Err("piecewise curve has no phases".into());
+                }
+                for &r in rates_rps {
+                    fin(r, "phase rate")?;
+                }
+                pos(*phase_s, "phase_s")
+            }
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, duration_s } => {
+                fin(*base_rps, "base_rps")?;
+                fin(*amplitude_rps, "amplitude_rps")?;
+                pos(*period_s, "period_s")?;
+                pos(*duration_s, "duration_s")
+            }
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, duration_s } => {
+                fin(*base_rps, "base_rps")?;
+                fin(*peak_rps, "peak_rps")?;
+                fin(*at_s, "at_s")?;
+                fin(*ramp_s, "ramp_s")?;
+                pos(*decay_s, "decay_s")?;
+                pos(*duration_s, "duration_s")
+            }
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            RateCurve::Constant { .. } => "constant",
+            RateCurve::Piecewise { .. } => "piecewise",
+            RateCurve::Diurnal { .. } => "diurnal",
+            RateCurve::Flash { .. } => "flash",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            RateCurve::Constant { rate_rps, duration_s } => {
+                m.insert("rate_rps".to_string(), Json::Num(*rate_rps));
+                m.insert("duration_s".to_string(), Json::Num(*duration_s));
+            }
+            RateCurve::Piecewise { rates_rps, phase_s } => {
+                m.insert(
+                    "rates_rps".to_string(),
+                    Json::Arr(rates_rps.iter().map(|&r| Json::Num(r)).collect()),
+                );
+                m.insert("phase_s".to_string(), Json::Num(*phase_s));
+            }
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, duration_s } => {
+                m.insert("base_rps".to_string(), Json::Num(*base_rps));
+                m.insert("amplitude_rps".to_string(), Json::Num(*amplitude_rps));
+                m.insert("period_s".to_string(), Json::Num(*period_s));
+                m.insert("duration_s".to_string(), Json::Num(*duration_s));
+            }
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, duration_s } => {
+                m.insert("base_rps".to_string(), Json::Num(*base_rps));
+                m.insert("peak_rps".to_string(), Json::Num(*peak_rps));
+                m.insert("at_s".to_string(), Json::Num(*at_s));
+                m.insert("ramp_s".to_string(), Json::Num(*ramp_s));
+                m.insert("decay_s".to_string(), Json::Num(*decay_s));
+                m.insert("duration_s".to_string(), Json::Num(*duration_s));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<RateCurve, String> {
+        let num = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("curve missing '{k}'"))
+        };
+        match j.get("kind").and_then(Json::as_str) {
+            Some("constant") => Ok(RateCurve::Constant {
+                rate_rps: num("rate_rps")?,
+                duration_s: num("duration_s")?,
+            }),
+            Some("piecewise") => {
+                let rates: Vec<f64> = j
+                    .get("rates_rps")
+                    .and_then(Json::as_arr)
+                    .ok_or("curve missing 'rates_rps'")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("bad phase rate"))
+                    .collect::<Result<_, _>>()?;
+                Ok(RateCurve::Piecewise { rates_rps: rates, phase_s: num("phase_s")? })
+            }
+            Some("diurnal") => Ok(RateCurve::Diurnal {
+                base_rps: num("base_rps")?,
+                amplitude_rps: num("amplitude_rps")?,
+                period_s: num("period_s")?,
+                duration_s: num("duration_s")?,
+            }),
+            Some("flash") => Ok(RateCurve::Flash {
+                base_rps: num("base_rps")?,
+                peak_rps: num("peak_rps")?,
+                at_s: num("at_s")?,
+                ramp_s: num("ramp_s")?,
+                decay_s: num("decay_s")?,
+                duration_s: num("duration_s")?,
+            }),
+            Some(k) => Err(format!("unknown curve kind '{k}'")),
+            None => Err("curve missing 'kind'".into()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            RateCurve::Constant { rate_rps, duration_s } => {
+                format!("constant {rate_rps:.0} rps for {duration_s}s")
+            }
+            RateCurve::Piecewise { rates_rps, phase_s } => {
+                let phases: Vec<String> = rates_rps.iter().map(|r| format!("{r:.0}")).collect();
+                format!("ramp {} @ {phase_s}s/phase", phases.join(":"))
+            }
+            RateCurve::Diurnal { base_rps, amplitude_rps, period_s, duration_s } => format!(
+                "diurnal {base_rps:.0}±{amplitude_rps:.0} rps, period {period_s}s, for {duration_s}s"
+            ),
+            RateCurve::Flash { base_rps, peak_rps, at_s, ramp_s, decay_s, duration_s } => format!(
+                "flash {base_rps:.0}→{peak_rps:.0} rps at {at_s}s (ramp {ramp_s}s, decay {decay_s}s), for {duration_s}s"
+            ),
+        }
+    }
+}
+
+impl From<&RampSpec> for RateCurve {
+    fn from(r: &RampSpec) -> RateCurve {
+        RateCurve::Piecewise { rates_rps: r.rates_rps.clone(), phase_s: r.phase_s }
+    }
+}
+
+/// How individual arrivals fill a [`RateCurve`]. All variants hit the
+/// curve's average rate; they differ in gap dispersion — heavy tails
+/// cluster arrivals into bursts the mean-rate view never shows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential gaps — every pre-trace workload.
+    Poisson,
+    /// Renewal gaps `exp(σZ − σ²/2) / rate` (mean 1/rate): moderate
+    /// bursts, heavier with `sigma`.
+    LognormalGaps { sigma: f64 },
+    /// Renewal gaps from a Pareto with shape `alpha` (> 1) scaled to mean
+    /// 1/rate: rare huge gaps balanced by dense bursts.
+    ParetoGaps { alpha: f64 },
+}
+
+impl ArrivalProcess {
+    /// One mean-1 inter-arrival draw (divide by the local rate to place
+    /// the next arrival). Poisson draws `-ln(1-u)` — one uniform; the
+    /// lognormal draws two (Box–Muller); Pareto draws one.
+    pub fn mean1_gap(&self, rng: &mut Rng) -> f64 {
+        match self {
+            ArrivalProcess::Poisson => -(1.0 - rng.f64()).ln(),
+            ArrivalProcess::LognormalGaps { sigma } => {
+                let u1 = rng.f64();
+                let u2 = rng.f64();
+                let z = (-2.0 * (1.0 - u1).ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+                (sigma * z - sigma * sigma / 2.0).exp()
+            }
+            ArrivalProcess::ParetoGaps { alpha } => {
+                let xm = (alpha - 1.0) / alpha; // scale for mean 1
+                xm / (1.0 - rng.f64()).powf(1.0 / alpha)
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        match self {
+            ArrivalProcess::Poisson => Ok(()),
+            ArrivalProcess::LognormalGaps { sigma } => {
+                if sigma.is_finite() && *sigma > 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("lognormal sigma {sigma} must be positive"))
+                }
+            }
+            ArrivalProcess::ParetoGaps { alpha } => {
+                if alpha.is_finite() && *alpha > 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("pareto alpha {alpha} must exceed 1 (finite mean)"))
+                }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            ArrivalProcess::Poisson => {
+                m.insert("kind".to_string(), Json::Str("poisson".to_string()));
+            }
+            ArrivalProcess::LognormalGaps { sigma } => {
+                m.insert("kind".to_string(), Json::Str("lognormal".to_string()));
+                m.insert("sigma".to_string(), Json::Num(*sigma));
+            }
+            ArrivalProcess::ParetoGaps { alpha } => {
+                m.insert("kind".to_string(), Json::Str("pareto".to_string()));
+                m.insert("alpha".to_string(), Json::Num(*alpha));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<ArrivalProcess, String> {
+        match j.get("kind").and_then(Json::as_str) {
+            Some("poisson") => Ok(ArrivalProcess::Poisson),
+            Some("lognormal") => Ok(ArrivalProcess::LognormalGaps {
+                sigma: j
+                    .get("sigma")
+                    .and_then(Json::as_f64)
+                    .ok_or("lognormal process missing 'sigma'")?,
+            }),
+            Some("pareto") => Ok(ArrivalProcess::ParetoGaps {
+                alpha: j
+                    .get("alpha")
+                    .and_then(Json::as_f64)
+                    .ok_or("pareto process missing 'alpha'")?,
+            }),
+            Some(k) => Err(format!("unknown process kind '{k}'")),
+            None => Err("process missing 'kind'".into()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            ArrivalProcess::Poisson => "poisson".to_string(),
+            ArrivalProcess::LognormalGaps { sigma } => format!("lognormal(σ={sigma})"),
+            ArrivalProcess::ParetoGaps { alpha } => format!("pareto(α={alpha})"),
+        }
+    }
+}
+
+/// One traffic class of a [`TraceSpec`]: which model, what rate shape,
+/// what burst process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceClass {
+    pub model: String,
+    pub curve: RateCurve,
+    pub process: ArrivalProcess,
+}
+
+/// The one workload-trace type every traffic consumer accepts
+/// (`serve_ramp`, `run_sweep`, `provision`, `simulate_fleet`,
+/// `simulate_autoscale` all take `impl Into<TraceSpec>`). Pure data,
+/// serializable (`ssr trace synth|show`, `--trace trace.json`);
+/// [`crate::traffic::ArrivalStream::from_trace`] streams it lazily.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    pub classes: Vec<TraceClass>,
+}
+
+impl TraceSpec {
+    /// Build and validate a trace.
+    pub fn new(classes: Vec<TraceClass>) -> Result<TraceSpec, String> {
+        let t = TraceSpec { classes };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// One-class trace.
+    pub fn single(model: &str, curve: RateCurve, process: ArrivalProcess) -> TraceSpec {
+        TraceSpec {
+            classes: vec![TraceClass { model: model.to_string(), curve, process }],
+        }
+    }
+
+    /// Zipf model-popularity synthesis: class `k` (1-based rank) gets the
+    /// shared `curve` scaled by `k^-exponent`, normalized so the classes
+    /// sum to the curve's offered rate. Exponent 0 is a uniform split.
+    pub fn zipf_mix(
+        models: &[&str],
+        curve: &RateCurve,
+        process: ArrivalProcess,
+        exponent: f64,
+    ) -> Result<TraceSpec, String> {
+        if models.is_empty() {
+            return Err("zipf mix needs at least one model".into());
+        }
+        if !(exponent.is_finite() && exponent >= 0.0) {
+            return Err(format!("zipf exponent {exponent} must be finite and non-negative"));
+        }
+        let weights: Vec<f64> =
+            (1..=models.len()).map(|k| (k as f64).powf(-exponent)).collect();
+        let total: f64 = weights.iter().sum();
+        let classes = models
+            .iter()
+            .zip(&weights)
+            .map(|(m, w)| TraceClass {
+                model: m.to_string(),
+                curve: curve.scaled(w / total),
+                process,
+            })
+            .collect();
+        TraceSpec::new(classes)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.classes.is_empty() {
+            return Err("trace has no classes".into());
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.model.is_empty() {
+                return Err(format!("trace class {i} has an empty model"));
+            }
+            c.curve.validate().map_err(|e| format!("trace class {i}: {e}"))?;
+            c.process.validate().map_err(|e| format!("trace class {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Run length: the longest class span.
+    pub fn duration_s(&self) -> f64 {
+        self.classes.iter().map(|c| c.curve.duration_s()).fold(0.0, f64::max)
+    }
+
+    /// Sizing peak: the sum of per-class peaks — exact for one class,
+    /// conservative for many (classes may peak at different times).
+    pub fn peak_rps(&self) -> f64 {
+        self.classes.iter().map(|c| c.curve.peak_rps()).sum()
+    }
+
+    /// Every class's rate divided by `n` (the sweep's traffic shards).
+    pub fn shard(&self, n: usize) -> TraceSpec {
+        TraceSpec {
+            classes: self
+                .classes
+                .iter()
+                .map(|c| TraceClass {
+                    model: c.model.clone(),
+                    curve: c.curve.shard(n),
+                    process: c.process,
+                })
+                .collect(),
+        }
+    }
+
+    /// Distinct models in class order (first occurrence wins).
+    pub fn models(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for c in &self.classes {
+            if !out.iter().any(|m| m == &c.model) {
+                out.push(c.model.clone());
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let classes: Vec<Json> = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("model".to_string(), Json::Str(c.model.clone()));
+                m.insert("curve".to_string(), c.curve.to_json());
+                m.insert("process".to_string(), c.process.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("classes".to_string(), Json::Arr(classes));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceSpec, String> {
+        let mut classes = Vec::new();
+        for (i, c) in j
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or("trace missing 'classes'")?
+            .iter()
+            .enumerate()
+        {
+            classes.push(TraceClass {
+                model: c
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("trace class {i} missing 'model'"))?
+                    .to_string(),
+                curve: RateCurve::from_json(
+                    c.get("curve").ok_or_else(|| format!("trace class {i} missing 'curve'"))?,
+                )?,
+                process: ArrivalProcess::from_json(
+                    c.get("process")
+                        .ok_or_else(|| format!("trace class {i} missing 'process'"))?,
+                )?,
+            });
+        }
+        TraceSpec::new(classes)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    pub fn load(path: &Path) -> Result<TraceSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        TraceSpec::from_json(&Json::parse(&text)?)
+    }
+
+    /// One line per class, for CLI output.
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "trace: {} class(es), {:.2} s, peak {:.0} rps\n",
+            self.classes.len(),
+            self.duration_s(),
+            self.peak_rps()
+        );
+        for (i, c) in self.classes.iter().enumerate() {
+            out.push_str(&format!(
+                "  [{i}] {:<12} {:<16} {}\n",
+                c.model,
+                c.process.describe(),
+                c.curve.describe()
+            ));
+        }
+        out
+    }
+}
+
+/// A bare ramp is a one-class Poisson trace. The class keeps the
+/// placeholder model name `"trace"`: every consumer that accepts a bare
+/// `&RampSpec` (single-device `serve_ramp`/`run_sweep`, `provision`)
+/// routes by device index or peak rate, never by model name.
+impl From<&RampSpec> for TraceSpec {
+    fn from(r: &RampSpec) -> TraceSpec {
+        TraceSpec::single("trace", RateCurve::from(r), ArrivalProcess::Poisson)
+    }
+}
+
+impl From<RampSpec> for TraceSpec {
+    fn from(r: RampSpec) -> TraceSpec {
+        TraceSpec::from(&r)
+    }
+}
+
+impl From<&TrafficMix> for TraceSpec {
+    fn from(mix: &TrafficMix) -> TraceSpec {
+        TraceSpec {
+            classes: mix
+                .classes
+                .iter()
+                .map(|c| TraceClass {
+                    model: c.model.clone(),
+                    curve: RateCurve::from(&c.ramp),
+                    process: ArrivalProcess::Poisson,
+                })
+                .collect(),
+        }
+    }
+}
+
+impl From<TrafficMix> for TraceSpec {
+    fn from(mix: TrafficMix) -> TraceSpec {
+        TraceSpec::from(&mix)
+    }
+}
+
+impl From<&TraceSpec> for TraceSpec {
+    fn from(t: &TraceSpec) -> TraceSpec {
+        t.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_rate_at_and_peak_per_variant() {
+        let c = RateCurve::Constant { rate_rps: 500.0, duration_s: 2.0 };
+        assert_eq!(c.rate_at(1.0), 500.0);
+        assert_eq!(c.rate_at(2.0), 0.0);
+        assert_eq!(c.rate_at(-0.1), 0.0);
+        assert_eq!(c.peak_rps(), 500.0);
+
+        let p = RateCurve::Piecewise { rates_rps: vec![100.0, 400.0], phase_s: 0.5 };
+        assert_eq!(p.rate_at(0.6), 400.0);
+        assert_eq!(p.peak_rps(), 400.0);
+        assert!((p.duration_s() - 1.0).abs() < 1e-12);
+
+        let d = RateCurve::Diurnal {
+            base_rps: 1000.0,
+            amplitude_rps: 600.0,
+            period_s: 4.0,
+            duration_s: 8.0,
+        };
+        assert!((d.rate_at(1.0) - 1600.0).abs() < 1e-9); // sin peak at T/4
+        assert!((d.rate_at(3.0) - 400.0).abs() < 1e-9); // trough at 3T/4
+        assert_eq!(d.peak_rps(), 1600.0);
+        // amplitude above base clamps at zero instead of going negative
+        let lull = RateCurve::Diurnal {
+            base_rps: 100.0,
+            amplitude_rps: 300.0,
+            period_s: 4.0,
+            duration_s: 8.0,
+        };
+        assert_eq!(lull.rate_at(3.0), 0.0);
+
+        let f = RateCurve::Flash {
+            base_rps: 1000.0,
+            peak_rps: 5000.0,
+            at_s: 1.0,
+            ramp_s: 0.5,
+            decay_s: 0.25,
+            duration_s: 3.0,
+        };
+        assert_eq!(f.rate_at(0.5), 1000.0);
+        assert!((f.rate_at(1.25) - 3000.0).abs() < 1e-9); // halfway up the ramp
+        assert!((f.rate_at(1.5) - 5000.0).abs() < 1e-9); // spike top
+        let decayed = f.rate_at(1.75); // one time constant into the decay
+        assert!((decayed - (1000.0 + 4000.0 * (-1.0f64).exp())).abs() < 1e-9);
+        assert_eq!(f.peak_rps(), 5000.0);
+    }
+
+    #[test]
+    fn piecewise_peak_and_shard_match_ramp_arithmetic() {
+        // The provisioner folded max over ramp rates and the sweep divided
+        // each rate by the shard count; the curve must reproduce both to
+        // the bit so ramp-driven sizing and sweeps are unchanged.
+        let rates = [3000.0, 9000.0, 3000.0, 0.1 + 0.2];
+        let curve = RateCurve::Piecewise { rates_rps: rates.to_vec(), phase_s: 0.25 };
+        let fold = rates.iter().copied().fold(0.0, f64::max);
+        assert_eq!(curve.peak_rps().to_bits(), fold.to_bits());
+        let sharded = curve.shard(7);
+        let RateCurve::Piecewise { rates_rps, .. } = &sharded else { panic!() };
+        for (s, r) in rates_rps.iter().zip(&rates) {
+            assert_eq!(s.to_bits(), (r / 7.0f64).to_bits());
+        }
+    }
+
+    #[test]
+    fn mean1_gaps_have_unit_mean() {
+        let mut rng = Rng::new(0x7AFF1C);
+        for p in [
+            ArrivalProcess::Poisson,
+            ArrivalProcess::LognormalGaps { sigma: 1.0 },
+            ArrivalProcess::ParetoGaps { alpha: 2.5 },
+        ] {
+            let n = 200_000;
+            let mean: f64 = (0..n).map(|_| p.mean1_gap(&mut rng)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - 1.0).abs() < 0.05,
+                "{p:?}: empirical mean {mean} should be ~1"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_mix_weights_and_validation() {
+        let curve = RateCurve::Constant { rate_rps: 1000.0, duration_s: 1.0 };
+        let t =
+            TraceSpec::zipf_mix(&["a", "b", "c"], &curve, ArrivalProcess::Poisson, 1.0).unwrap();
+        assert_eq!(t.classes.len(), 3);
+        // weights 1, 1/2, 1/3 normalized: class rates sum to the base rate
+        let total: f64 = t.classes.iter().map(|c| c.curve.peak_rps()).sum();
+        assert!((total - 1000.0).abs() < 1e-9);
+        let r0 = t.classes[0].curve.peak_rps();
+        let r1 = t.classes[1].curve.peak_rps();
+        assert!((r0 / r1 - 2.0).abs() < 1e-9, "rank 1 is twice rank 2");
+        // exponent 0 splits uniformly
+        let u = TraceSpec::zipf_mix(&["a", "b"], &curve, ArrivalProcess::Poisson, 0.0).unwrap();
+        assert!((u.classes[0].curve.peak_rps() - 500.0).abs() < 1e-9);
+        assert!(TraceSpec::zipf_mix(&[], &curve, ArrivalProcess::Poisson, 1.0).is_err());
+        assert!(TraceSpec::zipf_mix(&["a"], &curve, ArrivalProcess::Poisson, -1.0).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_specs() {
+        assert!(TraceSpec::new(vec![]).is_err());
+        let bad_curve = RateCurve::Constant { rate_rps: -1.0, duration_s: 1.0 };
+        assert!(TraceSpec::new(vec![TraceClass {
+            model: "m".into(),
+            curve: bad_curve,
+            process: ArrivalProcess::Poisson,
+        }])
+        .is_err());
+        assert!(RateCurve::Piecewise { rates_rps: vec![], phase_s: 0.5 }.validate().is_err());
+        assert!(RateCurve::Diurnal {
+            base_rps: 1.0,
+            amplitude_rps: 1.0,
+            period_s: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(RateCurve::Flash {
+            base_rps: 1.0,
+            peak_rps: 2.0,
+            at_s: 0.5,
+            ramp_s: 0.1,
+            decay_s: 0.0,
+            duration_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::LognormalGaps { sigma: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::ParetoGaps { alpha: 1.0 }.validate().is_err());
+        assert!(ArrivalProcess::ParetoGaps { alpha: 1.5 }.validate().is_ok());
+        let empty_model = TraceSpec::single("", RateCurve::Constant { rate_rps: 1.0, duration_s: 1.0 }, ArrivalProcess::Poisson);
+        assert!(empty_model.validate().is_err());
+    }
+
+    #[test]
+    fn ramp_and_mix_embed_losslessly() {
+        let ramp = RampSpec::parse("1000:4000:1000", 0.5).unwrap();
+        let t = TraceSpec::from(&ramp);
+        assert_eq!(t.classes.len(), 1);
+        assert_eq!(t.classes[0].process, ArrivalProcess::Poisson);
+        assert_eq!(t.duration_s().to_bits(), ramp.duration_s().to_bits());
+        assert_eq!(t.peak_rps().to_bits(), 4000.0f64.to_bits());
+        let RateCurve::Piecewise { rates_rps, phase_s } = &t.classes[0].curve else { panic!() };
+        assert_eq!(rates_rps, &ramp.rates_rps);
+        assert_eq!(*phase_s, ramp.phase_s);
+
+        let mix = TrafficMix::single("deit_t", ramp);
+        let t = TraceSpec::from(&mix);
+        assert_eq!(t.classes[0].model, "deit_t");
+        assert_eq!(t.models(), vec!["deit_t".to_string()]);
+    }
+}

@@ -1,0 +1,425 @@
+//! The traffic API contract (ISSUE 7 acceptance):
+//!
+//! (a) compatibility — a ramp-shaped [`TrafficMix`] converted to a
+//!     [`TraceSpec`] replays **bit-identical** arrivals through
+//!     [`ArrivalStream::from_trace`], so the legacy entry points lost
+//!     nothing in the redesign;
+//! (b) serialization — every rate-curve and arrival-process variant
+//!     survives a JSON round trip (in memory and through `save`/`load`),
+//!     and malformed specs are rejected at validation;
+//! (c) synthesis — [`TraceSpec::zipf_mix`] splits a shared curve by
+//!     Zipf popularity without changing the total offered rate;
+//! (d) closed loop — heavy-tailed and flash-crowd traces drive the
+//!     autoscaled fleet sim with full request conservation, the serving
+//!     ledger never dips below `min_devices`, and on a flash crowd the
+//!     Holt-forecast pre-warm (`simulate_autoscale_predictive`) sheds
+//!     strictly fewer requests than the reactive controller at equal
+//!     budget — the bench claim (`benches/trace_serving.rs`), pinned as
+//!     a test.
+//!
+//! Everything runs on synthetic fronts + the deterministic sim — no
+//! artifacts required.
+
+use ssr::cluster::controller::FleetEvent;
+use ssr::cluster::{
+    simulate_autoscale, simulate_autoscale_predictive, AutoscaleCfg, AutoscaleReport,
+    AutoscaleSpec, DeviceSpec, FaultSpec, FleetSpec, ForecastCfg, RoutePolicy,
+};
+use ssr::coordinator::scheduler::SchedulerCfg;
+use ssr::plan::front::{FrontEntry, PlanFront};
+use ssr::sim::device::ArrivalSource;
+use ssr::traffic::{
+    ArrivalProcess, ArrivalStream, RampSpec, RateCurve, TraceClass, TraceSpec, TrafficClass,
+    TrafficMix,
+};
+use ssr::util::json::Json;
+
+const SLO_MS: f64 = 25.0;
+
+fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+    FrontEntry {
+        assign: vec![0; 8],
+        batch,
+        latency_ms: lat_ms,
+        tops: rps * 2.5e-3,
+        rps,
+        nacc: 1,
+        label: label.to_string(),
+    }
+}
+
+/// The same two-point front the autoscale suite runs on: a 5k req/s
+/// latency point and a 12k req/s throughput point.
+fn front_for(model: &str) -> PlanFront {
+    PlanFront::new(
+        model,
+        12,
+        vec![entry("seq", 1, 0.2, 5000.0), entry("spatial", 24, 2.0, 12000.0)],
+    )
+    .unwrap()
+}
+
+fn dev_for(id: &str, model: &str) -> DeviceSpec {
+    DeviceSpec { id: id.to_string(), platform: "vck190".to_string(), front: front_for(model) }
+}
+
+fn cfg() -> SchedulerCfg {
+    SchedulerCfg { slo_ms: SLO_MS, ..Default::default() }
+}
+
+fn ctl() -> AutoscaleCfg {
+    AutoscaleCfg { high_water: 0.85, low_water: 0.40, ..Default::default() }
+}
+
+/// The bench scenario (`benches/trace_serving.rs`), constant for
+/// constant: baseline 3k req/s, flash crowd to 30k at t = 0.7 s.
+fn flash_trace() -> TraceSpec {
+    TraceSpec::single(
+        "deit_t",
+        RateCurve::Flash {
+            base_rps: 3000.0,
+            peak_rps: 30000.0,
+            at_s: 0.7,
+            ramp_s: 0.4,
+            decay_s: 0.3,
+            duration_s: 3.0,
+        },
+        ArrivalProcess::Poisson,
+    )
+}
+
+fn flash_spec() -> AutoscaleSpec {
+    AutoscaleSpec {
+        fleet: FleetSpec::new("t", vec![dev_for("d0", "deit_t")]).unwrap(),
+        pool: (0..3).map(|i| dev_for(&format!("p{i}"), "deit_t")).collect(),
+        faults: FaultSpec::none(),
+        swap: None,
+    }
+}
+
+/// Every conservation identity the autoscaled report must satisfy
+/// (mirrors `rust/tests/fleet_autoscale.rs`), so trace-driven runs are
+/// held to the same ledger as ramp-driven ones.
+fn assert_conservation(r: &AutoscaleReport, ctx: &str) {
+    assert_eq!(r.served + r.shed, r.arrivals, "{ctx}: arrivals leaked");
+    assert_eq!(r.latency.len(), r.served, "{ctx}: latency samples != served");
+    assert_eq!(r.completions.len(), r.served, "{ctx}: completion records != served");
+    let routed: usize = r.devices.iter().map(|d| d.routed).sum();
+    let placed = r.requeued - r.requeue_lost;
+    assert_eq!(
+        routed + r.unroutable,
+        r.arrivals + placed,
+        "{ctx}: routing identity broken (requeues are re-dispatches)"
+    );
+    for d in &r.devices {
+        assert_eq!(
+            d.served + d.shed + d.requeued_away,
+            d.routed,
+            "{ctx}: device {} leaked requests",
+            d.id
+        );
+    }
+}
+
+/// Replay the control-event log as a serving-headcount ledger: scale-outs
+/// and swap bring-ups add a device, drain starts and failures remove one.
+/// Returns `(min, max)` live serving devices over the run.
+fn serving_ledger(initial: usize, events: &[FleetEvent]) -> (usize, usize) {
+    let (mut live, mut lo, mut hi) = (initial, initial, initial);
+    for e in events {
+        match e {
+            FleetEvent::ScaleOut { .. } | FleetEvent::SwapReplace { .. } => live += 1,
+            FleetEvent::DrainStart { .. } | FleetEvent::Failed { .. } => live -= 1,
+            FleetEvent::Retired { .. } => {}
+        }
+        lo = lo.min(live);
+        hi = hi.max(live);
+    }
+    (lo, hi)
+}
+
+fn drain(mut s: ArrivalStream) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    while let Some((t, class)) = s.pop() {
+        out.push((t.to_bits(), class));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// (a) compatibility: ramps as traces are bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ramp_mix_as_trace_replays_bit_identical_arrivals() {
+    let mix = TrafficMix {
+        classes: vec![
+            TrafficClass {
+                model: "a".to_string(),
+                ramp: RampSpec::parse("2000:0:1500", 0.3).unwrap(),
+            },
+            TrafficClass { model: "b".to_string(), ramp: RampSpec::parse("900", 0.7).unwrap() },
+            TrafficClass {
+                model: "c".to_string(),
+                ramp: RampSpec::parse("0:4000", 0.25).unwrap(),
+            },
+        ],
+    };
+    let trace = TraceSpec::from(&mix);
+    for seed in [1_u64, 42, 2025] {
+        let legacy = drain(ArrivalStream::new(&mix, seed));
+        let traced = drain(ArrivalStream::from_trace(&trace, seed));
+        assert!(legacy.len() > 1000, "seed {seed}: thin stream ({})", legacy.len());
+        assert_eq!(legacy, traced, "seed {seed}: trace path diverged from legacy path");
+    }
+}
+
+#[test]
+fn bare_ramp_as_trace_replays_bit_identical_arrivals() {
+    let ramp = RampSpec::parse("3000:8000:1000", 0.4).unwrap();
+    let mix = TrafficMix::single("m", ramp.clone());
+    let legacy = drain(ArrivalStream::new(&mix, 7));
+    let traced = drain(ArrivalStream::from_trace(&TraceSpec::from(&ramp), 7));
+    assert!(legacy.len() > 1000, "thin stream ({})", legacy.len());
+    assert_eq!(legacy, traced, "bare-ramp trace diverged from legacy path");
+}
+
+// ---------------------------------------------------------------------------
+// (b) serialization
+// ---------------------------------------------------------------------------
+
+/// One class per (curve kind, process kind) pairing.
+fn kitchen_sink() -> TraceSpec {
+    TraceSpec::new(vec![
+        TraceClass {
+            model: "a".to_string(),
+            curve: RateCurve::Constant { rate_rps: 1234.5, duration_s: 2.5 },
+            process: ArrivalProcess::Poisson,
+        },
+        TraceClass {
+            model: "b".to_string(),
+            curve: RateCurve::Piecewise { rates_rps: vec![100.0, 0.0, 250.25], phase_s: 0.3 },
+            process: ArrivalProcess::LognormalGaps { sigma: 0.8 },
+        },
+        TraceClass {
+            model: "c".to_string(),
+            curve: RateCurve::Diurnal {
+                base_rps: 400.0,
+                amplitude_rps: 350.125,
+                period_s: 1.75,
+                duration_s: 4.0,
+            },
+            process: ArrivalProcess::ParetoGaps { alpha: 1.7 },
+        },
+        TraceClass {
+            model: "d".to_string(),
+            curve: RateCurve::Flash {
+                base_rps: 100.0,
+                peak_rps: 9000.0,
+                at_s: 0.5,
+                ramp_s: 0.25,
+                decay_s: 0.125,
+                duration_s: 3.0,
+            },
+            process: ArrivalProcess::Poisson,
+        },
+    ])
+    .unwrap()
+}
+
+#[test]
+fn every_curve_and_process_round_trips_through_json() {
+    let t = kitchen_sink();
+    let text = t.to_json().to_string();
+    let back = TraceSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, t, "in-memory JSON round trip changed the trace");
+
+    let path = std::env::temp_dir().join(format!("ssr_trace_rt_{}.json", std::process::id()));
+    t.save(&path).unwrap();
+    let loaded = TraceSpec::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, t, "save/load round trip changed the trace");
+}
+
+#[test]
+fn malformed_specs_are_rejected() {
+    assert!(TraceSpec::new(vec![]).is_err(), "empty trace accepted");
+    assert!(
+        TraceSpec::new(vec![TraceClass {
+            model: String::new(),
+            curve: RateCurve::Constant { rate_rps: 10.0, duration_s: 1.0 },
+            process: ArrivalProcess::Poisson,
+        }])
+        .is_err(),
+        "empty model accepted"
+    );
+    let curve = RateCurve::Constant { rate_rps: 10.0, duration_s: 1.0 };
+    assert!(
+        TraceSpec::zipf_mix(&[], &curve, ArrivalProcess::Poisson, 1.0).is_err(),
+        "zipf over no models accepted"
+    );
+    assert!(
+        TraceSpec::zipf_mix(&["a"], &curve, ArrivalProcess::Poisson, f64::NAN).is_err(),
+        "NaN zipf exponent accepted"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) Zipf synthesis
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zipf_mix_preserves_total_rate_and_orders_by_rank() {
+    let curve = RateCurve::Constant { rate_rps: 9000.0, duration_s: 1.0 };
+    let t =
+        TraceSpec::zipf_mix(&["a", "b", "c"], &curve, ArrivalProcess::Poisson, 1.0).unwrap();
+    assert_eq!(t.models(), vec!["a", "b", "c"]);
+    assert!(
+        (t.peak_rps() - 9000.0).abs() < 1e-6,
+        "zipf split changed the offered rate: {}",
+        t.peak_rps()
+    );
+    let rates: Vec<f64> = t.classes.iter().map(|c| c.curve.peak_rps()).collect();
+    assert!(rates[0] > rates[1] && rates[1] > rates[2], "ranks out of order: {rates:?}");
+    // Exponent 0 is a uniform split.
+    let u = TraceSpec::zipf_mix(&["a", "b", "c"], &curve, ArrivalProcess::Poisson, 0.0).unwrap();
+    for c in &u.classes {
+        assert!((c.curve.peak_rps() - 3000.0).abs() < 1e-6);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) closed loop: traces through the autoscaled fleet sim
+// ---------------------------------------------------------------------------
+
+#[test]
+fn heavy_tail_zipf_trace_conserves_requests_through_autoscaling() {
+    // Two models, diurnal load, Pareto gaps — none of which existed
+    // pre-trace — through the full controller loop.
+    let curve = RateCurve::Diurnal {
+        base_rps: 6000.0,
+        amplitude_rps: 4000.0,
+        period_s: 1.0,
+        duration_s: 2.0,
+    };
+    let trace = TraceSpec::zipf_mix(
+        &["a", "b"],
+        &curve,
+        ArrivalProcess::ParetoGaps { alpha: 1.7 },
+        1.0,
+    )
+    .unwrap();
+    let spec = AutoscaleSpec {
+        fleet: FleetSpec::new("t", vec![dev_for("a0", "a"), dev_for("b0", "b")]).unwrap(),
+        pool: vec![dev_for("a1", "a"), dev_for("b1", "b")],
+        faults: FaultSpec::none(),
+        swap: None,
+    };
+    let r = simulate_autoscale(&spec, &trace, &cfg(), &ctl(), RoutePolicy::RoundRobin, 42)
+        .unwrap();
+    assert!(r.arrivals > 10_000, "load generator produced {}", r.arrivals);
+    assert_conservation(&r, "heavy-tail zipf");
+}
+
+#[test]
+fn predictive_flash_crowd_sheds_strictly_less_than_reactive() {
+    // The bench claim (`benches/trace_serving.rs`) as a test: same spec,
+    // same trace, same seed — the Holt forecast's pre-warm lead time must
+    // convert into strictly fewer shed requests, at equal device budget.
+    let trace = flash_trace();
+    let reactive = simulate_autoscale(
+        &flash_spec(),
+        &trace,
+        &cfg(),
+        &ctl(),
+        RoutePolicy::RoundRobin,
+        2025,
+    )
+    .unwrap();
+    let predictive = simulate_autoscale_predictive(
+        &flash_spec(),
+        &trace,
+        &cfg(),
+        &ctl(),
+        &ForecastCfg::default(),
+        RoutePolicy::RoundRobin,
+        2025,
+    )
+    .unwrap();
+    assert_conservation(&reactive, "reactive flash");
+    assert_conservation(&predictive, "predictive flash");
+    assert_eq!(
+        reactive.arrivals, predictive.arrivals,
+        "same trace + seed must offer identical arrivals"
+    );
+    assert!(
+        predictive.shed < reactive.shed,
+        "predictive pre-warm shed {} >= reactive {}",
+        predictive.shed,
+        reactive.shed
+    );
+    // Equal budget: the static fleet sized for the spike top would spend
+    // 4 devices x 3 s; both controllers must stay under it.
+    let static_device_s = 4.0 * trace.duration_s();
+    for (name, r) in [("reactive", &reactive), ("predictive", &predictive)] {
+        assert!(
+            r.device_seconds() < static_device_s,
+            "{name} spent {:.2} device-s, static peak {static_device_s:.2}",
+            r.device_seconds()
+        );
+        let (lo, hi) = serving_ledger(1, &r.events);
+        assert!(lo >= 1, "{name}: serving devices dipped below min_devices");
+        assert!(hi <= 4, "{name}: more devices live than fleet + pool");
+    }
+    // The forecast fires on projected (not observed) overload, so its
+    // first scale-out cannot come later than the reactive one.
+    let first_out = |r: &AutoscaleReport| {
+        r.events.iter().find_map(|e| match e {
+            FleetEvent::ScaleOut { at_s, .. } => Some(*at_s),
+            _ => None,
+        })
+    };
+    let (p, q) = (first_out(&predictive), first_out(&reactive));
+    assert!(p.is_some(), "predictive never scaled out on a 10x flash");
+    assert!(q.is_some(), "reactive never scaled out on a 10x flash");
+    assert!(
+        p.unwrap() <= q.unwrap(),
+        "forecast pre-warm ({:.2} s) came after reactive scale-out ({:.2} s)",
+        p.unwrap(),
+        q.unwrap()
+    );
+}
+
+#[test]
+fn predictive_on_steady_feasible_load_matches_reactive() {
+    // Flat, comfortably feasible load: the forecast projects exactly the
+    // observed rate (zero trend), stays under the high-water mark, and
+    // the two controllers take identical actions.
+    let trace = TraceSpec::single(
+        "deit_t",
+        RateCurve::Constant { rate_rps: 2500.0, duration_s: 1.5 },
+        ArrivalProcess::Poisson,
+    );
+    let reactive = simulate_autoscale(
+        &flash_spec(),
+        &trace,
+        &cfg(),
+        &ctl(),
+        RoutePolicy::RoundRobin,
+        9,
+    )
+    .unwrap();
+    let predictive = simulate_autoscale_predictive(
+        &flash_spec(),
+        &trace,
+        &cfg(),
+        &ctl(),
+        &ForecastCfg::default(),
+        RoutePolicy::RoundRobin,
+        9,
+    )
+    .unwrap();
+    assert_eq!(predictive.events, reactive.events, "steady load: controllers diverged");
+    assert_eq!(predictive.served, reactive.served);
+    assert_eq!(predictive.shed, reactive.shed);
+}
