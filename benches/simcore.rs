@@ -17,8 +17,11 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use ssr::bench::{bench, json_path_from_args, write_json_with_metrics, BenchResult, Table};
 use ssr::coordinator::scheduler::{ArrivalStream, RampSpec, SchedulerCfg, TrafficMix};
+use ssr::obs::{TraceEvent, TraceRecorder};
 use ssr::plan::front::{FrontEntry, PlanFront};
-use ssr::sim::device::{run_timeline_sketched, DeviceSim, NoControl, SketchOutcome};
+use ssr::sim::device::{
+    run_timeline_sketched, run_timeline_sketched_recorded, DeviceSim, NoControl, SketchOutcome,
+};
 use ssr::sim::sweep::{run_sweep, SweepCfg};
 
 // ---------------------------------------------------------------------------
@@ -136,6 +139,32 @@ fn sketched_replay(
     )
 }
 
+/// The same replay with a live [`TraceRecorder`] collecting every event —
+/// the opt-in observability path whose overhead the bench reports.
+fn sketched_replay_traced(
+    front: &PlanFront,
+    cfg: &SchedulerCfg,
+    rate: f64,
+    duration_s: f64,
+    seed: u64,
+) -> (SketchOutcome, Vec<TraceEvent>) {
+    let ramp = RampSpec { rates_rps: vec![rate], phase_s: duration_s };
+    let mix = TrafficMix::single(&front.model, ramp);
+    let mut stream = ArrivalStream::new(&mix, seed);
+    let mut devs = vec![DeviceSim::new(front.clone(), *cfg).without_latency_samples()];
+    let mut rec = TraceRecorder::new();
+    let out = run_timeline_sketched_recorded(
+        &mut devs,
+        &mut stream,
+        mix.duration_s(),
+        cfg.window_s,
+        |_, _, _| Some(0),
+        &mut NoControl,
+        &mut rec,
+    );
+    (out, rec.into_events())
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick" || a == "--test");
     let front = front();
@@ -233,6 +262,59 @@ fn main() {
         byte_ratio < 2.0,
         "sketched replay heap traffic grew {byte_ratio:.2}x under {req_ratio:.2}x requests — \
          the O(1)-memory path is allocating per request"
+    );
+
+    // -- recorder on vs off: the zero-overhead-when-off claim --------------
+    // Every run above went through the monomorphized `NoopRecorder` path,
+    // so those numbers ARE the recorder-off rows. Re-run the single-core
+    // replay with a live `TraceRecorder` and report what opting in costs:
+    // throughput delta plus the heap traffic of the structured event
+    // stream (recorder-off must add none).
+    let mut traced_events = 0usize;
+    let r_on = bench("simcore: sketched replay (recorder on)", 1, iters, 30.0, || {
+        let (o, evs) = sketched_replay_traced(&front, &cfg, rate, duration_s, seed);
+        assert_eq!(o.arrivals, out.arrivals, "recorder perturbed the replay");
+        assert_eq!(o.events, out.events, "recorder perturbed the event count");
+        traced_events = evs.len();
+    });
+    println!("{}", r_on.report());
+    let on_req_per_s = out.arrivals as f64 / r_on.mean_s;
+    let (off_bytes, _) =
+        alloc_bytes_during(|| sketched_replay(&front, &cfg, rate, duration_s, seed));
+    let (on_bytes, _) =
+        alloc_bytes_during(|| sketched_replay_traced(&front, &cfg, rate, duration_s, seed));
+    let alloc_delta = on_bytes.saturating_sub(off_bytes);
+    metrics.push(("recorder_off_req_per_s".to_string(), req_per_s));
+    metrics.push(("recorder_on_req_per_s".to_string(), on_req_per_s));
+    metrics.push(("recorder_overhead_x".to_string(), req_per_s / on_req_per_s));
+    metrics.push(("recorder_trace_events".to_string(), traced_events as f64));
+    metrics.push(("recorder_alloc_delta_bytes".to_string(), alloc_delta as f64));
+    results.push(r_on);
+
+    let mut t = Table::new(&["recorder", "req/s", "alloc bytes", "trace events"]);
+    t.row(&[
+        "off (noop)".to_string(),
+        format!("{:.2} M", req_per_s / 1e6),
+        off_bytes.to_string(),
+        "0".to_string(),
+    ]);
+    t.row(&[
+        "on (trace)".to_string(),
+        format!("{:.2} M", on_req_per_s / 1e6),
+        on_bytes.to_string(),
+        traced_events.to_string(),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "recorder on costs {:.2}x throughput, +{alloc_delta} heap bytes for {traced_events} events",
+        req_per_s / on_req_per_s
+    );
+    // Structural: a live recorder must actually capture the run (at least
+    // one event per arrival reaches the trace).
+    assert!(
+        traced_events >= out.arrivals,
+        "trace captured {traced_events} events for {} arrivals",
+        out.arrivals
     );
 
     if let Some(path) = json_path_from_args() {

@@ -5,7 +5,7 @@
 //! — the fleet-scale analog of the paper's Table 6 picking one design per
 //! latency constraint offline. Real load diverges from forecasts and real
 //! devices die, so this module closes the loop: a controller rides the
-//! shared event loop ([`run_timeline_controlled`]) and, each decision
+//! shared event loop ([`run_timeline_recorded`]) and, each decision
 //! window, reads every device's [`LoadEstimator`] output (through
 //! [`DeviceSim::load_estimate`]) and acts:
 //!
@@ -51,13 +51,14 @@ use std::collections::{BTreeMap, VecDeque};
 use crate::cluster::fleet::{DeviceSpec, FleetSpec};
 use crate::cluster::router::{DeviceView, RoutePolicy, Router, ROUTER_STREAM};
 use crate::coordinator::scheduler::SchedulerCfg;
+use crate::obs::{NoopRecorder, Recorder};
 use crate::plan::front::PlanFront;
 use crate::sim::device::{
-    run_timeline_controlled, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
+    run_timeline_recorded, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
 };
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
-use crate::util::stats::Summary;
+use crate::util::stats::{fmt_ms, Summary};
 
 /// Stream id the fault-injection RNG splits off the base seed (disjoint
 /// from the router's `u64::MAX`, the per-class `0..n_classes`, and the
@@ -295,57 +296,21 @@ pub struct AutoscaleSpec {
 // Control events (the audit log of the run)
 // ---------------------------------------------------------------------------
 
-/// Why a device was put into lifecycle drain.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DrainReason {
-    ScaleIn,
-    Swap,
-}
+// The audit-event vocabulary (`ScaleOut` / `DrainStart` / `Retired` /
+// `Failed` / `SwapReplace`, plus `DrainReason`) was a bespoke private
+// enum here; it is now the controller-facing subset of the one
+// observability vocabulary, [`crate::obs::TraceEvent`]. The old names
+// keep working — `FleetEvent` is the same enum (variants, field names,
+// and `describe()` strings unchanged), so `AutoscaleReport::events`
+// consumers and the pinned tests in `rust/tests/fleet_autoscale.rs`
+// compile and behave as before. The unification buys one audit trail:
+// `obs::merge_audit` splices these events into a recorded trace stream
+// at their window boundaries.
 
-/// One controller action, in commit order.
-#[derive(Clone, Debug, PartialEq)]
-pub enum FleetEvent {
-    ScaleOut { at_s: f64, window: usize, id: String },
-    DrainStart { at_s: f64, window: usize, id: String, reason: DrainReason },
-    /// Hitless decommission finished (billed to the window boundary that
-    /// observed it; the actual drain landed at a completion inside the
-    /// preceding window).
-    Retired { at_s: f64, window: usize, id: String },
-    Failed { at_s: f64, window: usize, id: String, requeued: usize },
-    /// Rolling front swap brought up `new` to replace `old` (normally
-    /// after `old` retired; *before* its drain when `old` was the model's
-    /// last serving device — the surge path).
-    SwapReplace { at_s: f64, window: usize, old: String, new: String },
-}
-
-impl FleetEvent {
-    /// One CLI log line.
-    pub fn describe(&self) -> String {
-        match self {
-            FleetEvent::ScaleOut { at_s, window, id } => {
-                format!("{at_s:.2} s (window {window}): scale-out  + {id}")
-            }
-            FleetEvent::DrainStart { at_s, window, id, reason } => {
-                let r = match reason {
-                    DrainReason::ScaleIn => "scale-in",
-                    DrainReason::Swap => "front-swap",
-                };
-                format!("{at_s:.2} s (window {window}): drain      - {id} ({r})")
-            }
-            FleetEvent::Retired { at_s, window, id } => {
-                format!("{at_s:.2} s (window {window}): retired    - {id}")
-            }
-            FleetEvent::Failed { at_s, window, id, requeued } => {
-                format!(
-                    "{at_s:.2} s (window {window}): FAILED     x {id} ({requeued} requeued)"
-                )
-            }
-            FleetEvent::SwapReplace { at_s, window, old, new } => {
-                format!("{at_s:.2} s (window {window}): swapped    {old} -> {new}")
-            }
-        }
-    }
-}
+pub use crate::obs::DrainReason;
+/// The controller's audit-event alias of [`crate::obs::TraceEvent`]:
+/// `AutoscaleReport::events` only ever holds the audit variants.
+pub use crate::obs::TraceEvent as FleetEvent;
 
 // ---------------------------------------------------------------------------
 // The controller
@@ -878,10 +843,12 @@ impl AutoscaleReport {
     }
 
     pub fn summary_line(&self) -> String {
-        let (p50, p99) = self.latency_ms();
+        // Empty-latency runs yield NaN percentiles; fmt_ms prints "-".
+        let pct = self.latency.percentiles(&[0.50, 0.99]);
+        let (p50, p99) = (fmt_ms(pct[0]), fmt_ms(pct[1]));
         format!(
             "{} arrivals | {} served, {} shed ({} unroutable, {} requeue-lost) | {} requeued \
-             | p50 {p50:.2} ms p99 {p99:.2} ms | SLO attainment {:.1}% | {} control events | \
+             | p50 {p50} ms p99 {p99} ms | SLO attainment {:.1}% | {} control events | \
              {:.2} device-s (peak {} live)",
             self.arrivals,
             self.served,
@@ -937,7 +904,25 @@ pub fn simulate_autoscale(
     policy: RoutePolicy,
     seed: u64,
 ) -> Result<AutoscaleReport, String> {
-    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, None, policy, seed)
+    let mut rec = NoopRecorder;
+    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, None, policy, seed, &mut rec)
+}
+
+/// [`simulate_autoscale`] with a [`Recorder`] observing the run. The
+/// report (including its audit `events`) is bit-identical to the
+/// unobserved run; the recorder additionally captures the hot-path
+/// stream, which [`crate::obs::merge_audit`] can then splice the audit
+/// events into for one unified trace.
+pub fn simulate_autoscale_observed(
+    spec: &AutoscaleSpec,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    ctl_cfg: &AutoscaleCfg,
+    policy: RoutePolicy,
+    seed: u64,
+    rec: &mut impl Recorder,
+) -> Result<AutoscaleReport, String> {
+    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, None, policy, seed, rec)
 }
 
 /// [`simulate_autoscale`] with the Holt-forecast pre-warm enabled: the
@@ -959,7 +944,34 @@ pub fn simulate_autoscale_predictive(
     seed: u64,
 ) -> Result<AutoscaleReport, String> {
     forecast.validate()?;
-    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, Some(*forecast), policy, seed)
+    let mut rec = NoopRecorder;
+    simulate_autoscale_inner(
+        spec,
+        traffic.into(),
+        cfg,
+        ctl_cfg,
+        Some(*forecast),
+        policy,
+        seed,
+        &mut rec,
+    )
+}
+
+/// [`simulate_autoscale_predictive`] with a [`Recorder`] (see
+/// [`simulate_autoscale_observed`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_autoscale_predictive_observed(
+    spec: &AutoscaleSpec,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    ctl_cfg: &AutoscaleCfg,
+    forecast: &ForecastCfg,
+    policy: RoutePolicy,
+    seed: u64,
+    rec: &mut impl Recorder,
+) -> Result<AutoscaleReport, String> {
+    forecast.validate()?;
+    simulate_autoscale_inner(spec, traffic.into(), cfg, ctl_cfg, Some(*forecast), policy, seed, rec)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -971,6 +983,7 @@ fn simulate_autoscale_inner(
     forecast: Option<ForecastCfg>,
     policy: RoutePolicy,
     seed: u64,
+    rec: &mut impl Recorder,
 ) -> Result<AutoscaleReport, String> {
     if trace.classes.is_empty() {
         return Err("traffic trace has no classes".into());
@@ -1026,6 +1039,7 @@ fn simulate_autoscale_inner(
             router.pick(&views, class, &eligible, cfg.slo_ms)
         },
         &mut ctl,
+        rec,
     );
 
     let devices: Vec<AutoscaleDevice> = ctl

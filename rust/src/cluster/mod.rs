@@ -44,12 +44,13 @@ pub mod router;
 pub mod sim;
 
 pub use controller::{
-    simulate_autoscale, simulate_autoscale_predictive, AutoscaleCfg, AutoscaleReport,
-    AutoscaleSpec, FaultSpec, ForecastCfg, FrontSwap,
+    simulate_autoscale, simulate_autoscale_observed, simulate_autoscale_predictive,
+    simulate_autoscale_predictive_observed, AutoscaleCfg, AutoscaleReport, AutoscaleSpec,
+    FaultSpec, ForecastCfg, FrontSwap,
 };
 pub use fleet::{DeviceSpec, FleetSpec};
 pub use provision::{provision, PlatformOption, ProvisionResult};
 pub use router::{DeviceView, RoutePolicy, Router, TrafficClass, TrafficMix};
-pub use sim::{simulate_fleet, DeviceStat, FleetSimReport};
+pub use sim::{simulate_fleet, simulate_fleet_observed, DeviceStat, FleetSimReport};
 
 pub use crate::traffic::TraceSpec;

@@ -9,7 +9,7 @@
 //! multi-model mix against the devices' observable state. The event loop
 //! and its deterministic tie order — on time ties: completion (lowest
 //! device index first), then the window tick, then the arrival — live in
-//! [`run_timeline_controlled`], shared with the single-device sim (with
+//! [`run_timeline_recorded`], shared with the single-device sim (with
 //! arrivals streamed lazily via
 //! [`crate::traffic::ArrivalStream`]), so a seed fully
 //! determines every tally, fleet-wide and per device, and the two sims
@@ -24,10 +24,11 @@
 use crate::cluster::fleet::FleetSpec;
 use crate::cluster::router::{DeviceView, RoutePolicy, Router, ROUTER_STREAM};
 use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
-use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl, WindowStat};
+use crate::obs::{NoopRecorder, Recorder};
+use crate::sim::device::{run_timeline_recorded, DeviceSim, NoControl, WindowStat};
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
-use crate::util::stats::Summary;
+use crate::util::stats::{fmt_ms, Summary};
 
 /// Per-device outcome of a fleet simulation.
 #[derive(Clone, Debug)]
@@ -92,10 +93,12 @@ impl FleetSimReport {
     }
 
     pub fn summary_line(&self) -> String {
-        let (p50, p99) = self.latency_ms();
+        // Empty-latency runs yield NaN percentiles; fmt_ms prints "-".
+        let pct = self.latency.percentiles(&[0.50, 0.99]);
+        let (p50, p99) = (fmt_ms(pct[0]), fmt_ms(pct[1]));
         format!(
-            "{} devices | {} arrivals | {} served, {} shed ({} unroutable) | p50 {p50:.2} ms \
-             p99 {p99:.2} ms | SLO attainment {:.1}% | {} plan switches",
+            "{} devices | {} arrivals | {} served, {} shed ({} unroutable) | p50 {p50} ms \
+             p99 {p99} ms | SLO attainment {:.1}% | {} plan switches",
             self.devices.len(),
             self.arrivals,
             self.served,
@@ -136,6 +139,21 @@ pub fn simulate_fleet(
     policy: RoutePolicy,
     seed: u64,
 ) -> Result<FleetSimReport, String> {
+    let mut rec = NoopRecorder;
+    simulate_fleet_observed(fleet, traffic, cfg, policy, seed, &mut rec)
+}
+
+/// [`simulate_fleet`] with a [`Recorder`] observing the run. The report
+/// is bit-identical to the unobserved run; the recorder additionally
+/// captures the structured event stream ([`crate::obs::TraceEvent`]).
+pub fn simulate_fleet_observed(
+    fleet: &FleetSpec,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    policy: RoutePolicy,
+    seed: u64,
+    rec: &mut impl Recorder,
+) -> Result<FleetSimReport, String> {
     let trace: TraceSpec = traffic.into();
     if fleet.is_empty() {
         return Err("cannot simulate an empty fleet".into());
@@ -167,7 +185,7 @@ pub fn simulate_fleet(
     let mut devs: Vec<DeviceSim> =
         fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
 
-    let outcome = run_timeline_controlled(
+    let outcome = run_timeline_recorded(
         &mut devs,
         &mut arrivals,
         trace.duration_s(),
@@ -185,6 +203,7 @@ pub fn simulate_fleet(
             router.pick(&views, class, &eligible[class], cfg.slo_ms)
         },
         &mut NoControl,
+        rec,
     );
 
     let devices: Vec<DeviceStat> = fleet
@@ -370,6 +389,45 @@ mod tests {
             .map(|d| d.routed as f64 / r.arrivals as f64)
             .collect();
         assert!(shares.iter().all(|&s| s > 0.2), "lopsided split {shares:?}");
+    }
+
+    #[test]
+    fn all_unroutable_summary_prints_dashes_not_nan() {
+        // Nothing served → empty latency summary → NaN percentiles; the
+        // human-facing line must print "-" instead of "NaN".
+        let mix = TrafficMix::single("other", RampSpec::parse("1000", 0.2).unwrap());
+        let r = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::RoundRobin, 3).unwrap();
+        assert_eq!(r.served, 0);
+        let line = r.summary_line();
+        assert!(line.contains("p50 - ms p99 - ms"), "{line}");
+        assert!(!line.contains("NaN"), "{line}");
+    }
+
+    #[test]
+    fn observed_fleet_run_is_bit_identical_to_unobserved() {
+        use crate::obs::{trace_tallies, TraceRecorder};
+        let mix = TrafficMix::single("m", RampSpec::parse("2000:8000:2000", 0.4).unwrap());
+        let a = simulate_fleet(&fleet("m"), &mix, &cfg(), RoutePolicy::PowerOfTwoSlo, 11).unwrap();
+        let mut rec = TraceRecorder::new();
+        let b = simulate_fleet_observed(
+            &fleet("m"),
+            &mix,
+            &cfg(),
+            RoutePolicy::PowerOfTwoSlo,
+            11,
+            &mut rec,
+        )
+        .unwrap();
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        // Tallies fold unroutables into shed, matching the report.
+        let t = trace_tallies(&rec.events);
+        assert_eq!(t.arrivals as usize, b.arrivals);
+        assert_eq!(t.served as usize, b.served);
+        assert_eq!(t.shed as usize, b.shed);
+        assert_eq!(t.unroutable as usize, b.unroutable);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Serve-time metrics: per-request latency distribution + throughput.
 
-use crate::util::stats::Summary;
+use crate::util::stats::{fmt_ms, Summary};
 
 /// Outcome of a serve run.
 #[derive(Clone, Debug)]
@@ -33,15 +33,16 @@ impl ServeReport {
 
     pub fn summary_line(&self) -> String {
         // one sort for both quantiles — this prints per window in the
-        // adaptive serving loop
+        // adaptive serving loop; empty windows yield NaN percentiles,
+        // which fmt_ms prints as "-"
         let pct = self.latency.percentiles(&[0.50, 0.99]);
         format!(
-            "{} reqs in {:.3} s | {:.2} req/s | lat p50 {:.2} ms p99 {:.2} ms | {:.4} effective TOPS",
+            "{} reqs in {:.3} s | {:.2} req/s | lat p50 {} ms p99 {} ms | {:.4} effective TOPS",
             self.requests,
             self.wall_s,
             self.throughput_rps(),
-            pct[0] * 1e3,
-            pct[1] * 1e3,
+            fmt_ms(pct[0]),
+            fmt_ms(pct[1]),
             self.effective_tops()
         )
     }
@@ -80,5 +81,20 @@ mod tests {
         let s = report().summary_line();
         assert!(s.contains("req/s"));
         assert!(s.contains("p99"));
+    }
+
+    #[test]
+    fn empty_window_summary_prints_dashes_not_nan() {
+        // An idle serve window has zero completions; percentiles of an
+        // empty Summary are NaN and must never reach the printed line.
+        let r = ServeReport {
+            requests: 0,
+            wall_s: 0.05,
+            latency: Summary::new(),
+            macs_per_image: 1_250_000_000,
+        };
+        let s = r.summary_line();
+        assert!(s.contains("p50 - ms p99 - ms"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 }

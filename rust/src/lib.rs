@@ -15,7 +15,9 @@
 //!   routing, fleet simulation, provisioning, and a closed-loop
 //!   autoscaling controller with failure injection and hitless rolling
 //!   front swaps — ([`cluster`]), the unified workload-trace API every
-//!   traffic consumer speaks ([`traffic`]), and report generators for
+//!   traffic consumer speaks ([`traffic`]), a deterministic observability
+//!   layer — structured event tracing, metrics, SLO burn-rate monitoring
+//!   — ([`obs`]), and report generators for
 //!   every paper table/figure ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
 //!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
@@ -33,6 +35,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod dse;
 pub mod graph;
+pub mod obs;
 pub mod plan;
 pub mod report;
 pub mod runtime;

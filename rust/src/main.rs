@@ -21,6 +21,10 @@
 //!                     ramp/diurnal/flash curves, poisson/lognormal/pareto
 //!                     arrivals, optional Zipf model mix), `show` one; every
 //!                     simulation verb accepts it via --trace
+//!   obs               observability: `report` summarizes a saved trace
+//!                     (event tallies + conservation check); `simulate` and
+//!                     `cluster simulate|autoscale` emit traces/metrics via
+//!                     --trace-out / --metrics-out
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use std::path::Path;
@@ -33,7 +37,6 @@ use ssr::cluster::{
     simulate_fleet, AutoscaleCfg, AutoscaleSpec, FaultSpec, FleetSpec, ForecastCfg, FrontSwap,
     PlatformOption, RoutePolicy, TrafficMix,
 };
-use ssr::sim::device::DeviceState;
 use ssr::coordinator::pipeline::{synth_images, PipelineServer, SequentialServer};
 use ssr::coordinator::scheduler::{AdaptiveServer, RampSpec, SchedulerCfg};
 use ssr::coordinator::StageAssign;
@@ -41,10 +44,12 @@ use ssr::dse::ea::{run_ea, EaParams, EaResult};
 use ssr::dse::eval::build_design;
 use ssr::dse::Assignment;
 use ssr::graph::{builder, vit_graph, Graph};
+use ssr::obs::{TraceEvent, TraceRecorder};
 use ssr::plan::front::{analytical_front, PlanFront};
 use ssr::plan::ExecutionPlan;
 use ssr::report::tables::{self, Ctx};
 use ssr::runtime::exec::Engine;
+use ssr::sim::device::DeviceState;
 use ssr::traffic::{ArrivalProcess, RateCurve, TraceSpec};
 use ssr::util::cli::{Command, Matches};
 
@@ -72,10 +77,11 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "cluster" => cmd_cluster(&rest),
         "trace" => cmd_trace(&rest),
+        "obs" => cmd_obs(&rest),
         "calibrate" => cmd_calibrate(&rest),
         _ => {
             eprintln!(
-                "usage: ssr <report|dse|simulate|serve|cluster|trace|calibrate> [flags]\n\
+                "usage: ssr <report|dse|simulate|serve|cluster|trace|obs|calibrate> [flags]\n\
                  run `ssr <subcommand> --help` for flags"
             );
             if sub == "help" {
@@ -225,6 +231,52 @@ fn load_trace_or_exit(m: &Matches, model: &str) -> TraceSpec {
             std::process::exit(2);
         }
     }
+}
+
+/// The observability flags every simulation verb shares.
+fn obs_flags(cmd: Command) -> Command {
+    cmd.flag("trace-out", Some(""), "write a Chrome trace-event JSON of the run here")
+        .flag(
+            "metrics-out",
+            Some(""),
+            "write run metrics here (.json suffix = JSON, else Prometheus text)",
+        )
+}
+
+/// True when the run must actually collect a [`TraceEvent`] stream.
+fn obs_wanted(m: &Matches) -> bool {
+    !m.str("trace-out").is_empty() || !m.str("metrics-out").is_empty()
+}
+
+/// Post-process and write a collected stream: annotate SLO burn-rate
+/// alerts, render the Chrome trace, replay the stream into the metrics
+/// registry. Both outputs are byte-stable for a fixed seeded run.
+fn write_obs_outputs(m: &Matches, events: Vec<TraceEvent>, slo_s: f64) -> i32 {
+    let events = ssr::obs::annotate_slo(events, slo_s, &ssr::obs::SloCfg::default());
+    let trace_out = m.str("trace-out");
+    if !trace_out.is_empty() {
+        if let Err(e) = std::fs::write(&trace_out, ssr::obs::chrome_trace_json(&events)) {
+            eprintln!("writing {trace_out}: {e}");
+            return 1;
+        }
+        println!("wrote {trace_out} ({} events)", events.len());
+    }
+    let metrics_out = m.str("metrics-out");
+    if !metrics_out.is_empty() {
+        let mut reg = ssr::obs::MetricsRegistry::new(slo_s);
+        reg.observe_all(&events);
+        let text = if metrics_out.ends_with(".json") {
+            reg.to_json().to_string()
+        } else {
+            reg.to_prometheus()
+        };
+        if let Err(e) = std::fs::write(&metrics_out, text) {
+            eprintln!("writing {metrics_out}: {e}");
+            return 1;
+        }
+        println!("wrote {metrics_out}");
+    }
+    0
 }
 
 fn cmd_dse(args: &[String]) -> i32 {
@@ -378,7 +430,7 @@ fn print_sim_report(front: &PlanFront, r: &ssr::sim::serving::ServeSimReport) {
 }
 
 fn cmd_simulate(args: &[String]) -> i32 {
-    let cmd = scheduler_flags(
+    let cmd = obs_flags(scheduler_flags(
         Command::new("ssr simulate", "event-driven simulation of a strategy")
             .flag("model", Some("deit_t"), "model name")
             .flag("strategy", Some("spatial"), "sequential|spatial|hybrid")
@@ -389,7 +441,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             .flag("sweep-shards", Some("8"), "sweep: traffic shards per seed (rate splits evenly)")
             .flag("threads", Some("0"), "sweep: worker threads (0 = all cores)")
             .switch("exact", "sweep: exact full-sample stats instead of the sketched fast path"),
-    );
+    ));
     let m = parse_or_exit(cmd, args);
     let frontp = m.str("front");
     if !frontp.is_empty() {
@@ -420,13 +472,24 @@ fn cmd_simulate(args: &[String]) -> i32 {
                 exact: m.bool("exact"),
             };
             let t0 = std::time::Instant::now();
-            let r = ssr::sim::sweep::run_sweep(
-                &front,
-                &trace,
-                &cfg,
-                &sweep,
-                m.usize("load-seed") as u64,
-            );
+            let (r, events) = if obs_wanted(&m) {
+                ssr::sim::sweep::run_sweep_observed(
+                    &front,
+                    &trace,
+                    &cfg,
+                    &sweep,
+                    m.usize("load-seed") as u64,
+                )
+            } else {
+                let r = ssr::sim::sweep::run_sweep(
+                    &front,
+                    &trace,
+                    &cfg,
+                    &sweep,
+                    m.usize("load-seed") as u64,
+                );
+                (r, Vec::new())
+            };
             let wall = t0.elapsed().as_secs_f64();
             let mut t = ssr::bench::Table::new(&[
                 "seed", "shard", "arrivals", "served", "shed", "makespan (s)",
@@ -449,10 +512,22 @@ fn cmd_simulate(args: &[String]) -> i32 {
                 r.events as f64 / wall / 1e6,
                 r.arrivals as f64 / wall / 1e6
             );
+            if obs_wanted(&m) {
+                return write_obs_outputs(&m, events, cfg.slo_ms * 1e-3);
+            }
             return 0;
         }
-        let r = ssr::sim::serving::serve_ramp(&front, &trace, &cfg, m.usize("load-seed") as u64);
+        let seed = m.usize("load-seed") as u64;
+        let mut rec = TraceRecorder::new();
+        let r = if obs_wanted(&m) {
+            ssr::sim::serving::serve_ramp_observed(&front, &trace, &cfg, seed, &mut rec)
+        } else {
+            ssr::sim::serving::serve_ramp(&front, &trace, &cfg, seed)
+        };
         print_sim_report(&front, &r);
+        if obs_wanted(&m) {
+            return write_obs_outputs(&m, rec.into_events(), cfg.slo_ms * 1e-3);
+        }
         return 0;
     }
     let cfg = builder::by_name(&m.str("model")).expect("unknown model");
@@ -764,10 +839,10 @@ fn cluster_provision(args: &[String]) -> i32 {
 }
 
 fn cluster_simulate(args: &[String]) -> i32 {
-    let cmd = cluster_flags(Command::new(
+    let cmd = obs_flags(cluster_flags(Command::new(
         "ssr cluster simulate",
         "deterministic discrete-event replay of fleet serving",
-    ))
+    )))
     .flag("fleet", Some(""), "FleetSpec JSON (from `ssr cluster provision --out`)")
     .flag("synth", Some("vck190:2,u250:1"), "fleet to synthesize when --fleet is absent");
     let m = parse_or_exit(cmd, args);
@@ -795,7 +870,14 @@ fn cluster_simulate(args: &[String]) -> i32 {
         cfg.window_s * 1e3
     );
     print!("{}", trace.describe());
-    let r = match simulate_fleet(&fleet, &trace, &cfg, policy, m.usize("load-seed") as u64) {
+    let seed = m.usize("load-seed") as u64;
+    let mut rec = TraceRecorder::new();
+    let outcome = if obs_wanted(&m) {
+        ssr::cluster::simulate_fleet_observed(&fleet, &trace, &cfg, policy, seed, &mut rec)
+    } else {
+        simulate_fleet(&fleet, &trace, &cfg, policy, seed)
+    };
+    let r = match outcome {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -820,8 +902,9 @@ fn cluster_simulate(args: &[String]) -> i32 {
             d.routed.to_string(),
             d.served.to_string(),
             d.shed.to_string(),
-            format!("{:.3}", d.p50_ms),
-            format!("{:.3}", d.p99_ms),
+            // a device that never served has no latency samples (NaN)
+            if d.served > 0 { format!("{:.3}", d.p50_ms) } else { "-".to_string() },
+            if d.served > 0 { format!("{:.3}", d.p99_ms) } else { "-".to_string() },
             d.max_queue_depth.to_string(),
             d.switches.len().to_string(),
             final_plan,
@@ -829,6 +912,9 @@ fn cluster_simulate(args: &[String]) -> i32 {
     }
     println!("{}", t.render());
     println!("{}", r.summary_line());
+    if obs_wanted(&m) {
+        return write_obs_outputs(&m, rec.into_events(), cfg.slo_ms * 1e-3);
+    }
     0
 }
 
@@ -898,10 +984,10 @@ fn cluster_serve(args: &[String]) -> i32 {
 }
 
 fn cluster_autoscale(args: &[String]) -> i32 {
-    let cmd = cluster_flags(Command::new(
+    let cmd = obs_flags(cluster_flags(Command::new(
         "ssr cluster autoscale",
         "closed-loop fleet autoscaling: scale out/in, fail over, hitless front swaps",
-    ))
+    )))
     .flag("fleet", Some(""), "initial FleetSpec JSON (from `ssr cluster provision --out`)")
     .flag("synth", Some("vck190:1"), "initial fleet to synthesize when --fleet is absent")
     .flag("pool", Some("vck190:2"), "scale-out candidate pool (platform:count,...; \"\" = none)")
@@ -1021,14 +1107,26 @@ fn cluster_autoscale(args: &[String]) -> i32 {
     );
     print!("{}", trace.describe());
     let seed = m.usize("load-seed") as u64;
+    let mut rec = TraceRecorder::new();
+    let observe = obs_wanted(&m);
     let outcome = if m.bool("predictive") {
         let forecast = ForecastCfg {
             alpha: m.f64("forecast-alpha"),
             beta: m.f64("forecast-beta"),
             horizon: m.f64("forecast-horizon"),
         };
-        ssr::cluster::simulate_autoscale_predictive(
-            &spec, &trace, &cfg, &ctl_cfg, &forecast, policy, seed,
+        if observe {
+            ssr::cluster::simulate_autoscale_predictive_observed(
+                &spec, &trace, &cfg, &ctl_cfg, &forecast, policy, seed, &mut rec,
+            )
+        } else {
+            ssr::cluster::simulate_autoscale_predictive(
+                &spec, &trace, &cfg, &ctl_cfg, &forecast, policy, seed,
+            )
+        }
+    } else if observe {
+        ssr::cluster::simulate_autoscale_observed(
+            &spec, &trace, &cfg, &ctl_cfg, policy, seed, &mut rec,
         )
     } else {
         ssr::cluster::simulate_autoscale(&spec, &trace, &cfg, &ctl_cfg, policy, seed)
@@ -1085,6 +1183,12 @@ fn cluster_autoscale(args: &[String]) -> i32 {
         peak,
         r.duration_s
     );
+    if observe {
+        // One unified trace: the controller's audit log spliced in after
+        // each window marker of the hot-path stream.
+        let merged = ssr::obs::merge_audit(rec.into_events(), &r.events);
+        return write_obs_outputs(&m, merged, cfg.slo_ms * 1e-3);
+    }
     0
 }
 
@@ -1205,6 +1309,115 @@ fn trace_show(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// `ssr obs` — summarize saved traces / metrics.
+// ---------------------------------------------------------------------------
+
+fn cmd_obs(args: &[String]) -> i32 {
+    let verb = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    match verb {
+        "report" => obs_report(&rest),
+        _ => {
+            eprintln!(
+                "usage: ssr obs report <trace.json> [--metrics m.prom]\n\
+                 run `ssr obs report --help` for flags"
+            );
+            if verb == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    }
+}
+
+/// Summarize a saved Chrome trace: per-event tallies, the conservation
+/// identity, and (optionally) a Prometheus exposition round-trip check.
+fn obs_report(args: &[String]) -> i32 {
+    let cmd = Command::new("ssr obs report", "summarize a saved Chrome trace-event JSON")
+        .flag("metrics", Some(""), "also check this Prometheus file parses and round-trips");
+    let m = parse_or_exit(cmd, args);
+    let Some(path) = m.positionals.first() else {
+        eprintln!("usage: ssr obs report <trace.json> [--metrics m.prom]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    let root = match ssr::util::json::Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    let t = match ssr::obs::tallies_from_json(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    let total: u64 = t.by_name.values().sum();
+    println!("{path}: {total} events over {:.3} s", t.makespan_s);
+    let mut table = ssr::bench::Table::new(&["event", "count"]);
+    for (name, n) in &t.by_name {
+        table.row(&[name.clone(), n.to_string()]);
+    }
+    println!("{}", table.render());
+    println!(
+        "{} arrivals | {} served | {} dropped ({} unroutable) | {} requeues ({} lost) | \
+         {} windows | {} audit events | {} slo alerts | {} in flight at end",
+        t.arrivals,
+        t.served,
+        t.shed,
+        t.unroutable,
+        t.requeued,
+        t.requeue_lost,
+        t.windows,
+        t.audit,
+        t.slo_alerts,
+        t.in_flight()
+    );
+    if !t.conserved() {
+        eprintln!(
+            "CONSERVATION VIOLATED: served {} + dropped {} > arrivals {}",
+            t.served, t.shed, t.arrivals
+        );
+        return 1;
+    }
+    println!("conservation holds: served + dropped <= arrivals");
+    let mp = m.str("metrics");
+    if !mp.is_empty() {
+        let mtext = match std::fs::read_to_string(&mp) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {mp}: {e}");
+                return 1;
+            }
+        };
+        match ssr::obs::parse_prometheus(&mtext) {
+            Ok(fams) => {
+                if ssr::obs::render_prometheus(&fams) != mtext {
+                    eprintln!("{mp}: exposition does not round-trip byte-identically");
+                    return 1;
+                }
+                println!("{mp}: {} families, exposition round-trips byte-identically", fams.len());
+            }
+            Err(e) => {
+                eprintln!("{mp}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 fn cmd_calibrate(args: &[String]) -> i32 {

@@ -1,0 +1,239 @@
+//! The structured trace-event vocabulary shared by every layer.
+//!
+//! One enum covers the whole stack: per-request hot-path events emitted
+//! inside `sim::device::run_timeline`'s event loop (`Arrival`, `Shed`,
+//! `Launch`, `Served`, ...), per-window scheduler events (`DeviceWindow`,
+//! `PlanSwitch`), the autoscaling controller's audit events (`ScaleOut`,
+//! `DrainStart`, `Retired`, `Failed`, `SwapReplace` — previously a
+//! bespoke private enum in `cluster::controller`, now re-exported from
+//! there as `FleetEvent` for backward compatibility), and the SLO
+//! monitor's `SloAlert`.
+//!
+//! Hot-path variants carry only `Copy` scalars so constructing one in the
+//! event loop is free to erase when the recorder is a
+//! [`NoopRecorder`](crate::obs::NoopRecorder). The `String`-bearing audit
+//! variants are only ever built by the controller, once per control
+//! action — never on the per-request path.
+//!
+//! Every event carries its simulation timestamp; serialization order is
+//! the emission order of the one event loop (deterministic per seed), so
+//! trace output is byte-stable across runs and — for the sweep path,
+//! which merges per-cell streams in cell-index order — across thread
+//! counts.
+
+/// Why a device began draining (audit detail on `DrainStart`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainReason {
+    /// Low-water scale-in decision.
+    ScaleIn,
+    /// Rolling fleet-wide front swap.
+    Swap,
+}
+
+/// One structured observation from a simulation run.
+///
+/// `dev` fields are fleet device indices (the sweep path re-tags them to
+/// the sweep-cell index so merged traces stay unambiguous). All
+/// timestamps are simulation seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    // -- hot path (Copy scalars only) ------------------------------------
+    /// A request was routed to `dev` and admitted to its queue.
+    Arrival { at_s: f64, dev: usize, class: usize },
+    /// A request was routed to `dev` but shed by admission control.
+    Shed { at_s: f64, dev: usize, class: usize },
+    /// No serving device could take the request's model class.
+    Unroutable { at_s: f64, class: usize },
+    /// `dev` started executing a batch under plan `plan`; it completes at
+    /// `done_s` (rendered as a Chrome-trace complete event).
+    Launch { at_s: f64, dev: usize, plan: usize, done_s: f64 },
+    /// One request finished on `dev` with the given sojourn time.
+    Served { at_s: f64, dev: usize, sojourn_s: f64 },
+    /// A drained/failed device's request was re-dispatched at a window
+    /// boundary; `admitted` is false when the target shed it.
+    Requeue { at_s: f64, window: usize, dev: usize, class: usize, admitted: bool },
+    /// A re-dispatched request found no eligible target and was dropped.
+    RequeueLost { at_s: f64, window: usize, class: usize },
+    /// `dev`'s adaptive scheduler committed a plan switch this window;
+    /// `draining` means the old plan is still finishing in-flight work.
+    PlanSwitch { at_s: f64, window: usize, dev: usize, from: usize, to: usize, draining: bool },
+    /// A pending drain-and-swap completed: `dev` now executes `plan`.
+    PlanApplied { at_s: f64, dev: usize, plan: usize },
+    /// Per-device window rollup (mirrors `sim::device::WindowStat`).
+    DeviceWindow {
+        window: usize,
+        end_s: f64,
+        dev: usize,
+        rate_rps: f64,
+        queue_depth: usize,
+        p99_s: f64,
+        committed: usize,
+    },
+    /// Fleet-wide window boundary marker; controller audit events for
+    /// this window splice in immediately after it (see
+    /// [`merge_audit`](crate::obs::merge_audit)).
+    Window { window: usize, end_s: f64 },
+
+    // -- controller audit (cold path; one per control action) ------------
+    /// Scale-out: pool device `id` was activated.
+    ScaleOut { at_s: f64, window: usize, id: String },
+    /// Device `id` began a hitless drain.
+    DrainStart { at_s: f64, window: usize, id: String, reason: DrainReason },
+    /// Hitless decommission finished (billed to the window boundary that
+    /// observed it).
+    Retired { at_s: f64, window: usize, id: String },
+    /// Fault injection killed `id`; its queue was requeued.
+    Failed { at_s: f64, window: usize, id: String, requeued: usize },
+    /// Rolling front swap brought up `new` to replace `old` (surge path).
+    SwapReplace { at_s: f64, window: usize, old: String, new: String },
+
+    // -- SLO monitor ------------------------------------------------------
+    /// Both burn-rate windows exceeded the alert threshold (see
+    /// [`SloMonitor`](crate::obs::SloMonitor)).
+    SloAlert { at_s: f64, window: usize, fast_burn: f64, slow_burn: f64 },
+}
+
+impl TraceEvent {
+    /// Fixed kebab-case name used in trace JSON and `ssr obs report`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Arrival { .. } => "arrival",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::Unroutable { .. } => "unroutable",
+            TraceEvent::Launch { .. } => "launch",
+            TraceEvent::Served { .. } => "served",
+            TraceEvent::Requeue { .. } => "requeue",
+            TraceEvent::RequeueLost { .. } => "requeue-lost",
+            TraceEvent::PlanSwitch { .. } => "plan-switch",
+            TraceEvent::PlanApplied { .. } => "plan-applied",
+            TraceEvent::DeviceWindow { .. } => "device-window",
+            TraceEvent::Window { .. } => "window",
+            TraceEvent::ScaleOut { .. } => "scale-out",
+            TraceEvent::DrainStart { .. } => "drain-start",
+            TraceEvent::Retired { .. } => "retired",
+            TraceEvent::Failed { .. } => "failed",
+            TraceEvent::SwapReplace { .. } => "swap-replace",
+            TraceEvent::SloAlert { .. } => "slo-alert",
+        }
+    }
+
+    /// Simulation timestamp of the event in seconds.
+    pub fn at_s(&self) -> f64 {
+        match self {
+            TraceEvent::Arrival { at_s, .. }
+            | TraceEvent::Shed { at_s, .. }
+            | TraceEvent::Unroutable { at_s, .. }
+            | TraceEvent::Launch { at_s, .. }
+            | TraceEvent::Served { at_s, .. }
+            | TraceEvent::Requeue { at_s, .. }
+            | TraceEvent::RequeueLost { at_s, .. }
+            | TraceEvent::PlanSwitch { at_s, .. }
+            | TraceEvent::PlanApplied { at_s, .. }
+            | TraceEvent::ScaleOut { at_s, .. }
+            | TraceEvent::DrainStart { at_s, .. }
+            | TraceEvent::Retired { at_s, .. }
+            | TraceEvent::Failed { at_s, .. }
+            | TraceEvent::SwapReplace { at_s, .. }
+            | TraceEvent::SloAlert { at_s, .. } => *at_s,
+            TraceEvent::DeviceWindow { end_s, .. } | TraceEvent::Window { end_s, .. } => *end_s,
+        }
+    }
+
+    /// Window index, for events tied to a window boundary.
+    pub fn window(&self) -> Option<usize> {
+        match self {
+            TraceEvent::Requeue { window, .. }
+            | TraceEvent::RequeueLost { window, .. }
+            | TraceEvent::PlanSwitch { window, .. }
+            | TraceEvent::DeviceWindow { window, .. }
+            | TraceEvent::Window { window, .. }
+            | TraceEvent::ScaleOut { window, .. }
+            | TraceEvent::DrainStart { window, .. }
+            | TraceEvent::Retired { window, .. }
+            | TraceEvent::Failed { window, .. }
+            | TraceEvent::SwapReplace { window, .. }
+            | TraceEvent::SloAlert { window, .. } => Some(*window),
+            _ => None,
+        }
+    }
+
+    /// Device index, for events attributed to one device.
+    pub fn dev(&self) -> Option<usize> {
+        match self {
+            TraceEvent::Arrival { dev, .. }
+            | TraceEvent::Shed { dev, .. }
+            | TraceEvent::Launch { dev, .. }
+            | TraceEvent::Served { dev, .. }
+            | TraceEvent::Requeue { dev, .. }
+            | TraceEvent::PlanSwitch { dev, .. }
+            | TraceEvent::PlanApplied { dev, .. }
+            | TraceEvent::DeviceWindow { dev, .. } => Some(*dev),
+            _ => None,
+        }
+    }
+
+    /// Re-tag the device index (sweep cells all simulate device 0; the
+    /// merged trace re-tags each cell's events to its cell index).
+    pub fn set_dev(&mut self, new_dev: usize) {
+        match self {
+            TraceEvent::Arrival { dev, .. }
+            | TraceEvent::Shed { dev, .. }
+            | TraceEvent::Launch { dev, .. }
+            | TraceEvent::Served { dev, .. }
+            | TraceEvent::Requeue { dev, .. }
+            | TraceEvent::PlanSwitch { dev, .. }
+            | TraceEvent::PlanApplied { dev, .. }
+            | TraceEvent::DeviceWindow { dev, .. } => *dev = new_dev,
+            _ => {}
+        }
+    }
+
+    /// True for controller audit events (the old `FleetEvent` vocabulary).
+    pub fn is_audit(&self) -> bool {
+        matches!(
+            self,
+            TraceEvent::ScaleOut { .. }
+                | TraceEvent::DrainStart { .. }
+                | TraceEvent::Retired { .. }
+                | TraceEvent::Failed { .. }
+                | TraceEvent::SwapReplace { .. }
+        )
+    }
+
+    /// One audit line. Audit variants keep the exact strings the
+    /// controller printed before the unification; the sim-level variants
+    /// get the same `at (window): verb detail` shape.
+    pub fn describe(&self) -> String {
+        match self {
+            TraceEvent::ScaleOut { at_s, window, id } => {
+                format!("{at_s:.2} s (window {window}): scale-out  + {id}")
+            }
+            TraceEvent::DrainStart { at_s, window, id, reason } => {
+                let r = match reason {
+                    DrainReason::ScaleIn => "scale-in",
+                    DrainReason::Swap => "front-swap",
+                };
+                format!("{at_s:.2} s (window {window}): drain      - {id} ({r})")
+            }
+            TraceEvent::Retired { at_s, window, id } => {
+                format!("{at_s:.2} s (window {window}): retired    - {id}")
+            }
+            TraceEvent::Failed { at_s, window, id, requeued } => {
+                format!("{at_s:.2} s (window {window}): FAILED     x {id} ({requeued} requeued)")
+            }
+            TraceEvent::SwapReplace { at_s, window, old, new } => {
+                format!("{at_s:.2} s (window {window}): swapped    {old} -> {new}")
+            }
+            TraceEvent::SloAlert { at_s, window, fast_burn, slow_burn } => {
+                format!(
+                    "{at_s:.2} s (window {window}): SLO BURN   fast {fast_burn:.1}x slow {slow_burn:.1}x"
+                )
+            }
+            TraceEvent::PlanSwitch { at_s, window, dev, from, to, draining } => {
+                let d = if *draining { " (draining)" } else { "" };
+                format!("{at_s:.2} s (window {window}): dev {dev} plan [{from}] -> [{to}]{d}")
+            }
+            other => format!("{:.6} s: {}", other.at_s(), other.name()),
+        }
+    }
+}

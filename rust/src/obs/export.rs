@@ -1,0 +1,331 @@
+//! Trace export: Chrome trace-event JSON and event-stream tallies.
+//!
+//! [`chrome_trace_json`] renders a collected stream in the Chrome
+//! trace-event format (load in `chrome://tracing` or Perfetto):
+//! instants for point events, complete ("X") slices for launches with
+//! their batch duration, one track (`tid`) per device. Rendering goes
+//! through [`util::json::Json`](crate::util::json::Json), whose `BTreeMap`
+//! object keys and fixed number formatting make the output byte-stable —
+//! the same seeded run always writes the identical file (pinned in CI by
+//! running `ssr cluster autoscale --trace-out` twice and comparing).
+//!
+//! [`trace_tallies`] / [`tallies_from_json`] reconstruct end-of-run
+//! tallies purely from events — `tests/obs_trace.rs` pins them equal to
+//! the sim reports' own counters (conservation: served + shed ==
+//! arrivals), and `ssr obs report` prints them for any saved trace.
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+use crate::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn unum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Per-variant `args` payload for the Chrome trace event.
+fn args_of(ev: &TraceEvent) -> Json {
+    match ev {
+        TraceEvent::Arrival { class, .. } | TraceEvent::Shed { class, .. } => {
+            obj(vec![("class", unum(*class))])
+        }
+        TraceEvent::Unroutable { class, .. } => obj(vec![("class", unum(*class))]),
+        TraceEvent::Launch { plan, .. } => obj(vec![("plan", unum(*plan))]),
+        TraceEvent::Served { sojourn_s, .. } => obj(vec![("sojourn_ms", num(sojourn_s * 1e3))]),
+        TraceEvent::Requeue { window, class, admitted, .. } => obj(vec![
+            ("admitted", Json::Bool(*admitted)),
+            ("class", unum(*class)),
+            ("window", unum(*window)),
+        ]),
+        TraceEvent::RequeueLost { window, class, .. } => {
+            obj(vec![("class", unum(*class)), ("window", unum(*window))])
+        }
+        TraceEvent::PlanSwitch { window, from, to, draining, .. } => obj(vec![
+            ("draining", Json::Bool(*draining)),
+            ("from", unum(*from)),
+            ("to", unum(*to)),
+            ("window", unum(*window)),
+        ]),
+        TraceEvent::PlanApplied { plan, .. } => obj(vec![("plan", unum(*plan))]),
+        TraceEvent::DeviceWindow { window, rate_rps, queue_depth, p99_s, committed, .. } => {
+            // p99 of an empty window is NaN, which JSON cannot carry.
+            let p99_ms = if p99_s.is_finite() { p99_s * 1e3 } else { -1.0 };
+            obj(vec![
+                ("committed", unum(*committed)),
+                ("p99_ms", num(p99_ms)),
+                ("queue_depth", unum(*queue_depth)),
+                ("rate_rps", num(*rate_rps)),
+                ("window", unum(*window)),
+            ])
+        }
+        TraceEvent::Window { window, .. } => obj(vec![("window", unum(*window))]),
+        TraceEvent::ScaleOut { window, id, .. } => {
+            obj(vec![("id", Json::Str(id.clone())), ("window", unum(*window))])
+        }
+        TraceEvent::DrainStart { window, id, reason, .. } => obj(vec![
+            ("id", Json::Str(id.clone())),
+            ("reason", Json::Str(format!("{reason:?}"))),
+            ("window", unum(*window)),
+        ]),
+        TraceEvent::Retired { window, id, .. } => {
+            obj(vec![("id", Json::Str(id.clone())), ("window", unum(*window))])
+        }
+        TraceEvent::Failed { window, id, requeued, .. } => obj(vec![
+            ("id", Json::Str(id.clone())),
+            ("requeued", unum(*requeued)),
+            ("window", unum(*window)),
+        ]),
+        TraceEvent::SwapReplace { window, old, new, .. } => obj(vec![
+            ("new", Json::Str(new.clone())),
+            ("old", Json::Str(old.clone())),
+            ("window", unum(*window)),
+        ]),
+        TraceEvent::SloAlert { window, fast_burn, slow_burn, .. } => obj(vec![
+            ("fast_burn", num(*fast_burn)),
+            ("slow_burn", num(*slow_burn)),
+            ("window", unum(*window)),
+        ]),
+    }
+}
+
+/// Render one event as a Chrome trace-event object.
+fn trace_obj(ev: &TraceEvent) -> Json {
+    let ts_us = ev.at_s() * 1e6;
+    let tid = ev.dev().unwrap_or(0);
+    let mut fields = vec![
+        ("args", args_of(ev)),
+        ("name", Json::Str(ev.name().to_string())),
+        ("pid", unum(0)),
+        ("tid", unum(tid)),
+    ];
+    if let TraceEvent::Launch { at_s, done_s, .. } = ev {
+        fields.push(("ph", Json::Str("X".to_string())));
+        fields.push(("ts", num(at_s * 1e6)));
+        fields.push(("dur", num((done_s - at_s) * 1e6)));
+    } else {
+        fields.push(("ph", Json::Str("i".to_string())));
+        fields.push(("ts", num(ts_us)));
+        fields.push(("s", Json::Str("t".to_string())));
+    }
+    obj(fields)
+}
+
+/// Render a stream as Chrome trace-event JSON (the
+/// `{"displayTimeUnit":"ms","traceEvents":[...]}` object form).
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let evs: Vec<Json> = events.iter().map(trace_obj).collect();
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(evs)),
+    ])
+    .to_string()
+}
+
+/// End-of-run tallies reconstructed purely from an event stream.
+///
+/// Field conventions mirror the sim reports so equality checks are
+/// direct: `shed` counts admission sheds *and* unroutables *and*
+/// requeue-losses (what `AutoscaleReport.shed` reports), `requeued`
+/// counts every re-dispatch attempt including lost ones (what
+/// `TimelineOutcome.requeued` reports).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceTallies {
+    /// Offered requests: admitted + shed + unroutable.
+    pub arrivals: u64,
+    /// Requests admitted to a device queue on first arrival.
+    pub admitted: u64,
+    /// Completions.
+    pub served: u64,
+    /// Admission sheds (first arrival + requeue) + unroutable + lost.
+    pub shed: u64,
+    /// Requests no serving device could take.
+    pub unroutable: u64,
+    /// Re-dispatch attempts at window boundaries (admitted or not + lost).
+    pub requeued: u64,
+    /// Re-dispatches that found no eligible target.
+    pub requeue_lost: u64,
+    /// Batch launches.
+    pub launches: u64,
+    /// Committed plan switches.
+    pub plan_switches: u64,
+    /// Fleet window boundaries observed.
+    pub windows: u64,
+    /// Controller audit events (scale/drain/retire/fail/swap).
+    pub audit: u64,
+    /// SLO burn-rate alerts.
+    pub slo_alerts: u64,
+    /// Latest completion timestamp (0 when nothing completed).
+    pub makespan_s: f64,
+    /// Event counts by [`TraceEvent::name`].
+    pub by_name: BTreeMap<String, u64>,
+}
+
+impl TraceTallies {
+    fn absorb(&mut self, name: &str, admitted_flag: bool, at_s: f64) {
+        *self.by_name.entry(name.to_string()).or_insert(0) += 1;
+        match name {
+            "arrival" => {
+                self.arrivals += 1;
+                self.admitted += 1;
+            }
+            "shed" => {
+                self.arrivals += 1;
+                self.shed += 1;
+            }
+            "unroutable" => {
+                self.arrivals += 1;
+                self.shed += 1;
+                self.unroutable += 1;
+            }
+            "served" => {
+                self.served += 1;
+                if at_s > self.makespan_s {
+                    self.makespan_s = at_s;
+                }
+            }
+            "requeue" => {
+                self.requeued += 1;
+                if !admitted_flag {
+                    self.shed += 1;
+                }
+            }
+            "requeue-lost" => {
+                self.requeued += 1;
+                self.requeue_lost += 1;
+                self.shed += 1;
+            }
+            "launch" => self.launches += 1,
+            "plan-switch" => self.plan_switches += 1,
+            "window" => self.windows += 1,
+            "scale-out" | "drain-start" | "retired" | "failed" | "swap-replace" => {
+                self.audit += 1;
+            }
+            "slo-alert" => self.slo_alerts += 1,
+            _ => {}
+        }
+    }
+
+    /// The conservation identity every run must satisfy: each offered
+    /// request leaves the system exactly once — served, or dropped (shed
+    /// at admission or requeue, unroutable, requeue-lost; all folded into
+    /// `shed`). Requeued requests were already admitted once, so they do
+    /// not re-enter `arrivals`. A run cut off mid-flight leaves requests
+    /// in queues, so `served + shed` may undercount `arrivals` but must
+    /// never exceed it.
+    pub fn conserved(&self) -> bool {
+        self.served + self.shed <= self.arrivals
+    }
+
+    /// Requests still in-system when the trace ended (admitted, neither
+    /// served nor dropped).
+    pub fn in_flight(&self) -> u64 {
+        self.arrivals.saturating_sub(self.served + self.shed)
+    }
+}
+
+/// Tally a collected in-memory stream.
+pub fn trace_tallies(events: &[TraceEvent]) -> TraceTallies {
+    let mut t = TraceTallies::default();
+    for ev in events {
+        let admitted = !matches!(ev, TraceEvent::Requeue { admitted: false, .. });
+        t.absorb(ev.name(), admitted, ev.at_s());
+    }
+    t
+}
+
+/// Tally a trace previously written by [`chrome_trace_json`], from its
+/// parsed JSON. Only the fields the tally needs are read, so traces from
+/// other writers work as long as they carry `name`, `ts`, and (for
+/// requeue events) `args.admitted`.
+pub fn tallies_from_json(root: &Json) -> Result<TraceTallies, String> {
+    let evs = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut t = TraceTallies::default();
+    for (i, ev) in evs.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("traceEvents[{i}]: missing name"))?;
+        let ts_us = ev
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("traceEvents[{i}]: missing ts"))?;
+        let admitted = ev
+            .get("args")
+            .and_then(|a| a.get("admitted"))
+            .and_then(Json::as_bool)
+            .unwrap_or(true);
+        t.absorb(name, admitted, ts_us / 1e6);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stream() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Arrival { at_s: 0.001, dev: 0, class: 0 },
+            TraceEvent::Launch { at_s: 0.001, dev: 0, plan: 2, done_s: 0.004 },
+            TraceEvent::Shed { at_s: 0.002, dev: 0, class: 1 },
+            TraceEvent::Served { at_s: 0.004, dev: 0, sojourn_s: 0.003 },
+            TraceEvent::Window { window: 0, end_s: 0.05 },
+            TraceEvent::ScaleOut { at_s: 0.05, window: 0, id: "d1".to_string() },
+            TraceEvent::SloAlert { at_s: 0.05, window: 0, fast_burn: 5.0, slow_burn: 4.5 },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_tallies_round_trip() {
+        let stream = sample_stream();
+        let text = chrome_trace_json(&stream);
+        let root = Json::parse(&text).expect("trace json parses");
+        let mut from_json = tallies_from_json(&root).expect("tallies");
+        let direct = trace_tallies(&stream);
+        // Timestamps ride through the file in microseconds; the µs→s
+        // conversion can differ from the original by an ulp, so compare
+        // the float field with a tolerance and the counters exactly.
+        assert!((from_json.makespan_s - direct.makespan_s).abs() < 1e-9);
+        from_json.makespan_s = direct.makespan_s;
+        assert_eq!(from_json, direct);
+        assert_eq!(direct.arrivals, 2);
+        assert_eq!(direct.served, 1);
+        assert_eq!(direct.shed, 1);
+        assert_eq!(direct.audit, 1);
+        assert_eq!(direct.slo_alerts, 1);
+        assert!(direct.conserved());
+        assert!((direct.makespan_s - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn launch_renders_as_complete_slice() {
+        let text = chrome_trace_json(&sample_stream());
+        let root = Json::parse(&text).expect("parses");
+        let evs = root.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let launch = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("launch"))
+            .expect("launch event present");
+        assert_eq!(launch.get("ph").and_then(Json::as_str), Some("X"));
+        let dur = launch.get("dur").and_then(Json::as_f64).unwrap();
+        assert!((dur - 3000.0).abs() < 1e-9, "dur {dur} != 3000 us");
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let a = chrome_trace_json(&sample_stream());
+        let b = chrome_trace_json(&sample_stream());
+        assert_eq!(a, b);
+    }
+}

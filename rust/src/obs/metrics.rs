@@ -1,0 +1,462 @@
+//! Metrics registry: counters, gauges, and a log-binned latency summary
+//! sampled per window into a time series, built by replaying a trace.
+//!
+//! The registry never sits on the hot path — it is a deterministic fold
+//! over a collected [`TraceEvent`] stream (`reg.observe(ev)` per event),
+//! so the same trace always yields byte-identical exports. Latency
+//! quantiles reuse [`LatencySketch`] (log-binned, O(1) memory).
+//!
+//! Two export formats:
+//! * [`MetricsRegistry::to_prometheus`] — text exposition (`# TYPE`
+//!   lines, counter/gauge/summary families). [`parse_prometheus`] /
+//!   [`render_prometheus`] round-trip it byte-identically (pinned in CI).
+//! * [`MetricsRegistry::to_json`] — the same data as a JSON tree,
+//!   including the per-window time series.
+
+use std::collections::BTreeMap;
+
+use super::event::TraceEvent;
+use crate::util::json::Json;
+use crate::util::stats::LatencySketch;
+
+/// One per-window snapshot in the registry's time series.
+///
+/// "Offered" counts requests at arrival (admitted + shed + unroutable);
+/// "served"/"errors" follow the SLO monitor's convention — served
+/// requests count at completion, drops at the moment they are dropped,
+/// and a served request over the SLO is an error.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowSample {
+    pub window: usize,
+    pub end_s: f64,
+    pub offered: u64,
+    pub served: u64,
+    pub errors: u64,
+    /// Devices that reported a window rollup (i.e. live this window).
+    pub live_devices: u64,
+    /// Sum of per-device queue depths at the window boundary.
+    pub queue_depth: u64,
+    /// Sum of per-device estimated arrival rates.
+    pub rate_rps: f64,
+    /// Within-window attainment: non-error completions over completions
+    /// plus drops (1.0 when the window saw no traffic).
+    pub attainment: f64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct WinAccum {
+    offered: u64,
+    served: u64,
+    /// Drops plus over-SLO completions (always <= served + drops).
+    errors: u64,
+    /// Requests dropped this window (shed / unroutable / requeue-lost).
+    drops: u64,
+    live_devices: u64,
+    queue_depth: u64,
+    rate_rps: f64,
+}
+
+/// Counter / gauge / summary registry over one trace stream.
+#[derive(Clone, Debug)]
+pub struct MetricsRegistry {
+    slo_s: f64,
+    counters: BTreeMap<&'static str, u64>,
+    latency: LatencySketch,
+    series: Vec<WindowSample>,
+    win: WinAccum,
+}
+
+/// Every counter key, in the fixed order they appear in exports.
+/// (BTreeMap iteration is alphabetical; this constant exists so tests and
+/// readers see the full vocabulary in one place.)
+pub const COUNTER_KEYS: &[&str] = &[
+    "admitted_total",
+    "drain_start_total",
+    "failed_total",
+    "launches_total",
+    "plan_applied_total",
+    "plan_switches_total",
+    "requests_total",
+    "requeue_lost_total",
+    "requeued_total",
+    "retired_total",
+    "scale_out_total",
+    "served_total",
+    "shed_total",
+    "slo_alerts_total",
+    "slo_violations_total",
+    "swap_replace_total",
+    "unroutable_total",
+    "windows_total",
+];
+
+impl MetricsRegistry {
+    /// `slo_s`: the latency SLO in seconds (a served request over it
+    /// counts into `slo_violations_total` and window errors).
+    pub fn new(slo_s: f64) -> Self {
+        let mut counters = BTreeMap::new();
+        for &k in COUNTER_KEYS {
+            counters.insert(k, 0);
+        }
+        MetricsRegistry {
+            slo_s,
+            counters,
+            latency: LatencySketch::new(),
+            series: Vec::new(),
+            win: WinAccum::default(),
+        }
+    }
+
+    fn bump(&mut self, key: &'static str) {
+        *self.counters.get_mut(key).expect("counter key registered in new()") += 1;
+    }
+
+    /// Fold one event into the registry.
+    pub fn observe(&mut self, ev: &TraceEvent) {
+        match ev {
+            TraceEvent::Arrival { .. } => {
+                self.bump("requests_total");
+                self.bump("admitted_total");
+                self.win.offered += 1;
+            }
+            TraceEvent::Shed { .. } => {
+                self.bump("requests_total");
+                self.bump("shed_total");
+                self.win.offered += 1;
+                self.win.errors += 1;
+                self.win.drops += 1;
+            }
+            TraceEvent::Unroutable { .. } => {
+                self.bump("requests_total");
+                self.bump("unroutable_total");
+                self.win.offered += 1;
+                self.win.errors += 1;
+                self.win.drops += 1;
+            }
+            TraceEvent::Launch { .. } => self.bump("launches_total"),
+            TraceEvent::Served { sojourn_s, .. } => {
+                self.bump("served_total");
+                self.latency.record(*sojourn_s);
+                self.win.served += 1;
+                if *sojourn_s > self.slo_s {
+                    self.bump("slo_violations_total");
+                    self.win.errors += 1;
+                }
+            }
+            TraceEvent::Requeue { admitted, .. } => {
+                self.bump("requeued_total");
+                if !admitted {
+                    self.bump("shed_total");
+                    self.win.errors += 1;
+                    self.win.drops += 1;
+                }
+            }
+            TraceEvent::RequeueLost { .. } => {
+                self.bump("requeued_total");
+                self.bump("requeue_lost_total");
+                self.win.errors += 1;
+                self.win.drops += 1;
+            }
+            TraceEvent::PlanSwitch { .. } => self.bump("plan_switches_total"),
+            TraceEvent::PlanApplied { .. } => self.bump("plan_applied_total"),
+            TraceEvent::DeviceWindow { queue_depth, rate_rps, .. } => {
+                self.win.live_devices += 1;
+                self.win.queue_depth += *queue_depth as u64;
+                self.win.rate_rps += *rate_rps;
+            }
+            TraceEvent::Window { window, end_s } => {
+                self.bump("windows_total");
+                let a = self.win;
+                // Outcomes this window: completions plus drops. Errors are
+                // drops plus over-SLO completions, so errors <= total.
+                let total = a.served + a.drops;
+                let attainment = if total == 0 {
+                    1.0
+                } else {
+                    (total - a.errors.min(total)) as f64 / total as f64
+                };
+                self.series.push(WindowSample {
+                    window: *window,
+                    end_s: *end_s,
+                    offered: a.offered,
+                    served: a.served,
+                    errors: a.errors,
+                    live_devices: a.live_devices,
+                    queue_depth: a.queue_depth,
+                    rate_rps: a.rate_rps,
+                    attainment,
+                });
+                self.win = WinAccum::default();
+            }
+            TraceEvent::SloAlert { .. } => self.bump("slo_alerts_total"),
+            TraceEvent::ScaleOut { .. } => self.bump("scale_out_total"),
+            TraceEvent::DrainStart { .. } => self.bump("drain_start_total"),
+            TraceEvent::Retired { .. } => self.bump("retired_total"),
+            TraceEvent::Failed { .. } => self.bump("failed_total"),
+            TraceEvent::SwapReplace { .. } => self.bump("swap_replace_total"),
+        }
+    }
+
+    /// Fold a whole stream (convenience for `observe` in a loop).
+    pub fn observe_all(&mut self, events: &[TraceEvent]) {
+        for ev in events {
+            self.observe(ev);
+        }
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// The per-window time series (one entry per `Window` event seen).
+    pub fn series(&self) -> &[WindowSample] {
+        &self.series
+    }
+
+    /// Overall attainment: non-error outcomes over all request outcomes
+    /// (served + shed + unroutable + requeue-lost); 1.0 with no traffic.
+    pub fn attainment(&self) -> f64 {
+        let served = self.counter("served_total");
+        let drops = self.counter("shed_total")
+            + self.counter("unroutable_total")
+            + self.counter("requeue_lost_total");
+        let total = served + drops;
+        if total == 0 {
+            return 1.0;
+        }
+        let good = served - self.counter("slo_violations_total").min(served);
+        good as f64 / total as f64
+    }
+
+    /// Build the export families (shared by the text and JSON paths, and
+    /// by the CI round-trip check).
+    pub fn families(&self) -> Vec<PromFamily> {
+        let mut out = Vec::with_capacity(self.counters.len() + 4);
+        for (&k, &v) in &self.counters {
+            out.push(PromFamily {
+                name: format!("ssr_{k}"),
+                kind: "counter",
+                samples: vec![PromSample { key: format!("ssr_{k}"), value: v as f64 }],
+            });
+        }
+        let last = self.series.last();
+        out.push(gauge("ssr_live_devices", last.map_or(0.0, |s| s.live_devices as f64)));
+        out.push(gauge("ssr_queue_depth", last.map_or(0.0, |s| s.queue_depth as f64)));
+        out.push(gauge("ssr_slo_attainment", self.attainment()));
+        let n = self.latency.count();
+        let q = |p: f64| if n == 0 { 0.0 } else { self.latency.quantile(p) };
+        let sum = if n == 0 { 0.0 } else { self.latency.mean() * n as f64 };
+        out.push(PromFamily {
+            name: "ssr_latency_seconds".into(),
+            kind: "summary",
+            samples: vec![
+                PromSample { key: "ssr_latency_seconds{quantile=\"0.5\"}".into(), value: q(0.5) },
+                PromSample { key: "ssr_latency_seconds{quantile=\"0.99\"}".into(), value: q(0.99) },
+                PromSample { key: "ssr_latency_seconds_sum".into(), value: sum },
+                PromSample { key: "ssr_latency_seconds_count".into(), value: n as f64 },
+            ],
+        });
+        out
+    }
+
+    /// Prometheus text exposition (one `# TYPE` line per family).
+    pub fn to_prometheus(&self) -> String {
+        render_prometheus(&self.families())
+    }
+
+    /// The registry as a JSON tree: counters, gauges, latency summary,
+    /// and the per-window series.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (&k, &v) in &self.counters {
+            counters.insert(k.to_string(), Json::Num(v as f64));
+        }
+        let n = self.latency.count();
+        let q = |p: f64| Json::Num(if n == 0 { 0.0 } else { self.latency.quantile(p) });
+        let latency = Json::Obj(BTreeMap::from([
+            ("count".to_string(), Json::Num(n as f64)),
+            ("mean_s".to_string(), Json::Num(if n == 0 { 0.0 } else { self.latency.mean() })),
+            ("p50_s".to_string(), q(0.5)),
+            ("p99_s".to_string(), q(0.99)),
+        ]));
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|s| {
+                Json::Obj(BTreeMap::from([
+                    ("window".to_string(), Json::Num(s.window as f64)),
+                    ("end_s".to_string(), Json::Num(s.end_s)),
+                    ("offered".to_string(), Json::Num(s.offered as f64)),
+                    ("served".to_string(), Json::Num(s.served as f64)),
+                    ("errors".to_string(), Json::Num(s.errors as f64)),
+                    ("live_devices".to_string(), Json::Num(s.live_devices as f64)),
+                    ("queue_depth".to_string(), Json::Num(s.queue_depth as f64)),
+                    ("rate_rps".to_string(), Json::Num(s.rate_rps)),
+                    ("attainment".to_string(), Json::Num(s.attainment)),
+                ]))
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(counters)),
+            ("slo_attainment".to_string(), Json::Num(self.attainment())),
+            ("latency".to_string(), latency),
+            ("series".to_string(), Json::Arr(series)),
+        ]))
+    }
+}
+
+fn gauge(name: &str, value: f64) -> PromFamily {
+    PromFamily {
+        name: name.into(),
+        kind: "gauge",
+        samples: vec![PromSample { key: name.into(), value }],
+    }
+}
+
+/// One sample line of a Prometheus family; `key` is the metric name
+/// including any `{label="..."}` suffix, verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub key: String,
+    pub value: f64,
+}
+
+/// One `# TYPE` family of the text exposition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromFamily {
+    pub name: String,
+    pub kind: &'static str,
+    pub samples: Vec<PromSample>,
+}
+
+/// Number formatting shared by render and re-render: integers without a
+/// fraction print as integers, everything else as shortest round-trip
+/// (the same rule `util::json` uses), so parse → render is a fixed point.
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render families as Prometheus text exposition.
+pub fn render_prometheus(families: &[PromFamily]) -> String {
+    let mut out = String::new();
+    for f in families {
+        out.push_str("# TYPE ");
+        out.push_str(&f.name);
+        out.push(' ');
+        out.push_str(f.kind);
+        out.push('\n');
+        for s in &f.samples {
+            out.push_str(&s.key);
+            out.push(' ');
+            out.push_str(&fmt_num(s.value));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Parse the subset of the text exposition this crate emits (`# TYPE`
+/// headers plus `key value` sample lines). Returns the families in file
+/// order; [`render_prometheus`] of the result reproduces a file this
+/// crate wrote byte-for-byte (pinned in CI and `tests/obs_trace.rs`).
+pub fn parse_prometheus(text: &str) -> Result<Vec<PromFamily>, String> {
+    let mut out: Vec<PromFamily> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("line {}: missing family name", i + 1))?;
+            let kind = match it.next() {
+                Some("counter") => "counter",
+                Some("gauge") => "gauge",
+                Some("summary") => "summary",
+                Some("histogram") => "histogram",
+                other => return Err(format!("line {}: bad family kind {:?}", i + 1, other)),
+            };
+            out.push(PromFamily { name: name.to_string(), kind, samples: Vec::new() });
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment lines: accepted, not re-rendered
+        }
+        let (key, val) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: expected `key value`", i + 1))?;
+        let value: f64 = val
+            .parse()
+            .map_err(|e| format!("line {}: bad value {val:?}: {e}", i + 1))?;
+        let fam = out
+            .last_mut()
+            .ok_or_else(|| format!("line {}: sample before any # TYPE header", i + 1))?;
+        fam.samples.push(PromSample { key: key.to_string(), value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_registry_exports_without_nan() {
+        let reg = MetricsRegistry::new(0.002);
+        let text = reg.to_prometheus();
+        assert!(!text.contains("NaN"), "exposition contains NaN:\n{text}");
+        assert!(text.contains("# TYPE ssr_requests_total counter"));
+        assert!(text.contains("ssr_slo_attainment 1\n"));
+        let js = reg.to_json().to_string();
+        assert!(!js.contains("NaN"), "json contains NaN:\n{js}");
+        assert!(Json::parse(&js).is_ok());
+    }
+
+    #[test]
+    fn counts_and_attainment_follow_the_stream() {
+        let mut reg = MetricsRegistry::new(0.002);
+        reg.observe_all(&[
+            TraceEvent::Arrival { at_s: 0.1, dev: 0, class: 0 },
+            TraceEvent::Arrival { at_s: 0.2, dev: 0, class: 0 },
+            TraceEvent::Shed { at_s: 0.3, dev: 0, class: 1 },
+            TraceEvent::Served { at_s: 0.4, dev: 0, sojourn_s: 0.001 },
+            TraceEvent::Served { at_s: 0.5, dev: 0, sojourn_s: 0.010 },
+            TraceEvent::Window { window: 0, end_s: 1.0 },
+        ]);
+        assert_eq!(reg.counter("requests_total"), 3);
+        assert_eq!(reg.counter("served_total"), 2);
+        assert_eq!(reg.counter("shed_total"), 1);
+        assert_eq!(reg.counter("slo_violations_total"), 1);
+        // 1 good of (2 served + 1 shed) outcomes.
+        assert!((reg.attainment() - 1.0 / 3.0).abs() < 1e-12);
+        let s = reg.series();
+        assert_eq!(s.len(), 1);
+        assert_eq!((s[0].offered, s[0].served, s[0].errors), (3, 2, 2));
+    }
+
+    #[test]
+    fn exposition_round_trips_byte_identically() {
+        let mut reg = MetricsRegistry::new(0.002);
+        reg.observe_all(&[
+            TraceEvent::Arrival { at_s: 0.1, dev: 0, class: 0 },
+            TraceEvent::Served { at_s: 0.4, dev: 0, sojourn_s: 0.0013 },
+            TraceEvent::DeviceWindow {
+                window: 0,
+                end_s: 1.0,
+                dev: 0,
+                rate_rps: 123.456,
+                queue_depth: 3,
+                p99_s: 0.0013,
+                committed: 1,
+            },
+            TraceEvent::Window { window: 0, end_s: 1.0 },
+        ]);
+        let text = reg.to_prometheus();
+        let fams = parse_prometheus(&text).expect("own output parses");
+        assert_eq!(render_prometheus(&fams), text);
+    }
+}

@@ -1,0 +1,41 @@
+//! Deterministic observability: structured event tracing, a metrics
+//! registry, and SLO burn-rate monitoring over the one event loop.
+//!
+//! Everything observable in this crate flows through one vocabulary,
+//! [`TraceEvent`] ([`event`]): per-request hot-path events emitted by
+//! `sim::device::run_timeline`'s core, per-window scheduler events, the
+//! autoscaling controller's audit actions (re-exported from
+//! `cluster::controller` as `FleetEvent` for backward compatibility),
+//! and SLO alerts. The hook is the [`Recorder`] trait ([`recorder`]):
+//! the event-loop core is generic over it, and the default
+//! [`NoopRecorder`] monomorphizes to nothing — recorder-off runs are
+//! bit-identical to pre-observability builds and pay zero cost (guarded
+//! by the counting-allocator rows in `benches/simcore.rs`).
+//!
+//! Analysis is post-hoc replay, never hot-path work: a [`TraceRecorder`]
+//! collects events, [`merge_audit`] splices the controller's audit log
+//! in at window boundaries, [`annotate_slo`] inserts burn-rate alerts
+//! ([`slo`]), and [`MetricsRegistry`] folds the stream into counters,
+//! per-window series, Prometheus text, and JSON ([`metrics`]).
+//! [`chrome_trace_json`] writes the stream for `chrome://tracing` /
+//! Perfetto, and [`trace_tallies`] reconstructs end-of-run tallies from
+//! events alone ([`export`]) — pinned equal to the sim reports in
+//! `tests/obs_trace.rs`.
+//!
+//! CLI: `--trace-out` / `--metrics-out` on `ssr simulate` and
+//! `ssr cluster simulate|autoscale`; `ssr obs report <trace.json>`
+//! summarizes a saved trace.
+
+pub mod event;
+pub mod export;
+pub mod metrics;
+pub mod recorder;
+pub mod slo;
+
+pub use event::{DrainReason, TraceEvent};
+pub use export::{chrome_trace_json, tallies_from_json, trace_tallies, TraceTallies};
+pub use metrics::{
+    parse_prometheus, render_prometheus, MetricsRegistry, PromFamily, PromSample, WindowSample,
+};
+pub use recorder::{merge_audit, NoopRecorder, Recorder, TraceRecorder};
+pub use slo::{annotate_slo, SloCfg, SloMonitor};

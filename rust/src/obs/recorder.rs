@@ -1,0 +1,103 @@
+//! Recorder hook: how the event loop hands observations out.
+//!
+//! `run_timeline`'s core is generic over a [`Recorder`], mirroring its
+//! latency-sink pattern: callers that don't observe pass
+//! [`NoopRecorder`], which monomorphizes `record` to an empty inlined
+//! body — the event construction feeding it is dead code the optimizer
+//! erases, so the 10M req/s single-core replay target and the flat-memory
+//! proof in `benches/simcore.rs` survive untouched (both are guarded
+//! there by a recorder-on vs recorder-off row).
+
+use super::event::TraceEvent;
+
+/// Sink for structured [`TraceEvent`]s from a simulation run.
+///
+/// Implementations must not change simulation behavior: the event loop
+/// calls [`record`](Recorder::record) with already-computed values and
+/// never reads anything back.
+pub trait Recorder {
+    /// Observe one event. Called in deterministic emission order.
+    fn record(&mut self, ev: TraceEvent);
+
+    /// False for the no-op recorder; guards event constructions that
+    /// would otherwise read state just to be thrown away.
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The default recorder: does nothing, costs nothing.
+///
+/// `record` is `#[inline(always)]` with an empty body and `enabled()` is
+/// a constant `false`, so every emission site in the hot loop folds away
+/// under monomorphization.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    #[inline(always)]
+    fn record(&mut self, _ev: TraceEvent) {}
+
+    #[inline(always)]
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Collects every event into a `Vec`, in emission order.
+///
+/// Pure collection — all analysis (metrics, SLO burn rates, export) runs
+/// post-hoc over the collected stream, so recording adds only a push per
+/// event to the hot loop.
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    /// Events in emission order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume the recorder, yielding the collected stream.
+    pub fn into_events(self) -> Vec<TraceEvent> {
+        self.events
+    }
+}
+
+impl Recorder for TraceRecorder {
+    #[inline]
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Splice controller audit events into a sim event stream.
+///
+/// The controller acts at window boundaries and keeps its audit log
+/// (`AutoscaleReport::events`) separate from the hot-path stream; this
+/// merges the two deterministically: each audit event lands immediately
+/// after the [`TraceEvent::Window`] marker for its window, in the
+/// controller's own (already chronological) order. Any audit event whose
+/// window never rolled (there are none today) is appended at the end.
+pub fn merge_audit(events: Vec<TraceEvent>, audit: &[TraceEvent]) -> Vec<TraceEvent> {
+    let mut out = Vec::with_capacity(events.len() + audit.len());
+    let mut ai = 0;
+    for ev in events {
+        let win = match ev {
+            TraceEvent::Window { window, .. } => Some(window),
+            _ => None,
+        };
+        out.push(ev);
+        if let Some(w) = win {
+            while ai < audit.len() && audit[ai].window().is_some_and(|aw| aw <= w) {
+                out.push(audit[ai].clone());
+                ai += 1;
+            }
+        }
+    }
+    out.extend(audit[ai..].iter().cloned());
+    out
+}

@@ -1,0 +1,241 @@
+//! SLO error-budget monitor: windowed attainment and multi-window burn
+//! rates over the trace-event stream.
+//!
+//! Replayed post-hoc over a collected (and audit-merged) stream rather
+//! than inline in the controller: the steady-load invariants pinned in
+//! `rust/tests/fleet_autoscale.rs` guarantee the controller's audit log
+//! stays empty on feasible load, so alerts live in the *observability*
+//! stream — [`annotate_slo`] inserts a [`TraceEvent::SloAlert`] right
+//! after the window that tripped it, which `ssr cluster autoscale` then
+//! surfaces alongside the audit log.
+//!
+//! Error accounting follows the SRE burn-rate convention: the budget is
+//! `1 - target`; a request burns budget when it is shed, lost, or served
+//! over the SLO. Burn rate is the observed error rate over a trailing
+//! window divided by the budget — a burn of 1.0 spends the budget exactly
+//! at the sustainable pace; alerts require both a fast (spiky) and a slow
+//! (sustained) window over the threshold, which suppresses one-window
+//! blips without missing real regressions.
+
+use std::collections::VecDeque;
+
+use super::event::TraceEvent;
+
+/// Burn-rate alerting policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SloCfg {
+    /// Attainment target in (0, 1); the error budget is `1 - target`.
+    pub target: f64,
+    /// Trailing windows for the fast (page-worthy spike) burn rate.
+    pub fast_windows: usize,
+    /// Trailing windows for the slow (sustained) burn rate.
+    pub slow_windows: usize,
+    /// Alert when BOTH burn rates exceed this multiple of budget pace.
+    pub burn_threshold: f64,
+}
+
+impl Default for SloCfg {
+    fn default() -> Self {
+        SloCfg { target: 0.999, fast_windows: 3, slow_windows: 12, burn_threshold: 4.0 }
+    }
+}
+
+impl SloCfg {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.target > 0.0 && self.target < 1.0) {
+            return Err(format!("slo target must be in (0,1), got {}", self.target));
+        }
+        if self.fast_windows == 0 || self.slow_windows < self.fast_windows {
+            return Err(format!(
+                "burn windows must satisfy 0 < fast ({}) <= slow ({})",
+                self.fast_windows, self.slow_windows
+            ));
+        }
+        if self.burn_threshold <= 0.0 {
+            return Err(format!("burn threshold must be > 0, got {}", self.burn_threshold));
+        }
+        Ok(())
+    }
+}
+
+/// Streaming SLO monitor: feed it the event stream in order; it rolls
+/// per-window (requests, errors) tallies and emits an alert event at the
+/// window boundary where both burn rates cross the threshold.
+#[derive(Clone, Debug)]
+pub struct SloMonitor {
+    cfg: SloCfg,
+    /// SLO threshold in seconds; a served request over this is an error.
+    slo_s: f64,
+    /// Per-closed-window (requests, errors), newest last, capped at
+    /// `cfg.slow_windows`.
+    ring: VecDeque<(u64, u64)>,
+    cur_total: u64,
+    cur_err: u64,
+}
+
+impl SloMonitor {
+    pub fn new(slo_s: f64, cfg: SloCfg) -> Self {
+        SloMonitor { cfg, slo_s, ring: VecDeque::new(), cur_total: 0, cur_err: 0 }
+    }
+
+    /// Error rate over the trailing `n` closed windows, divided by the
+    /// error budget (0.0 when those windows saw no traffic).
+    fn burn(&self, n: usize) -> f64 {
+        let budget = (1.0 - self.cfg.target).max(1e-12);
+        let take = n.min(self.ring.len());
+        let (mut t, mut e) = (0u64, 0u64);
+        for &(wt, we) in self.ring.iter().rev().take(take) {
+            t += wt;
+            e += we;
+        }
+        if t == 0 {
+            0.0
+        } else {
+            (e as f64 / t as f64) / budget
+        }
+    }
+
+    /// Attainment over the trailing `n` closed windows (1.0 on no traffic).
+    pub fn attainment(&self, n: usize) -> f64 {
+        let budget = (1.0 - self.cfg.target).max(1e-12);
+        1.0 - self.burn(n) * budget
+    }
+
+    /// Observe one event; at a [`TraceEvent::Window`] boundary, returns
+    /// the alert to splice in (if both burn rates crossed the threshold).
+    pub fn observe(&mut self, ev: &TraceEvent) -> Option<TraceEvent> {
+        match ev {
+            TraceEvent::Served { sojourn_s, .. } => {
+                self.cur_total += 1;
+                if *sojourn_s > self.slo_s {
+                    self.cur_err += 1;
+                }
+                None
+            }
+            // A request counts exactly once: served requests at their
+            // completion, everything that never completes at the moment
+            // it is dropped.
+            TraceEvent::Shed { .. }
+            | TraceEvent::Unroutable { .. }
+            | TraceEvent::RequeueLost { .. } => {
+                self.cur_total += 1;
+                self.cur_err += 1;
+                None
+            }
+            TraceEvent::Requeue { admitted: false, .. } => {
+                self.cur_total += 1;
+                self.cur_err += 1;
+                None
+            }
+            TraceEvent::Window { window, end_s } => {
+                self.ring.push_back((self.cur_total, self.cur_err));
+                while self.ring.len() > self.cfg.slow_windows {
+                    self.ring.pop_front();
+                }
+                self.cur_total = 0;
+                self.cur_err = 0;
+                let fast = self.burn(self.cfg.fast_windows);
+                let slow = self.burn(self.cfg.slow_windows);
+                if self.ring.len() >= self.cfg.fast_windows
+                    && fast > self.cfg.burn_threshold
+                    && slow > self.cfg.burn_threshold
+                {
+                    Some(TraceEvent::SloAlert {
+                        at_s: *end_s,
+                        window: *window,
+                        fast_burn: fast,
+                        slow_burn: slow,
+                    })
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Replay the stream through an [`SloMonitor`], splicing each alert in
+/// immediately after the window event that tripped it. Call after
+/// [`merge_audit`](crate::obs::merge_audit) so alerts land between the
+/// window marker's audit block and the next window's events — the order
+/// is fixed either way, keeping output byte-stable.
+pub fn annotate_slo(events: Vec<TraceEvent>, slo_s: f64, cfg: &SloCfg) -> Vec<TraceEvent> {
+    let mut mon = SloMonitor::new(slo_s, *cfg);
+    let mut out = Vec::with_capacity(events.len());
+    for ev in events {
+        let alert = mon.observe(&ev);
+        out.push(ev);
+        if let Some(a) = alert {
+            out.push(a);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn served(at_s: f64, sojourn_s: f64) -> TraceEvent {
+        TraceEvent::Served { at_s, dev: 0, sojourn_s }
+    }
+
+    fn window(w: usize, end_s: f64) -> TraceEvent {
+        TraceEvent::Window { window: w, end_s }
+    }
+
+    #[test]
+    fn no_traffic_never_alerts() {
+        let cfg = SloCfg::default();
+        let mut mon = SloMonitor::new(0.002, cfg);
+        for w in 0..20 {
+            assert!(mon.observe(&window(w, w as f64)).is_none());
+        }
+        assert_eq!(mon.attainment(12), 1.0);
+    }
+
+    #[test]
+    fn sustained_violations_alert_and_blips_do_not() {
+        let cfg = SloCfg { target: 0.9, fast_windows: 2, slow_windows: 4, burn_threshold: 3.0 };
+        // One half-bad window among good ones burns 5x alone but only
+        // 2.5x over the 2-window fast horizon — under the 3x threshold,
+        // so the blip is suppressed.
+        let mut mon = SloMonitor::new(0.002, cfg);
+        for w in 0..4 {
+            for i in 0..10 {
+                let lat = if w == 1 && i < 5 { 0.01 } else { 0.001 };
+                mon.observe(&served(w as f64 + 0.01 * i as f64, lat));
+            }
+            let alert = mon.observe(&window(w, (w + 1) as f64));
+            assert!(alert.is_none(), "blip alerted at window {w}");
+        }
+        // All-bad traffic: error rate 1.0, budget 0.1 => burn 10x on both
+        // windows, over the 3x threshold.
+        let mut mon = SloMonitor::new(0.002, cfg);
+        let mut alerted = false;
+        for w in 0..4 {
+            for i in 0..10 {
+                mon.observe(&served(w as f64 + 0.01 * i as f64, 0.01));
+            }
+            if let Some(TraceEvent::SloAlert { fast_burn, slow_burn, .. }) =
+                mon.observe(&window(w, (w + 1) as f64))
+            {
+                assert!(fast_burn > 3.0 && slow_burn > 3.0);
+                alerted = true;
+            }
+        }
+        assert!(alerted, "sustained violations never alerted");
+    }
+
+    #[test]
+    fn annotate_inserts_alert_after_its_window() {
+        let cfg = SloCfg { target: 0.9, fast_windows: 1, slow_windows: 1, burn_threshold: 2.0 };
+        let stream = vec![served(0.5, 0.05), window(0, 1.0), served(1.5, 0.001), window(1, 2.0)];
+        let out = annotate_slo(stream, 0.002, &cfg);
+        assert_eq!(out.len(), 5);
+        assert!(matches!(out[1], TraceEvent::Window { window: 0, .. }));
+        assert!(matches!(out[2], TraceEvent::SloAlert { window: 0, .. }));
+        assert!(matches!(out[4], TraceEvent::Window { window: 1, .. }));
+    }
+}

@@ -105,6 +105,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::coordinator::scheduler::{
     AdaptiveScheduler, LoadEstimate, LoadEstimator, SchedulerCfg, SwitchRecord,
 };
+use crate::obs::{NoopRecorder, Recorder, TraceEvent};
 use crate::plan::front::{FrontEntry, PlanFront};
 use crate::util::stats::{LatencySketch, Summary};
 
@@ -690,11 +691,18 @@ struct CoreTallies {
     events: u64,
 }
 
-/// The shared event loop, generic over where latency samples go. Event
-/// selection runs on the indexed calendar (see the module docs); the
-/// branch structure and tie order are verbatim from the linear-scan loop
-/// it replaced, pinned by `calendar_matches_linear_reference` below.
-fn run_core<S: LatencySink>(
+/// The shared event loop, generic over where latency samples go and over
+/// the [`Recorder`] observing it. Event selection runs on the indexed
+/// calendar (see the module docs); the branch structure and tie order are
+/// verbatim from the linear-scan loop it replaced, pinned by
+/// `calendar_matches_linear_reference` below. With [`NoopRecorder`] every
+/// `rec.record(..)` call and the event constructions feeding it
+/// monomorphize to nothing (`enabled()` is a constant `false`), so the
+/// recorder-off loop is the pre-observability loop — pinned bit-identical
+/// in `tests/obs_trace.rs` and by the allocation counters in
+/// `benches/simcore.rs`.
+#[allow(clippy::too_many_arguments)]
+fn run_core<S: LatencySink, R: Recorder>(
     devs: &mut Vec<DeviceSim>,
     arrivals: &mut impl ArrivalSource,
     duration_s: f64,
@@ -702,6 +710,7 @@ fn run_core<S: LatencySink>(
     mut route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
     ctl: &mut impl FleetControl,
     sink: &mut S,
+    rec: &mut R,
 ) -> CoreTallies {
     let n_windows = (duration_s / window_s).round() as usize;
     let mut tallies = CoreTallies {
@@ -742,19 +751,67 @@ fn run_core<S: LatencySink>(
         if t_done <= t_win && t_done <= t_arr {
             // -- launch completion (and switch drain point) --------------
             cal.pop(); // the valid top we just selected
+            let committed_before = devs[done_dev].committed;
             let done_s = devs[done_dev].on_completion_into(&mut sojourns);
             for &s in &sojourns {
                 sink.on_sojourn(done_s, s);
+                rec.record(TraceEvent::Served { at_s: done_s, dev: done_dev, sojourn_s: s });
             }
             tallies.makespan_s = tallies.makespan_s.max(done_s);
             // completing may have started the next launch from the queue
-            push_key(&mut cal, done_dev, devs[done_dev].next_completion_s());
+            let next = devs[done_dev].next_completion_s();
+            if rec.enabled() {
+                if devs[done_dev].committed != committed_before {
+                    rec.record(TraceEvent::PlanApplied {
+                        at_s: done_s,
+                        dev: done_dev,
+                        plan: devs[done_dev].committed,
+                    });
+                }
+                if next.is_finite() {
+                    rec.record(TraceEvent::Launch {
+                        at_s: done_s,
+                        dev: done_dev,
+                        plan: devs[done_dev].committed,
+                        done_s: next,
+                    });
+                }
+            }
+            push_key(&mut cal, done_dev, next);
         } else if t_win <= t_arr {
             // -- decision window boundary (all devices, then control) ----
             // on_window never starts or finishes launches, so no re-keying.
-            for d in devs.iter_mut() {
+            for (i, d) in devs.iter_mut().enumerate() {
+                let switches_before = d.sched.switches.len();
                 d.on_window(w, t_win);
+                if rec.enabled() {
+                    if let Some(ws) = d.windows.last() {
+                        if ws.window == w {
+                            rec.record(TraceEvent::DeviceWindow {
+                                window: w,
+                                end_s: t_win,
+                                dev: i,
+                                rate_rps: ws.rate_rps,
+                                queue_depth: ws.queue_depth,
+                                p99_s: ws.p99_s,
+                                committed: ws.committed,
+                            });
+                        }
+                    }
+                    if d.sched.switches.len() > switches_before {
+                        let sr = d.sched.switches.last().expect("switch just recorded");
+                        rec.record(TraceEvent::PlanSwitch {
+                            at_s: sr.at_s,
+                            window: w,
+                            dev: i,
+                            from: sr.from,
+                            to: sr.to,
+                            draining: d.draining.is_some(),
+                        });
+                    }
+                }
             }
+            rec.record(TraceEvent::Window { window: w, end_s: t_win });
             let moved = ctl.after_window(devs, w, t_win);
             if ctl.mutates_fleet() {
                 // The hook may have failed devices (stale keys — handled
@@ -765,16 +822,35 @@ fn run_core<S: LatencySink>(
             }
             tallies.requeued += moved.len();
             for req in moved {
-                match route(devs, req.class, t_win) {
+                let class = req.class;
+                match route(devs, class, t_win) {
                     Some(di) => {
                         let before = devs[di].next_completion_s().to_bits();
-                        devs[di].on_requeue(req, t_win);
+                        let admitted = devs[di].on_requeue(req, t_win);
                         let after = devs[di].next_completion_s();
+                        rec.record(TraceEvent::Requeue {
+                            at_s: t_win,
+                            window: w,
+                            dev: di,
+                            class,
+                            admitted,
+                        });
                         if after.to_bits() != before {
+                            if rec.enabled() {
+                                rec.record(TraceEvent::Launch {
+                                    at_s: t_win,
+                                    dev: di,
+                                    plan: devs[di].committed,
+                                    done_s: after,
+                                });
+                            }
                             push_key(&mut cal, di, after); // idle device launched
                         }
                     }
-                    None => tallies.requeue_lost += 1,
+                    None => {
+                        tallies.requeue_lost += 1;
+                        rec.record(TraceEvent::RequeueLost { at_s: t_win, window: w, class });
+                    }
                 }
             }
             w += 1;
@@ -782,12 +858,28 @@ fn run_core<S: LatencySink>(
             // -- arrival: route, then per-device admission ---------------
             let (t, class) = arrivals.pop().expect("peeked arrival vanished");
             match route(devs, class, t) {
-                None => tallies.unroutable += 1,
+                None => {
+                    tallies.unroutable += 1;
+                    rec.record(TraceEvent::Unroutable { at_s: t, class });
+                }
                 Some(di) => {
                     let before = devs[di].next_completion_s().to_bits();
-                    devs[di].on_arrival(t, class);
+                    let admitted = devs[di].on_arrival(t, class);
                     let after = devs[di].next_completion_s();
+                    if admitted {
+                        rec.record(TraceEvent::Arrival { at_s: t, dev: di, class });
+                    } else {
+                        rec.record(TraceEvent::Shed { at_s: t, dev: di, class });
+                    }
                     if after.to_bits() != before {
+                        if rec.enabled() {
+                            rec.record(TraceEvent::Launch {
+                                at_s: t,
+                                dev: di,
+                                plan: devs[di].committed,
+                                done_s: after,
+                            });
+                        }
                         push_key(&mut cal, di, after); // idle device launched
                     }
                 }
@@ -838,8 +930,26 @@ pub fn run_timeline_controlled(
     route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
     ctl: &mut impl FleetControl,
 ) -> TimelineOutcome {
+    run_timeline_recorded(devs, arrivals, duration_s, window_s, route, ctl, &mut NoopRecorder)
+}
+
+/// [`run_timeline_controlled`] with a [`Recorder`] observing the run:
+/// every loop decision (arrival/shed/launch/completion/requeue, per-device
+/// window rollups, plan switches, window boundaries) is emitted as a
+/// structured [`TraceEvent`] in deterministic order. Recording never
+/// changes behavior — the outcome is bit-identical to the unrecorded run
+/// (pinned in `tests/obs_trace.rs`).
+pub fn run_timeline_recorded(
+    devs: &mut Vec<DeviceSim>,
+    arrivals: &mut impl ArrivalSource,
+    duration_s: f64,
+    window_s: f64,
+    route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
+    rec: &mut impl Recorder,
+) -> TimelineOutcome {
     let mut sink = ExactSink::default();
-    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink);
+    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink, rec);
     TimelineOutcome {
         latency: sink.latency,
         completions: sink.completions,
@@ -866,8 +976,30 @@ pub fn run_timeline_sketched(
     route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
     ctl: &mut impl FleetControl,
 ) -> SketchOutcome {
+    run_timeline_sketched_recorded(
+        devs,
+        arrivals,
+        duration_s,
+        window_s,
+        route,
+        ctl,
+        &mut NoopRecorder,
+    )
+}
+
+/// [`run_timeline_sketched`] plus a [`Recorder`] — the sweep/bench face
+/// of [`run_timeline_recorded`].
+pub fn run_timeline_sketched_recorded(
+    devs: &mut Vec<DeviceSim>,
+    arrivals: &mut impl ArrivalSource,
+    duration_s: f64,
+    window_s: f64,
+    route: impl FnMut(&[DeviceSim], usize, f64) -> Option<usize>,
+    ctl: &mut impl FleetControl,
+    rec: &mut impl Recorder,
+) -> SketchOutcome {
     let mut sink = LatencySketch::new();
-    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink);
+    let t = run_core(devs, arrivals, duration_s, window_s, route, ctl, &mut sink, rec);
     SketchOutcome {
         latency: sink,
         arrivals: t.arrivals,

@@ -15,7 +15,7 @@
 //! the shared per-device core, [`crate::sim::device`]. [`serve_ramp`] is
 //! literally a 1-device [`crate::cluster::sim::simulate_fleet`]: it turns
 //! the trace into a lazy [`ArrivalStream`] and drives one [`DeviceSim`]
-//! through the same [`run_timeline_controlled`] event loop the fleet sim
+//! through the same [`run_timeline_recorded`] event loop the fleet sim
 //! uses, so the two entry points cannot diverge
 //! (`rust/tests/sim_unification.rs` pins them bit-identical).
 //!
@@ -36,10 +36,11 @@
 //! [`AdaptiveScheduler`]: crate::coordinator::scheduler::AdaptiveScheduler
 
 use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
+use crate::obs::{NoopRecorder, Recorder};
 use crate::plan::front::PlanFront;
-use crate::sim::device::{run_timeline_controlled, DeviceSim, NoControl};
+use crate::sim::device::{run_timeline_recorded, DeviceSim, NoControl};
 use crate::traffic::{ArrivalStream, TraceSpec};
-use crate::util::stats::Summary;
+use crate::util::stats::{fmt_ms, Summary};
 
 pub use crate::sim::device::WindowStat;
 
@@ -82,19 +83,21 @@ impl ServeSimReport {
     }
 
     pub fn summary_line(&self) -> String {
+        // An empty latency summary (nothing served) yields NaN
+        // percentiles; fmt_ms prints those as "-" instead of "NaN ms".
         let pct = self.latency.percentiles(&[0.50, 0.99]);
         let draining = match self.final_draining {
             Some(d) => format!(" (draining -> [{d}])"),
             None => String::new(),
         };
         format!(
-            "{} arrivals | {} served, {} shed | p50 {:.2} ms p99 {:.2} ms | SLO attainment \
+            "{} arrivals | {} served, {} shed | p50 {} ms p99 {} ms | SLO attainment \
              {:.1}% | {} plan switches | max queue {} | final plan committed [{}]{draining}",
             self.arrivals,
             self.served,
             self.shed,
-            pct[0] * 1e3,
-            pct[1] * 1e3,
+            fmt_ms(pct[0]),
+            fmt_ms(pct[1]),
             self.slo_attainment() * 100.0,
             self.switches.len(),
             self.max_queue_depth,
@@ -108,7 +111,7 @@ impl ServeSimReport {
 /// adaptive policy in `cfg`. Fully deterministic for a given seed, and
 /// bit-identical to a 1-device
 /// [`crate::cluster::sim::simulate_fleet`] over a single-class mix with
-/// the same seed — both are the same [`run_timeline_controlled`] over the
+/// the same seed — both are the same [`run_timeline_recorded`] over the
 /// same core.
 pub fn serve_ramp(
     front: &PlanFront,
@@ -116,19 +119,32 @@ pub fn serve_ramp(
     cfg: &SchedulerCfg,
     seed: u64,
 ) -> ServeSimReport {
+    serve_ramp_observed(front, traffic, cfg, seed, &mut NoopRecorder)
+}
+
+/// [`serve_ramp`] with a [`Recorder`] observing the run (the report is
+/// bit-identical either way; see `crate::obs`).
+pub fn serve_ramp_observed(
+    front: &PlanFront,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    seed: u64,
+    rec: &mut impl Recorder,
+) -> ServeSimReport {
     let trace: TraceSpec = traffic.into();
     // Arrivals stream lazily (same split-seeded draws the materialized
     // timeline produced), so the replay never holds the whole timeline.
     let mut stream = ArrivalStream::from_trace(&trace, seed);
     let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
     // One device: every arrival routes to it regardless of class/model.
-    let outcome = run_timeline_controlled(
+    let outcome = run_timeline_recorded(
         &mut devs,
         &mut stream,
         trace.duration_s(),
         cfg.window_s,
         |_, _, _| Some(0),
         &mut NoControl,
+        rec,
     );
     let dev = devs.pop().expect("one device").into_report();
     let slo_s = cfg.slo_ms * 1e-3;
@@ -214,6 +230,38 @@ mod tests {
         assert_eq!(r.shed, 0);
         assert!(r.switches.is_empty());
         assert_eq!(r.slo_attainment(), 1.0);
+    }
+
+    #[test]
+    fn empty_run_summary_line_prints_dashes_not_nan() {
+        // Percentiles of an empty Summary are NaN; the summary line must
+        // guard them instead of printing "NaN ms".
+        let ramp = RampSpec::parse("0:0", 0.1).unwrap();
+        let r = serve_ramp(&front(), &ramp, &cfg(), 3);
+        let line = r.summary_line();
+        assert!(!line.contains("NaN"), "summary line leaked NaN: {line}");
+        assert!(line.contains("p50 - ms p99 - ms"), "missing dash guard: {line}");
+    }
+
+    #[test]
+    fn observed_run_is_bit_identical_to_unobserved() {
+        use crate::obs::{trace_tallies, TraceRecorder};
+        let ramp = RampSpec::parse("1000:4400:1000", 0.4).unwrap();
+        let plain = serve_ramp(&front(), &ramp, &cfg(), 77);
+        let mut rec = TraceRecorder::new();
+        let observed = serve_ramp_observed(&front(), &ramp, &cfg(), 77, &mut rec);
+        assert_eq!(plain.arrivals, observed.arrivals);
+        assert_eq!(plain.served, observed.served);
+        assert_eq!(plain.shed, observed.shed);
+        assert_eq!(plain.switches, observed.switches);
+        assert_eq!(plain.windows, observed.windows);
+        assert_eq!(plain.makespan_s, observed.makespan_s);
+        // and the trace alone reconstructs the report's tallies
+        let t = trace_tallies(&rec.events);
+        assert_eq!(t.arrivals as usize, observed.arrivals);
+        assert_eq!(t.served as usize, observed.served);
+        assert_eq!(t.shed as usize, observed.shed);
+        assert_eq!(t.plan_switches as usize, observed.switches.len());
     }
 
     #[test]

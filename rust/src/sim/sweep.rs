@@ -21,22 +21,28 @@
 //! (`rust/tests/simcore_fastpath.rs` pins this).
 //!
 //! By default each cell runs the O(1)-memory fast path
-//! ([`run_timeline_sketched`] over a device built
+//! ([`run_timeline_sketched_recorded`] over a device built
 //! [`DeviceSim::without_latency_samples`]): per-request sojourns go into a
 //! [`LatencySketch`] (log-spaced bins, γ = [`SKETCH_GAMMA`]) instead of a
 //! `Vec`, so replay memory is bounded by the bin count, not the request
 //! count. `SweepCfg::exact` switches every cell to the exact
-//! [`run_timeline_controlled`] path (full sample vectors, interpolated
+//! [`run_timeline_recorded`] path (full sample vectors, interpolated
 //! percentiles) for calibration runs and the fastpath differential tests.
+//!
+//! [`run_sweep_observed`] additionally collects each cell's
+//! [`TraceEvent`] stream (device ids retagged to the cell index) and
+//! concatenates them in cell-index order, so the merged trace is as
+//! thread-count-independent as the report.
 //!
 //! [`Rng::split`]: crate::util::rng::Rng::split
 //! [`scope_map`]: crate::util::threadpool::scope_map
 //! [`SKETCH_GAMMA`]: crate::util::stats::SKETCH_GAMMA
 
 use crate::coordinator::scheduler::SchedulerCfg;
+use crate::obs::{NoopRecorder, Recorder, TraceEvent, TraceRecorder};
 use crate::plan::front::PlanFront;
 use crate::sim::device::{
-    run_timeline_controlled, run_timeline_sketched, DeviceSim, NoControl,
+    run_timeline_recorded, run_timeline_sketched_recorded, DeviceSim, NoControl,
 };
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
@@ -154,13 +160,40 @@ pub fn run_sweep(
     sweep: &SweepCfg,
     base_seed: u64,
 ) -> SweepReport {
+    run_sweep_inner(front, traffic.into(), cfg, sweep, base_seed, false).0
+}
+
+/// [`run_sweep`] that also returns the concatenated [`TraceEvent`]
+/// stream: each cell records its own replay (single device, so every
+/// event carries `dev == 0`), then its events are retagged to the cell
+/// index and spliced in cell-index order — the trace, like the report,
+/// is byte-identical regardless of `sweep.threads`. The report itself is
+/// bit-identical to the unobserved [`run_sweep`] at equal inputs.
+pub fn run_sweep_observed(
+    front: &PlanFront,
+    traffic: impl Into<TraceSpec>,
+    cfg: &SchedulerCfg,
+    sweep: &SweepCfg,
+    base_seed: u64,
+) -> (SweepReport, Vec<TraceEvent>) {
+    run_sweep_inner(front, traffic.into(), cfg, sweep, base_seed, true)
+}
+
+fn run_sweep_inner(
+    front: &PlanFront,
+    traffic: TraceSpec,
+    cfg: &SchedulerCfg,
+    sweep: &SweepCfg,
+    base_seed: u64,
+    record: bool,
+) -> (SweepReport, Vec<TraceEvent>) {
     assert!(sweep.seeds >= 1, "sweep needs at least one seed");
     assert!(sweep.shards >= 1, "sweep needs at least one shard");
     // Each shard carries an equal slice of the offered load, so one seed
     // row in aggregate offers the original trace. `TraceSpec::shard`
     // divides every rate by the shard count exactly as the historical
     // per-rate `r / shards` did, so ramp sweeps stay bit-identical.
-    let shard_trace = traffic.into().shard(sweep.shards);
+    let shard_trace = traffic.shard(sweep.shards);
     let base = Rng::new(base_seed);
     let n_cells = sweep.seeds * sweep.shards;
     // Cell seeds derive by keyed split, not by advancing a shared stream:
@@ -172,7 +205,24 @@ pub fn run_sweep(
     let slo_s = cfg.slo_ms * 1e-3;
 
     let outcomes = scope_map(&cells, threads, |&(idx, seed)| {
-        run_cell(front, &shard_trace, cfg, sweep, idx / sweep.shards, idx % sweep.shards, seed)
+        let (seed_idx, shard_idx) = (idx / sweep.shards, idx % sweep.shards);
+        if record {
+            let mut rec = TraceRecorder::new();
+            let out =
+                run_cell(front, &shard_trace, cfg, sweep, seed_idx, shard_idx, seed, &mut rec);
+            // Single-device cells record dev 0; retag to the cell index
+            // so the merged trace keeps one track per cell.
+            let mut evs = rec.into_events();
+            for ev in &mut evs {
+                ev.set_dev(idx);
+            }
+            (out, evs)
+        } else {
+            let mut rec = NoopRecorder;
+            let out =
+                run_cell(front, &shard_trace, cfg, sweep, seed_idx, shard_idx, seed, &mut rec);
+            (out, Vec::new())
+        }
     });
 
     // Merge strictly in cell-index order (scope_map preserves input
@@ -191,7 +241,8 @@ pub fn run_sweep(
         exact_latency: sweep.exact.then(Summary::new),
         slo_violations: 0,
     };
-    for out in outcomes {
+    let mut events: Vec<TraceEvent> = Vec::new();
+    for (out, evs) in outcomes {
         report.arrivals += out.cell.arrivals;
         report.served += out.cell.served;
         report.shed += out.cell.shed;
@@ -204,15 +255,17 @@ pub fn run_sweep(
             total.extend_from(cell);
         }
         report.cells.push(out.cell);
+        events.extend(evs);
     }
     report.slo_violations = match &report.exact_latency {
         Some(s) => report.served - s.count_leq(slo_s),
         None => report.served - report.latency.count_leq(slo_s) as usize,
     };
-    report
+    (report, events)
 }
 
 /// One grid cell: a single-device replay of the shard's traffic slice.
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     front: &PlanFront,
     shard_trace: &TraceSpec,
@@ -221,6 +274,7 @@ fn run_cell(
     seed_idx: usize,
     shard_idx: usize,
     seed: u64,
+    rec: &mut impl Recorder,
 ) -> CellOutcome {
     // Single device: every arrival routes to it, so the trace's class
     // models never matter here — only the curves and burst processes.
@@ -228,13 +282,14 @@ fn run_cell(
     let duration_s = shard_trace.duration_s();
     if sweep.exact {
         let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
-        let outcome = run_timeline_controlled(
+        let outcome = run_timeline_recorded(
             &mut devs,
             &mut stream,
             duration_s,
             cfg.window_s,
             |_, _, _| Some(0),
             &mut NoControl,
+            rec,
         );
         let dev = devs.pop().expect("one device").into_report();
         // Rebuild the sketch from the exact samples so exact and default
@@ -263,13 +318,14 @@ fn run_cell(
         // Fast path: no per-request Vec anywhere — the device drops its
         // sample log and the sink is the fixed-size sketch.
         let mut devs = vec![DeviceSim::new(front.clone(), *cfg).without_latency_samples()];
-        let outcome = run_timeline_sketched(
+        let outcome = run_timeline_sketched_recorded(
             &mut devs,
             &mut stream,
             duration_s,
             cfg.window_s,
             |_, _, _| Some(0),
             &mut NoControl,
+            rec,
         );
         let dev = devs.pop().expect("one device").into_report();
         CellOutcome {
@@ -372,6 +428,28 @@ mod tests {
                 && p99 / sk99 < crate::util::stats::SKETCH_GAMMA * 1.001,
             "sketch p99 {sk99} vs exact {p99}"
         );
+    }
+
+    #[test]
+    fn observed_sweep_trace_is_thread_count_invariant() {
+        let ramp = RampSpec::parse("2000:6000", 0.3).unwrap();
+        let one = SweepCfg { seeds: 2, shards: 2, threads: 1, exact: false };
+        let four = SweepCfg { seeds: 2, shards: 2, threads: 4, exact: false };
+        let (r1, t1) = run_sweep_observed(&front(), &ramp, &cfg(), &one, 42);
+        let (r4, t4) = run_sweep_observed(&front(), &ramp, &cfg(), &four, 42);
+        // Cells merge in cell-index order, so neither the report nor the
+        // trace may depend on the worker-thread count.
+        assert_eq!(t1, t4);
+        assert_eq!(r1.served, r4.served);
+        // Observing must not perturb the replay itself.
+        let r = run_sweep(&front(), &ramp, &cfg(), &one, 42);
+        assert_eq!(r.arrivals, r1.arrivals);
+        assert_eq!(r.served, r1.served);
+        assert_eq!(r.shed, r1.shed);
+        assert_eq!(r.events, r1.events);
+        // Retagging gives every cell its own device track.
+        let devs: std::collections::BTreeSet<usize> = t1.iter().filter_map(|e| e.dev()).collect();
+        assert_eq!(devs, (0..4).collect::<std::collections::BTreeSet<usize>>());
     }
 
     #[test]

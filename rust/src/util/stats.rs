@@ -297,6 +297,18 @@ impl LatencySketch {
     }
 }
 
+/// Format a duration in seconds as milliseconds with two decimals, or
+/// `-` when the value is not finite — [`Summary::percentiles`] and
+/// [`LatencySketch::quantile`] return NaN on empty inputs, and report
+/// summary lines must not print "NaN ms" for a run that served nothing.
+pub fn fmt_ms(seconds: f64) -> String {
+    if seconds.is_finite() {
+        format!("{:.2}", seconds * 1e3)
+    } else {
+        "-".to_string()
+    }
+}
+
 /// Relative error |got - want| / |want| (used for Table 7 error rates).
 pub fn rel_err(got: f64, want: f64) -> f64 {
     if want == 0.0 {
