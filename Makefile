@@ -1,7 +1,7 @@
-# Build-time artifact generation (python AOT -> HLO text + weights) and the
-# tier-1 verify loop.
+# Build-time artifact generation (python AOT -> HLO text + weights), the
+# tier-1 verify loop, and the determinism lint.
 
-.PHONY: artifacts test verify
+.PHONY: artifacts test verify lint lint-selftest
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -11,3 +11,15 @@ test:
 
 verify:
 	cargo build --release && cargo test -q
+
+# Dependency-free source lint (see tools/lint/main.rs): compiled with bare
+# rustc so it needs no lockfile entry and runs before any cargo build.
+target/ssr-lint: tools/lint/main.rs
+	mkdir -p target
+	rustc -O --edition 2021 -o target/ssr-lint tools/lint/main.rs
+
+lint: target/ssr-lint
+	./target/ssr-lint --allow .lint-allow rust/src
+
+lint-selftest: target/ssr-lint
+	./target/ssr-lint --self-test

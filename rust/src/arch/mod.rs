@@ -219,6 +219,10 @@ impl AnyPlatform {
     }
 }
 
+/// Every board name `by_name` resolves, in lookup order. Diagnostics quote
+/// this list so an unknown-platform error names the valid alternatives.
+pub const KNOWN_BOARDS: [&str; 5] = ["vck190", "vck190_hbm", "stratix10nx", "zcu102", "u250"];
+
 /// Board lookup for fleet specs (`FleetSpec` serializes platform by name).
 pub fn by_name(name: &str) -> Option<AnyPlatform> {
     match name {

@@ -1,0 +1,98 @@
+//! Fleet-spec pass: board names, device identity, nested fronts, and model
+//! coverage against an optional trace.
+//!
+//! Each device's front is checked by [`super::front`] with the path prefix
+//! `/devices/{i}/front` and that device's board, so a per-device budget
+//! violation points into the right front of the right device.
+//!
+//! Codes: `C301` structure, `C302` duplicate device id, `C303` unknown
+//! platform, `C305` a trace model no device serves. Nested front findings
+//! keep their `F2xx` codes.
+
+use super::{req_str, Diagnostic};
+use crate::util::json::Json;
+
+pub fn check(j: &Json, trace: Option<&Json>, diags: &mut Vec<Diagnostic>) {
+    req_str(j, "name", "", "C301", diags);
+    let Some(devices) = j.get("devices").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("C301", "/devices", "missing or non-array 'devices'"));
+        return;
+    };
+    if devices.is_empty() {
+        diags.push(Diagnostic::error("C301", "/devices", "fleet has no devices"));
+        return;
+    }
+
+    let mut seen_ids: Vec<&str> = Vec::new();
+    let mut served: Vec<String> = Vec::new();
+    for (i, d) in devices.iter().enumerate() {
+        let base = format!("/devices/{i}");
+        if d.as_obj().is_none() {
+            diags.push(Diagnostic::error("C301", base, "device must be an object"));
+            continue;
+        }
+        if let Some(id) = req_str(d, "id", &base, "C301", diags) {
+            if seen_ids.contains(&id) {
+                diags.push(Diagnostic::error(
+                    "C302",
+                    format!("{base}/id"),
+                    format!("duplicate device id '{id}'"),
+                ));
+            } else {
+                seen_ids.push(id);
+            }
+        }
+        let board = match req_str(d, "platform", &base, "C301", diags) {
+            Some(name) => match crate::arch::by_name(name) {
+                Some(b) => Some(b),
+                None => {
+                    diags.push(Diagnostic::error(
+                        "C303",
+                        format!("{base}/platform"),
+                        format!(
+                            "unknown platform '{name}' (known: {})",
+                            crate::arch::KNOWN_BOARDS.join(", ")
+                        ),
+                    ));
+                    None
+                }
+            },
+            None => None,
+        };
+        match d.get("front") {
+            Some(front) => {
+                super::front::check(front, &format!("{base}/front"), board.as_ref(), diags);
+                if let Some(model) = front.get("model").and_then(Json::as_str) {
+                    if !served.iter().any(|m| m == model) {
+                        served.push(model.to_string());
+                    }
+                }
+            }
+            None => diags.push(Diagnostic::error(
+                "C301",
+                format!("{base}/front"),
+                "device is missing its 'front'",
+            )),
+        }
+    }
+
+    // Model coverage: every model the trace offers must have at least one
+    // device whose front serves it, or that traffic is unroutable.
+    if let Some(t) = trace {
+        if let Some(classes) = t.get("classes").and_then(Json::as_arr) {
+            for (ci, c) in classes.iter().enumerate() {
+                if let Some(model) = c.get("model").and_then(Json::as_str) {
+                    if !model.is_empty() && !served.iter().any(|m| m == model) {
+                        diags.push(Diagnostic::error(
+                            "C305",
+                            "/devices",
+                            format!(
+                                "no device serves model '{model}' required by trace class {ci}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Plan-front pass: metric domains, ordering, and Pareto consistency.
+//!
+//! Dominance is computed on `(latency_ms, rps)` — exactly the projection
+//! [`FrontEntry::point`](crate::plan::front::FrontEntry) feeds to
+//! [`crate::dse::pareto`], where a front is pruned on *delivered* rps, not
+//! raw TOPS. A serialized front must already be pruned: latency sorted
+//! ascending, rps strictly increasing, no duplicate metric pairs.
+//!
+//! `prefix` scopes the paths when a front is nested inside a fleet
+//! (`/devices/2/front/entries/0/...`); it is empty for a standalone file.
+//!
+//! Codes: `F201` structure, `F202` metric domain (NaN/negative), `F203`
+//! malformed assignment, `F204` dominated entry, `F205` not latency-sorted,
+//! `F206` (warning) duplicate metrics with differing provenance, `F207`
+//! claimed TOPS exceeds the platform peak, `F208` (warning) `nacc`
+//! disagrees with the assignment.
+
+use super::{req_str, req_uint, Diagnostic};
+use crate::arch::AnyPlatform;
+use crate::util::json::Json;
+
+/// Metrics of one entry that survived domain checks, kept for the
+/// cross-entry Pareto passes.
+struct EntryMetrics {
+    idx: usize,
+    latency_ms: f64,
+    rps: f64,
+    label: String,
+}
+
+pub fn check(j: &Json, prefix: &str, board: Option<&AnyPlatform>, diags: &mut Vec<Diagnostic>) {
+    req_str(j, "model", prefix, "F201", diags);
+    if let Some(depth) = req_uint(j, "depth", prefix, "F201", diags) {
+        if depth == 0 {
+            diags.push(Diagnostic::error(
+                "F201",
+                format!("{prefix}/depth"),
+                "'depth' must be at least 1",
+            ));
+        }
+    }
+    let entries_path = format!("{prefix}/entries");
+    let Some(entries) = j.get("entries").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("F201", entries_path, "missing or non-array 'entries'"));
+        return;
+    };
+    if entries.is_empty() {
+        diags.push(Diagnostic::error("F201", entries_path, "front has no entries"));
+        return;
+    }
+
+    let mut metrics: Vec<EntryMetrics> = Vec::new();
+    for (i, e) in entries.iter().enumerate() {
+        let base = format!("{entries_path}/{i}");
+        if e.as_obj().is_none() {
+            diags.push(Diagnostic::error("F201", base, "entry must be an object"));
+            continue;
+        }
+        let nacc_of_assign = check_assign(e, &base, diags);
+        if let Some(batch) = req_uint(e, "batch", &base, "F202", diags) {
+            if batch == 0 {
+                diags.push(Diagnostic::error(
+                    "F202",
+                    format!("{base}/batch"),
+                    "'batch' must be at least 1",
+                ));
+            }
+        }
+        let lat = check_metric(e, "latency_ms", &base, diags);
+        let rps = check_metric(e, "rps", &base, diags);
+        // Optional fields: `from_json` defaults tops → 0, nacc → 1,
+        // label → "plan"; only validate them when present.
+        if let Some(tops) = e.get("tops").and_then(Json::as_f64) {
+            if !tops.is_finite() || tops < 0.0 {
+                diags.push(Diagnostic::error(
+                    "F202",
+                    format!("{base}/tops"),
+                    format!("'tops' is {tops}; must be finite and non-negative"),
+                ));
+            } else if let Some(b) = board {
+                // Relative slack absorbs the round-trip through decimal
+                // JSON floats; a real budget violation is far larger.
+                if tops > b.peak_int8_tops() * (1.0 + 1e-6) {
+                    diags.push(Diagnostic::error(
+                        "F207",
+                        format!("{base}/tops"),
+                        format!(
+                            "claimed {tops:.2} TOPS exceeds {} peak {:.2} INT8 TOPS",
+                            b.name(),
+                            b.peak_int8_tops()
+                        ),
+                    ));
+                }
+            }
+        }
+        if let Some(nacc) = e.get("nacc").and_then(Json::as_f64) {
+            if nacc.fract() != 0.0 || !(1.0..=8.0).contains(&nacc) {
+                diags.push(Diagnostic::error(
+                    "F202",
+                    format!("{base}/nacc"),
+                    format!("'nacc' is {nacc}; must be an integer in 1..=8"),
+                ));
+            } else if let Some(expect) = nacc_of_assign {
+                if nacc as usize != expect {
+                    diags.push(Diagnostic::warning(
+                        "F208",
+                        format!("{base}/nacc"),
+                        format!("'nacc' is {nacc} but the assignment uses {expect} accelerators"),
+                    ));
+                }
+            }
+        }
+        let label = e
+            .get("label")
+            .and_then(Json::as_str)
+            .unwrap_or("plan")
+            .to_string();
+        if let (Some(latency_ms), Some(rps)) = (lat, rps) {
+            metrics.push(EntryMetrics { idx: i, latency_ms, rps, label });
+        }
+    }
+
+    // Ordering: a serialized front is latency-ascending by construction
+    // (pareto_indices sorts before emit).
+    for w in metrics.windows(2) {
+        if w[1].latency_ms < w[0].latency_ms {
+            diags.push(Diagnostic::error(
+                "F205",
+                format!("{entries_path}/{}/latency_ms", w[1].idx),
+                format!(
+                    "front is not sorted by latency: entry {} ({:.3} ms) follows entry {} ({:.3} ms)",
+                    w[1].idx, w[1].latency_ms, w[0].idx, w[0].latency_ms
+                ),
+            ));
+        }
+    }
+
+    // Pareto consistency: pairwise dominance on (latency, rps); exact
+    // duplicates are a provenance warning (the pruner dedups them, so a
+    // generated front never carries two).
+    for a in &metrics {
+        for b in &metrics {
+            if a.idx == b.idx {
+                continue;
+            }
+            let dominates = b.latency_ms <= a.latency_ms
+                && b.rps >= a.rps
+                && (b.latency_ms < a.latency_ms || b.rps > a.rps);
+            if dominates {
+                diags.push(Diagnostic::error(
+                    "F204",
+                    format!("{entries_path}/{}", a.idx),
+                    format!(
+                        "entry {} ('{}') is dominated by entry {} ('{}'): {:.3} ms / {:.0} rps vs {:.3} ms / {:.0} rps",
+                        a.idx, a.label, b.idx, b.label, a.latency_ms, a.rps, b.latency_ms, b.rps
+                    ),
+                ));
+            } else if a.idx < b.idx
+                && a.latency_ms.to_bits() == b.latency_ms.to_bits()
+                && a.rps.to_bits() == b.rps.to_bits()
+            {
+                diags.push(Diagnostic::warning(
+                    "F206",
+                    format!("{entries_path}/{}", b.idx),
+                    format!(
+                        "entry {} duplicates the metrics of entry {} under a different provenance ('{}' vs '{}')",
+                        b.idx, a.idx, b.label, a.label
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// `latency_ms` / `rps`: finite and strictly positive.
+fn check_metric(e: &Json, key: &str, base: &str, diags: &mut Vec<Diagnostic>) -> Option<f64> {
+    let v = super::req_num(e, key, base, "F202", diags)?;
+    if v <= 0.0 {
+        diags.push(Diagnostic::error(
+            "F202",
+            format!("{base}/{key}"),
+            format!("'{key}' is {v}; must be finite and positive"),
+        ));
+        return None;
+    }
+    Some(v)
+}
+
+/// Validate the 8-class accelerator assignment; returns `max(acc)+1` (the
+/// accelerator count it implies) when well-formed.
+fn check_assign(e: &Json, base: &str, diags: &mut Vec<Diagnostic>) -> Option<usize> {
+    let path = format!("{base}/assign");
+    let Some(assign) = e.get("assign").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("F203", path, "missing or non-array 'assign'"));
+        return None;
+    };
+    if assign.len() != 8 {
+        diags.push(Diagnostic::error(
+            "F203",
+            path,
+            format!("'assign' has {} entries; must map all 8 layer classes", assign.len()),
+        ));
+        return None;
+    }
+    let mut max_acc = 0usize;
+    for (k, a) in assign.iter().enumerate() {
+        match a.as_f64() {
+            Some(v) if v.is_finite() && v.fract() == 0.0 && (0.0..8.0).contains(&v) => {
+                max_acc = max_acc.max(v as usize);
+            }
+            _ => {
+                diags.push(Diagnostic::error(
+                    "F203",
+                    format!("{path}/{k}"),
+                    "accelerator id must be an integer in 0..8",
+                ));
+                return None;
+            }
+        }
+    }
+    Some(max_acc + 1)
+}

@@ -1,0 +1,403 @@
+//! Static verification for serialized SSR artifacts.
+//!
+//! Every artifact the CLI exchanges as JSON — [`PlanFront`], [`FleetSpec`],
+//! [`TraceSpec`], [`ExecutionPlan`] — can be verified *before* its typed
+//! `from_json` runs, by a pass-based analyzer over the raw [`Json`] tree.
+//! Working on the raw tree (rather than the typed value) is what lets every
+//! diagnostic carry a `json_path` pointing at the offending field — a typed
+//! constructor rejects the file before any field-level location exists.
+//!
+//! The passes mirror (and extend) the invariants the typed constructors
+//! enforce:
+//!
+//! * [`plan`] — forwarding-edge topology (acyclicity as `from < to`),
+//!   dangling step references, full stage coverage across the 8 layer
+//!   classes per block, per-accelerator schedule monotonicity, and resource
+//!   budgets against a named [`arch`](crate::arch) platform.
+//! * [`front`] — per-entry metric domains (no NaN / negative latency or
+//!   rps), latency-sorted order, Pareto consistency (no dominated entries,
+//!   dominance on `(latency_ms, rps)` exactly as
+//!   [`FrontEntry::point`](crate::plan::front::FrontEntry) maps it),
+//!   duplicate-metric provenance, and claimed TOPS vs platform peak.
+//! * [`fleet`] — known board names, unique device ids, nested front checks
+//!   per device, and model coverage against an optional trace.
+//! * [`trace`] — curve/process parameter domains (finite non-negative
+//!   rates, positive durations, lognormal `sigma > 0`, Pareto `alpha > 1`).
+//!
+//! Diagnostic codes are stable and grouped by family: `E0xx` structural,
+//! `P1xx` plan, `F2xx` front, `C3xx` fleet, `T4xx` trace (see
+//! ARCHITECTURE.md § Static verification for the full table).
+//!
+//! The CLI exposes the analyzer as `ssr check <artifact.json>` and every
+//! artifact-load boundary in `main.rs` routes through the `load_*` helpers
+//! here, so a corrupt file fails at load with a pointing diagnostic instead
+//! of a panic deep in `sim::device`.
+
+pub mod fleet;
+pub mod front;
+pub mod plan;
+pub mod trace;
+
+use std::path::Path;
+
+use crate::cluster::fleet::FleetSpec;
+use crate::plan::front::PlanFront;
+use crate::plan::ExecutionPlan;
+use crate::traffic::trace::TraceSpec;
+use crate::util::json::Json;
+
+/// How bad a finding is. `Error` fails the check (nonzero exit, load
+/// refused); `Warning` is advisory unless `--strict` promotes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a stable code, a JSON-Pointer-style path into the artifact
+/// (`/entries/3/latency_ms`), and a human message. Rendered as text or JSON.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub code: &'static str,
+    pub json_path: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Diagnostic { severity: Severity::Error, code, json_path: path.into(), message: msg.into() }
+    }
+
+    pub fn warning(code: &'static str, path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Diagnostic {
+            severity: Severity::Warning,
+            code,
+            json_path: path.into(),
+            message: msg.into(),
+        }
+    }
+
+    /// One text line: `error[F202] front.json /entries/1/latency_ms: ...`.
+    pub fn render(&self, source: &str) -> String {
+        let path = if self.json_path.is_empty() { "/" } else { self.json_path.as_str() };
+        format!("{}[{}] {} {}: {}", self.severity.name(), self.code, source, path, self.message)
+    }
+}
+
+/// Which artifact a JSON tree is, keyed on its distinguishing top-level
+/// field (`steps` → plan, `entries` → front, `devices` → fleet, `classes`
+/// → trace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Plan,
+    Front,
+    Fleet,
+    Trace,
+}
+
+impl ArtifactKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Plan => "execution-plan",
+            ArtifactKind::Front => "plan-front",
+            ArtifactKind::Fleet => "fleet-spec",
+            ArtifactKind::Trace => "trace-spec",
+        }
+    }
+}
+
+/// Sniff the artifact kind from top-level object keys. `None` means the
+/// tree is not a recognized SSR artifact.
+pub fn detect(j: &Json) -> Option<ArtifactKind> {
+    let o = j.as_obj()?;
+    if o.contains_key("steps") {
+        Some(ArtifactKind::Plan)
+    } else if o.contains_key("entries") {
+        Some(ArtifactKind::Front)
+    } else if o.contains_key("devices") {
+        Some(ArtifactKind::Fleet)
+    } else if o.contains_key("classes") {
+        Some(ArtifactKind::Trace)
+    } else {
+        None
+    }
+}
+
+/// Cross-artifact context for a check run: a platform name for resource
+/// budgets (plan / standalone front) and a trace for fleet model coverage.
+#[derive(Default)]
+pub struct CheckOpts<'a> {
+    pub arch: Option<&'a str>,
+    pub trace: Option<&'a Json>,
+}
+
+/// Run every pass that applies to `kind` and return the findings. Errors
+/// never panic — a malformed tree yields diagnostics, not unwraps.
+pub fn check_artifact(j: &Json, kind: ArtifactKind, opts: &CheckOpts) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let board = match opts.arch {
+        None => None,
+        Some(name) => match crate::arch::by_name(name) {
+            Some(b) => Some(b),
+            None => {
+                diags.push(Diagnostic::error(
+                    "E002",
+                    "",
+                    format!(
+                        "unknown platform '{name}' (known: {})",
+                        crate::arch::KNOWN_BOARDS.join(", ")
+                    ),
+                ));
+                None
+            }
+        },
+    };
+    match kind {
+        ArtifactKind::Plan => plan::check(j, board.as_ref(), &mut diags),
+        ArtifactKind::Front => front::check(j, "", board.as_ref(), &mut diags),
+        ArtifactKind::Fleet => fleet::check(j, opts.trace, &mut diags),
+        ArtifactKind::Trace => trace::check(j, &mut diags),
+    }
+    diags
+}
+
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Render all findings as text lines, one per diagnostic, errors first
+/// (stable within each severity — pass order is deterministic).
+pub fn render_text(diags: &[Diagnostic], source: &str) -> String {
+    let mut ordered: Vec<&Diagnostic> = diags.iter().collect();
+    ordered.sort_by(|a, b| b.severity.cmp(&a.severity));
+    ordered.iter().map(|d| d.render(source)).collect::<Vec<_>>().join("\n")
+}
+
+/// Render findings as a JSON array of `{severity, code, json_path,
+/// message}` objects (machine-readable `--json` output).
+pub fn render_json(diags: &[Diagnostic]) -> Json {
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("severity".into(), Json::Str(d.severity.name().into()));
+                o.insert("code".into(), Json::Str(d.code.into()));
+                o.insert("json_path".into(), Json::Str(d.json_path.clone()));
+                o.insert("message".into(), Json::Str(d.message.clone()));
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Read and parse a JSON file, prefixing any I/O or syntax error with the
+/// path so the CLI can print it verbatim.
+pub fn load_json(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: cannot read: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: invalid JSON: {e}", path.display()))
+}
+
+/// Load + kind-check + verify; the common front half of every `load_*`.
+fn load_checked(path: &Path, want: ArtifactKind) -> Result<Json, String> {
+    let j = load_json(path)?;
+    let kind = detect(&j).ok_or_else(|| {
+        format!(
+            "{}: not a recognized SSR artifact (expected a {} file)",
+            path.display(),
+            want.name()
+        )
+    })?;
+    if kind != want {
+        return Err(format!(
+            "{}: this is a {} artifact, expected a {}",
+            path.display(),
+            kind.name(),
+            want.name()
+        ));
+    }
+    let diags = check_artifact(&j, kind, &CheckOpts::default());
+    if has_errors(&diags) {
+        let source = path.display().to_string();
+        let errors: Vec<String> = diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.render(&source))
+            .collect();
+        return Err(format!(
+            "{}\n{} failed verification ({} error{}); run `ssr check {}` for the full report",
+            errors.join("\n"),
+            source,
+            errors.len(),
+            if errors.len() == 1 { "" } else { "s" },
+            source,
+        ));
+    }
+    Ok(j)
+}
+
+/// Verified load of a [`PlanFront`]: parse, run the front passes, then the
+/// typed `from_json`. Used by every `--front` CLI boundary.
+pub fn load_front(path: &Path) -> Result<PlanFront, String> {
+    let j = load_checked(path, ArtifactKind::Front)?;
+    PlanFront::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Verified load of a [`FleetSpec`] (per-device fronts checked against
+/// their board's budget). Used by every `--fleet` CLI boundary.
+pub fn load_fleet(path: &Path) -> Result<FleetSpec, String> {
+    let j = load_checked(path, ArtifactKind::Fleet)?;
+    FleetSpec::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Verified load of a [`TraceSpec`]. Used by every `--trace` CLI boundary.
+pub fn load_trace(path: &Path) -> Result<TraceSpec, String> {
+    let j = load_checked(path, ArtifactKind::Trace)?;
+    TraceSpec::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Verified load of an [`ExecutionPlan`].
+pub fn load_plan(path: &Path) -> Result<ExecutionPlan, String> {
+    let j = load_checked(path, ArtifactKind::Plan)?;
+    ExecutionPlan::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Require `key` to be a finite number; missing / wrong-type / non-finite
+/// pushes an error with `code` at `{path}/{key}` and returns `None`.
+pub(crate) fn req_num(
+    j: &Json,
+    key: &str,
+    path: &str,
+    code: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<f64> {
+    match j.get(key).and_then(Json::as_f64) {
+        Some(v) if v.is_finite() => Some(v),
+        Some(v) => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("'{key}' is {v}; must be finite"),
+            ));
+            None
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("missing or non-numeric '{key}'"),
+            ));
+            None
+        }
+    }
+}
+
+/// Require `key` to be a non-negative integer (JSON numbers with zero
+/// fractional part). Same error convention as [`req_num`].
+pub(crate) fn req_uint(
+    j: &Json,
+    key: &str,
+    path: &str,
+    code: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<usize> {
+    match j.get(key).and_then(Json::as_f64) {
+        Some(v) if v.is_finite() && v.fract() == 0.0 && v >= 0.0 => Some(v as usize),
+        Some(v) => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("'{key}' is {v}; must be a non-negative integer"),
+            ));
+            None
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("missing or non-numeric '{key}'"),
+            ));
+            None
+        }
+    }
+}
+
+/// Require `key` to be a non-empty string.
+pub(crate) fn req_str<'j>(
+    j: &'j Json,
+    key: &str,
+    path: &str,
+    code: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<&'j str> {
+    match j.get(key).and_then(Json::as_str) {
+        Some(s) if !s.is_empty() => Some(s),
+        Some(_) => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("'{key}' must be a non-empty string"),
+            ));
+            None
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                code,
+                format!("{path}/{key}"),
+                format!("missing or non-string '{key}'"),
+            ));
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_sniffs_every_kind_and_rejects_unknown() {
+        let plan = Json::parse(r#"{"steps": [], "edges": []}"#).unwrap();
+        let front = Json::parse(r#"{"entries": []}"#).unwrap();
+        let fleet = Json::parse(r#"{"devices": []}"#).unwrap();
+        let trace = Json::parse(r#"{"classes": []}"#).unwrap();
+        assert_eq!(detect(&plan), Some(ArtifactKind::Plan));
+        assert_eq!(detect(&front), Some(ArtifactKind::Front));
+        assert_eq!(detect(&fleet), Some(ArtifactKind::Fleet));
+        assert_eq!(detect(&trace), Some(ArtifactKind::Trace));
+        assert_eq!(detect(&Json::parse(r#"{"foo": 1}"#).unwrap()), None);
+        assert_eq!(detect(&Json::parse("[1,2]").unwrap()), None);
+    }
+
+    #[test]
+    fn unknown_arch_name_is_a_structural_error() {
+        let front = Json::parse(r#"{"model":"m","depth":1,"entries":[]}"#).unwrap();
+        let opts = CheckOpts { arch: Some("tpu_v9"), trace: None };
+        let diags = check_artifact(&front, ArtifactKind::Front, &opts);
+        assert!(diags.iter().any(|d| d.code == "E002" && d.message.contains("tpu_v9")));
+    }
+
+    #[test]
+    fn render_is_stable_and_points() {
+        let d = Diagnostic::error("F202", "/entries/1/latency_ms", "latency_ms is NaN");
+        assert_eq!(
+            d.render("front.json"),
+            "error[F202] front.json /entries/1/latency_ms: latency_ms is NaN"
+        );
+        let j = render_json(&[d]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("code").unwrap().as_str().unwrap(), "F202");
+        assert_eq!(arr[0].get("json_path").unwrap().as_str().unwrap(), "/entries/1/latency_ms");
+    }
+}

@@ -1,0 +1,416 @@
+//! Execution-plan pass: forwarding topology, stage coverage, schedule
+//! monotonicity, and platform resource budgets over the raw JSON.
+//!
+//! A serialized plan is a per-image step schedule plus forwarding edges.
+//! The invariants checked here are the ones `sim::device`, the scheduler,
+//! and the PJRT pipeline all assume:
+//!
+//! * edges are topological (`from < to`) — acyclicity by construction —
+//!   and reference real steps (no dangling endpoints);
+//! * the schedule covers the full chain: embed first, head last, and for
+//!   every transformer block each layer class exactly once (class
+//!   granularity) or attn+mlp exactly once (fused);
+//! * every accelerator's step subsequence visits blocks monotonically —
+//!   a schedule that revisits an earlier block would deadlock the
+//!   forwarding pipeline;
+//! * resource budgets against a named board: a monolithic FPGA baseline
+//!   cannot host a multi-accelerator spatial plan; on Versal-class boards
+//!   the accelerator count is bounded by the AIE array and the forwarded
+//!   working set should fit on-chip memory.
+//!
+//! Codes: `P101` structure, `P102` bad enum/assignment value, `P103`
+//! dangling edge endpoint, `P104` non-topological edge, `P105` `cross_acc`
+//! flag mismatch, `P106` stage coverage, `P107` accelerator-id domain /
+//! density, `P108` schedule monotonicity, `P109` chain ends, `P110`
+//! platform budget.
+
+use super::{req_str, req_uint, Diagnostic};
+use crate::arch::AnyPlatform;
+use crate::util::json::Json;
+
+/// The six per-block layer classes, in chain order (matches
+/// `ExecutionPlan::from_depth`).
+const BLOCK_UNITS: [&str; 6] = ["qkv", "bmm0", "bmm1", "proj", "fc1", "fc2"];
+const FUSED_BLOCK_UNITS: [&str; 2] = ["attn", "mlp"];
+const ALL_UNITS: [&str; 10] =
+    ["embed", "qkv", "bmm0", "bmm1", "proj", "fc1", "fc2", "head", "attn", "mlp"];
+
+struct Step {
+    idx: usize,
+    unit: String,
+    block: Option<usize>,
+    acc: usize,
+}
+
+pub fn check(j: &Json, board: Option<&AnyPlatform>, diags: &mut Vec<Diagnostic>) {
+    req_str(j, "model", "", "P101", diags);
+    let depth = req_uint(j, "depth", "", "P101", diags).filter(|&d| d >= 1).or_else(|| {
+        // req_uint reported missing/non-integer; a present zero needs its
+        // own message.
+        if j.get("depth").and_then(Json::as_usize) == Some(0) {
+            diags.push(Diagnostic::error("P101", "/depth", "'depth' must be at least 1"));
+        }
+        None
+    });
+    if let Some(mb) = req_uint(j, "micro_batch", "", "P101", diags) {
+        if mb == 0 {
+            diags.push(Diagnostic::error(
+                "P101",
+                "/micro_batch",
+                "'micro_batch' must be at least 1",
+            ));
+        }
+    }
+    let micro_batch = j.get("micro_batch").and_then(Json::as_usize).unwrap_or(1).max(1);
+    let granularity = match j.get("granularity").and_then(Json::as_str) {
+        Some(g @ ("class" | "fused")) => Some(g),
+        Some(g) => {
+            diags.push(Diagnostic::error(
+                "P102",
+                "/granularity",
+                format!("unknown granularity '{g}' (known: class, fused)"),
+            ));
+            None
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                "P102",
+                "/granularity",
+                "missing or non-string 'granularity'",
+            ));
+            None
+        }
+    };
+    check_assignment(j, diags);
+    let nacc = req_uint(j, "nacc", "", "P107", diags).filter(|&n| {
+        if !(1..=8).contains(&n) {
+            diags.push(Diagnostic::error(
+                "P107",
+                "/nacc",
+                format!("'nacc' is {n}; must be in 1..=8"),
+            ));
+            return false;
+        }
+        true
+    });
+
+    let Some(steps_json) = j.get("steps").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("P101", "/steps", "missing or non-array 'steps'"));
+        return;
+    };
+    if steps_json.is_empty() {
+        diags.push(Diagnostic::error("P101", "/steps", "plan has no steps"));
+        return;
+    }
+
+    let mut steps: Vec<Step> = Vec::new();
+    for (i, s) in steps_json.iter().enumerate() {
+        let base = format!("/steps/{i}");
+        let unit = match s.get("unit").and_then(Json::as_str) {
+            Some(u) if ALL_UNITS.contains(&u) => {
+                let fused_unit = u == "attn" || u == "mlp";
+                if let Some(g) = granularity {
+                    if fused_unit != (g == "fused") {
+                        diags.push(Diagnostic::error(
+                            "P102",
+                            format!("{base}/unit"),
+                            format!("step unit '{u}' contradicts granularity '{g}'"),
+                        ));
+                    }
+                }
+                u.to_string()
+            }
+            Some(u) => {
+                diags.push(Diagnostic::error(
+                    "P102",
+                    format!("{base}/unit"),
+                    format!("unknown stage unit '{u}'"),
+                ));
+                continue;
+            }
+            None => {
+                diags.push(Diagnostic::error(
+                    "P102",
+                    format!("{base}/unit"),
+                    "missing or non-string 'unit'",
+                ));
+                continue;
+            }
+        };
+        let Some(acc) = req_uint(s, "acc", &base, "P107", diags) else { continue };
+        if let Some(n) = nacc {
+            if acc >= n {
+                diags.push(Diagnostic::error(
+                    "P107",
+                    format!("{base}/acc"),
+                    format!("step runs on acc {acc} but the plan declares nacc {n}"),
+                ));
+                continue;
+            }
+        }
+        let block = s.get("block").and_then(Json::as_usize);
+        steps.push(Step { idx: i, unit, block, acc });
+    }
+
+    // Chain ends: the per-image pipeline always starts at embed and
+    // finishes at head.
+    if let Some(first) = steps.first() {
+        if first.unit != "embed" {
+            diags.push(Diagnostic::error(
+                "P109",
+                format!("/steps/{}/unit", first.idx),
+                format!("plan must start at 'embed', found '{}'", first.unit),
+            ));
+        }
+    }
+    if let Some(last) = steps.last() {
+        if last.unit != "head" {
+            diags.push(Diagnostic::error(
+                "P109",
+                format!("/steps/{}/unit", last.idx),
+                format!("plan must end at 'head', found '{}'", last.unit),
+            ));
+        }
+    }
+
+    // Accelerator density: declared nacc must be exactly the ids in use.
+    if let Some(n) = nacc {
+        let mut used = vec![false; n];
+        for s in &steps {
+            used[s.acc] = true;
+        }
+        for (a, u) in used.iter().enumerate() {
+            if !u {
+                diags.push(Diagnostic::error(
+                    "P107",
+                    "/steps",
+                    format!("acc ids not dense: acc {a} of nacc {n} schedules no step"),
+                ));
+            }
+        }
+    }
+
+    if let (Some(d), Some(g)) = (depth, granularity) {
+        check_coverage(&steps, d, g, diags);
+    }
+    check_monotonic(&steps, diags);
+    check_edges(j, &steps, diags);
+    if let Some(b) = board {
+        check_budget(j, b, nacc, micro_batch, diags);
+    }
+}
+
+/// The 8-class assignment: one integer accelerator id in 0..8 per class.
+fn check_assignment(j: &Json, diags: &mut Vec<Diagnostic>) {
+    let Some(assign) = j.get("assignment").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("P102", "/assignment", "missing or non-array 'assignment'"));
+        return;
+    };
+    if assign.len() != 8 {
+        diags.push(Diagnostic::error(
+            "P102",
+            "/assignment",
+            format!("'assignment' has {} entries; must map all 8 layer classes", assign.len()),
+        ));
+        return;
+    }
+    for (k, a) in assign.iter().enumerate() {
+        match a.as_f64() {
+            Some(v) if v.is_finite() && v.fract() == 0.0 && (0.0..8.0).contains(&v) => {}
+            _ => diags.push(Diagnostic::error(
+                "P102",
+                format!("/assignment/{k}"),
+                "accelerator id must be an integer in 0..8",
+            )),
+        }
+    }
+}
+
+/// Full stage coverage: every block carries each of its units exactly once.
+fn check_coverage(steps: &[Step], depth: usize, granularity: &str, diags: &mut Vec<Diagnostic>) {
+    let block_units: &[&str] =
+        if granularity == "fused" { &FUSED_BLOCK_UNITS } else { &BLOCK_UNITS };
+    for (unit, want) in [("embed", 1usize), ("head", 1)] {
+        let n = steps.iter().filter(|s| s.unit == unit).count();
+        if n != want {
+            diags.push(Diagnostic::error(
+                "P106",
+                "/steps",
+                format!("plan schedules '{unit}' {n} times; expected {want}"),
+            ));
+        }
+    }
+    for b in 0..depth {
+        for unit in block_units {
+            let n = steps.iter().filter(|s| s.unit == *unit && s.block == Some(b)).count();
+            if n != 1 {
+                let what = if n == 0 { "is missing" } else { "duplicates" };
+                diags.push(Diagnostic::error(
+                    "P106",
+                    "/steps",
+                    format!("block {b} {what} its '{unit}' step"),
+                ));
+            }
+        }
+    }
+    for s in steps {
+        if let Some(b) = s.block {
+            if b >= depth {
+                diags.push(Diagnostic::error(
+                    "P106",
+                    format!("/steps/{}/block", s.idx),
+                    format!("step references block {b} of a depth-{depth} model"),
+                ));
+            }
+        }
+    }
+}
+
+/// Per-accelerator schedule monotonicity: an acc's step subsequence must
+/// visit blocks in non-decreasing order or the forwarding pipeline stalls.
+fn check_monotonic(steps: &[Step], diags: &mut Vec<Diagnostic>) {
+    let naccs = steps.iter().map(|s| s.acc + 1).max().unwrap_or(0);
+    for acc in 0..naccs {
+        let mut last: Option<usize> = None;
+        for s in steps.iter().filter(|s| s.acc == acc) {
+            let Some(b) = s.block else { continue };
+            if let Some(prev) = last {
+                if b < prev {
+                    diags.push(Diagnostic::error(
+                        "P108",
+                        format!("/steps/{}", s.idx),
+                        format!("acc {acc} schedule revisits block {b} after block {prev}"),
+                    ));
+                }
+            }
+            last = Some(b);
+        }
+    }
+}
+
+/// Forwarding edges: real endpoints, topological order, honest `cross_acc`.
+fn check_edges(j: &Json, steps: &[Step], diags: &mut Vec<Diagnostic>) {
+    let Some(edges) = j.get("edges").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("P101", "/edges", "missing or non-array 'edges'"));
+        return;
+    };
+    let nsteps = j.get("steps").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+    // acc by original step index (steps dropped by earlier passes are
+    // absent; their edges skip the cross_acc comparison).
+    let acc_of = |idx: usize| steps.iter().find(|s| s.idx == idx).map(|s| s.acc);
+    for (i, e) in edges.iter().enumerate() {
+        let base = format!("/edges/{i}");
+        let from = req_uint(e, "from", &base, "P103", diags);
+        let to = req_uint(e, "to", &base, "P103", diags);
+        let (Some(from), Some(to)) = (from, to) else { continue };
+        let mut dangling = false;
+        for (end, key) in [(from, "from"), (to, "to")] {
+            if end >= nsteps {
+                diags.push(Diagnostic::error(
+                    "P103",
+                    format!("{base}/{key}"),
+                    format!("edge {key} references step {end}, but the plan has {nsteps} steps"),
+                ));
+                dangling = true;
+            }
+        }
+        if dangling {
+            continue;
+        }
+        if from >= to {
+            diags.push(Diagnostic::error(
+                "P104",
+                format!("{base}/to"),
+                format!(
+                    "edge {from} -> {to} violates topological order (forwarding must flow to a later step)"
+                ),
+            ));
+            continue;
+        }
+        if let Some(bytes) = e.get("bytes").and_then(Json::as_f64) {
+            if !bytes.is_finite() || bytes < 0.0 {
+                diags.push(Diagnostic::error(
+                    "P103",
+                    format!("{base}/bytes"),
+                    format!("'bytes' is {bytes}; must be finite and non-negative"),
+                ));
+            }
+        }
+        if let (Some(fa), Some(ta), Some(flag)) =
+            (acc_of(from), acc_of(to), e.get("cross_acc").and_then(Json::as_bool))
+        {
+            if flag != (fa != ta) {
+                diags.push(Diagnostic::error(
+                    "P105",
+                    format!("{base}/cross_acc"),
+                    format!(
+                        "edge {from} -> {to} links acc {fa} to acc {ta} but is flagged cross_acc={flag}"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Resource budgets against the named board.
+fn check_budget(
+    j: &Json,
+    board: &AnyPlatform,
+    nacc: Option<usize>,
+    micro_batch: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    match board {
+        AnyPlatform::Fpga(f) => {
+            if let Some(n) = nacc {
+                if n > 1 {
+                    diags.push(Diagnostic::error(
+                        "P110",
+                        "/nacc",
+                        format!(
+                            "monolithic board '{}' runs one sequential engine; it cannot host a {n}-accelerator spatial plan",
+                            f.name
+                        ),
+                    ));
+                }
+            }
+        }
+        AnyPlatform::Versal(p) => {
+            if let Some(n) = nacc {
+                if n as u64 > p.aie_total {
+                    diags.push(Diagnostic::error(
+                        "P110",
+                        "/nacc",
+                        format!(
+                            "plan wants {n} accelerators but '{}' has {} AIE tiles",
+                            p.name, p.aie_total
+                        ),
+                    ));
+                }
+            }
+            // Forwarded working set vs the AIE array's on-chip memory: a
+            // heuristic ceiling (the mapper also uses PL BRAM), so exceeding
+            // it is a warning, not an error.
+            let on_chip = p.aie_total * p.aie_local_mem;
+            if let Some(edges) = j.get("edges").and_then(Json::as_arr) {
+                for (i, e) in edges.iter().enumerate() {
+                    let cross = e.get("cross_acc").and_then(Json::as_bool).unwrap_or(false);
+                    let bytes = e.get("bytes").and_then(Json::as_f64).unwrap_or(0.0);
+                    if cross && bytes.is_finite() && bytes >= 0.0 {
+                        let working_set = bytes * micro_batch as f64;
+                        if working_set > on_chip as f64 {
+                            diags.push(Diagnostic::warning(
+                                "P110",
+                                format!("/edges/{i}/bytes"),
+                                format!(
+                                    "cross-acc forwarding of {working_set:.0} B (micro-batch {micro_batch}) exceeds '{}' on-chip AIE memory ({on_chip} B)",
+                                    p.name
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

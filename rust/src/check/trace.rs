@@ -1,0 +1,202 @@
+//! Trace-spec pass: curve / process parameter domains over the raw JSON.
+//!
+//! Mirrors the private `RateCurve::validate` / `ArrivalProcess::validate`
+//! domains in [`crate::traffic::trace`], but walks the raw tree so every
+//! rejection carries a `json_path` into the file (`/classes/0/curve/
+//! rate_rps`), which the typed constructors cannot provide.
+//!
+//! Codes: `T401` missing/empty classes, `T402` bad model name, `T403`
+//! curve structure/kind, `T404` curve parameter domain, `T405` process
+//! parameter domain, `T406` (warning) trace offers zero load.
+
+use super::{req_str, Diagnostic};
+use crate::util::json::Json;
+
+pub fn check(j: &Json, diags: &mut Vec<Diagnostic>) {
+    let Some(classes) = j.get("classes").and_then(Json::as_arr) else {
+        diags.push(Diagnostic::error("T401", "/classes", "trace must carry a 'classes' array"));
+        return;
+    };
+    if classes.is_empty() {
+        diags.push(Diagnostic::error("T401", "/classes", "trace has no traffic classes"));
+        return;
+    }
+    let mut total_peak = 0.0;
+    for (i, c) in classes.iter().enumerate() {
+        let base = format!("/classes/{i}");
+        req_str(c, "model", &base, "T402", diags);
+        match c.get("curve") {
+            Some(curve) => {
+                if let Some(peak) = check_curve(curve, &format!("{base}/curve"), diags) {
+                    total_peak += peak;
+                }
+            }
+            None => diags.push(Diagnostic::error(
+                "T403",
+                format!("{base}/curve"),
+                "class is missing its 'curve' object",
+            )),
+        }
+        match c.get("process") {
+            Some(process) => check_process(process, &format!("{base}/process"), diags),
+            None => diags.push(Diagnostic::error(
+                "T405",
+                format!("{base}/process"),
+                "class is missing its 'process' object",
+            )),
+        }
+    }
+    if total_peak == 0.0 && !super::has_errors(diags) {
+        diags.push(Diagnostic::warning(
+            "T406",
+            "/classes",
+            "trace offers zero load (every class peaks at 0 rps)",
+        ));
+    }
+}
+
+/// Finite and non-negative, the domain of every rate-like parameter.
+fn rate(curve: &Json, key: &str, path: &str, diags: &mut Vec<Diagnostic>) -> Option<f64> {
+    let v = super::req_num(curve, key, path, "T404", diags)?;
+    if v < 0.0 {
+        diags.push(Diagnostic::error(
+            "T404",
+            format!("{path}/{key}"),
+            format!("'{key}' is {v}; rates must be finite and non-negative"),
+        ));
+        return None;
+    }
+    Some(v)
+}
+
+/// Finite and strictly positive, the domain of every duration-like
+/// parameter (`duration_s`, `phase_s`, `period_s`, `decay_s`).
+fn duration(curve: &Json, key: &str, path: &str, diags: &mut Vec<Diagnostic>) -> Option<f64> {
+    let v = super::req_num(curve, key, path, "T404", diags)?;
+    if v <= 0.0 {
+        diags.push(Diagnostic::error(
+            "T404",
+            format!("{path}/{key}"),
+            format!("'{key}' is {v}; must be finite and positive"),
+        ));
+        return None;
+    }
+    Some(v)
+}
+
+/// Validate one curve object; returns its peak rate when the parameters
+/// parse (used for the zero-load warning).
+fn check_curve(curve: &Json, path: &str, diags: &mut Vec<Diagnostic>) -> Option<f64> {
+    match curve.get("kind").and_then(Json::as_str) {
+        Some("constant") => {
+            let r = rate(curve, "rate_rps", path, diags);
+            duration(curve, "duration_s", path, diags);
+            r
+        }
+        Some("piecewise") => {
+            duration(curve, "phase_s", path, diags);
+            let Some(rates) = curve.get("rates_rps").and_then(Json::as_arr) else {
+                diags.push(Diagnostic::error(
+                    "T404",
+                    format!("{path}/rates_rps"),
+                    "missing or non-array 'rates_rps'",
+                ));
+                return None;
+            };
+            if rates.is_empty() {
+                diags.push(Diagnostic::error(
+                    "T404",
+                    format!("{path}/rates_rps"),
+                    "piecewise curve has no phases",
+                ));
+                return None;
+            }
+            let mut peak: f64 = 0.0;
+            let mut ok = true;
+            for (k, r) in rates.iter().enumerate() {
+                match r.as_f64() {
+                    Some(v) if v.is_finite() && v >= 0.0 => peak = peak.max(v),
+                    _ => {
+                        ok = false;
+                        diags.push(Diagnostic::error(
+                            "T404",
+                            format!("{path}/rates_rps/{k}"),
+                            "phase rate must be a finite non-negative number",
+                        ));
+                    }
+                }
+            }
+            ok.then_some(peak)
+        }
+        Some("diurnal") => {
+            let b = rate(curve, "base_rps", path, diags);
+            let a = rate(curve, "amplitude_rps", path, diags);
+            duration(curve, "period_s", path, diags);
+            duration(curve, "duration_s", path, diags);
+            Some(b? + a?)
+        }
+        Some("flash") => {
+            let b = rate(curve, "base_rps", path, diags);
+            let p = rate(curve, "peak_rps", path, diags);
+            rate(curve, "at_s", path, diags);
+            rate(curve, "ramp_s", path, diags);
+            duration(curve, "decay_s", path, diags);
+            duration(curve, "duration_s", path, diags);
+            Some(b?.max(p?))
+        }
+        Some(k) => {
+            diags.push(Diagnostic::error(
+                "T403",
+                format!("{path}/kind"),
+                format!("unknown curve kind '{k}' (known: constant, piecewise, diurnal, flash)"),
+            ));
+            None
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                "T403",
+                format!("{path}/kind"),
+                "curve is missing its 'kind'",
+            ));
+            None
+        }
+    }
+}
+
+fn check_process(process: &Json, path: &str, diags: &mut Vec<Diagnostic>) {
+    match process.get("kind").and_then(Json::as_str) {
+        Some("poisson") => {}
+        Some("lognormal") => {
+            if let Some(sigma) = super::req_num(process, "sigma", path, "T405", diags) {
+                if sigma <= 0.0 {
+                    diags.push(Diagnostic::error(
+                        "T405",
+                        format!("{path}/sigma"),
+                        format!("lognormal 'sigma' is {sigma}; must be positive"),
+                    ));
+                }
+            }
+        }
+        Some("pareto") => {
+            if let Some(alpha) = super::req_num(process, "alpha", path, "T405", diags) {
+                if alpha <= 1.0 {
+                    diags.push(Diagnostic::error(
+                        "T405",
+                        format!("{path}/alpha"),
+                        format!("pareto 'alpha' is {alpha}; must exceed 1 for a finite mean"),
+                    ));
+                }
+            }
+        }
+        Some(k) => diags.push(Diagnostic::error(
+            "T405",
+            format!("{path}/kind"),
+            format!("unknown process kind '{k}' (known: poisson, lognormal, pareto)"),
+        )),
+        None => diags.push(Diagnostic::error(
+            "T405",
+            format!("{path}/kind"),
+            "process is missing its 'kind'",
+        )),
+    }
+}

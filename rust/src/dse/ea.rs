@@ -172,7 +172,7 @@ pub fn run_ea(
             .zip(fit.drain(..))
             .chain(children.into_iter().zip(child_fit))
             .collect();
-        all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        all.sort_by(|a, b| b.1.total_cmp(&a.1));
         all.truncate(params.n_pop);
         for (g, f) in all {
             population.push(g);
@@ -200,9 +200,8 @@ fn pareto_of_evaluated(
         .collect();
     feasible.sort_by(|(ga, a), (gb, b)| {
         a.latency_s
-            .partial_cmp(&b.latency_s)
-            .unwrap()
-            .then(b.tops.partial_cmp(&a.tops).unwrap())
+            .total_cmp(&b.latency_s)
+            .then(b.tops.total_cmp(&a.tops))
             .then(ga.cmp(gb))
     });
     let points: Vec<Point> = feasible

@@ -17,7 +17,8 @@
 //!   front swaps — ([`cluster`]), the unified workload-trace API every
 //!   traffic consumer speaks ([`traffic`]), a deterministic observability
 //!   layer — structured event tracing, metrics, SLO burn-rate monitoring
-//!   — ([`obs`]), and report generators for
+//!   — ([`obs`]), a static artifact verifier every CLI deserialization
+//!   boundary routes through ([`check`]), and report generators for
 //!   every paper table/figure ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the DeiT-style transformer in
 //!   JAX calling Pallas kernels, AOT-lowered to the HLO text artifacts the
@@ -31,6 +32,7 @@ pub mod analytical;
 pub mod arch;
 pub mod baselines;
 pub mod bench;
+pub mod check;
 pub mod cluster;
 pub mod coordinator;
 pub mod dse;

@@ -25,6 +25,9 @@
 //!                     (event tallies + conservation check); `simulate` and
 //!                     `cluster simulate|autoscale` emit traces/metrics via
 //!                     --trace-out / --metrics-out
+//!   check             statically verify artifact JSON (plan front / fleet /
+//!                     trace / execution plan) with pointing diagnostics;
+//!                     every --front/--fleet/--trace load runs the same passes
 //!   calibrate         print model-vs-paper residuals for the anchor points
 
 use std::path::Path;
@@ -78,10 +81,11 @@ fn main() {
         "cluster" => cmd_cluster(&rest),
         "trace" => cmd_trace(&rest),
         "obs" => cmd_obs(&rest),
+        "check" => cmd_check(&rest),
         "calibrate" => cmd_calibrate(&rest),
         _ => {
             eprintln!(
-                "usage: ssr <report|dse|simulate|serve|cluster|trace|obs|calibrate> [flags]\n\
+                "usage: ssr <report|dse|simulate|serve|cluster|trace|obs|check|calibrate> [flags]\n\
                  run `ssr <subcommand> --help` for flags"
             );
             if sub == "help" {
@@ -102,6 +106,15 @@ fn parse_or_exit(cmd: Command, args: &[String]) -> ssr::util::cli::Matches {
             std::process::exit(2);
         }
     }
+}
+
+/// Resolve `--model` gracefully: an unknown name is a usage error (exit 2),
+/// not a panic.
+fn model_or_exit(name: &str) -> Result<&'static builder::ModelCfg, i32> {
+    builder::by_name(name).ok_or_else(|| {
+        eprintln!("unknown model '{name}' (known: deit_t, deit_t_160, deit_t_256, lv_vit_t)");
+        2
+    })
 }
 
 fn cmd_report(args: &[String]) -> i32 {
@@ -216,20 +229,122 @@ fn parse_ramp_or_exit(m: &Matches) -> RampSpec {
     }
 }
 
-/// `--trace trace.json` when given, else the `--ramp`/`--phase-s` ramp
-/// desugared to a single-class Poisson [`TraceSpec`] for `model`.
+/// `--trace trace.json` when given (verified by the `check` passes before
+/// deserializing), else the `--ramp`/`--phase-s` ramp desugared to a
+/// single-class Poisson [`TraceSpec`] for `model`.
 fn load_trace_or_exit(m: &Matches, model: &str) -> TraceSpec {
     let path = m.str("trace");
     if path.is_empty() {
         let ramp = parse_ramp_or_exit(m);
         return TraceSpec::single(model, RateCurve::from(&ramp), ArrivalProcess::Poisson);
     }
-    match TraceSpec::load(Path::new(&path)) {
+    match ssr::check::load_trace(Path::new(&path)) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
         }
+    }
+}
+
+/// `ssr check` — run the static artifact verifier on one or more files.
+fn cmd_check(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "ssr check",
+        "statically verify artifact JSON (plan front / fleet / trace / execution plan)",
+    )
+    .flag("trace", Some(""), "TraceSpec JSON to check fleet model coverage against")
+    .flag("arch", Some(""), "board name for resource-budget checks (e.g. vck190)")
+    .switch("json", "render diagnostics as a JSON report on stdout")
+    .switch("strict", "treat warnings as errors");
+    let m = parse_or_exit(cmd, args);
+    if m.positionals.is_empty() {
+        eprintln!(
+            "usage: ssr check <artifact.json>... [--trace t.json] [--arch NAME] [--json] [--strict]"
+        );
+        return 2;
+    }
+    let tracep = m.str("trace");
+    let trace_json = if tracep.is_empty() {
+        None
+    } else {
+        match ssr::check::load_json(Path::new(&tracep)) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+    let archp = m.str("arch");
+    let as_json = m.bool("json");
+    let mut failed = false;
+    let mut report = Vec::new();
+    for path in &m.positionals {
+        let j = match ssr::check::load_json(Path::new(path)) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("{e}");
+                failed = true;
+                continue;
+            }
+        };
+        let Some(kind) = ssr::check::detect(&j) else {
+            eprintln!(
+                "{path}: not a recognized SSR artifact (expected a top-level \
+                 steps/entries/devices/classes key)"
+            );
+            failed = true;
+            continue;
+        };
+        let opts = ssr::check::CheckOpts {
+            arch: if archp.is_empty() { None } else { Some(&archp) },
+            trace: trace_json.as_ref(),
+        };
+        let diags = ssr::check::check_artifact(&j, kind, &opts);
+        let errors =
+            diags.iter().filter(|d| d.severity == ssr::check::Severity::Error).count();
+        let warnings = diags.len() - errors;
+        if errors > 0 || (m.bool("strict") && warnings > 0) {
+            failed = true;
+        }
+        if as_json {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("file".to_string(), ssr::util::json::Json::Str(path.clone()));
+            o.insert(
+                "kind".to_string(),
+                ssr::util::json::Json::Str(kind.name().to_string()),
+            );
+            o.insert("diagnostics".to_string(), ssr::check::render_json(&diags));
+            report.push(ssr::util::json::Json::Obj(o));
+        } else {
+            if !diags.is_empty() {
+                println!("{}", ssr::check::render_text(&diags, path));
+            }
+            if errors > 0 {
+                println!(
+                    "{path}: {} FAILED ({errors} error{}, {warnings} warning{})",
+                    kind.name(),
+                    if errors == 1 { "" } else { "s" },
+                    if warnings == 1 { "" } else { "s" },
+                );
+            } else {
+                println!(
+                    "{path}: {} ok ({warnings} warning{})",
+                    kind.name(),
+                    if warnings == 1 { "" } else { "s" },
+                );
+            }
+        }
+    }
+    if as_json {
+        let rendered = ssr::util::json::Json::Arr(report).to_string();
+        println!("{rendered}");
+    }
+    if failed {
+        1
+    } else {
+        0
     }
 }
 
@@ -290,14 +405,23 @@ fn cmd_dse(args: &[String]) -> i32 {
         .flag("emit-front", Some(""), "write the latency-throughput front of plans to this JSON path")
         .flag("front-batches", Some("1,2,3,4,6"), "batch sizes evaluated when emitting the front");
     let m = parse_or_exit(cmd, args);
-    let cfg = builder::by_name(&m.str("model")).expect("unknown model");
+    let cfg = match model_or_exit(&m.str("model")) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
     let g = vit_graph(cfg);
     let platform = arch::vck190();
     let lat = m.str("lat-cons-ms");
     let lat_cons = if lat == "inf" {
         f64::INFINITY
     } else {
-        lat.parse::<f64>().unwrap() * 1e-3
+        match lat.parse::<f64>() {
+            Ok(v) => v * 1e-3,
+            Err(e) => {
+                eprintln!("bad --lat-cons-ms '{lat}': {e}");
+                return 2;
+            }
+        }
     };
     let params = EaParams {
         batch: m.usize("batch"),
@@ -447,7 +571,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
     if !frontp.is_empty() {
         // Adaptive-scheduler replay: deterministic queueing sim over the
         // serialized front, no artifacts required.
-        let front = match PlanFront::load(Path::new(&frontp)) {
+        let front = match ssr::check::load_front(Path::new(&frontp)) {
             Ok(f) => f,
             Err(e) => {
                 eprintln!("{e}");
@@ -530,7 +654,10 @@ fn cmd_simulate(args: &[String]) -> i32 {
         }
         return 0;
     }
-    let cfg = builder::by_name(&m.str("model")).expect("unknown model");
+    let cfg = match model_or_exit(&m.str("model")) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
     let g = vit_graph(cfg);
     let platform = arch::vck190();
     let genome = m.str("assign");
@@ -587,7 +714,13 @@ fn cmd_serve(args: &[String]) -> i32 {
     );
     let m = parse_or_exit(cmd, args);
     let dir = ssr::runtime::artifacts_dir(m.get("artifacts"));
-    let engine = Engine::load(&dir).expect("load artifacts (run `make artifacts`)");
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("loading artifacts from {}: {e} (run `make artifacts`)", dir.display());
+            return 1;
+        }
+    };
     println!(
         "engine on {} ({} executables)",
         engine.platform(),
@@ -602,7 +735,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     if !frontp.is_empty() {
         // Adaptive serving of the DSE front: hold every plan live, switch
         // against the SLO under the generated load ramp.
-        let front = match PlanFront::load(Path::new(&frontp)) {
+        let front = match ssr::check::load_front(Path::new(&frontp)) {
             Ok(f) => f,
             Err(e) => {
                 eprintln!("{e}");
@@ -690,12 +823,12 @@ fn cmd_serve(args: &[String]) -> i32 {
                 return 2;
             }
         };
-        let info = engine
-            .manifest
-            .models
-            .get(&model)
-            .unwrap_or_else(|| panic!("model {model} not in manifest"))
-            .clone();
+        let Some(info) = engine.manifest.models.get(&model).cloned() else {
+            let known: Vec<&str> =
+                engine.manifest.models.keys().map(String::as_str).collect();
+            eprintln!("model '{model}' not in manifest (available: {})", known.join(", "));
+            return 2;
+        };
         let plan = ExecutionPlan::from_depth(&model, info.depth, &a, batch);
         println!("{}", plan.summary());
         let s = PipelineServer::from_plan(engine, &plan).expect("compile plan stages");
@@ -774,11 +907,12 @@ fn cluster_flags(cmd: Command) -> Command {
         .flag("batches", Some("1,3,6"), "batch sizes for synthesized fronts")
 }
 
-/// `--fleet fleet.json` when given, else synthesize from `--synth`.
+/// `--fleet fleet.json` when given (verified by the `check` passes before
+/// deserializing), else synthesize from `--synth`.
 fn load_fleet(m: &Matches) -> Result<FleetSpec, String> {
     let path = m.str("fleet");
     if !path.is_empty() {
-        FleetSpec::load(Path::new(&path))
+        ssr::check::load_fleet(Path::new(&path))
     } else {
         let mix = parse_mix(&m.str("synth"))?;
         synth_fleet("synthetic", &m.str("model"), &mix, &m.usize_list("batches"))
@@ -945,7 +1079,13 @@ fn cluster_serve(args: &[String]) -> i32 {
     let cfg = scheduler_cfg(&m);
     let seed = m.usize("load-seed") as u64;
     let dir = ssr::runtime::artifacts_dir(m.get("artifacts"));
-    let engine = Engine::load(&dir).expect("load artifacts (run `make artifacts`)");
+    let engine = match Engine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("loading artifacts from {}: {e} (run `make artifacts`)", dir.display());
+            return 1;
+        }
+    };
     print!("{}", fleet.describe());
     let mut server = match FleetServer::new(engine, &fleet, cfg, policy, seed) {
         Ok(s) => s,
@@ -1299,7 +1439,7 @@ fn trace_show(args: &[String]) -> i32 {
     let cmd = Command::new("ssr trace show", "describe a TraceSpec JSON")
         .flag("trace", Some("trace.json"), "TraceSpec JSON path");
     let m = parse_or_exit(cmd, args);
-    match TraceSpec::load(Path::new(&m.str("trace"))) {
+    match ssr::check::load_trace(Path::new(&m.str("trace"))) {
         Ok(t) => {
             print!("{}", t.describe());
             0

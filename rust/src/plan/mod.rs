@@ -39,8 +39,11 @@ pub mod front;
 
 pub use front::{FrontEntry, PlanFront};
 
+use std::path::Path;
+
 use crate::dse::Assignment;
 use crate::graph::{Graph, LayerClass, ALL_CLASSES};
+use crate::util::json::Json;
 
 /// Execution granularity of a plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +52,24 @@ pub enum Granularity {
     Class,
     /// Coarsened to the four fused runtime stages (embed/attn/mlp/head).
     Fused,
+}
+
+impl Granularity {
+    /// Serialized name (`granularity` field of a plan artifact).
+    pub fn name(self) -> &'static str {
+        match self {
+            Granularity::Class => "class",
+            Granularity::Fused => "fused",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Granularity> {
+        match s {
+            "class" => Some(Granularity::Class),
+            "fused" => Some(Granularity::Fused),
+            _ => None,
+        }
+    }
 }
 
 /// The executable unit a plan step runs. Class units map 1:1 onto
@@ -136,6 +157,23 @@ impl StageUnit {
 
     pub fn is_fused(self) -> bool {
         matches!(self, StageUnit::Attn | StageUnit::Mlp)
+    }
+
+    /// Inverse of [`StageUnit::name`] (plan deserialization).
+    pub fn parse(s: &str) -> Option<StageUnit> {
+        match s {
+            "embed" => Some(StageUnit::Embed),
+            "qkv" => Some(StageUnit::Qkv),
+            "bmm0" => Some(StageUnit::Bmm0),
+            "bmm1" => Some(StageUnit::Bmm1),
+            "proj" => Some(StageUnit::Proj),
+            "fc1" => Some(StageUnit::Fc1),
+            "fc2" => Some(StageUnit::Fc2),
+            "head" => Some(StageUnit::Head),
+            "attn" => Some(StageUnit::Attn),
+            "mlp" => Some(StageUnit::Mlp),
+            _ => None,
+        }
     }
 }
 
@@ -296,7 +334,7 @@ pub fn project_stage4(a: &Assignment) -> ([usize; 4], CoarsenReport) {
 }
 
 /// The materialized execution plan for one design point.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExecutionPlan {
     pub model: String,
     pub depth: usize,
@@ -562,6 +600,160 @@ impl ExecutionPlan {
             self.cross_acc_edges(),
         )
     }
+
+    /// Serialize as the plan artifact JSON (deterministic key order via
+    /// `BTreeMap`, like every other artifact).
+    pub fn to_json(&self) -> Json {
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("unit".to_string(), Json::Str(s.unit.name().to_string()));
+                m.insert(
+                    "block".to_string(),
+                    s.block.map_or(Json::Null, |b| Json::Num(b as f64)),
+                );
+                m.insert("acc".to_string(), Json::Num(s.acc as f64));
+                m.insert(
+                    "node".to_string(),
+                    s.node.map_or(Json::Null, |n| Json::Num(n as f64)),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        let edges: Vec<Json> = self
+            .edges
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("from".to_string(), Json::Num(e.from as f64));
+                m.insert("to".to_string(), Json::Num(e.to as f64));
+                m.insert("bytes".to_string(), Json::Num(e.bytes as f64));
+                m.insert("cross_acc".to_string(), Json::Bool(e.cross_acc));
+                Json::Obj(m)
+            })
+            .collect();
+        let assignment: Vec<Json> = ALL_CLASSES
+            .iter()
+            .map(|&c| Json::Num(self.assignment.acc_of(c) as f64))
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("depth".to_string(), Json::Num(self.depth as f64));
+        m.insert("micro_batch".to_string(), Json::Num(self.micro_batch as f64));
+        m.insert(
+            "granularity".to_string(),
+            Json::Str(self.granularity.name().to_string()),
+        );
+        m.insert("assignment".to_string(), Json::Arr(assignment));
+        m.insert("nacc".to_string(), Json::Num(self.nacc as f64));
+        m.insert("steps".to_string(), Json::Arr(steps));
+        m.insert("edges".to_string(), Json::Arr(edges));
+        Json::Obj(m)
+    }
+
+    /// Deserialize a plan artifact; runs [`ExecutionPlan::validate`] so a
+    /// structurally broken plan never reaches a consumer.
+    pub fn from_json(j: &Json) -> Result<ExecutionPlan, String> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("plan missing 'model'")?
+            .to_string();
+        let depth = j.get("depth").and_then(Json::as_usize).ok_or("plan missing 'depth'")?;
+        let micro_batch = j
+            .get("micro_batch")
+            .and_then(Json::as_usize)
+            .ok_or("plan missing 'micro_batch'")?;
+        let granularity = j
+            .get("granularity")
+            .and_then(Json::as_str)
+            .and_then(Granularity::parse)
+            .ok_or("plan missing or bad 'granularity'")?;
+        let acc_of: Vec<usize> = j
+            .get("assignment")
+            .and_then(Json::as_arr)
+            .ok_or("plan missing 'assignment'")?
+            .iter()
+            .map(|x| x.as_usize().ok_or("bad assignment acc id"))
+            .collect::<Result<_, _>>()?;
+        if acc_of.len() != ALL_CLASSES.len() {
+            return Err(format!("assignment has {} classes, expected 8", acc_of.len()));
+        }
+        let nacc = j.get("nacc").and_then(Json::as_usize).ok_or("plan missing 'nacc'")?;
+        let mut steps = Vec::new();
+        for (i, s) in j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or("plan missing 'steps'")?
+            .iter()
+            .enumerate()
+        {
+            steps.push(PlanStep {
+                unit: s
+                    .get("unit")
+                    .and_then(Json::as_str)
+                    .and_then(StageUnit::parse)
+                    .ok_or_else(|| format!("step {i} missing or bad 'unit'"))?,
+                block: s.get("block").and_then(Json::as_usize),
+                acc: s
+                    .get("acc")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("step {i} missing 'acc'"))?,
+                node: s.get("node").and_then(Json::as_usize),
+            });
+        }
+        let mut edges = Vec::new();
+        for (i, e) in j
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or("plan missing 'edges'")?
+            .iter()
+            .enumerate()
+        {
+            edges.push(ForwardEdge {
+                from: e
+                    .get("from")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("edge {i} missing 'from'"))?,
+                to: e
+                    .get("to")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("edge {i} missing 'to'"))?,
+                bytes: e
+                    .get("bytes")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("edge {i} missing 'bytes'"))? as u64,
+                cross_acc: e
+                    .get("cross_acc")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| format!("edge {i} missing 'cross_acc'"))?,
+            });
+        }
+        let plan = ExecutionPlan {
+            model,
+            depth,
+            micro_batch,
+            granularity,
+            assignment: Assignment::new(acc_of),
+            nacc,
+            steps,
+            edges,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+    }
+
+    pub fn load(path: &Path) -> Result<ExecutionPlan, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        ExecutionPlan::from_json(&Json::parse(&text)?)
+    }
 }
 
 /// Chain edges (step i-1 → step i) for single-stream plans.
@@ -691,6 +883,57 @@ mod tests {
         let total: usize = (0..p.nacc).map(|a| p.units_on(a).len()).sum();
         assert_eq!(total, 8);
         assert!(p.summary().contains("5 accs"));
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let g = vit_graph(&DEIT_T);
+        for plan in [
+            ExecutionPlan::from_graph(&g, &hybrid5(), 6),
+            ExecutionPlan::from_depth("deit_t", 12, &Assignment::spatial(), 1),
+            ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 6).coarsen().0,
+        ] {
+            let back = ExecutionPlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(back, plan);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_structural_breakage() {
+        let p = ExecutionPlan::from_depth("deit_t", 2, &hybrid5(), 1);
+        let mut j = p.to_json();
+        // Reverse an edge: from >= to is a forwarding cycle.
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(edges)) = m.get_mut("edges") {
+                if let Json::Obj(e) = &mut edges[3] {
+                    e.insert("to".to_string(), Json::Num(0.0));
+                }
+            }
+        }
+        let err = ExecutionPlan::from_json(&j).unwrap_err();
+        assert!(err.contains("not topological"), "{err}");
+    }
+
+    #[test]
+    fn stage_unit_parse_inverts_name() {
+        for unit in [
+            StageUnit::Embed,
+            StageUnit::Qkv,
+            StageUnit::Bmm0,
+            StageUnit::Bmm1,
+            StageUnit::Proj,
+            StageUnit::Fc1,
+            StageUnit::Fc2,
+            StageUnit::Head,
+            StageUnit::Attn,
+            StageUnit::Mlp,
+        ] {
+            assert_eq!(StageUnit::parse(unit.name()), Some(unit));
+        }
+        assert_eq!(StageUnit::parse("conv"), None);
+        assert_eq!(Granularity::parse("class"), Some(Granularity::Class));
+        assert_eq!(Granularity::parse("fused"), Some(Granularity::Fused));
+        assert_eq!(Granularity::parse("mixed"), None);
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub fn best_hybrid_exhaustive(
         .into_iter()
         .flatten()
         .filter(|(_, e)| e.latency_s <= lat_cons)
-        .max_by(|(_, a), (_, b)| a.tops.partial_cmp(&b.tops).unwrap())
+        .max_by(|(_, a), (_, b)| a.tops.total_cmp(&b.tops))
 }
 
 // ---------------------------------------------------------------------------
@@ -142,7 +142,7 @@ pub fn fig2(ctx: &Ctx) -> Fig2 {
                 .iter()
                 .flatten()
                 .map(|ev| (ev, ev.evaluate(&ctx.platform, &g, b)))
-                .max_by(|(_, x), (_, y)| x.tops.partial_cmp(&y.tops).unwrap())
+                .max_by(|(_, x), (_, y)| x.tops.total_cmp(&y.tops))
             {
                 hybrid.push(Point {
                     latency_ms: e.latency_s * 1e3,
@@ -247,7 +247,7 @@ pub fn table5(ctx: &Ctx, models: &[&str]) -> Vec<Table5Row> {
                 .iter()
                 .flatten()
                 .map(|ev| (ev, ev.evaluate(&ctx.platform, &g, batch)))
-                .max_by(|(_, a), (_, b)| a.tops.partial_cmp(&b.tops).unwrap())
+                .max_by(|(_, a), (_, b)| a.tops.total_cmp(&b.tops))
                 .expect("feasible SSR design");
             let cell = |l: f64, t: f64, e: f64| Table5Cell { latency_ms: l, tops: t, gops_w: e };
             rows.push(Table5Row {
@@ -390,7 +390,7 @@ pub fn table7(ctx: &Ctx, batch: usize) -> Vec<Table7Row> {
             let (ev, e) = evals
                 .into_iter()
                 .flatten()
-                .min_by(|(_, a), (_, b)| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+                .min_by(|(_, a), (_, b)| a.latency_s.total_cmp(&b.latency_s))
                 .expect("feasible design");
             let sim = sim::simulate(&ctx.platform, &ev, &g, batch);
             Table7Row {

@@ -755,7 +755,9 @@ fn run_core<S: LatencySink, R: Recorder>(
             let done_s = devs[done_dev].on_completion_into(&mut sojourns);
             for &s in &sojourns {
                 sink.on_sojourn(done_s, s);
-                rec.record(TraceEvent::Served { at_s: done_s, dev: done_dev, sojourn_s: s });
+                if rec.enabled() {
+                    rec.record(TraceEvent::Served { at_s: done_s, dev: done_dev, sojourn_s: s });
+                }
             }
             tallies.makespan_s = tallies.makespan_s.max(done_s);
             // completing may have started the next launch from the queue
@@ -811,7 +813,9 @@ fn run_core<S: LatencySink, R: Recorder>(
                     }
                 }
             }
-            rec.record(TraceEvent::Window { window: w, end_s: t_win });
+            if rec.enabled() {
+                rec.record(TraceEvent::Window { window: w, end_s: t_win });
+            }
             let moved = ctl.after_window(devs, w, t_win);
             if ctl.mutates_fleet() {
                 // The hook may have failed devices (stale keys — handled
@@ -828,13 +832,15 @@ fn run_core<S: LatencySink, R: Recorder>(
                         let before = devs[di].next_completion_s().to_bits();
                         let admitted = devs[di].on_requeue(req, t_win);
                         let after = devs[di].next_completion_s();
-                        rec.record(TraceEvent::Requeue {
-                            at_s: t_win,
-                            window: w,
-                            dev: di,
-                            class,
-                            admitted,
-                        });
+                        if rec.enabled() {
+                            rec.record(TraceEvent::Requeue {
+                                at_s: t_win,
+                                window: w,
+                                dev: di,
+                                class,
+                                admitted,
+                            });
+                        }
                         if after.to_bits() != before {
                             if rec.enabled() {
                                 rec.record(TraceEvent::Launch {
@@ -849,7 +855,9 @@ fn run_core<S: LatencySink, R: Recorder>(
                     }
                     None => {
                         tallies.requeue_lost += 1;
-                        rec.record(TraceEvent::RequeueLost { at_s: t_win, window: w, class });
+                        if rec.enabled() {
+                            rec.record(TraceEvent::RequeueLost { at_s: t_win, window: w, class });
+                        }
                     }
                 }
             }
@@ -860,16 +868,20 @@ fn run_core<S: LatencySink, R: Recorder>(
             match route(devs, class, t) {
                 None => {
                     tallies.unroutable += 1;
-                    rec.record(TraceEvent::Unroutable { at_s: t, class });
+                    if rec.enabled() {
+                        rec.record(TraceEvent::Unroutable { at_s: t, class });
+                    }
                 }
                 Some(di) => {
                     let before = devs[di].next_completion_s().to_bits();
                     let admitted = devs[di].on_arrival(t, class);
                     let after = devs[di].next_completion_s();
-                    if admitted {
-                        rec.record(TraceEvent::Arrival { at_s: t, dev: di, class });
-                    } else {
-                        rec.record(TraceEvent::Shed { at_s: t, dev: di, class });
+                    if rec.enabled() {
+                        if admitted {
+                            rec.record(TraceEvent::Arrival { at_s: t, dev: di, class });
+                        } else {
+                            rec.record(TraceEvent::Shed { at_s: t, dev: di, class });
+                        }
                     }
                     if after.to_bits() != before {
                         if rec.enabled() {

@@ -1,0 +1,346 @@
+//! `ssr check` end-to-end: every artifact the repo generates passes the
+//! static verifier clean, and seeded single-field mutations of each
+//! artifact kind are rejected with a diagnostic pointing at the mutated
+//! field (`json_path`), not a generic parse failure.
+
+use std::collections::BTreeMap;
+
+use ssr::check::{self, check_artifact, detect, ArtifactKind, CheckOpts};
+use ssr::cluster::fleet::{device_front, parse_mix, synth_fleet};
+use ssr::dse::Assignment;
+use ssr::plan::ExecutionPlan;
+use ssr::traffic::trace::{ArrivalProcess, RateCurve, TraceClass, TraceSpec};
+use ssr::util::json::Json;
+
+fn obj(j: &mut Json) -> &mut BTreeMap<String, Json> {
+    match j {
+        Json::Obj(m) => m,
+        _ => panic!("expected object"),
+    }
+}
+
+fn arr(j: &mut Json) -> &mut Vec<Json> {
+    match j {
+        Json::Arr(a) => a,
+        _ => panic!("expected array"),
+    }
+}
+
+fn hybrid5() -> Assignment {
+    Assignment::new(vec![0, 1, 2, 2, 1, 3, 4, 0])
+}
+
+fn assert_clean(j: &Json, kind: ArtifactKind, opts: &CheckOpts) {
+    let diags = check_artifact(j, kind, opts);
+    assert!(diags.is_empty(), "expected a clean {:?} check, got: {diags:?}", kind);
+}
+
+fn assert_rejected(j: &Json, kind: ArtifactKind, opts: &CheckOpts, code: &str, path: &str) {
+    let diags = check_artifact(j, kind, opts);
+    assert!(check::has_errors(&diags), "expected errors for {:?}, got: {diags:?}", kind);
+    assert!(
+        diags.iter().any(|d| d.code == code && d.json_path == path),
+        "expected {code} at {path}, got: {diags:?}"
+    );
+}
+
+fn mixed_trace() -> TraceSpec {
+    TraceSpec::new(vec![
+        TraceClass {
+            model: "deit_t".into(),
+            curve: RateCurve::Constant { rate_rps: 40.0, duration_s: 20.0 },
+            process: ArrivalProcess::Poisson,
+        },
+        TraceClass {
+            model: "deit_t".into(),
+            curve: RateCurve::Piecewise { rates_rps: vec![10.0, 30.0, 20.0], phase_s: 5.0 },
+            process: ArrivalProcess::LognormalGaps { sigma: 1.2 },
+        },
+        TraceClass {
+            model: "deit_t".into(),
+            curve: RateCurve::Diurnal {
+                base_rps: 25.0,
+                amplitude_rps: 15.0,
+                period_s: 60.0,
+                duration_s: 120.0,
+            },
+            process: ArrivalProcess::ParetoGaps { alpha: 1.8 },
+        },
+        TraceClass {
+            model: "deit_t".into(),
+            curve: RateCurve::Flash {
+                base_rps: 10.0,
+                peak_rps: 80.0,
+                at_s: 30.0,
+                ramp_s: 5.0,
+                decay_s: 10.0,
+                duration_s: 90.0,
+            },
+            process: ArrivalProcess::Poisson,
+        },
+    ])
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Repo-generated artifacts pass clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn generated_fronts_pass_clean() {
+    let versal = device_front("vck190", "deit_t", &[1, 2, 4, 6]).unwrap().to_json();
+    assert_eq!(detect(&versal), Some(ArtifactKind::Front));
+    assert_clean(&versal, ArtifactKind::Front, &CheckOpts::default());
+    // With the board named, the TOPS budget pass runs too.
+    assert_clean(&versal, ArtifactKind::Front, &CheckOpts { arch: Some("vck190"), trace: None });
+
+    let mono = device_front("u250", "deit_t", &[1, 4]).unwrap().to_json();
+    assert_clean(&mono, ArtifactKind::Front, &CheckOpts { arch: Some("u250"), trace: None });
+}
+
+#[test]
+fn generated_fleet_passes_clean_with_trace_coverage() {
+    let mix = parse_mix("vck190:2,u250:1").unwrap();
+    let fleet = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap().to_json();
+    assert_eq!(detect(&fleet), Some(ArtifactKind::Fleet));
+    let trace = mixed_trace().to_json();
+    assert_clean(&fleet, ArtifactKind::Fleet, &CheckOpts { arch: None, trace: Some(&trace) });
+}
+
+#[test]
+fn generated_traces_pass_clean() {
+    let t = mixed_trace().to_json();
+    assert_eq!(detect(&t), Some(ArtifactKind::Trace));
+    assert_clean(&t, ArtifactKind::Trace, &CheckOpts::default());
+
+    let zipf = TraceSpec::zipf_mix(
+        &["deit_t", "deit_t_160", "lv_vit_t"],
+        &RateCurve::Constant { rate_rps: 120.0, duration_s: 30.0 },
+        ArrivalProcess::Poisson,
+        1.0,
+    )
+    .unwrap()
+    .to_json();
+    assert_clean(&zipf, ArtifactKind::Trace, &CheckOpts::default());
+}
+
+#[test]
+fn generated_plans_pass_clean() {
+    let opts = CheckOpts { arch: Some("vck190"), trace: None };
+    for plan in [
+        ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 6),
+        ExecutionPlan::from_depth("deit_t", 12, &Assignment::spatial(), 1),
+        ExecutionPlan::from_depth("deit_t", 12, &Assignment::sequential(), 1),
+        ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 6).coarsen().0,
+    ] {
+        let j = plan.to_json();
+        assert_eq!(detect(&j), Some(ArtifactKind::Plan));
+        assert_clean(&j, ArtifactKind::Plan, &opts);
+    }
+}
+
+#[test]
+fn zero_load_trace_warns_but_does_not_fail() {
+    let t = TraceSpec::single(
+        "deit_t",
+        RateCurve::Constant { rate_rps: 0.0, duration_s: 10.0 },
+        ArrivalProcess::Poisson,
+    )
+    .to_json();
+    let diags = check_artifact(&t, ArtifactKind::Trace, &CheckOpts::default());
+    assert!(!check::has_errors(&diags), "zero load is a warning, got: {diags:?}");
+    assert!(diags.iter().any(|d| d.code == "T406"), "expected T406, got: {diags:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Seeded mutations are each rejected with a pointing diagnostic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_negative_rate_is_rejected() {
+    let mut t = mixed_trace().to_json();
+    let classes = arr(obj(&mut t).get_mut("classes").unwrap());
+    let curve = obj(&mut classes[0]).get_mut("curve").unwrap();
+    obj(curve).insert("rate_rps".into(), Json::Num(-5.0));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "T404",
+        "/classes/0/curve/rate_rps",
+    );
+}
+
+#[test]
+fn mutation_nan_latency_is_rejected() {
+    let mut f = device_front("vck190", "deit_t", &[1, 2, 4, 6]).unwrap().to_json();
+    let entries = arr(obj(&mut f).get_mut("entries").unwrap());
+    assert!(entries.len() >= 2, "front too small to mutate entry 1");
+    obj(&mut entries[1]).insert("latency_ms".into(), Json::Num(f64::NAN));
+    assert_rejected(
+        &f,
+        ArtifactKind::Front,
+        &CheckOpts::default(),
+        "F202",
+        "/entries/1/latency_ms",
+    );
+}
+
+#[test]
+fn mutation_dominated_entry_is_rejected() {
+    // Entry 0 is strictly worse on both axes — a front must be pruned.
+    let mk = |lat: f64, rps: f64| {
+        let mut e = BTreeMap::new();
+        e.insert("assign".into(), Json::Arr(vec![Json::Num(0.0); 8]));
+        e.insert("batch".into(), Json::Num(1.0));
+        e.insert("latency_ms".into(), Json::Num(lat));
+        e.insert("rps".into(), Json::Num(rps));
+        e.insert("label".into(), Json::Str("test".into()));
+        Json::Obj(e)
+    };
+    let mut top = BTreeMap::new();
+    top.insert("model".into(), Json::Str("deit_t".into()));
+    top.insert("depth".into(), Json::Num(12.0));
+    top.insert("entries".into(), Json::Arr(vec![mk(10.0, 50.0), mk(5.0, 100.0)]));
+    let f = Json::Obj(top);
+    assert_rejected(&f, ArtifactKind::Front, &CheckOpts::default(), "F204", "/entries/0");
+}
+
+#[test]
+fn mutation_cyclic_forwarding_edge_is_rejected() {
+    let mut p = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 6).to_json();
+    let edges = arr(obj(&mut p).get_mut("edges").unwrap());
+    assert!(!edges.is_empty(), "hybrid plan must have forwarding edges");
+    let k = edges.len() - 1;
+    // Point the last edge back at step 0: from >= to is a cycle by
+    // construction in a topological schedule.
+    obj(&mut edges[k]).insert("to".into(), Json::Num(0.0));
+    assert_rejected(
+        &p,
+        ArtifactKind::Plan,
+        &CheckOpts::default(),
+        "P104",
+        &format!("/edges/{k}/to"),
+    );
+}
+
+#[test]
+fn mutation_dropped_stage_is_rejected() {
+    let mut p = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 1).to_json();
+    let steps = arr(obj(&mut p).get_mut("steps").unwrap());
+    let qkv = steps
+        .iter()
+        .position(|s| s.get("unit").and_then(Json::as_str) == Some("qkv"))
+        .expect("class plan has qkv steps");
+    steps.remove(qkv);
+    let diags = check_artifact(&p, ArtifactKind::Plan, &CheckOpts::default());
+    assert!(check::has_errors(&diags));
+    assert!(
+        diags.iter().any(|d| d.code == "P106"
+            && d.json_path == "/steps"
+            && d.message.contains("missing")
+            && d.message.contains("qkv")),
+        "expected a P106 missing-qkv diagnostic, got: {diags:?}"
+    );
+}
+
+#[test]
+fn mutation_unknown_platform_is_rejected() {
+    let mix = parse_mix("vck190:1,u250:1").unwrap();
+    let mut f = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap().to_json();
+    let devices = arr(obj(&mut f).get_mut("devices").unwrap());
+    obj(&mut devices[0]).insert("platform".into(), Json::Str("tpu_v9".into()));
+    assert_rejected(
+        &f,
+        ArtifactKind::Fleet,
+        &CheckOpts::default(),
+        "C303",
+        "/devices/0/platform",
+    );
+}
+
+#[test]
+fn mutation_uncovered_trace_model_is_rejected() {
+    let mix = parse_mix("vck190:1").unwrap();
+    let fleet = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap().to_json();
+    let trace = TraceSpec::single(
+        "deit_s",
+        RateCurve::Constant { rate_rps: 10.0, duration_s: 5.0 },
+        ArrivalProcess::Poisson,
+    )
+    .to_json();
+    assert_rejected(
+        &fleet,
+        ArtifactKind::Fleet,
+        &CheckOpts { arch: None, trace: Some(&trace) },
+        "C305",
+        "/devices",
+    );
+}
+
+#[test]
+fn spatial_plan_on_monolithic_board_is_rejected() {
+    let p = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 1).to_json();
+    assert_rejected(
+        &p,
+        ArtifactKind::Plan,
+        &CheckOpts { arch: Some("u250"), trace: None },
+        "P110",
+        "/nacc",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Verified loads: the CLI boundary helpers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn verified_loads_round_trip_clean_files() {
+    let dir = std::env::temp_dir().join(format!("ssr-check-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let plan = ExecutionPlan::from_depth("deit_t", 12, &hybrid5(), 6);
+    plan.save(&dir.join("plan.json")).unwrap();
+    assert_eq!(check::load_plan(&dir.join("plan.json")).unwrap(), plan);
+
+    let front = device_front("vck190", "deit_t", &[1, 6]).unwrap();
+    front.save(&dir.join("front.json")).unwrap();
+    assert_eq!(check::load_front(&dir.join("front.json")).unwrap(), front);
+
+    let trace = mixed_trace();
+    trace.save(&dir.join("trace.json")).unwrap();
+    assert_eq!(check::load_trace(&dir.join("trace.json")).unwrap(), trace);
+
+    let mix = parse_mix("vck190:2,u250:1").unwrap();
+    let fleet = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap();
+    fleet.save(&dir.join("fleet.json")).unwrap();
+    assert_eq!(check::load_fleet(&dir.join("fleet.json")).unwrap(), fleet);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn verified_load_refuses_a_corrupt_file_with_the_diagnostic() {
+    let dir = std::env::temp_dir().join(format!("ssr-check-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mix = parse_mix("vck190:1").unwrap();
+    let mut f = synth_fleet("edge", "deit_t", &mix, &[1, 6]).unwrap().to_json();
+    let devices = arr(obj(&mut f).get_mut("devices").unwrap());
+    obj(&mut devices[0]).insert("platform".into(), Json::Str("tpu_v9".into()));
+    let path = dir.join("fleet.json");
+    std::fs::write(&path, f.to_string() + "\n").unwrap();
+
+    let err = check::load_fleet(&path).unwrap_err();
+    assert!(err.contains("C303"), "error should carry the diagnostic code: {err}");
+    assert!(err.contains("tpu_v9"), "error should name the bad platform: {err}");
+    assert!(err.contains("ssr check"), "error should point at the full report: {err}");
+
+    // Wrong-kind load: a trace file handed to --fleet is refused up front.
+    let trace = mixed_trace();
+    trace.save(&dir.join("trace.json")).unwrap();
+    let err = check::load_fleet(&dir.join("trace.json")).unwrap_err();
+    assert!(err.contains("trace-spec"), "kind mismatch should name both kinds: {err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,596 @@
+//! ssr-lint — dependency-free determinism lint for the SSR rust tree.
+//!
+//! The simulator, DSE, and artifact writers promise bit-identical output
+//! for identical inputs; that promise is easy to break with one innocuous
+//! `HashMap` iteration or `partial_cmp().unwrap()`. This binary enforces
+//! the source-level invariants behind the promise with a token scan over
+//! `rust/src/` (comments and string literals stripped first, so prose and
+//! test fixtures never trip it):
+//!
+//! * **L001** — `HashMap`/`HashSet` in serialization/export modules
+//!   (`util/json.rs`, `obs/export.rs`, `obs/metrics.rs`). Those files
+//!   write artifacts byte-for-byte; only ordered containers may appear.
+//! * **L002** — `std::time` / `Instant` / `SystemTime` outside `bench/`.
+//!   Wall-clock reads in model/sim code make results machine-dependent.
+//!   Audited exceptions (live PJRT serving paths that genuinely measure
+//!   wall time) live in `.lint-allow`.
+//! * **L003** — `partial_cmp` anywhere. Float orderings must use
+//!   `total_cmp`: a NaN-poisoned `partial_cmp().unwrap()` panics, and
+//!   `sort_by` with a non-total order is unspecified.
+//! * **L004** — entropy seeding (`from_entropy`, `thread_rng`, `OsRng`,
+//!   `getrandom`, `RandomState`). All randomness flows from the
+//!   split-stream `util::rng` seeded by explicit u64s.
+//! * **L005** — every `rec.record(` in `sim/` or `cluster/` must sit
+//!   inside a `rec.enabled()`-gated scope, so the recorder-off event loop
+//!   monomorphizes to the pre-observability loop (no event construction
+//!   cost when tracing is off).
+//!
+//! Usage: `ssr-lint [--allow .lint-allow] [--self-test] <dir>...`
+//! Exit 0 clean, 1 on violations, 2 on usage/IO errors.
+//!
+//! Built standalone (`make lint`) with `rustc -O`; deliberately NOT a
+//! cargo workspace member so it needs no lockfile entry and compiles on
+//! any stable toolchain.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    code: &'static str,
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let mut allow_path: Option<String> = None;
+    let mut dirs: Vec<String> = Vec::new();
+    let mut self_test = false;
+    let mut args = env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--allow" => match args.next() {
+                Some(p) => allow_path = Some(p),
+                None => {
+                    eprintln!("--allow requires a file argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--self-test" => self_test = true,
+            _ => dirs.push(a),
+        }
+    }
+
+    if self_test {
+        return run_self_test();
+    }
+    if dirs.is_empty() {
+        eprintln!("usage: ssr-lint [--allow .lint-allow] [--self-test] <dir>...");
+        return ExitCode::from(2);
+    }
+
+    let allow = match &allow_path {
+        None => Vec::new(),
+        Some(p) => match fs::read_to_string(p) {
+            Ok(s) => parse_allow(&s),
+            Err(e) => {
+                eprintln!("reading allow file {p}: {e}");
+                return ExitCode::from(2);
+            }
+        },
+    };
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for d in &dirs {
+        walk(Path::new(d), &mut files);
+    }
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut scanned = 0usize;
+    for f in &files {
+        let src = match fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("reading {}: {e}", f.display());
+                return ExitCode::from(2);
+            }
+        };
+        scanned += 1;
+        let path = f.to_string_lossy().replace('\\', "/");
+        violations.extend(check_file(&path, &src));
+    }
+
+    let mut used = vec![false; allow.len()];
+    violations.retain(|v| {
+        for (i, a) in allow.iter().enumerate() {
+            if a.code == v.code && v.file.ends_with(&a.path) {
+                used[i] = true;
+                return false;
+            }
+        }
+        true
+    });
+    for (i, a) in allow.iter().enumerate() {
+        if !used[i] {
+            eprintln!(
+                "warning: stale .lint-allow entry `{} {}` matched nothing (line {})",
+                a.code, a.path, a.line
+            );
+        }
+    }
+
+    for v in &violations {
+        println!("error[{}] {}:{}: {}", v.code, v.file, v.line, v.msg);
+    }
+    if violations.is_empty() {
+        println!("ssr-lint: {scanned} files clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("ssr-lint: {} violation(s) in {scanned} files", violations.len());
+        ExitCode::from(1)
+    }
+}
+
+struct Allow {
+    code: String,
+    path: String,
+    line: usize,
+}
+
+/// `.lint-allow` lines: `CODE path # justification`. The justification is
+/// mandatory — an exception nobody can explain is a bug, not an exception.
+fn parse_allow(s: &str) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (i, raw) in s.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (entry, justification) = match line.split_once('#') {
+            Some((e, j)) => (e.trim(), j.trim()),
+            None => (line, ""),
+        };
+        let mut parts = entry.split_whitespace();
+        let (code, path) = (parts.next(), parts.next());
+        match (code, path) {
+            (Some(c), Some(p)) if justification.len() >= 8 => out.push(Allow {
+                code: c.to_string(),
+                path: p.to_string(),
+                line: i + 1,
+            }),
+            _ => eprintln!(
+                "warning: .lint-allow line {} malformed (want `CODE path # why`): {raw}",
+                i + 1
+            ),
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comment / string stripping
+// ---------------------------------------------------------------------------
+
+/// Replace comments and string/char-literal contents with spaces,
+/// preserving every newline so byte offsets map to the original lines.
+/// Handles line comments, nested block comments, escapes, raw strings
+/// (`r"…"`, `r#"…"#`, byte variants), and distinguishes char literals
+/// from lifetimes (`'a`, `'static`).
+fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let keep = |c: u8| -> u8 {
+        if c == b'\n' {
+            b'\n'
+        } else {
+            b' '
+        }
+    };
+    while i < b.len() {
+        let c = b[i];
+        // line comment
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string: r"…", r#"…"#, br"…", br#"…"# (word boundary before r/b)
+        let bounded = i == 0 || !is_ident(b[i - 1]);
+        if bounded && (c == b'r' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'r')) {
+            let start = if c == b'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            while j < b.len() && b[j] == b'#' {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'"' && b[start] == b'r' {
+                let hashes = j - (start + 1);
+                // emit the prefix verbatim-as-spaces
+                for _ in i..=j {
+                    out.push(b' ');
+                }
+                i = j + 1;
+                // scan for `"` followed by `hashes` of `#`
+                'raw: while i < b.len() {
+                    if b[i] == b'"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == b'#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(b' ');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // plain / byte string
+        if c == b'"' {
+            out.push(b' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    out.push(b' ');
+                    out.push(keep(b[i + 1]));
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    out.push(b' ');
+                    i += 1;
+                    break;
+                }
+                out.push(keep(b[i]));
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // escaped char literal: '\n', '\\', '\u{…}'
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                while i < b.len() && b[i] != b'\'' {
+                    out.push(keep(b[i]));
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < b.len() && b[i + 2] == b'\'' {
+                // plain char literal 'x'
+                out.push(b' ');
+                out.push(b' ');
+                out.push(b' ');
+                i += 3;
+                continue;
+            }
+            // lifetime — pass through
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    String::from_utf8(out).expect("stripper emits ascii-or-original bytes")
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// Byte offsets of word-boundary occurrences of `tok` in `s`.
+fn token_offsets(s: &str, tok: &str) -> Vec<usize> {
+    let sb = s.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = s[from..].find(tok) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(sb[at - 1]);
+        let end = at + tok.len();
+        let last = tok.as_bytes()[tok.len() - 1];
+        let after_ok = !is_ident(last) || end >= sb.len() || !is_ident(sb[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+fn line_of(s: &str, off: usize) -> usize {
+    s.as_bytes()[..off].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.contains(&format!("/{dir}/"))
+}
+
+fn check_file(path: &str, src: &str) -> Vec<Violation> {
+    let s = strip(src);
+    let mut out: Vec<Violation> = Vec::new();
+    let mut push = |code: &'static str, line: usize, msg: String| {
+        if !out.iter().any(|v| v.code == code && v.line == line) {
+            out.push(Violation { code, file: path.to_string(), line, msg });
+        }
+    };
+
+    // L001 — unordered containers in byte-exact serialization modules.
+    let l001_files = ["util/json.rs", "obs/export.rs", "obs/metrics.rs"];
+    if l001_files.iter().any(|f| path.ends_with(f)) {
+        for tok in ["HashMap", "HashSet"] {
+            for off in token_offsets(&s, tok) {
+                push(
+                    "L001",
+                    line_of(&s, off),
+                    format!("{tok} in a byte-exact serialization module (use BTreeMap/BTreeSet)"),
+                );
+            }
+        }
+    }
+
+    // L002 — wall-clock reads outside bench/.
+    if !in_dir(path, "bench") {
+        for tok in ["std::time", "Instant", "SystemTime"] {
+            for off in token_offsets(&s, tok) {
+                push(
+                    "L002",
+                    line_of(&s, off),
+                    format!("wall-clock ({tok}) outside bench/ breaks run-to-run determinism"),
+                );
+            }
+        }
+    }
+
+    // L003 — non-total float ordering.
+    for off in token_offsets(&s, "partial_cmp") {
+        push(
+            "L003",
+            line_of(&s, off),
+            "partial_cmp on floats (use total_cmp: NaN-safe, total order)".to_string(),
+        );
+    }
+
+    // L004 — entropy seeding.
+    for tok in ["from_entropy", "thread_rng", "OsRng", "getrandom", "RandomState"] {
+        for off in token_offsets(&s, tok) {
+            push(
+                "L004",
+                line_of(&s, off),
+                format!("{tok} draws OS entropy; seed util::rng split streams explicitly"),
+            );
+        }
+    }
+
+    // L005 — ungated recorder calls in the hot simulation loops.
+    if in_dir(path, "sim") || in_dir(path, "cluster") {
+        for (off, gated) in record_sites(&s) {
+            if !gated {
+                push(
+                    "L005",
+                    line_of(&s, off),
+                    "rec.record(..) outside a rec.enabled() gate (event construction \
+                     must cost nothing when tracing is off)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    out.sort_by(|a, b| a.line.cmp(&b.line).then(a.code.cmp(b.code)));
+    out
+}
+
+/// Every `rec.record(` site in stripped source, with whether any enclosing
+/// brace scope was opened under a `rec.enabled()` condition. Scope gating
+/// is cumulative: a scope inherits its parent's gate.
+fn record_sites(s: &str) -> Vec<(usize, bool)> {
+    let b = s.as_bytes();
+    let mut stack: Vec<bool> = Vec::new();
+    let mut cond_start = 0usize; // slice since last `{`/`}`/`;`
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'{' => {
+                let parent = stack.last().copied().unwrap_or(false);
+                let cond = &s[cond_start..i];
+                stack.push(parent || cond.contains("rec.enabled()"));
+                cond_start = i + 1;
+            }
+            b'}' => {
+                stack.pop();
+                cond_start = i + 1;
+            }
+            b';' => cond_start = i + 1,
+            b'r' => {
+                if s[i..].starts_with("rec.record(") && (i == 0 || !is_ident(b[i - 1])) {
+                    out.push((i, stack.last().copied().unwrap_or(false)));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Self test
+// ---------------------------------------------------------------------------
+
+fn run_self_test() -> ExitCode {
+    struct Case {
+        name: &'static str,
+        path: &'static str,
+        src: &'static str,
+        expect: &'static [&'static str],
+    }
+    let cases = [
+        Case {
+            name: "hashmap_in_json",
+            path: "rust/src/util/json.rs",
+            src: "use std::collections::HashMap;\n",
+            expect: &["L001"],
+        },
+        Case {
+            name: "hashmap_elsewhere_ok",
+            path: "rust/src/dse/ea.rs",
+            src: "use std::collections::HashMap;\n",
+            expect: &[],
+        },
+        Case {
+            name: "wallclock_in_sim",
+            path: "rust/src/sim/device.rs",
+            src: "fn f() { let t0 = std::time::Instant::now(); }\n",
+            expect: &["L002"],
+        },
+        Case {
+            name: "wallclock_in_bench_ok",
+            path: "rust/src/bench/mod.rs",
+            src: "fn f() { let t0 = std::time::Instant::now(); }\n",
+            expect: &[],
+        },
+        Case {
+            name: "partial_cmp",
+            path: "rust/src/dse/x.rs",
+            src: "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+            expect: &["L003"],
+        },
+        Case {
+            name: "partial_cmp_in_comment_ok",
+            path: "rust/src/dse/x.rs",
+            src: "// total_cmp, not partial_cmp().unwrap()\nfn f() {}\n",
+            expect: &[],
+        },
+        Case {
+            name: "partial_cmp_in_string_ok",
+            path: "rust/src/dse/x.rs",
+            src: "fn f() -> &'static str { \"partial_cmp\" }\n",
+            expect: &[],
+        },
+        Case {
+            name: "partial_cmp_in_raw_string_ok",
+            path: "rust/src/dse/x.rs",
+            src: "fn f() -> &'static str { r#\"partial_cmp\"# }\n",
+            expect: &[],
+        },
+        Case {
+            name: "entropy_seed",
+            path: "rust/src/util/rng.rs",
+            src: "fn f() { let r = StdRng::from_entropy(); }\n",
+            expect: &["L004"],
+        },
+        Case {
+            name: "gated_record_ok",
+            path: "rust/src/sim/device.rs",
+            src: "fn f() { if rec.enabled() { rec.record(ev); } }\n",
+            expect: &[],
+        },
+        Case {
+            name: "nested_gated_record_ok",
+            path: "rust/src/sim/device.rs",
+            src: "fn f() { if rec.enabled() { if admitted { rec.record(a); } else { rec.record(b); } } }\n",
+            expect: &[],
+        },
+        Case {
+            name: "ungated_record",
+            path: "rust/src/cluster/fleet.rs",
+            src: "fn f() { for x in xs { rec.record(x); } }\n",
+            expect: &["L005"],
+        },
+        Case {
+            name: "record_in_comment_ok",
+            path: "rust/src/sim/device.rs",
+            src: "/// every `rec.record(..)` call is gated\nfn f() {}\n",
+            expect: &[],
+        },
+        Case {
+            name: "lifetimes_do_not_derail_stripper",
+            path: "rust/src/dse/x.rs",
+            src: "fn f<'a>(x: &'a str) -> &'a str { x }\n// partial_cmp mention after lifetimes\n",
+            expect: &[],
+        },
+        Case {
+            name: "char_literal_ok",
+            path: "rust/src/dse/x.rs",
+            src: "fn f(c: char) -> bool { c == '\"' || c == '\\n' } // partial_cmp\n",
+            expect: &[],
+        },
+    ];
+
+    let mut failed = 0;
+    for c in &cases {
+        let got: Vec<&str> = check_file(c.path, c.src).iter().map(|v| v.code).collect();
+        if got != c.expect {
+            eprintln!("self-test FAIL {}: expected {:?}, got {:?}", c.name, c.expect, got);
+            failed += 1;
+        }
+    }
+    if failed == 0 {
+        println!("ssr-lint self-test: {} cases ok", cases.len());
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
