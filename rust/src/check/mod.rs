@@ -22,11 +22,15 @@
 //! * [`fleet`] — known board names, unique device ids, nested front checks
 //!   per device, and model coverage against an optional trace.
 //! * [`trace`] — curve/process parameter domains (finite non-negative
-//!   rates, positive durations, lognormal `sigma > 0`, Pareto `alpha > 1`).
+//!   rates, positive durations, lognormal `sigma > 0`, Pareto `alpha > 1`)
+//!   plus the optional per-class service-time model (kind, sigma /
+//!   keep-ratio / exit-probability domains, probabilities summing to at
+//!   most 1, NaN rejection everywhere).
 //!
 //! Diagnostic codes are stable and grouped by family: `E0xx` structural,
-//! `P1xx` plan, `F2xx` front, `C3xx` fleet, `T4xx` trace (see
-//! ARCHITECTURE.md § Static verification for the full table).
+//! `P1xx` plan, `F2xx` front, `C3xx` fleet, `T4xx` trace, `S5xx`
+//! service model (see ARCHITECTURE.md § Static verification for the full
+//! table).
 //!
 //! The CLI exposes the analyzer as `ssr check <artifact.json>` and every
 //! artifact-load boundary in `main.rs` routes through the `load_*` helpers

@@ -8,6 +8,14 @@
 //! Codes: `T401` missing/empty classes, `T402` bad model name, `T403`
 //! curve structure/kind, `T404` curve parameter domain, `T405` process
 //! parameter domain, `T406` (warning) trace offers zero load.
+//!
+//! Service-model passes (the optional per-class `service` object; an
+//! absent key is `Deterministic` and always clean): `S500` missing/unknown
+//! kind, `S501` lognormal `sigma` domain, `S502` token-pruning
+//! `alpha`/`beta` domain, `S503` early-exit probability element domain,
+//! `S504` early-exit probabilities sum above 1, `S505` early-exit stage
+//! fraction domain / length mismatch. All numeric passes reject NaN and
+//! infinities (via the shared finite-number requirement).
 
 use super::{req_str, Diagnostic};
 use crate::util::json::Json;
@@ -44,6 +52,11 @@ pub fn check(j: &Json, diags: &mut Vec<Diagnostic>) {
                 format!("{base}/process"),
                 "class is missing its 'process' object",
             )),
+        }
+        // `service` is optional: absent means Deterministic (pre-noise
+        // artifacts carry no key at all and stay clean by construction).
+        if let Some(service) = c.get("service") {
+            check_service(service, &format!("{base}/service"), diags);
         }
     }
     if total_peak == 0.0 && !super::has_errors(diags) {
@@ -159,6 +172,125 @@ fn check_curve(curve: &Json, path: &str, diags: &mut Vec<Diagnostic>) -> Option<
                 "curve is missing its 'kind'",
             ));
             None
+        }
+    }
+}
+
+/// Validate one service-model object against the same domains as
+/// `ServiceModel::validate` in [`crate::sim::service`], with a pointing
+/// `json_path` per field.
+fn check_service(service: &Json, path: &str, diags: &mut Vec<Diagnostic>) {
+    match service.get("kind").and_then(Json::as_str) {
+        Some("deterministic") => {}
+        Some("lognormal") => {
+            if let Some(sigma) = super::req_num(service, "sigma", path, "S501", diags) {
+                if sigma <= 0.0 || sigma > 4.0 {
+                    diags.push(Diagnostic::error(
+                        "S501",
+                        format!("{path}/sigma"),
+                        format!("lognormal 'sigma' is {sigma}; must be in (0, 4]"),
+                    ));
+                }
+            }
+        }
+        Some("token-pruning") => {
+            for key in ["alpha", "beta"] {
+                if let Some(v) = super::req_num(service, key, path, "S502", diags) {
+                    if v <= 0.0 {
+                        diags.push(Diagnostic::error(
+                            "S502",
+                            format!("{path}/{key}"),
+                            format!("token-pruning '{key}' is {v}; must be finite and positive"),
+                        ));
+                    }
+                }
+            }
+        }
+        Some("early-exit") => check_early_exit(service, path, diags),
+        Some(k) => diags.push(Diagnostic::error(
+            "S500",
+            format!("{path}/kind"),
+            format!(
+                "unknown service-model kind '{k}' (known: deterministic, lognormal, \
+                 token-pruning, early-exit)"
+            ),
+        )),
+        None => diags.push(Diagnostic::error(
+            "S500",
+            format!("{path}/kind"),
+            "service model is missing its 'kind'",
+        )),
+    }
+}
+
+fn check_early_exit(service: &Json, path: &str, diags: &mut Vec<Diagnostic>) {
+    let probs = match service.get("exit_probs").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => {
+            diags.push(Diagnostic::error(
+                "S503",
+                format!("{path}/exit_probs"),
+                "missing or non-array 'exit_probs'",
+            ));
+            return;
+        }
+    };
+    let fracs = match service.get("stage_fractions").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => {
+            diags.push(Diagnostic::error(
+                "S505",
+                format!("{path}/stage_fractions"),
+                "missing or non-array 'stage_fractions'",
+            ));
+            return;
+        }
+    };
+    if probs.len() != fracs.len() {
+        diags.push(Diagnostic::error(
+            "S505",
+            format!("{path}/stage_fractions"),
+            format!("{} exit_probs but {} stage_fractions", probs.len(), fracs.len()),
+        ));
+    }
+    if probs.is_empty() {
+        diags.push(Diagnostic::error(
+            "S503",
+            format!("{path}/exit_probs"),
+            "early-exit needs at least one stage",
+        ));
+        return;
+    }
+    let mut sum = 0.0;
+    let mut all_ok = true;
+    for (k, p) in probs.iter().enumerate() {
+        match p.as_f64() {
+            Some(v) if v.is_finite() && (0.0..=1.0).contains(&v) => sum += v,
+            _ => {
+                all_ok = false;
+                diags.push(Diagnostic::error(
+                    "S503",
+                    format!("{path}/exit_probs/{k}"),
+                    "exit probability must be a finite number in [0, 1]",
+                ));
+            }
+        }
+    }
+    if all_ok && sum > 1.0 {
+        diags.push(Diagnostic::error(
+            "S504",
+            format!("{path}/exit_probs"),
+            format!("exit probabilities sum to {sum} > 1"),
+        ));
+    }
+    for (k, f) in fracs.iter().enumerate() {
+        match f.as_f64() {
+            Some(v) if v.is_finite() && v > 0.0 && v <= 1.0 => {}
+            _ => diags.push(Diagnostic::error(
+                "S505",
+                format!("{path}/stage_fractions/{k}"),
+                "stage fraction must be a finite number in (0, 1]",
+            )),
         }
     }
 }

@@ -56,6 +56,7 @@ use crate::plan::front::PlanFront;
 use crate::sim::device::{
     run_timeline_recorded, DeviceSim, DeviceState, FleetControl, Req, WindowStat,
 };
+use crate::sim::service::{ServiceModel, SERVICE_STREAM};
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::{fmt_ms, Summary};
@@ -353,6 +354,14 @@ struct Controller {
     /// ([`simulate_autoscale_predictive`]); `None` leaves the reactive
     /// controller byte-identical to the pre-forecast one.
     forecast: Option<ForecastState>,
+    /// Per-model service distribution from the trace (first class serving
+    /// the model wins), applied to every device brought up mid-run.
+    services: Vec<(String, ServiceModel)>,
+    /// The SERVICE_STREAM split of the base seed; device `i` (its stable
+    /// index in the append-only device vector) draws from
+    /// `service_base.split(i)` — identical to the static fleet sim's
+    /// discipline, extended to scale-outs and swap replacements.
+    service_base: Rng,
     events: Vec<FleetEvent>,
 }
 
@@ -364,6 +373,8 @@ impl Controller {
         sched_cfg: SchedulerCfg,
         forecast: Option<ForecastCfg>,
         fault_rng: Rng,
+        services: Vec<(String, ServiceModel)>,
+        service_base: Rng,
     ) -> Controller {
         let meta = spec
             .fleet
@@ -389,15 +400,28 @@ impl Controller {
             hi_streak: 0,
             lo_streak: 0,
             forecast: forecast.map(ForecastState::new),
+            services,
+            service_base,
             events: Vec::new(),
         }
     }
 
     /// Bring `spec` up as a fresh serving device — the one bring-up path
     /// shared by scale-out, disaster recovery, and swap replacements (the
-    /// caller logs its own event).
+    /// caller logs its own event). The new device's service stream splits
+    /// off its stable index, so a mid-run bring-up draws the same factor
+    /// sequence regardless of *when* it appeared.
     fn add_device(&mut self, devs: &mut Vec<DeviceSim>, spec: DeviceSpec, end_s: f64) {
-        devs.push(DeviceSim::new(spec.front.clone(), self.sched_cfg));
+        let service = self
+            .services
+            .iter()
+            .find(|(m, _)| *m == spec.front.model)
+            .map(|(_, s)| s.clone())
+            .unwrap_or(ServiceModel::Deterministic);
+        let service_rng = self.service_base.split(devs.len() as u64);
+        devs.push(
+            DeviceSim::new(spec.front.clone(), self.sched_cfg).with_service(service, service_rng),
+        );
         self.meta.push(DevMeta { spec, added_s: end_s, ended_s: None });
     }
 
@@ -1007,10 +1031,39 @@ fn simulate_autoscale_inner(
     let mut model_set: Vec<String> = trace.classes.iter().map(|c| c.model.clone()).collect();
     model_set.sort();
     model_set.dedup();
-    let mut ctl =
-        Controller::new(spec, model_set, *ctl_cfg, *cfg, forecast, base.split(FAULT_STREAM));
-    let mut devs: Vec<DeviceSim> =
-        spec.fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
+    // Per-model service distributions (first class serving a model wins)
+    // and the dedicated service draw stream — split per stable device
+    // index, shared between the initial fleet below and every device the
+    // controller brings up later.
+    let service_base = base.split(SERVICE_STREAM);
+    let services: Vec<(String, ServiceModel)> = trace
+        .models()
+        .into_iter()
+        .map(|m| {
+            let s = trace.service_for(&m);
+            (m, s)
+        })
+        .collect();
+    let mut ctl = Controller::new(
+        spec,
+        model_set,
+        *ctl_cfg,
+        *cfg,
+        forecast,
+        base.split(FAULT_STREAM),
+        services,
+        service_base.clone(),
+    );
+    let mut devs: Vec<DeviceSim> = spec
+        .fleet
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            DeviceSim::new(d.front.clone(), *cfg)
+                .with_service(trace.service_for(&d.front.model), service_base.split(i as u64))
+        })
+        .collect();
     let models: Vec<&str> = trace.classes.iter().map(|c| c.model.as_str()).collect();
     let duration_s = trace.duration_s();
 

@@ -26,6 +26,7 @@ use crate::cluster::router::{DeviceView, RoutePolicy, Router, ROUTER_STREAM};
 use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
 use crate::obs::{NoopRecorder, Recorder};
 use crate::sim::device::{run_timeline_recorded, DeviceSim, NoControl, WindowStat};
+use crate::sim::service::SERVICE_STREAM;
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::{fmt_ms, Summary};
@@ -182,8 +183,19 @@ pub fn simulate_fleet_observed(
         })
         .collect();
 
-    let mut devs: Vec<DeviceSim> =
-        fleet.devices.iter().map(|d| DeviceSim::new(d.front.clone(), *cfg)).collect();
+    // Each device samples service factors for the model it serves, from
+    // its own split of the dedicated SERVICE_STREAM — deterministic per
+    // (seed, device index) and invisible to arrivals and routing.
+    let service_base = base.split(SERVICE_STREAM);
+    let mut devs: Vec<DeviceSim> = fleet
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            DeviceSim::new(d.front.clone(), *cfg)
+                .with_service(trace.service_for(&d.front.model), service_base.split(i as u64))
+        })
+        .collect();
 
     let outcome = run_timeline_recorded(
         &mut devs,

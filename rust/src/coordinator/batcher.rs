@@ -53,6 +53,16 @@ impl BatchPolicy {
     /// fits). `service_s` maps a batch size to its estimated service time.
     /// Returns None when no compiled size meets the budget — the caller
     /// must shed or switch plans instead of batching deeper.
+    ///
+    /// Boundary contract: the budget is **inclusive** — a size with
+    /// `service_s(s) == budget_s` exactly is feasible. An SLO is "complete
+    /// within the budget", and the estimate is itself derived from the
+    /// same analytic model the budget came from, so exact equality is the
+    /// common case (e.g. a b6 launch sized from a 6-image budget), not a
+    /// tie-break curiosity. Rejecting it (`<`) would drop the deepest
+    /// exactly-fitting variant and silently halve throughput at round
+    /// numbers. Callers composing a safety margin must shrink the budget,
+    /// not rely on the comparison.
     pub fn choose_under<F: Fn(usize) -> f64>(
         &self,
         queued: usize,
@@ -67,6 +77,26 @@ impl BatchPolicy {
             .find(|&&s| s <= queued)
             .or_else(|| fits.iter().find(|&&s| s >= queued))
             .copied()
+    }
+
+    /// Slack-aware batch composition under stochastic service times: pick
+    /// the batch whose **predicted tail** service time fits the budget.
+    /// `q_factor >= 1` is the service-time distribution's quantile factor
+    /// at the operating quantile (e.g. [`crate::sim::service::ServiceModel::tail_q`]
+    /// at 0.99): every candidate's mean estimate `service_s(s)` is scaled
+    /// by it before the inclusive budget test, so the launch still fits
+    /// the SLO when the draw lands on the tail, at the cost of shallower
+    /// batches. `q_factor == 1.0` is exactly [`BatchPolicy::choose_under`]
+    /// (scaling by 1.0 is the f64 identity), so deterministic service
+    /// models lose nothing.
+    pub fn choose_under_quantile<F: Fn(usize) -> f64>(
+        &self,
+        queued: usize,
+        budget_s: f64,
+        q_factor: f64,
+        service_s: F,
+    ) -> Option<usize> {
+        self.choose_under(queued, budget_s, |s| service_s(s) * q_factor)
     }
 
     /// Split a queue length into concrete batch launches.
@@ -210,6 +240,50 @@ mod tests {
         assert_eq!(p.choose_under(2, 1e-3, service), Some(1));
         // nothing fits: the caller must shed/switch, not batch
         assert_eq!(p.choose_under(10, 0.5e-3, service), None);
+    }
+
+    #[test]
+    fn choose_under_budget_boundary_is_inclusive() {
+        let p = policy(); // sizes [1, 3, 6]
+        let service = |b: usize| b as f64 * 1e-3;
+        // exact equality at every compiled size is feasible (<= contract):
+        // a budget of exactly service(b) admits the bN variant itself
+        assert_eq!(p.choose_under(10, service(6), service), Some(6));
+        assert_eq!(p.choose_under(3, service(3), service), Some(3));
+        assert_eq!(p.choose_under(1, service(1), service), Some(1));
+        // one ulp under the boundary excludes the size again
+        let just_under = f64::from_bits(service(6).to_bits() - 1);
+        assert_eq!(p.choose_under(10, just_under, service), Some(3));
+    }
+
+    #[test]
+    fn choose_under_empty_feasible_set_is_none_not_fallback() {
+        let p = policy();
+        let service = |b: usize| b as f64 * 1e-3;
+        // budget below the cheapest size: no silent fallback to choose()
+        assert_eq!(p.choose_under(10, 0.0, service), None);
+        assert_eq!(p.choose_under(1, 0.9e-3, service), None);
+        // negative budget (caller's slack already spent) is also empty
+        assert_eq!(p.choose_under(4, -1.0, service), None);
+    }
+
+    #[test]
+    fn choose_under_quantile_shrinks_with_the_tail_and_unity_is_identity() {
+        let p = policy(); // sizes [1, 3, 6]
+        let service = |b: usize| b as f64 * 1e-3;
+        // q_factor 1.0 is choose_under bit for bit
+        for (q, budget) in [(10usize, 10e-3), (10, 3e-3), (2, 1e-3), (10, 0.5e-3)] {
+            assert_eq!(
+                p.choose_under_quantile(q, budget, 1.0, service),
+                p.choose_under(q, budget, service)
+            );
+        }
+        // a 10 ms budget admits b6 at the mean; a 2x tail factor caps the
+        // launch at b3 (6 ms tail-adjusted), a 4x tail at b1, a 20x tail
+        // sheds
+        assert_eq!(p.choose_under_quantile(10, 10e-3, 2.0, service), Some(3));
+        assert_eq!(p.choose_under_quantile(10, 10e-3, 4.0, service), Some(1));
+        assert_eq!(p.choose_under_quantile(10, 10e-3, 20.0, service), None);
     }
 
     #[test]

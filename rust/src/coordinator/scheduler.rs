@@ -74,6 +74,14 @@ pub struct SchedulerCfg {
     pub shed_slack: f64,
     /// Sliding-window estimate horizon, in windows.
     pub horizon_windows: usize,
+    /// Variance-aware capacity: when set, the switch policy inflates the
+    /// demand by the observed tail factor (window p99 over the active
+    /// plan's nominal latency, clamped to `[1, 8]`) before sizing a plan,
+    /// so stochastic service times trigger the capacity escalation a mean
+    /// estimate only sees after the queue has already built. Off by
+    /// default: with `false` the policy is the historical mean-based
+    /// [`choose_plan`] bit for bit.
+    pub p99_aware: bool,
 }
 
 impl Default for SchedulerCfg {
@@ -85,6 +93,7 @@ impl Default for SchedulerCfg {
             headroom: 0.8,
             shed_slack: 4.0,
             horizon_windows: 4,
+            p99_aware: false,
         }
     }
 }
@@ -206,12 +215,26 @@ impl LoadEstimator {
 /// ([`PlanFront::best_under`], Table 6 semantics); when nothing meets the
 /// SLO at all, the lowest-latency entry (best effort).
 pub fn choose_plan(front: &PlanFront, slo_ms: f64, demand_rps: f64) -> usize {
+    choose_plan_p99(front, slo_ms, demand_rps, 1.0)
+}
+
+/// The p99-headroom variant of [`choose_plan`]: size a plan for the tail,
+/// not the mean. `inflation >= 1` is the predicted tail factor of the
+/// service-time distribution (observed window p99 over the plan's nominal
+/// latency); a plan only counts as having capacity when its nominal rate
+/// covers `demand_rps * inflation`, i.e. its effective rate under tail
+/// service times (`rps / inflation`) covers the raw demand. At
+/// `inflation == 1.0` this is exactly [`choose_plan`] — `demand_rps *
+/// 1.0` is the identity on f64, so the mean-based path is bit-identical
+/// by construction. The SLO filter and both fallback tiers are shared.
+pub fn choose_plan_p99(front: &PlanFront, slo_ms: f64, demand_rps: f64, inflation: f64) -> usize {
+    let effective_demand = demand_rps * inflation;
     // Entries are sorted by latency ascending, so the first hit is optimal.
     if let Some((i, _)) = front
         .entries
         .iter()
         .enumerate()
-        .find(|(_, e)| e.latency_ms <= slo_ms && e.rps >= demand_rps)
+        .find(|(_, e)| e.latency_ms <= slo_ms && e.rps >= effective_demand)
     {
         return i;
     }
@@ -267,7 +290,17 @@ impl AdaptiveScheduler {
     /// least `patience` windows apart).
     pub fn on_window(&mut self, window: usize, now_s: f64, est: &LoadEstimate) -> Option<usize> {
         let demand = est.rate_rps / self.cfg.headroom.max(1e-9);
-        let target = choose_plan(&self.front, self.cfg.slo_ms, demand);
+        // Tail factor: how much slower the observed p99 completion runs
+        // than the active plan's nominal latency. 1.0 when the window saw
+        // no completions (p99_s == 0) or service times are deterministic;
+        // clamped at 8 so one pathological window cannot demand a plan
+        // beyond the front. Inactive (exactly 1.0) unless `p99_aware`.
+        let inflation = if self.cfg.p99_aware {
+            (est.p99_s / self.active_entry().latency_s()).clamp(1.0, 8.0)
+        } else {
+            1.0
+        };
+        let target = choose_plan_p99(&self.front, self.cfg.slo_ms, demand, inflation);
         if target == self.active {
             self.candidate = None;
             self.streak = 0;
@@ -631,6 +664,51 @@ mod tests {
         assert_eq!(choose_plan(&f, 1.5, 1e9), 1);
         // SLO excludes everything: best-effort lowest latency
         assert_eq!(choose_plan(&f, 0.05, 1e9), 0);
+    }
+
+    #[test]
+    fn choose_plan_p99_unity_is_identity_and_inflation_escalates() {
+        let f = front3();
+        // inflation 1.0 is choose_plan bit for bit across the demand sweep
+        for d in [0.0, 4900.0, 5500.0, 11000.0, 1e9] {
+            assert_eq!(choose_plan_p99(&f, 20.0, d, 1.0), choose_plan(&f, 20.0, d));
+        }
+        // demand 4000 fits seq at the mean; a 1.5x tail needs hybrid, a
+        // 2.5x tail needs spatial
+        assert_eq!(choose_plan_p99(&f, 20.0, 4000.0, 1.0), 0);
+        assert_eq!(choose_plan_p99(&f, 20.0, 4000.0, 1.5), 1);
+        assert_eq!(choose_plan_p99(&f, 20.0, 4000.0, 2.5), 2);
+        // fallback tiers are shared: saturated under a tight SLO takes
+        // best_under, an infeasible SLO stays best-effort lowest latency
+        assert_eq!(choose_plan_p99(&f, 1.5, 4000.0, 8.0), 1);
+        assert_eq!(choose_plan_p99(&f, 0.05, 4000.0, 8.0), 0);
+    }
+
+    #[test]
+    fn p99_aware_policy_escalates_where_mean_based_holds() {
+        let mk = |p99_aware| {
+            AdaptiveScheduler::new(
+                front3(),
+                SchedulerCfg { slo_ms: 20.0, patience: 1, p99_aware, ..Default::default() },
+            )
+        };
+        // rate 3000 -> demand 3750: seq (5000 rps) covers the mean, but
+        // completions run at 2x seq's nominal 0.2 ms, so the tail-adjusted
+        // demand 7500 outgrows hybrid (6000) too — p99-aware jumps to
+        // spatial while the mean-based policy holds seq.
+        let tail =
+            LoadEstimate { rate_rps: 3000.0, queue_depth: 0, p99_s: 4.0e-4, completed: 50 };
+        let mut mean = mk(false);
+        assert_eq!(mean.on_window(0, 0.05, &tail), None);
+        assert_eq!(mean.active(), 0);
+        let mut p99 = mk(true);
+        assert_eq!(p99.on_window(0, 0.05, &tail), Some(2));
+        assert_eq!(p99.active(), 2);
+        // no completions in the window (p99_s == 0): inflation clamps to
+        // 1.0 and the p99-aware policy is the mean-based one
+        let mut quiet = mk(true);
+        assert_eq!(quiet.on_window(0, 0.05, &est(3000.0)), None);
+        assert_eq!(quiet.active(), 0);
     }
 
     #[test]

@@ -53,6 +53,7 @@ use ssr::plan::ExecutionPlan;
 use ssr::report::tables::{self, Ctx};
 use ssr::runtime::exec::Engine;
 use ssr::sim::device::DeviceState;
+use ssr::sim::service::ServiceModel;
 use ssr::traffic::{ArrivalProcess, RateCurve, TraceSpec};
 use ssr::util::cli::{Command, Matches};
 
@@ -208,6 +209,13 @@ fn scheduler_flags(cmd: Command) -> Command {
         .flag("window-ms", Some("50"), "scheduler decision window (ms)")
         .flag("patience", Some("2"), "hysteresis: windows before a switch commits")
         .flag("load-seed", Some("7"), "load-generator seed")
+        .flag(
+            "service",
+            Some("det"),
+            "service-time model: det | lognormal:S | prune:A:B | exit:P@F,... \
+             (overrides every trace class)",
+        )
+        .switch("p99-aware", "size plan switches for the observed p99 tail, not the mean")
 }
 
 fn scheduler_cfg(m: &Matches) -> SchedulerCfg {
@@ -215,6 +223,7 @@ fn scheduler_cfg(m: &Matches) -> SchedulerCfg {
         slo_ms: m.f64("slo-ms"),
         window_s: m.f64("window-ms") * 1e-3,
         patience: m.usize("patience"),
+        p99_aware: m.bool("p99-aware"),
         ..Default::default()
     }
 }
@@ -231,17 +240,29 @@ fn parse_ramp_or_exit(m: &Matches) -> RampSpec {
 
 /// `--trace trace.json` when given (verified by the `check` passes before
 /// deserializing), else the `--ramp`/`--phase-s` ramp desugared to a
-/// single-class Poisson [`TraceSpec`] for `model`.
+/// single-class Poisson [`TraceSpec`] for `model`. A non-`det` `--service`
+/// flag (where the verb registers one) overrides every class's
+/// service-time model; commands without the flag read `""`, which parses
+/// to `Deterministic` and leaves the trace untouched.
 fn load_trace_or_exit(m: &Matches, model: &str) -> TraceSpec {
     let path = m.str("trace");
-    if path.is_empty() {
+    let trace = if path.is_empty() {
         let ramp = parse_ramp_or_exit(m);
-        return TraceSpec::single(model, RateCurve::from(&ramp), ArrivalProcess::Poisson);
-    }
-    match ssr::check::load_trace(Path::new(&path)) {
-        Ok(t) => t,
+        TraceSpec::single(model, RateCurve::from(&ramp), ArrivalProcess::Poisson)
+    } else {
+        match ssr::check::load_trace(Path::new(&path)) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    match ServiceModel::parse(&m.str("service")) {
+        Ok(s) if !s.is_deterministic() => trace.with_service(&s),
+        Ok(_) => trace,
         Err(e) => {
-            eprintln!("{e}");
+            eprintln!("--service: {e}");
             std::process::exit(2);
         }
     }
@@ -905,6 +926,13 @@ fn cluster_flags(cmd: Command) -> Command {
         .flag("load-seed", Some("7"), "base seed (split per class/device/router)")
         .flag("policy", Some("p2c"), "routing policy: rr|jsq|p2c")
         .flag("batches", Some("1,3,6"), "batch sizes for synthesized fronts")
+        .flag(
+            "service",
+            Some("det"),
+            "service-time model: det | lognormal:S | prune:A:B | exit:P@F,... \
+             (overrides every trace class)",
+        )
+        .switch("p99-aware", "size plan switches for the observed p99 tail, not the mean")
 }
 
 /// `--fleet fleet.json` when given (verified by the `check` passes before
@@ -1371,6 +1399,11 @@ fn trace_synth(args: &[String]) -> i32 {
         .flag("process", Some("poisson"), "arrival process: poisson|lognormal|pareto")
         .flag("sigma", Some("1.0"), "lognormal process: gap sigma")
         .flag("alpha", Some("2.5"), "pareto process: gap shape (> 1)")
+        .flag(
+            "service",
+            Some("det"),
+            "service-time model: det | lognormal:S | prune:A:B | exit:P@F,...",
+        )
         .flag("out", Some("trace.json"), "write the TraceSpec JSON here");
     let m = parse_or_exit(cmd, args);
     let curve = match m.str("curve").as_str() {
@@ -1406,17 +1439,26 @@ fn trace_synth(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let service = match ServiceModel::parse(&m.str("service")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("--service: {e}");
+            return 2;
+        }
+    };
     let models_csv = m.str("models");
     let trace = if models_csv.trim().is_empty() {
         TraceSpec::new(vec![ssr::traffic::TraceClass {
             model: m.str("model"),
             curve,
             process,
+            service: service.clone(),
         }])
     } else {
         let models: Vec<&str> =
             models_csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
         TraceSpec::zipf_mix(&models, &curve, process, m.f64("zipf-exp"))
+            .map(|t| t.with_service(&service))
     };
     let trace = match trace {
         Ok(t) => t,

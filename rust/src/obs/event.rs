@@ -47,6 +47,12 @@ pub enum TraceEvent {
     /// `dev` started executing a batch under plan `plan`; it completes at
     /// `done_s` (rendered as a Chrome-trace complete event).
     Launch { at_s: f64, dev: usize, plan: usize, done_s: f64 },
+    /// A stochastic [`ServiceModel`](crate::sim::service::ServiceModel)
+    /// draw stretched (or shrank) the launch that follows: its duration is
+    /// `factor` times plan `plan`'s deterministic latency. Emitted
+    /// immediately before the corresponding `Launch`; never emitted on
+    /// the `Deterministic` path.
+    ServiceDraw { at_s: f64, dev: usize, plan: usize, factor: f64 },
     /// One request finished on `dev` with the given sojourn time.
     Served { at_s: f64, dev: usize, sojourn_s: f64 },
     /// A drained/failed device's request was re-dispatched at a window
@@ -101,6 +107,7 @@ impl TraceEvent {
             TraceEvent::Shed { .. } => "shed",
             TraceEvent::Unroutable { .. } => "unroutable",
             TraceEvent::Launch { .. } => "launch",
+            TraceEvent::ServiceDraw { .. } => "service-draw",
             TraceEvent::Served { .. } => "served",
             TraceEvent::Requeue { .. } => "requeue",
             TraceEvent::RequeueLost { .. } => "requeue-lost",
@@ -124,6 +131,7 @@ impl TraceEvent {
             | TraceEvent::Shed { at_s, .. }
             | TraceEvent::Unroutable { at_s, .. }
             | TraceEvent::Launch { at_s, .. }
+            | TraceEvent::ServiceDraw { at_s, .. }
             | TraceEvent::Served { at_s, .. }
             | TraceEvent::Requeue { at_s, .. }
             | TraceEvent::RequeueLost { at_s, .. }
@@ -163,6 +171,7 @@ impl TraceEvent {
             TraceEvent::Arrival { dev, .. }
             | TraceEvent::Shed { dev, .. }
             | TraceEvent::Launch { dev, .. }
+            | TraceEvent::ServiceDraw { dev, .. }
             | TraceEvent::Served { dev, .. }
             | TraceEvent::Requeue { dev, .. }
             | TraceEvent::PlanSwitch { dev, .. }
@@ -179,6 +188,7 @@ impl TraceEvent {
             TraceEvent::Arrival { dev, .. }
             | TraceEvent::Shed { dev, .. }
             | TraceEvent::Launch { dev, .. }
+            | TraceEvent::ServiceDraw { dev, .. }
             | TraceEvent::Served { dev, .. }
             | TraceEvent::Requeue { dev, .. }
             | TraceEvent::PlanSwitch { dev, .. }

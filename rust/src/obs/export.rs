@@ -39,6 +39,9 @@ fn args_of(ev: &TraceEvent) -> Json {
         }
         TraceEvent::Unroutable { class, .. } => obj(vec![("class", unum(*class))]),
         TraceEvent::Launch { plan, .. } => obj(vec![("plan", unum(*plan))]),
+        TraceEvent::ServiceDraw { plan, factor, .. } => {
+            obj(vec![("factor", num(*factor)), ("plan", unum(*plan))])
+        }
         TraceEvent::Served { sojourn_s, .. } => obj(vec![("sojourn_ms", num(sojourn_s * 1e3))]),
         TraceEvent::Requeue { window, class, admitted, .. } => obj(vec![
             ("admitted", Json::Bool(*admitted)),

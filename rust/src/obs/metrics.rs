@@ -62,6 +62,10 @@ pub struct MetricsRegistry {
     slo_s: f64,
     counters: BTreeMap<&'static str, u64>,
     latency: LatencySketch,
+    /// Stochastic service-time factors seen in `ServiceDraw` events —
+    /// feeds the `ssr_service_factor_p99` tail gauge. Empty on a
+    /// deterministic run (the gauge then reads exactly 1).
+    service_factors: LatencySketch,
     series: Vec<WindowSample>,
     win: WinAccum,
 }
@@ -82,6 +86,7 @@ pub const COUNTER_KEYS: &[&str] = &[
     "retired_total",
     "scale_out_total",
     "served_total",
+    "service_draws_total",
     "shed_total",
     "slo_alerts_total",
     "slo_violations_total",
@@ -102,6 +107,7 @@ impl MetricsRegistry {
             slo_s,
             counters,
             latency: LatencySketch::new(),
+            service_factors: LatencySketch::new(),
             series: Vec::new(),
             win: WinAccum::default(),
         }
@@ -134,6 +140,10 @@ impl MetricsRegistry {
                 self.win.drops += 1;
             }
             TraceEvent::Launch { .. } => self.bump("launches_total"),
+            TraceEvent::ServiceDraw { factor, .. } => {
+                self.bump("service_draws_total");
+                self.service_factors.record(*factor);
+            }
             TraceEvent::Served { sojourn_s, .. } => {
                 self.bump("served_total");
                 self.latency.record(*sojourn_s);
@@ -213,6 +223,17 @@ impl MetricsRegistry {
         &self.series
     }
 
+    /// p99 of the stochastic service-time factors observed via
+    /// `ServiceDraw` events; exactly 1.0 on a deterministic run (which
+    /// emits no draws — every launch ran at 1x).
+    pub fn service_factor_p99(&self) -> f64 {
+        if self.service_factors.count() == 0 {
+            1.0
+        } else {
+            self.service_factors.quantile(0.99)
+        }
+    }
+
     /// Overall attainment: non-error outcomes over all request outcomes
     /// (served + shed + unroutable + requeue-lost); 1.0 with no traffic.
     pub fn attainment(&self) -> f64 {
@@ -243,6 +264,7 @@ impl MetricsRegistry {
         out.push(gauge("ssr_live_devices", last.map_or(0.0, |s| s.live_devices as f64)));
         out.push(gauge("ssr_queue_depth", last.map_or(0.0, |s| s.queue_depth as f64)));
         out.push(gauge("ssr_slo_attainment", self.attainment()));
+        out.push(gauge("ssr_service_factor_p99", self.service_factor_p99()));
         let n = self.latency.count();
         let q = |p: f64| if n == 0 { 0.0 } else { self.latency.quantile(p) };
         let sum = if n == 0 { 0.0 } else { self.latency.mean() * n as f64 };
@@ -299,6 +321,7 @@ impl MetricsRegistry {
         Json::Obj(BTreeMap::from([
             ("counters".to_string(), Json::Obj(counters)),
             ("slo_attainment".to_string(), Json::Num(self.attainment())),
+            ("service_factor_p99".to_string(), Json::Num(self.service_factor_p99())),
             ("latency".to_string(), latency),
             ("series".to_string(), Json::Arr(series)),
         ]))

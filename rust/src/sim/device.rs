@@ -107,6 +107,8 @@ use crate::coordinator::scheduler::{
 };
 use crate::obs::{NoopRecorder, Recorder, TraceEvent};
 use crate::plan::front::{FrontEntry, PlanFront};
+use crate::sim::service::ServiceModel;
+use crate::util::rng::Rng;
 use crate::util::stats::{LatencySketch, Summary};
 
 /// Lifecycle of one simulated device (distinct from the *plan*-level
@@ -219,6 +221,17 @@ pub struct DeviceSim {
     /// Record per-request sojourns into `latency` (exact reports need
     /// them; the O(1)-memory sweep path turns them off).
     keep_samples: bool,
+    /// Per-launch service-time distribution ([`ServiceModel::Deterministic`]
+    /// unless built [`DeviceSim::with_service`]).
+    service: ServiceModel,
+    /// Dedicated service-draw stream (see [`crate::sim::service`]); never
+    /// advanced on the `Deterministic` path.
+    service_rng: Rng,
+    /// `(plan, factor)` of the most recent stochastic launch, for the
+    /// recorder: `run_core` takes it when emitting the `Launch` event and
+    /// prepends a `ServiceDraw`. Stays `None` forever under
+    /// `Deterministic`; silently overwritten when no recorder is attached.
+    pending_draw: Option<(usize, f64)>,
     routed: usize,
     served: usize,
     shed: usize,
@@ -243,6 +256,9 @@ impl DeviceSim {
             lifecycle: DeviceState::Active,
             spare: Vec::new(),
             keep_samples: true,
+            service: ServiceModel::Deterministic,
+            service_rng: Rng::new(0),
+            pending_draw: None,
             routed: 0,
             served: 0,
             shed: 0,
@@ -261,6 +277,25 @@ impl DeviceSim {
     pub fn without_latency_samples(mut self) -> DeviceSim {
         self.keep_samples = false;
         self
+    }
+
+    /// Attach a stochastic service-time model: every launch's duration is
+    /// `entry.latency_s() * model.sample(rng)`. Pass the device's slice of
+    /// the dedicated [`crate::sim::service::SERVICE_STREAM`] — arrival,
+    /// routing, and control streams must never see a service draw. With
+    /// [`ServiceModel::Deterministic`] this is a no-op by construction:
+    /// the RNG is stored but never advanced and the launch expression is
+    /// exactly the pre-noise `t + e.latency_s()`.
+    pub fn with_service(mut self, model: ServiceModel, rng: Rng) -> DeviceSim {
+        self.service = model;
+        self.service_rng = rng;
+        self
+    }
+
+    /// The p99-aware scheduler's derating source: quantile `q` of this
+    /// device's service-time factor distribution.
+    pub fn service_tail_q(&self, q: f64) -> f64 {
+        self.service.tail_q(q)
     }
 
     /// Front entry of the plan currently *executing* (the router-visible
@@ -326,7 +361,16 @@ impl DeviceSim {
         let take = e.batch.min(self.queue.len());
         let mut batch = std::mem::take(&mut self.spare);
         batch.extend(self.queue.drain(..take));
-        self.in_flight = Some(Launch { done_s: t + e.latency_s(), arrivals: batch });
+        // Deterministic keeps the exact pre-noise expression (no draw, no
+        // multiply) so bit-identity holds by construction.
+        let done_s = if self.service.is_deterministic() {
+            t + e.latency_s()
+        } else {
+            let factor = self.service.sample(&mut self.service_rng);
+            self.pending_draw = Some((self.committed, factor));
+            t + e.latency_s() * factor
+        };
+        self.in_flight = Some(Launch { done_s, arrivals: batch });
     }
 
     /// Handle the in-flight launch's completion — the drain point: tally
@@ -771,6 +815,14 @@ fn run_core<S: LatencySink, R: Recorder>(
                     });
                 }
                 if next.is_finite() {
+                    if let Some((plan, factor)) = devs[done_dev].pending_draw.take() {
+                        rec.record(TraceEvent::ServiceDraw {
+                            at_s: done_s,
+                            dev: done_dev,
+                            plan,
+                            factor,
+                        });
+                    }
                     rec.record(TraceEvent::Launch {
                         at_s: done_s,
                         dev: done_dev,
@@ -843,6 +895,14 @@ fn run_core<S: LatencySink, R: Recorder>(
                         }
                         if after.to_bits() != before {
                             if rec.enabled() {
+                                if let Some((plan, factor)) = devs[di].pending_draw.take() {
+                                    rec.record(TraceEvent::ServiceDraw {
+                                        at_s: t_win,
+                                        dev: di,
+                                        plan,
+                                        factor,
+                                    });
+                                }
                                 rec.record(TraceEvent::Launch {
                                     at_s: t_win,
                                     dev: di,
@@ -885,6 +945,14 @@ fn run_core<S: LatencySink, R: Recorder>(
                     }
                     if after.to_bits() != before {
                         if rec.enabled() {
+                            if let Some((plan, factor)) = devs[di].pending_draw.take() {
+                                rec.record(TraceEvent::ServiceDraw {
+                                    at_s: t,
+                                    dev: di,
+                                    plan,
+                                    factor,
+                                });
+                            }
                             rec.record(TraceEvent::Launch {
                                 at_s: t,
                                 dev: di,

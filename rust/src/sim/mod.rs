@@ -17,6 +17,7 @@
 //! dependencies are resolved", Sec. 4.4).
 
 pub mod device;
+pub mod service;
 pub mod serving;
 pub mod sweep;
 

@@ -1,0 +1,528 @@
+//! Input-dynamic service times: per-plan service-time *distributions*.
+//!
+//! Every launch in the sim used to complete in exactly
+//! `entry.latency_s()` — but the workloads the paper targets are
+//! input-dynamic: HeatViT prunes tokens per input, and DynaTran-style
+//! activation sparsity (AccelTran) makes transformer latency a per-input
+//! distribution, not a constant. A [`ServiceModel`] makes that
+//! first-class: it is a serializable distribution over a *multiplicative
+//! service-time factor*, sampled once per launch, so a launch under plan
+//! entry `e` completes at `t + e.latency_s() * factor`.
+//!
+//! ## Sampling stream discipline
+//!
+//! Service draws consume their own non-advancing [`Rng::split`] stream,
+//! [`SERVICE_STREAM`], split again per device index. Arrivals (per-class
+//! streams), routing (`ROUTER_STREAM`), and fault injection
+//! (`FAULT_STREAM`) never see a service draw: turning noise on or off
+//! cannot perturb any other random sequence in the run.
+//!
+//! ## The `Deterministic` bit-identity guarantee
+//!
+//! [`ServiceModel::Deterministic`] does not *sample at all* — the device
+//! keeps computing `t + e.latency_s()` through the exact same expression
+//! as before this module existed, and the service RNG is never advanced.
+//! Bit-identity with the pre-noise sims holds by construction, not by
+//! `factor == 1.0` luck; `tests/service_noise.rs` pins it differentially.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Dedicated non-advancing split stream for service-time draws (distinct
+/// from the router stream `u64::MAX`, the live per-device streams
+/// `u64::MAX - 1 - dev`, and the controller's fault stream `u64::MAX / 2`).
+pub const SERVICE_STREAM: u64 = u64::MAX / 2 - 1;
+
+/// A per-class (hence per-plan-front) service-time distribution. Sampled
+/// once per launch into a multiplicative factor on the committed entry's
+/// `latency_s()`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceModel {
+    /// Every launch takes exactly `entry.latency_s()` — the pre-noise
+    /// behavior, bit-identical by construction (no RNG draw happens).
+    Deterministic,
+    /// Token pruning (HeatViT-style): the kept-token ratio follows a
+    /// Kumaraswamy(α, β) distribution on (0, 1]; the factor is the kept
+    /// ratio, floored at 0.05 (a launch never becomes free). Mean < 1:
+    /// pruning only ever speeds a launch up.
+    TokenPruning { alpha: f64, beta: f64 },
+    /// Early exit: with probability `exit_probs[k]` the input exits after
+    /// stage `k`, costing `stage_fractions[k]` of the full latency;
+    /// otherwise (probability `1 - Σ exit_probs`) it runs to completion
+    /// (factor 1.0). One uniform draw per launch.
+    EarlyExit { exit_probs: Vec<f64>, stage_fractions: Vec<f64> },
+    /// Activation-sparsity-style heavy tail: factor `exp(σZ − σ²/2)` for
+    /// standard-normal `Z` — lognormal with mean exactly 1, so the
+    /// entry's advertised rate stays the *mean* rate while the tail
+    /// stretches with σ. Two uniform draws per launch (Box–Muller).
+    LognormalFactor { sigma: f64 },
+}
+
+impl ServiceModel {
+    /// True when sampling never draws from the RNG and the factor is
+    /// identically 1 — the bit-identity fast path.
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self, ServiceModel::Deterministic)
+    }
+
+    /// Draw one service-time factor. `Deterministic` returns 1.0 without
+    /// touching `rng` (callers on the hot path skip even that — see
+    /// `sim::device::DeviceSim::start_launch`).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceModel::Deterministic => 1.0,
+            ServiceModel::TokenPruning { alpha, beta } => {
+                // Kumaraswamy inverse CDF: r = (1 − (1 − u)^(1/β))^(1/α).
+                let u = rng.f64();
+                let r = (1.0 - (1.0 - u).powf(1.0 / beta)).powf(1.0 / alpha);
+                r.max(0.05)
+            }
+            ServiceModel::EarlyExit { exit_probs, stage_fractions } => {
+                let u = rng.f64();
+                let mut cum = 0.0;
+                for (p, f) in exit_probs.iter().zip(stage_fractions) {
+                    cum += p;
+                    if u < cum {
+                        return *f;
+                    }
+                }
+                1.0
+            }
+            ServiceModel::LognormalFactor { sigma } => {
+                // Box–Muller, same idiom as ArrivalProcess::mean1_gap:
+                // 1 - u1 keeps the log argument in (0, 1].
+                let u1 = rng.f64();
+                let u2 = rng.f64();
+                let z =
+                    (-2.0 * (1.0 - u1).ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                (sigma * z - sigma * sigma / 2.0).exp()
+            }
+        }
+    }
+
+    /// Quantile `q` of the factor distribution (analytic; no sampling).
+    /// The p99-aware scheduler and the slack-aware batcher budget against
+    /// `tail_q(0.99)` instead of the mean.
+    pub fn tail_q(&self, q: f64) -> f64 {
+        let q = q.clamp(1e-9, 1.0 - 1e-9);
+        match self {
+            ServiceModel::Deterministic => 1.0,
+            ServiceModel::TokenPruning { alpha, beta } => {
+                // Monotone transform of the uniform: quantile = sample(q).
+                let r = (1.0 - (1.0 - q).powf(1.0 / beta)).powf(1.0 / alpha);
+                r.max(0.05)
+            }
+            ServiceModel::EarlyExit { exit_probs, stage_fractions } => {
+                // Discrete: smallest factor x with P(factor <= x) >= q.
+                let mut pairs: Vec<(f64, f64)> = exit_probs
+                    .iter()
+                    .zip(stage_fractions)
+                    .map(|(p, f)| (*f, *p))
+                    .collect();
+                let run_full: f64 = 1.0 - exit_probs.iter().sum::<f64>();
+                pairs.push((1.0, run_full.max(0.0)));
+                pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let mut cum = 0.0;
+                for (f, p) in &pairs {
+                    cum += p;
+                    if cum >= q {
+                        return *f;
+                    }
+                }
+                1.0
+            }
+            ServiceModel::LognormalFactor { sigma } => {
+                (sigma * inv_norm_cdf(q) - sigma * sigma / 2.0).exp()
+            }
+        }
+    }
+
+    /// Domain check, mirrored by the `S5xx` static `ssr check` passes —
+    /// `TraceSpec::validate` calls this per class.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ServiceModel::Deterministic => Ok(()),
+            ServiceModel::TokenPruning { alpha, beta } => {
+                for (name, v) in [("alpha", *alpha), ("beta", *beta)] {
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!("token-pruning {name} must be finite and > 0, got {v}"));
+                    }
+                }
+                Ok(())
+            }
+            ServiceModel::EarlyExit { exit_probs, stage_fractions } => {
+                if exit_probs.len() != stage_fractions.len() {
+                    return Err(format!(
+                        "early-exit has {} exit_probs but {} stage_fractions",
+                        exit_probs.len(),
+                        stage_fractions.len()
+                    ));
+                }
+                if exit_probs.is_empty() {
+                    return Err("early-exit needs at least one stage".to_string());
+                }
+                for p in exit_probs {
+                    if !p.is_finite() || !(0.0..=1.0).contains(p) {
+                        return Err(format!("early-exit probability {p} outside [0, 1]"));
+                    }
+                }
+                let sum: f64 = exit_probs.iter().sum();
+                if sum > 1.0 {
+                    return Err(format!("early-exit probabilities sum to {sum} > 1"));
+                }
+                for f in stage_fractions {
+                    if !f.is_finite() || *f <= 0.0 || *f > 1.0 {
+                        return Err(format!("early-exit stage fraction {f} outside (0, 1]"));
+                    }
+                }
+                Ok(())
+            }
+            ServiceModel::LognormalFactor { sigma } => {
+                if !sigma.is_finite() || *sigma <= 0.0 || *sigma > 4.0 {
+                    return Err(format!(
+                        "lognormal sigma must be finite, > 0 and <= 4, got {sigma}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// CLI shorthand: `det` | `lognormal:SIGMA` | `prune:ALPHA:BETA` |
+    /// `exit:P@F,P@F,...` (probability@fraction pairs).
+    pub fn parse(s: &str) -> Result<ServiceModel, String> {
+        let s = s.trim();
+        let model = if s.is_empty() || s == "det" || s == "deterministic" {
+            ServiceModel::Deterministic
+        } else if let Some(rest) = s.strip_prefix("lognormal:") {
+            let sigma: f64 =
+                rest.parse().map_err(|e| format!("bad lognormal sigma '{rest}': {e}"))?;
+            ServiceModel::LognormalFactor { sigma }
+        } else if let Some(rest) = s.strip_prefix("prune:") {
+            let (a, b) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("bad prune spec '{rest}' (want prune:ALPHA:BETA)"))?;
+            let alpha: f64 = a.parse().map_err(|e| format!("bad prune alpha '{a}': {e}"))?;
+            let beta: f64 = b.parse().map_err(|e| format!("bad prune beta '{b}': {e}"))?;
+            ServiceModel::TokenPruning { alpha, beta }
+        } else if let Some(rest) = s.strip_prefix("exit:") {
+            let mut exit_probs = Vec::new();
+            let mut stage_fractions = Vec::new();
+            for pair in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (p, f) = pair
+                    .split_once('@')
+                    .ok_or_else(|| format!("bad exit stage '{pair}' (want PROB@FRACTION)"))?;
+                exit_probs
+                    .push(p.parse().map_err(|e| format!("bad exit probability '{p}': {e}"))?);
+                stage_fractions
+                    .push(f.parse().map_err(|e| format!("bad stage fraction '{f}': {e}"))?);
+            }
+            ServiceModel::EarlyExit { exit_probs, stage_fractions }
+        } else {
+            return Err(format!(
+                "unknown service model '{s}' (want det | lognormal:SIGMA | prune:ALPHA:BETA \
+                 | exit:P@F,...)"
+            ));
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Short human label for `describe()` lines.
+    pub fn label(&self) -> String {
+        match self {
+            ServiceModel::Deterministic => "deterministic".to_string(),
+            ServiceModel::TokenPruning { alpha, beta } => format!("prune(α={alpha}, β={beta})"),
+            ServiceModel::EarlyExit { exit_probs, .. } => {
+                format!("early-exit({} stages)", exit_probs.len())
+            }
+            ServiceModel::LognormalFactor { sigma } => format!("lognormal(σ={sigma})"),
+        }
+    }
+
+    /// Serialize as a kind-tagged JSON object. `TraceSpec::to_json` omits
+    /// the `service` key entirely for `Deterministic`, keeping pre-noise
+    /// trace artifacts byte-identical.
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        match self {
+            ServiceModel::Deterministic => {
+                o.insert("kind".to_string(), Json::Str("deterministic".to_string()));
+            }
+            ServiceModel::TokenPruning { alpha, beta } => {
+                o.insert("kind".to_string(), Json::Str("token-pruning".to_string()));
+                o.insert("alpha".to_string(), Json::Num(*alpha));
+                o.insert("beta".to_string(), Json::Num(*beta));
+            }
+            ServiceModel::EarlyExit { exit_probs, stage_fractions } => {
+                o.insert("kind".to_string(), Json::Str("early-exit".to_string()));
+                o.insert(
+                    "exit_probs".to_string(),
+                    Json::Arr(exit_probs.iter().map(|p| Json::Num(*p)).collect()),
+                );
+                o.insert(
+                    "stage_fractions".to_string(),
+                    Json::Arr(stage_fractions.iter().map(|f| Json::Num(*f)).collect()),
+                );
+            }
+            ServiceModel::LognormalFactor { sigma } => {
+                o.insert("kind".to_string(), Json::Str("lognormal".to_string()));
+                o.insert("sigma".to_string(), Json::Num(*sigma));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Deserialize a kind-tagged object (the shape `to_json` writes). An
+    /// absent `service` key in a trace class means `Deterministic` — old
+    /// artifacts load unchanged.
+    pub fn from_json(j: &Json) -> Result<ServiceModel, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "service model needs a string `kind`".to_string())?;
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("service model `{kind}` needs numeric `{key}`"))
+        };
+        let model = match kind {
+            "deterministic" => ServiceModel::Deterministic,
+            "token-pruning" => {
+                ServiceModel::TokenPruning { alpha: num("alpha")?, beta: num("beta")? }
+            }
+            "lognormal" => ServiceModel::LognormalFactor { sigma: num("sigma")? },
+            "early-exit" => {
+                let arr = |key: &str| -> Result<Vec<f64>, String> {
+                    j.get(key)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| format!("service model `early-exit` needs array `{key}`"))?
+                        .iter()
+                        .map(|v| {
+                            v.as_f64().ok_or_else(|| format!("non-numeric entry in `{key}`"))
+                        })
+                        .collect()
+                };
+                ServiceModel::EarlyExit {
+                    exit_probs: arr("exit_probs")?,
+                    stage_fractions: arr("stage_fractions")?,
+                }
+            }
+            other => return Err(format!("unknown service model kind '{other}'")),
+        };
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// relative error < 1.2e-9 over (0, 1)) — enough precision that the
+/// scheduler's tail inflation is stable to far more digits than any
+/// latency estimate feeding it.
+fn inv_norm_cdf(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_69e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_never_touches_the_rng() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let f = ServiceModel::Deterministic.sample(&mut a);
+        assert_eq!(f, 1.0);
+        assert_eq!(a.next_u64(), b.next_u64(), "sample() advanced the RNG");
+    }
+
+    #[test]
+    fn lognormal_factor_has_mean_one_and_a_heavy_tail() {
+        let m = ServiceModel::LognormalFactor { sigma: 1.0 };
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut over2 = 0usize;
+        for _ in 0..n {
+            let f = m.sample(&mut rng);
+            assert!(f > 0.0);
+            sum += f;
+            if f > 2.0 {
+                over2 += 1;
+            }
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "lognormal mean {mean} != 1");
+        assert!(over2 > n / 100, "tail too light: {over2} / {n} samples above 2x");
+    }
+
+    #[test]
+    fn token_pruning_only_speeds_up() {
+        let m = ServiceModel::TokenPruning { alpha: 2.0, beta: 3.0 };
+        let mut rng = Rng::new(9);
+        for _ in 0..10_000 {
+            let f = m.sample(&mut rng);
+            assert!((0.05..=1.0).contains(&f), "pruning factor {f} outside (0, 1]");
+        }
+    }
+
+    #[test]
+    fn early_exit_hits_each_stage_with_about_its_probability() {
+        let m = ServiceModel::EarlyExit {
+            exit_probs: vec![0.3, 0.2],
+            stage_fractions: vec![0.25, 0.5],
+        };
+        let mut rng = Rng::new(11);
+        let n = 100_000;
+        let (mut s0, mut s1, mut full) = (0usize, 0usize, 0usize);
+        for _ in 0..n {
+            match m.sample(&mut rng) {
+                f if f == 0.25 => s0 += 1,
+                f if f == 0.5 => s1 += 1,
+                f => {
+                    assert_eq!(f, 1.0);
+                    full += 1;
+                }
+            }
+        }
+        let frac = |c: usize| c as f64 / n as f64;
+        assert!((frac(s0) - 0.3).abs() < 0.01);
+        assert!((frac(s1) - 0.2).abs() < 0.01);
+        assert!((frac(full) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn tail_q_matches_the_empirical_quantile() {
+        let models = [
+            ServiceModel::LognormalFactor { sigma: 0.8 },
+            ServiceModel::TokenPruning { alpha: 2.0, beta: 2.0 },
+            ServiceModel::EarlyExit {
+                exit_probs: vec![0.4, 0.3],
+                stage_fractions: vec![0.2, 0.6],
+            },
+        ];
+        for m in &models {
+            let mut rng = Rng::new(0xACE);
+            let mut xs: Vec<f64> = (0..100_000).map(|_| m.sample(&mut rng)).collect();
+            xs.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.5, 0.9, 0.99] {
+                let emp = xs[((xs.len() - 1) as f64 * q) as usize];
+                let ana = m.tail_q(q);
+                assert!(
+                    (emp - ana).abs() / ana.max(1e-9) < 0.05,
+                    "{m:?} q={q}: empirical {emp} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tail_q_is_monotone_and_deterministic_is_flat() {
+        let m = ServiceModel::LognormalFactor { sigma: 1.5 };
+        assert!(m.tail_q(0.5) < m.tail_q(0.9));
+        assert!(m.tail_q(0.9) < m.tail_q(0.99));
+        assert_eq!(ServiceModel::Deterministic.tail_q(0.99), 1.0);
+        // σZ − σ²/2 at the median is below 0: the heavy tail pulls the
+        // mean above the median, so tail_q(0.5) < 1 while mean == 1.
+        assert!(m.tail_q(0.5) < 1.0);
+    }
+
+    #[test]
+    fn inv_norm_cdf_hits_known_points() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959_963_984_540_054).abs() < 1e-6);
+        assert!((inv_norm_cdf(0.99) - 2.326_347_874_040_841).abs() < 1e-6);
+        assert!((inv_norm_cdf(0.01) + 2.326_347_874_040_841).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_round_trips_through_json() {
+        for s in ["det", "lognormal:0.8", "prune:2:3", "exit:0.3@0.25,0.2@0.5"] {
+            let m = ServiceModel::parse(s).unwrap();
+            let j = m.to_json();
+            let back = ServiceModel::from_json(&j).unwrap();
+            assert_eq!(m, back, "{s} round trip");
+            // and the JSON text itself round-trips
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(ServiceModel::from_json(&reparsed).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for s in [
+            "lognormal:-1",
+            "lognormal:nan",
+            "lognormal:9",
+            "prune:0:1",
+            "prune:1",
+            "exit:1.5@0.5",
+            "exit:0.6@0.5,0.6@0.7",
+            "exit:0.5@0.0",
+            "exit:0.5@2.0",
+            "gamma:1",
+        ] {
+            assert!(ServiceModel::parse(s).is_err(), "'{s}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_nan_and_bad_domains() {
+        let bad = [
+            r#"{"kind":"lognormal"}"#,
+            r#"{"kind":"lognormal","sigma":-0.5}"#,
+            r#"{"kind":"token-pruning","alpha":0,"beta":1}"#,
+            r#"{"kind":"early-exit","exit_probs":[0.5],"stage_fractions":[0.5,0.6]}"#,
+            r#"{"kind":"early-exit","exit_probs":[],"stage_fractions":[]}"#,
+            r#"{"kind":"mystery"}"#,
+            r#"{"sigma":1.0}"#,
+        ];
+        for s in bad {
+            let j = Json::parse(s).unwrap();
+            assert!(ServiceModel::from_json(&j).is_err(), "{s} must be rejected");
+        }
+    }
+}

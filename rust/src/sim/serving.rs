@@ -39,7 +39,9 @@ use crate::coordinator::scheduler::{SchedulerCfg, SwitchRecord};
 use crate::obs::{NoopRecorder, Recorder};
 use crate::plan::front::PlanFront;
 use crate::sim::device::{run_timeline_recorded, DeviceSim, NoControl};
+use crate::sim::service::SERVICE_STREAM;
 use crate::traffic::{ArrivalStream, TraceSpec};
+use crate::util::rng::Rng;
 use crate::util::stats::{fmt_ms, Summary};
 
 pub use crate::sim::device::WindowStat;
@@ -135,7 +137,17 @@ pub fn serve_ramp_observed(
     // Arrivals stream lazily (same split-seeded draws the materialized
     // timeline produced), so the replay never holds the whole timeline.
     let mut stream = ArrivalStream::from_trace(&trace, seed);
-    let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
+    // One device serves every class; its service model is class 0's (the
+    // only sensible choice for a single queue). The draw stream splits
+    // off SERVICE_STREAM without advancing the base, so arrivals and
+    // routing never see a service draw.
+    let service = trace
+        .classes
+        .first()
+        .map(|c| c.service.clone())
+        .unwrap_or(crate::sim::service::ServiceModel::Deterministic);
+    let service_rng = Rng::new(seed).split(SERVICE_STREAM).split(0);
+    let mut devs = vec![DeviceSim::new(front.clone(), *cfg).with_service(service, service_rng)];
     // One device: every arrival routes to it regardless of class/model.
     let outcome = run_timeline_recorded(
         &mut devs,
@@ -262,6 +274,26 @@ mod tests {
         assert_eq!(t.served as usize, observed.served);
         assert_eq!(t.shed as usize, observed.shed);
         assert_eq!(t.plan_switches as usize, observed.switches.len());
+    }
+
+    #[test]
+    fn stochastic_service_conserves_and_stays_deterministic() {
+        use crate::sim::service::ServiceModel;
+        use crate::traffic::{ArrivalProcess, RateCurve};
+        let trace = TraceSpec::single(
+            "synthetic",
+            RateCurve::Constant { rate_rps: 3000.0, duration_s: 0.6 },
+            ArrivalProcess::Poisson,
+        )
+        .with_service(&ServiceModel::LognormalFactor { sigma: 1.0 });
+        let a = serve_ramp(&front(), &trace, &cfg(), 7);
+        let b = serve_ramp(&front(), &trace, &cfg(), 7);
+        assert_eq!(a.served + a.shed, a.arrivals);
+        assert_eq!((a.served, a.shed, a.makespan_s.to_bits()), (b.served, b.shed, b.makespan_s.to_bits()));
+        // and turning noise on cannot perturb the arrival stream: the
+        // deterministic twin sees the identical offered load
+        let det = serve_ramp(&front(), trace.clone().with_service(&ServiceModel::Deterministic), &cfg(), 7);
+        assert_eq!(det.arrivals, a.arrivals);
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::plan::front::PlanFront;
 use crate::sim::device::{
     run_timeline_recorded, run_timeline_sketched_recorded, DeviceSim, NoControl,
 };
+use crate::sim::service::{ServiceModel, SERVICE_STREAM};
 use crate::traffic::{ArrivalStream, TraceSpec};
 use crate::util::rng::Rng;
 use crate::util::stats::{LatencySketch, Summary};
@@ -277,11 +278,21 @@ fn run_cell(
     rec: &mut impl Recorder,
 ) -> CellOutcome {
     // Single device: every arrival routes to it, so the trace's class
-    // models never matter here — only the curves and burst processes.
+    // models never matter here — only the curves, burst processes, and
+    // (class 0's) service-time distribution. The service stream splits
+    // off the cell's own seed, so noisy cells stay independent and the
+    // arrival draws are untouched.
     let mut stream = ArrivalStream::from_trace(shard_trace, seed);
     let duration_s = shard_trace.duration_s();
+    let service = shard_trace
+        .classes
+        .first()
+        .map(|c| c.service.clone())
+        .unwrap_or(ServiceModel::Deterministic);
+    let service_rng = Rng::new(seed).split(SERVICE_STREAM).split(0);
     if sweep.exact {
-        let mut devs = vec![DeviceSim::new(front.clone(), *cfg)];
+        let mut devs =
+            vec![DeviceSim::new(front.clone(), *cfg).with_service(service, service_rng)];
         let outcome = run_timeline_recorded(
             &mut devs,
             &mut stream,
@@ -317,7 +328,9 @@ fn run_cell(
     } else {
         // Fast path: no per-request Vec anywhere — the device drops its
         // sample log and the sink is the fixed-size sketch.
-        let mut devs = vec![DeviceSim::new(front.clone(), *cfg).without_latency_samples()];
+        let mut devs = vec![DeviceSim::new(front.clone(), *cfg)
+            .without_latency_samples()
+            .with_service(service, service_rng)];
         let outcome = run_timeline_sketched_recorded(
             &mut devs,
             &mut stream,

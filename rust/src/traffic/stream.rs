@@ -223,6 +223,7 @@ impl ArrivalSource for ArrivalStream {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::service::ServiceModel;
     use crate::traffic::mix::{RampSpec, TrafficClass};
     use crate::traffic::trace::TraceClass;
 
@@ -393,11 +394,17 @@ mod tests {
         };
         let ramp = RateCurve::Piecewise { rates_rps: vec![1500.0, 500.0], phase_s: 1.0 };
         let two = TraceSpec::new(vec![
-            TraceClass { model: "a".into(), curve: flash.clone(), process: ArrivalProcess::Poisson },
+            TraceClass {
+                model: "a".into(),
+                curve: flash.clone(),
+                process: ArrivalProcess::Poisson,
+                service: ServiceModel::Deterministic,
+            },
             TraceClass {
                 model: "b".into(),
                 curve: ramp,
                 process: ArrivalProcess::ParetoGaps { alpha: 2.0 },
+                service: ServiceModel::Deterministic,
             },
         ])
         .unwrap();

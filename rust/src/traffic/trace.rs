@@ -21,6 +21,7 @@
 
 use std::path::Path;
 
+use crate::sim::service::ServiceModel;
 use crate::traffic::mix::{RampSpec, TrafficMix};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -429,12 +430,15 @@ impl ArrivalProcess {
 }
 
 /// One traffic class of a [`TraceSpec`]: which model, what rate shape,
-/// what burst process.
+/// what burst process, and what per-launch service-time distribution
+/// ([`ServiceModel::Deterministic`] reproduces the pre-noise sims bit
+/// for bit and serializes to nothing — old artifacts load unchanged).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceClass {
     pub model: String,
     pub curve: RateCurve,
     pub process: ArrivalProcess,
+    pub service: ServiceModel,
 }
 
 /// The one workload-trace type every traffic consumer accepts
@@ -458,8 +462,33 @@ impl TraceSpec {
     /// One-class trace.
     pub fn single(model: &str, curve: RateCurve, process: ArrivalProcess) -> TraceSpec {
         TraceSpec {
-            classes: vec![TraceClass { model: model.to_string(), curve, process }],
+            classes: vec![TraceClass {
+                model: model.to_string(),
+                curve,
+                process,
+                service: ServiceModel::Deterministic,
+            }],
         }
+    }
+
+    /// The same trace with every class's service model replaced (the CLI
+    /// `--service` override).
+    pub fn with_service(mut self, service: &ServiceModel) -> TraceSpec {
+        for c in &mut self.classes {
+            c.service = service.clone();
+        }
+        self
+    }
+
+    /// Service model for `model`'s traffic: the first class serving that
+    /// model wins (same first-occurrence rule as [`TraceSpec::models`]);
+    /// unknown models fall back to `Deterministic`.
+    pub fn service_for(&self, model: &str) -> ServiceModel {
+        self.classes
+            .iter()
+            .find(|c| c.model == model)
+            .map(|c| c.service.clone())
+            .unwrap_or(ServiceModel::Deterministic)
     }
 
     /// Zipf model-popularity synthesis: class `k` (1-based rank) gets the
@@ -487,6 +516,7 @@ impl TraceSpec {
                 model: m.to_string(),
                 curve: curve.scaled(w / total),
                 process,
+                service: ServiceModel::Deterministic,
             })
             .collect();
         TraceSpec::new(classes)
@@ -502,6 +532,7 @@ impl TraceSpec {
             }
             c.curve.validate().map_err(|e| format!("trace class {i}: {e}"))?;
             c.process.validate().map_err(|e| format!("trace class {i}: {e}"))?;
+            c.service.validate().map_err(|e| format!("trace class {i}: {e}"))?;
         }
         Ok(())
     }
@@ -527,6 +558,7 @@ impl TraceSpec {
                     model: c.model.clone(),
                     curve: c.curve.shard(n),
                     process: c.process,
+                    service: c.service.clone(),
                 })
                 .collect(),
         }
@@ -552,6 +584,11 @@ impl TraceSpec {
                 m.insert("model".to_string(), Json::Str(c.model.clone()));
                 m.insert("curve".to_string(), c.curve.to_json());
                 m.insert("process".to_string(), c.process.to_json());
+                // Deterministic is the implicit default: omitting it keeps
+                // pre-noise trace artifacts byte-identical.
+                if !c.service.is_deterministic() {
+                    m.insert("service".to_string(), c.service.to_json());
+                }
                 Json::Obj(m)
             })
             .collect();
@@ -582,6 +619,11 @@ impl TraceSpec {
                     c.get("process")
                         .ok_or_else(|| format!("trace class {i} missing 'process'"))?,
                 )?,
+                service: match c.get("service") {
+                    Some(s) => ServiceModel::from_json(s)
+                        .map_err(|e| format!("trace class {i}: {e}"))?,
+                    None => ServiceModel::Deterministic,
+                },
             });
         }
         TraceSpec::new(classes)
@@ -606,8 +648,13 @@ impl TraceSpec {
             self.peak_rps()
         );
         for (i, c) in self.classes.iter().enumerate() {
+            let svc = if c.service.is_deterministic() {
+                String::new()
+            } else {
+                format!("  svc {}", c.service.label())
+            };
             out.push_str(&format!(
-                "  [{i}] {:<12} {:<16} {}\n",
+                "  [{i}] {:<12} {:<16} {}{svc}\n",
                 c.model,
                 c.process.describe(),
                 c.curve.describe()
@@ -643,6 +690,7 @@ impl From<&TrafficMix> for TraceSpec {
                     model: c.model.clone(),
                     curve: RateCurve::from(&c.ramp),
                     process: ArrivalProcess::Poisson,
+                    service: ServiceModel::Deterministic,
                 })
                 .collect(),
         }
@@ -772,7 +820,16 @@ mod tests {
             model: "m".into(),
             curve: bad_curve,
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::Deterministic,
         }])
+        .is_err());
+        assert!(TraceSpec::single(
+            "m",
+            RateCurve::Constant { rate_rps: 1.0, duration_s: 1.0 },
+            ArrivalProcess::Poisson
+        )
+        .with_service(&ServiceModel::LognormalFactor { sigma: -1.0 })
+        .validate()
         .is_err());
         assert!(RateCurve::Piecewise { rates_rps: vec![], phase_s: 0.5 }.validate().is_err());
         assert!(RateCurve::Diurnal {
@@ -798,6 +855,26 @@ mod tests {
         assert!(ArrivalProcess::ParetoGaps { alpha: 1.5 }.validate().is_ok());
         let empty_model = TraceSpec::single("", RateCurve::Constant { rate_rps: 1.0, duration_s: 1.0 }, ArrivalProcess::Poisson);
         assert!(empty_model.validate().is_err());
+    }
+
+    #[test]
+    fn service_models_ride_through_json_and_default_to_deterministic() {
+        let base = TraceSpec::single(
+            "m",
+            RateCurve::Constant { rate_rps: 100.0, duration_s: 1.0 },
+            ArrivalProcess::Poisson,
+        );
+        // Deterministic writes no `service` key at all, so pre-noise
+        // artifacts stay byte-identical.
+        assert!(!base.to_json().to_string().contains("service"));
+        let noisy = base.clone().with_service(&ServiceModel::LognormalFactor { sigma: 0.7 });
+        let back =
+            TraceSpec::from_json(&Json::parse(&noisy.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, noisy);
+        assert_eq!(back.service_for("m"), ServiceModel::LognormalFactor { sigma: 0.7 });
+        assert_eq!(back.service_for("other"), ServiceModel::Deterministic);
+        let old = TraceSpec::from_json(&Json::parse(&base.to_json().to_string()).unwrap()).unwrap();
+        assert!(old.classes[0].service.is_deterministic());
     }
 
     #[test]

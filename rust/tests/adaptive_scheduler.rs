@@ -60,6 +60,7 @@ fn cfg() -> SchedulerCfg {
         headroom: 0.75,
         shed_slack: 4.0,
         horizon_windows: 2,
+        p99_aware: false,
     }
 }
 

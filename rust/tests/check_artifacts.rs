@@ -9,6 +9,7 @@ use ssr::check::{self, check_artifact, detect, ArtifactKind, CheckOpts};
 use ssr::cluster::fleet::{device_front, parse_mix, synth_fleet};
 use ssr::dse::Assignment;
 use ssr::plan::ExecutionPlan;
+use ssr::sim::service::ServiceModel;
 use ssr::traffic::trace::{ArrivalProcess, RateCurve, TraceClass, TraceSpec};
 use ssr::util::json::Json;
 
@@ -44,17 +45,21 @@ fn assert_rejected(j: &Json, kind: ArtifactKind, opts: &CheckOpts, code: &str, p
     );
 }
 
+// One class per curve kind, and one class per service-model kind, so the
+// clean pass exercises every S5xx domain alongside every T40x domain.
 fn mixed_trace() -> TraceSpec {
     TraceSpec::new(vec![
         TraceClass {
             model: "deit_t".into(),
             curve: RateCurve::Constant { rate_rps: 40.0, duration_s: 20.0 },
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::Deterministic,
         },
         TraceClass {
             model: "deit_t".into(),
             curve: RateCurve::Piecewise { rates_rps: vec![10.0, 30.0, 20.0], phase_s: 5.0 },
             process: ArrivalProcess::LognormalGaps { sigma: 1.2 },
+            service: ServiceModel::LognormalFactor { sigma: 0.8 },
         },
         TraceClass {
             model: "deit_t".into(),
@@ -65,6 +70,7 @@ fn mixed_trace() -> TraceSpec {
                 duration_s: 120.0,
             },
             process: ArrivalProcess::ParetoGaps { alpha: 1.8 },
+            service: ServiceModel::TokenPruning { alpha: 2.0, beta: 3.0 },
         },
         TraceClass {
             model: "deit_t".into(),
@@ -77,6 +83,10 @@ fn mixed_trace() -> TraceSpec {
                 duration_s: 90.0,
             },
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::EarlyExit {
+                exit_probs: vec![0.3, 0.2],
+                stage_fractions: vec![0.25, 0.5],
+            },
         },
     ])
     .unwrap()
@@ -241,6 +251,115 @@ fn mutation_dropped_stage_is_rejected() {
             && d.message.contains("missing")
             && d.message.contains("qkv")),
         "expected a P106 missing-qkv diagnostic, got: {diags:?}"
+    );
+}
+
+/// Fetch class `i`'s mutable `service` object from a serialized trace.
+fn service_of(t: &mut Json, i: usize) -> &mut BTreeMap<String, Json> {
+    let classes = arr(obj(t).get_mut("classes").unwrap());
+    obj(obj(&mut classes[i]).get_mut("service").expect("class has a service object"))
+}
+
+#[test]
+fn mutation_unknown_service_kind_is_rejected() {
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 1).insert("kind".into(), Json::Str("speculative".into()));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S500",
+        "/classes/1/service/kind",
+    );
+}
+
+#[test]
+fn mutation_bad_lognormal_sigma_is_rejected() {
+    // Out-of-domain and NaN both land S501 at the exact field.
+    for bad in [Json::Num(-0.5), Json::Num(5.0), Json::Num(f64::NAN)] {
+        let mut t = mixed_trace().to_json();
+        service_of(&mut t, 1).insert("sigma".into(), bad);
+        assert_rejected(
+            &t,
+            ArtifactKind::Trace,
+            &CheckOpts::default(),
+            "S501",
+            "/classes/1/service/sigma",
+        );
+    }
+}
+
+#[test]
+fn mutation_bad_prune_shape_is_rejected() {
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 2).insert("alpha".into(), Json::Num(0.0));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S502",
+        "/classes/2/service/alpha",
+    );
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 2).insert("beta".into(), Json::Num(f64::NAN));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S502",
+        "/classes/2/service/beta",
+    );
+}
+
+#[test]
+fn mutation_bad_exit_probability_element_is_rejected() {
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 3)
+        .insert("exit_probs".into(), Json::Arr(vec![Json::Num(1.5), Json::Num(0.2)]));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S503",
+        "/classes/3/service/exit_probs/0",
+    );
+}
+
+#[test]
+fn mutation_exit_probabilities_summing_past_one_are_rejected() {
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 3)
+        .insert("exit_probs".into(), Json::Arr(vec![Json::Num(0.7), Json::Num(0.6)]));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S504",
+        "/classes/3/service/exit_probs",
+    );
+}
+
+#[test]
+fn mutation_bad_stage_fraction_is_rejected() {
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 3)
+        .insert("stage_fractions".into(), Json::Arr(vec![Json::Num(0.0), Json::Num(0.5)]));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S505",
+        "/classes/3/service/stage_fractions/0",
+    );
+    // Length mismatch points at the stage_fractions array itself.
+    let mut t = mixed_trace().to_json();
+    service_of(&mut t, 3).insert("stage_fractions".into(), Json::Arr(vec![Json::Num(0.5)]));
+    assert_rejected(
+        &t,
+        ArtifactKind::Trace,
+        &CheckOpts::default(),
+        "S505",
+        "/classes/3/service/stage_fractions",
     );
 }
 

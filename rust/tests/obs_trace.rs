@@ -32,6 +32,9 @@ use ssr::obs::{
     tallies_from_json, trace_tallies, MetricsRegistry, SloCfg, TraceEvent, TraceRecorder,
 };
 use ssr::plan::front::{FrontEntry, PlanFront};
+use ssr::sim::service::ServiceModel;
+use ssr::sim::sweep::{run_sweep_observed, SweepCfg};
+use ssr::traffic::TraceSpec;
 use ssr::util::json::Json;
 
 const SLO_MS: f64 = 20.0;
@@ -101,6 +104,29 @@ fn observed_run(seed: u64) -> (ssr::cluster::AutoscaleReport, Vec<TraceEvent>) {
     let r = simulate_autoscale_observed(
         &eventful_spec(),
         &bursty(),
+        &cfg(),
+        &ctl(),
+        RoutePolicy::PowerOfTwoSlo,
+        seed,
+        &mut rec,
+    )
+    .unwrap();
+    let merged = merge_audit(rec.into_events(), &r.events);
+    (r, merged)
+}
+
+/// The eventful scenario's traffic with stochastic (lognormal) service
+/// times attached to every class.
+fn noisy_traffic() -> TraceSpec {
+    TraceSpec::from(&bursty()).with_service(&ServiceModel::LognormalFactor { sigma: 0.9 })
+}
+
+/// [`observed_run`] over [`noisy_traffic`].
+fn noisy_observed_run(seed: u64) -> (ssr::cluster::AutoscaleReport, Vec<TraceEvent>) {
+    let mut rec = TraceRecorder::new();
+    let r = simulate_autoscale_observed(
+        &eventful_spec(),
+        noisy_traffic(),
         &cfg(),
         &ctl(),
         RoutePolicy::PowerOfTwoSlo,
@@ -218,6 +244,103 @@ fn prometheus_exposition_round_trips_and_json_metrics_parse() {
         .and_then(Json::as_f64)
         .expect("served_total in JSON metrics");
     assert_eq!(served as usize, r.served);
+}
+
+#[test]
+fn stochastic_service_trace_reconstructs_and_conserves() {
+    let (r, events) = noisy_observed_run(11);
+    // The noise is real: draws were recorded and at least one landed off
+    // the 1x deterministic factor.
+    let draws =
+        events.iter().filter(|e| matches!(e, TraceEvent::ServiceDraw { .. })).count();
+    assert!(draws > 0, "noisy run recorded no service draws");
+    assert!(
+        events.iter().any(
+            |e| matches!(e, TraceEvent::ServiceDraw { factor, .. } if (factor - 1.0).abs() > 1e-6)
+        ),
+        "every service factor was exactly 1x"
+    );
+    // Trace-reconstructed tallies stay conservation-exact under noise.
+    let t = trace_tallies(&events);
+    assert_eq!(t.arrivals as usize, r.arrivals);
+    assert_eq!(t.served as usize, r.served);
+    assert_eq!(t.shed as usize, r.shed);
+    assert_eq!(t.requeued as usize, r.requeued);
+    assert!(t.conserved(), "served {} + shed {} > arrivals {}", t.served, t.shed, t.arrivals);
+    assert_eq!(t.in_flight(), 0, "noisy trace left requests in flight");
+    // ... and survive the serialized round trip with every counter exact.
+    let text = chrome_trace_json(&events);
+    let root = Json::parse(&text).expect("noisy trace JSON parses");
+    let from_json = tallies_from_json(&root).expect("tallies from JSON");
+    assert_eq!(from_json.arrivals, t.arrivals);
+    assert_eq!(from_json.served, t.served);
+    assert_eq!(from_json.shed, t.shed);
+    assert!(from_json.conserved());
+}
+
+#[test]
+fn stochastic_exports_and_tail_gauges_are_byte_stable() {
+    let (_, e1) = noisy_observed_run(7);
+    let (_, e2) = noisy_observed_run(7);
+    assert_eq!(e1, e2, "noisy event streams diverged at equal seeds");
+    let slo_s = SLO_MS * 1e-3;
+    let a1 = annotate_slo(e1, slo_s, &SloCfg::default());
+    let a2 = annotate_slo(e2, slo_s, &SloCfg::default());
+    assert_eq!(chrome_trace_json(&a1), chrome_trace_json(&a2));
+    let mut m1 = MetricsRegistry::new(slo_s);
+    m1.observe_all(&a1);
+    let mut m2 = MetricsRegistry::new(slo_s);
+    m2.observe_all(&a2);
+    assert_eq!(m1.to_prometheus(), m2.to_prometheus());
+    assert_eq!(m1.to_json().to_string(), m2.to_json().to_string());
+    // The tail gauges populate: one draw counted per recorded ServiceDraw,
+    // and a lognormal run's factor p99 sits strictly above the 1x mean.
+    let draws =
+        a1.iter().filter(|e| matches!(e, TraceEvent::ServiceDraw { .. })).count() as u64;
+    assert!(draws > 0);
+    assert_eq!(m1.counter("service_draws_total"), draws);
+    assert!(m1.service_factor_p99() > 1.0, "p99 factor {} not a tail", m1.service_factor_p99());
+    assert!(m1.to_prometheus().contains("ssr_service_factor_p99"));
+    // A deterministic run keeps the gauge at its neutral 1.0 with zero
+    // draws — the pre-noise exposition is unchanged in meaning.
+    let (_, det) = observed_run(7);
+    let det = annotate_slo(det, slo_s, &SloCfg::default());
+    let mut md = MetricsRegistry::new(slo_s);
+    md.observe_all(&det);
+    assert_eq!(md.counter("service_draws_total"), 0);
+    assert_eq!(md.service_factor_p99(), 1.0);
+}
+
+#[test]
+fn noisy_sweep_exports_are_byte_stable_across_thread_counts() {
+    // Same sharded sweep, same noisy trace, 1 vs 4 worker threads: the
+    // merged event stream, Chrome trace, and Prometheus exposition must
+    // be byte-identical — thread scheduling can never touch the service
+    // draw streams (each cell splits its own SERVICE_STREAM).
+    let trace = TraceSpec::from(&bursty())
+        .with_service(&ServiceModel::TokenPruning { alpha: 2.0, beta: 3.5 });
+    let one = SweepCfg { seeds: 2, shards: 3, threads: 1, exact: false };
+    let four = SweepCfg { seeds: 2, shards: 3, threads: 4, exact: false };
+    let (r1, e1) = run_sweep_observed(&front(), trace.clone(), &cfg(), &one, 5);
+    let (r4, e4) = run_sweep_observed(&front(), trace, &cfg(), &four, 5);
+    assert_eq!(e1, e4, "thread count leaked into the noisy event stream");
+    assert_eq!(r1.served, r4.served);
+    assert_eq!(r1.shed, r4.shed);
+    assert_eq!(r1.makespan_s.to_bits(), r4.makespan_s.to_bits());
+    let slo_s = SLO_MS * 1e-3;
+    let a1 = annotate_slo(e1, slo_s, &SloCfg::default());
+    let a4 = annotate_slo(e4, slo_s, &SloCfg::default());
+    assert_eq!(chrome_trace_json(&a1), chrome_trace_json(&a4));
+    let mut m1 = MetricsRegistry::new(slo_s);
+    m1.observe_all(&a1);
+    let mut m4 = MetricsRegistry::new(slo_s);
+    m4.observe_all(&a4);
+    assert_eq!(m1.to_prometheus(), m4.to_prometheus());
+    // Conservation holds from the merged sweep trace alone.
+    let t = trace_tallies(&a1);
+    assert_eq!(t.served as usize, r1.served);
+    assert_eq!(t.arrivals as usize, r1.arrivals);
+    assert!(t.conserved());
 }
 
 #[test]

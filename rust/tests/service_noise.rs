@@ -1,0 +1,510 @@
+//! Input-dynamic serving invariant torture suite (ISSUE 10 acceptance):
+//!
+//! (a) differential pin — [`ServiceModel::Deterministic`] replays the
+//!     pre-noise path *bit-identically*: a trace with an explicit
+//!     `Deterministic` service equals the same trace with no service at
+//!     all, and `serve_ramp` equals a 1-device `simulate_fleet` twin on
+//!     every shared field (the `sim_unification` equivalence), for
+//!     deterministic AND stochastic service models alike — the service
+//!     stream is split per device index, so both entry points draw the
+//!     exact same factors;
+//! (b) property torture — over randomized service models (all four
+//!     kinds) x fleets x seeds, for all three route policies: fleet-wide
+//!     and per-device `served + shed == arrivals` conservation, seed
+//!     determinism of the full recorded event log (not just tallies),
+//!     trace-reconstructed tallies equal to the report, and the
+//!     scheduler's hysteresis contract (at most one switch per window;
+//!     consecutive switches at least `patience` windows apart) holding
+//!     under arbitrarily noisy service times;
+//! (c) requeue ledgers — drains, faults, and front swaps under
+//!     stochastic service times keep every autoscale requeue identity
+//!     exact (`sum(requeued_away) == requeued`, placed requeues ==
+//!     `sum(requeued_in)`, per-device `served + shed + requeued_away ==
+//!     routed`);
+//! (d) p99-aware scheduling — on a heavy-tail workload the
+//!     `p99_aware` scheduler sheds strictly fewer requests than the
+//!     mean-based one at the same SLO (the headline tradeoff, pinned at
+//!     a fixed seed).
+//!
+//! Everything is deterministic and artifact-free.
+
+use ssr::cluster::controller::FaultEvent;
+use ssr::cluster::fleet::{DeviceSpec, FleetSpec};
+use ssr::cluster::{
+    simulate_autoscale, simulate_fleet, simulate_fleet_observed, AutoscaleCfg, AutoscaleReport,
+    AutoscaleSpec, FaultSpec, RoutePolicy, TrafficClass, TrafficMix,
+};
+use ssr::coordinator::scheduler::{RampSpec, SchedulerCfg};
+use ssr::obs::{trace_tallies, TraceEvent, TraceRecorder};
+use ssr::plan::front::{FrontEntry, PlanFront};
+use ssr::sim::serving::serve_ramp;
+use ssr::sim::service::ServiceModel;
+use ssr::traffic::TraceSpec;
+use ssr::util::prop::{check, Config};
+use ssr::util::rng::Rng;
+
+const POLICIES: [RoutePolicy; 3] =
+    [RoutePolicy::RoundRobin, RoutePolicy::ShortestQueue, RoutePolicy::PowerOfTwoSlo];
+
+fn entry(label: &str, batch: usize, lat_ms: f64, rps: f64) -> FrontEntry {
+    FrontEntry {
+        assign: vec![0; 8],
+        batch,
+        latency_ms: lat_ms,
+        tops: rps * 2.5e-3,
+        rps,
+        nacc: 1,
+        label: label.to_string(),
+    }
+}
+
+fn front3(model: &str) -> PlanFront {
+    PlanFront::new(
+        model,
+        12,
+        vec![
+            entry("seq", 1, 0.2, 5000.0),
+            entry("hybrid", 6, 1.0, 6000.0),
+            entry("spatial", 24, 2.0, 12000.0),
+        ],
+    )
+    .unwrap()
+}
+
+fn one_device_fleet(front: PlanFront) -> FleetSpec {
+    FleetSpec::new(
+        "solo",
+        vec![DeviceSpec {
+            id: "vck190-0".to_string(),
+            platform: "vck190".to_string(),
+            front,
+        }],
+    )
+    .unwrap()
+}
+
+/// One stochastic representative per non-deterministic kind.
+fn noisy_models() -> Vec<ServiceModel> {
+    vec![
+        ServiceModel::LognormalFactor { sigma: 1.0 },
+        ServiceModel::TokenPruning { alpha: 2.0, beta: 3.0 },
+        ServiceModel::EarlyExit {
+            exit_probs: vec![0.35, 0.25],
+            stage_fractions: vec![0.25, 0.55],
+        },
+    ]
+}
+
+/// Random service model over all four kinds, always within
+/// `ServiceModel::validate`'s domain.
+fn gen_service(rng: &mut Rng) -> ServiceModel {
+    match rng.usize_below(4) {
+        0 => ServiceModel::Deterministic,
+        1 => ServiceModel::LognormalFactor { sigma: 0.2 + rng.f64() * 1.8 },
+        2 => ServiceModel::TokenPruning {
+            alpha: 0.5 + rng.f64() * 3.0,
+            beta: 0.5 + rng.f64() * 3.0,
+        },
+        _ => {
+            let stages = 1 + rng.usize_below(3);
+            // Spend a shrinking probability budget so the sum stays < 1.
+            let mut budget = 1.0;
+            let mut exit_probs = Vec::new();
+            for _ in 0..stages {
+                let p = budget * rng.f64() * 0.8;
+                exit_probs.push(p);
+                budget -= p;
+            }
+            let stage_fractions = (0..stages)
+                .map(|i| (0.2 + 0.8 * (i as f64 + rng.f64()) / stages as f64).min(1.0))
+                .collect();
+            ServiceModel::EarlyExit { exit_probs, stage_fractions }
+        }
+    }
+}
+
+/// Assert every field the two reports share is identical (the
+/// `sim_unification` twin sweep, reused so noise cannot split the two
+/// entry points).
+fn assert_equivalent(
+    r1: &ssr::sim::serving::ServeSimReport,
+    fleet_r: &ssr::cluster::sim::FleetSimReport,
+    ctx: &str,
+) {
+    assert_eq!(fleet_r.devices.len(), 1, "{ctx}: not a 1-device fleet");
+    let d = &fleet_r.devices[0];
+    assert_eq!(r1.arrivals, fleet_r.arrivals, "{ctx}: arrivals");
+    assert_eq!(r1.served, fleet_r.served, "{ctx}: served");
+    assert_eq!(r1.shed, fleet_r.shed, "{ctx}: shed");
+    assert_eq!(fleet_r.unroutable, 0, "{ctx}: unroutable in a matched 1-device fleet");
+    assert_eq!(r1.served, d.served, "{ctx}: device served");
+    assert_eq!(r1.switches, d.switches, "{ctx}: switches");
+    assert_eq!(r1.windows, d.windows, "{ctx}: per-window stats");
+    assert_eq!(r1.max_queue_depth, d.max_queue_depth, "{ctx}: max queue depth");
+    assert_eq!(r1.slo_violations, fleet_r.slo_violations, "{ctx}: slo violations");
+    assert_eq!(r1.final_committed, d.final_committed, "{ctx}: final committed");
+    assert_eq!(r1.final_draining, d.final_draining, "{ctx}: final draining");
+    assert_eq!(
+        r1.makespan_s.to_bits(),
+        fleet_r.makespan_s.to_bits(),
+        "{ctx}: makespan diverged ({} vs {})",
+        r1.makespan_s,
+        fleet_r.makespan_s
+    );
+    let qs = [0.0, 0.01, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0];
+    let p1 = r1.latency.percentiles(&qs);
+    let p2 = fleet_r.latency.percentiles(&qs);
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: latency quantiles diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (a) Differential pins
+// ---------------------------------------------------------------------------
+
+#[test]
+fn explicit_deterministic_service_is_the_pre_noise_path_to_the_bit() {
+    let ramp = RampSpec::parse("1000:4400:1000", 0.6).unwrap();
+    let mix = TrafficMix::single("m", ramp);
+    let cfg = SchedulerCfg { slo_ms: 20.0, ..Default::default() };
+    for seed in [1u64, 7, 1234, 0xDEAD] {
+        // No service key at all (the pre-noise artifact shape) ...
+        let bare = serve_ramp(&front3("m"), TraceSpec::from(&mix), &cfg, seed);
+        // ... an explicit Deterministic override ...
+        let explicit = serve_ramp(
+            &front3("m"),
+            TraceSpec::from(&mix).with_service(&ServiceModel::Deterministic),
+            &cfg,
+            seed,
+        );
+        // ... and the raw mix, which never heard of service models.
+        let legacy = serve_ramp(&front3("m"), &mix, &cfg, seed);
+        for (r, ctx) in [(&explicit, "explicit det"), (&legacy, "legacy mix")] {
+            assert_eq!(bare.arrivals, r.arrivals, "{ctx} seed {seed}: arrivals");
+            assert_eq!(bare.served, r.served, "{ctx} seed {seed}: served");
+            assert_eq!(bare.shed, r.shed, "{ctx} seed {seed}: shed");
+            assert_eq!(bare.switches, r.switches, "{ctx} seed {seed}: switches");
+            assert_eq!(bare.windows, r.windows, "{ctx} seed {seed}: windows");
+            assert_eq!(
+                bare.makespan_s.to_bits(),
+                r.makespan_s.to_bits(),
+                "{ctx} seed {seed}: makespan"
+            );
+        }
+    }
+}
+
+#[test]
+fn noisy_twins_serve_ramp_equals_one_device_fleet() {
+    // The service stream is `Rng::new(seed).split(SERVICE_STREAM).split(0)`
+    // on both entry points, so the twin equivalence must survive noise.
+    let ramp = RampSpec::parse("1000:4400:1000", 0.6).unwrap();
+    let mix = TrafficMix::single("m", ramp);
+    let cfg = SchedulerCfg { slo_ms: 20.0, ..Default::default() };
+    let mut services = noisy_models();
+    services.push(ServiceModel::Deterministic);
+    for service in &services {
+        let trace = TraceSpec::from(&mix).with_service(service);
+        for seed in [7u64, 0xDEAD] {
+            for policy in POLICIES {
+                let r1 = serve_ramp(&front3("m"), trace.clone(), &cfg, seed);
+                let r2 = simulate_fleet(
+                    &one_device_fleet(front3("m")),
+                    trace.clone(),
+                    &cfg,
+                    policy,
+                    seed,
+                )
+                .unwrap();
+                assert_equivalent(&r1, &r2, &format!("{} seed {seed} {policy:?}", service.label()));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) Property torture over randomized noisy scenarios
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Scenario {
+    fleet: FleetSpec,
+    trace: TraceSpec,
+    cfg: SchedulerCfg,
+    seed: u64,
+}
+
+/// Random front for `model`: 1..=3 entries with strictly increasing
+/// latency and rate (so none is Pareto-pruned) at controlled scales.
+fn gen_front(rng: &mut Rng, model: &str) -> PlanFront {
+    let n = 1 + rng.usize_below(3);
+    let mut lat_ms = 0.1 + rng.f64() * 0.9;
+    let mut rps = 2000.0 + rng.f64() * 4000.0;
+    let mut entries = Vec::new();
+    for (i, &batch) in [1usize, 6, 24].iter().enumerate().take(n) {
+        entries.push(entry(&format!("e{i}"), batch, lat_ms, rps));
+        lat_ms *= 2.0 + rng.f64() * 2.0;
+        rps *= 1.3 + rng.f64();
+    }
+    PlanFront::new(model, 12, entries).unwrap()
+}
+
+fn gen_ramp(rng: &mut Rng) -> RampSpec {
+    let phases = 1 + rng.usize_below(3);
+    let spec: Vec<String> =
+        (0..phases).map(|_| (500 + rng.usize_below(7500)).to_string()).collect();
+    RampSpec::parse(&spec.join(":"), 0.1 + rng.f64() * 0.2).unwrap()
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let n_classes = 1 + rng.usize_below(2);
+    let models: Vec<String> = (0..n_classes).map(|i| format!("m{i}")).collect();
+    let n_devices = 1 + rng.usize_below(3);
+    let devices: Vec<DeviceSpec> = (0..n_devices)
+        .map(|i| DeviceSpec {
+            id: format!("vck190-{i}"),
+            platform: "vck190".to_string(),
+            front: gen_front(rng, rng.choose(&models)),
+        })
+        .collect();
+    let classes: Vec<TrafficClass> = models
+        .iter()
+        .map(|m| TrafficClass { model: m.clone(), ramp: gen_ramp(rng) })
+        .collect();
+    // Each class gets its own randomly drawn service model.
+    let mut trace = TraceSpec::from(&TrafficMix { classes });
+    for c in &mut trace.classes {
+        c.service = gen_service(rng);
+    }
+    Scenario {
+        fleet: FleetSpec::new("prop", devices).unwrap(),
+        trace,
+        cfg: SchedulerCfg {
+            slo_ms: 5.0 + rng.f64() * 25.0,
+            patience: 1 + rng.usize_below(3),
+            shed_slack: 1.0 + rng.f64() * 4.0,
+            p99_aware: rng.usize_below(2) == 1,
+            ..Default::default()
+        },
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_noise_torture_conservation_hysteresis_and_event_determinism() {
+    let prop_cfg = Config { cases: 24, seed: 0x5E11_ACE5, max_shrink_steps: 0 };
+    check(
+        &prop_cfg,
+        "service_noise",
+        gen_scenario,
+        |s: &Scenario| {
+            for policy in POLICIES {
+                let mut rec = TraceRecorder::new();
+                let r = simulate_fleet_observed(
+                    &s.fleet,
+                    s.trace.clone(),
+                    &s.cfg,
+                    policy,
+                    s.seed,
+                    &mut rec,
+                )
+                .map_err(|e| format!("{policy:?}: {e}"))?;
+                let events = rec.into_events();
+                // conservation, fleet-wide and per device
+                if r.served + r.shed != r.arrivals {
+                    return Err(format!(
+                        "{policy:?}: fleet lost requests ({} + {} != {})",
+                        r.served, r.shed, r.arrivals
+                    ));
+                }
+                let routed: usize = r.devices.iter().map(|d| d.routed).sum();
+                if routed + r.unroutable != r.arrivals {
+                    return Err(format!("{policy:?}: routing lost requests"));
+                }
+                if r.latency.len() != r.served {
+                    return Err(format!("{policy:?}: latency samples != served"));
+                }
+                for d in &r.devices {
+                    if d.served + d.shed != d.routed {
+                        return Err(format!("{policy:?}: device {} lost requests", d.id));
+                    }
+                    if d.final_draining.is_some() {
+                        return Err(format!("{policy:?}: device {} ended mid-drain", d.id));
+                    }
+                    // hysteresis: at most one switch per window, and
+                    // consecutive commits at least `patience` windows apart
+                    let min_gap = s.cfg.patience.max(1);
+                    let mut prev: Option<usize> = None;
+                    for sw in &d.switches {
+                        if sw.from == sw.to {
+                            return Err(format!("{policy:?}: no-op switch on {}", d.id));
+                        }
+                        if let Some(p) = prev {
+                            if sw.window <= p {
+                                return Err(format!(
+                                    "{policy:?}: device {} committed two switches in window {p}",
+                                    d.id
+                                ));
+                            }
+                            if sw.window - p < min_gap {
+                                return Err(format!(
+                                    "{policy:?}: device {} switched {} windows after the \
+                                     last commit (patience {min_gap})",
+                                    d.id,
+                                    sw.window - p
+                                ));
+                            }
+                        }
+                        prev = Some(sw.window);
+                    }
+                }
+                // the trace IS the run, noise or not
+                let t = trace_tallies(&events);
+                if t.served as usize != r.served
+                    || t.shed as usize != r.shed
+                    || t.arrivals as usize != r.arrivals
+                {
+                    return Err(format!("{policy:?}: trace tallies diverge from the report"));
+                }
+                if !t.conserved() {
+                    return Err(format!("{policy:?}: trace tallies violate conservation"));
+                }
+                // event-log determinism: same seed, same full stream
+                let mut rec2 = TraceRecorder::new();
+                let r2 = simulate_fleet_observed(
+                    &s.fleet,
+                    s.trace.clone(),
+                    &s.cfg,
+                    policy,
+                    s.seed,
+                    &mut rec2,
+                )
+                .map_err(|e| format!("{policy:?}: {e}"))?;
+                if events != rec2.into_events() {
+                    return Err(format!("{policy:?}: non-deterministic event log"));
+                }
+                if r.served != r2.served
+                    || r.shed != r2.shed
+                    || r.makespan_s.to_bits() != r2.makespan_s.to_bits()
+                {
+                    return Err(format!("{policy:?}: non-deterministic fleet tallies"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) Requeue ledgers under drains, faults, and noise
+// ---------------------------------------------------------------------------
+
+fn dev(id: &str) -> DeviceSpec {
+    DeviceSpec { id: id.to_string(), platform: "vck190".to_string(), front: front3("m") }
+}
+
+/// Scale-outs, a scale-in, and a mid-run fault: every requeue source.
+fn eventful_spec() -> AutoscaleSpec {
+    AutoscaleSpec {
+        fleet: FleetSpec::new("t", vec![dev("d0"), dev("d1")]).unwrap(),
+        pool: vec![dev("p0"), dev("p1")],
+        faults: FaultSpec { events: vec![FaultEvent { at_s: 0.7, device: Some("d1".into()) }] },
+        swap: None,
+    }
+}
+
+fn assert_requeue_ledger(r: &AutoscaleReport, ctx: &str) {
+    assert_eq!(r.served + r.shed, r.arrivals, "{ctx}: arrivals leaked");
+    assert_eq!(r.latency.len(), r.served, "{ctx}: latency samples != served");
+    let routed: usize = r.devices.iter().map(|d| d.routed).sum();
+    let placed = r.requeued - r.requeue_lost;
+    assert_eq!(
+        routed + r.unroutable,
+        r.arrivals + placed,
+        "{ctx}: routing identity broken (requeues are re-dispatches)"
+    );
+    let away: usize = r.devices.iter().map(|d| d.requeued_away).sum();
+    let taken: usize = r.devices.iter().map(|d| d.requeued_in).sum();
+    assert_eq!(away, r.requeued, "{ctx}: requeue events != per-device requeued_away");
+    assert_eq!(taken, placed, "{ctx}: placed requeues != per-device requeued_in");
+    for d in &r.devices {
+        assert_eq!(
+            d.served + d.shed + d.requeued_away,
+            d.routed,
+            "{ctx}: device {} leaked requests",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn requeue_ledger_is_exact_under_stochastic_service_times() {
+    let mix = TrafficMix::single("m", RampSpec::parse("3000:20000:20000:3000:3000", 0.5).unwrap());
+    let cfg = SchedulerCfg { slo_ms: 20.0, ..Default::default() };
+    let ctl = AutoscaleCfg {
+        high_water: 0.8,
+        low_water: 0.35,
+        patience: 2,
+        control_windows: 2,
+        min_devices: 1,
+    };
+    let mut services = noisy_models();
+    services.push(ServiceModel::Deterministic);
+    for service in &services {
+        let trace = TraceSpec::from(&mix).with_service(service);
+        for seed in [11u64, 42] {
+            let r = simulate_autoscale(
+                &eventful_spec(),
+                trace.clone(),
+                &cfg,
+                &ctl,
+                RoutePolicy::PowerOfTwoSlo,
+                seed,
+            )
+            .unwrap();
+            let ctx = format!("{} seed {seed}", service.label());
+            assert!(r.requeued > 0, "{ctx}: the fault must displace in-flight work");
+            assert_requeue_ledger(&r, &ctx);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) p99-aware scheduling beats mean-based on heavy tails
+// ---------------------------------------------------------------------------
+
+#[test]
+fn p99_aware_sheds_strictly_less_than_mean_based_on_heavy_tails() {
+    // Offered 4200 rps with a sigma-2 lognormal service factor: the
+    // mean-based scheduler sizes for the mean (demand 4200/0.8 = 5250 →
+    // the 6 k hybrid plan) and drowns in tail-length launches; the
+    // p99-aware scheduler sees the observed p99 blow past the plan's
+    // nominal latency and escalates to the 12 k spatial plan, which
+    // absorbs the same tail inside its deeper admission budget.
+    let ramp = RampSpec::parse("4200:4200:4200:4200", 0.6).unwrap();
+    let mix = TrafficMix::single("m", ramp);
+    let heavy = TraceSpec::from(&mix).with_service(&ServiceModel::LognormalFactor { sigma: 2.0 });
+    let seed = 42u64;
+    let mean_cfg = SchedulerCfg { slo_ms: 5.0, ..Default::default() };
+    let p99_cfg = SchedulerCfg { slo_ms: 5.0, p99_aware: true, ..Default::default() };
+
+    let mean_r = serve_ramp(&front3("m"), heavy.clone(), &mean_cfg, seed);
+    let p99_r = serve_ramp(&front3("m"), heavy, &p99_cfg, seed);
+
+    // Same seed, same arrival stream: the service stream never perturbs it.
+    assert_eq!(mean_r.arrivals, p99_r.arrivals, "arrival stream must not depend on the policy");
+    assert_eq!(mean_r.served + mean_r.shed, mean_r.arrivals, "mean-based leaked requests");
+    assert_eq!(p99_r.served + p99_r.shed, p99_r.arrivals, "p99-aware leaked requests");
+    assert!(
+        mean_r.shed > 0,
+        "scenario must stress the mean-based scheduler (shed {})",
+        mean_r.shed
+    );
+    assert!(
+        p99_r.shed < mean_r.shed,
+        "p99-aware must shed strictly less: {} vs {}",
+        p99_r.shed,
+        mean_r.shed
+    );
+}

@@ -28,6 +28,7 @@ use ssr::cluster::{
 use ssr::coordinator::scheduler::SchedulerCfg;
 use ssr::plan::front::{FrontEntry, PlanFront};
 use ssr::sim::device::ArrivalSource;
+use ssr::sim::service::ServiceModel;
 use ssr::traffic::{
     ArrivalProcess, ArrivalStream, RampSpec, RateCurve, TraceClass, TraceSpec, TrafficClass,
     TrafficMix,
@@ -195,11 +196,13 @@ fn kitchen_sink() -> TraceSpec {
             model: "a".to_string(),
             curve: RateCurve::Constant { rate_rps: 1234.5, duration_s: 2.5 },
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::Deterministic,
         },
         TraceClass {
             model: "b".to_string(),
             curve: RateCurve::Piecewise { rates_rps: vec![100.0, 0.0, 250.25], phase_s: 0.3 },
             process: ArrivalProcess::LognormalGaps { sigma: 0.8 },
+            service: ServiceModel::LognormalFactor { sigma: 0.6 },
         },
         TraceClass {
             model: "c".to_string(),
@@ -210,6 +213,7 @@ fn kitchen_sink() -> TraceSpec {
                 duration_s: 4.0,
             },
             process: ArrivalProcess::ParetoGaps { alpha: 1.7 },
+            service: ServiceModel::TokenPruning { alpha: 2.0, beta: 3.5 },
         },
         TraceClass {
             model: "d".to_string(),
@@ -222,6 +226,10 @@ fn kitchen_sink() -> TraceSpec {
                 duration_s: 3.0,
             },
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::EarlyExit {
+                exit_probs: vec![0.3, 0.2],
+                stage_fractions: vec![0.25, 0.5],
+            },
         },
     ])
     .unwrap()
@@ -249,6 +257,7 @@ fn malformed_specs_are_rejected() {
             model: String::new(),
             curve: RateCurve::Constant { rate_rps: 10.0, duration_s: 1.0 },
             process: ArrivalProcess::Poisson,
+            service: ServiceModel::Deterministic,
         }])
         .is_err(),
         "empty model accepted"
